@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Figure 10 (weight transformation + padding
+//! overhead) and micro-time the per-layer migration model.
+
+use gyges::config::ModelConfig;
+use gyges::util::stats::Bench;
+use gyges::weights::{run_weight_migration, WeightMigrationSpec, WeightStrategy};
+
+fn main() {
+    let rows = gyges::experiments::fig10();
+    assert_eq!(rows.len(), 12);
+
+    println!("\nmicro-benchmarks:");
+    let spec = WeightMigrationSpec::paper_default(ModelConfig::qwen2_5_32b());
+    for strat in [
+        WeightStrategy::PartialSwap,
+        WeightStrategy::GygesNoOverlap,
+        WeightStrategy::Gyges,
+    ] {
+        let r = Bench::new(&format!("run_weight_migration({})", strat.name()))
+            .iters(200)
+            .run(|| run_weight_migration(&spec, strat).per_layer_time());
+        println!("  {}", r.line());
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Figure 11 (per-step overhead vs layers
+//! transformed per step, all mechanisms incl. Seesaw).
+
+use gyges::config::{GpuSpec, ModelConfig};
+use gyges::transform::{estimate, Mechanism};
+use gyges::util::stats::Bench;
+
+fn main() {
+    let rows = gyges::experiments::fig11();
+    assert!(rows.len() >= 6);
+
+    println!("\nmicro-benchmarks (cost estimation — used per routing decision):");
+    let (m, g) = (ModelConfig::qwen2_5_32b(), GpuSpec::h20());
+    for mech in [Mechanism::Gyges, Mechanism::Basic, Mechanism::Seesaw] {
+        let r = Bench::new(&format!("estimate({mech:?})"))
+            .iters(50)
+            .run(|| estimate(&m, &g, 1, 4, 0.9, mech).visible);
+        println!("  {}", r.line());
+    }
+}

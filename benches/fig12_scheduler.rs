@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Figure 12 (RR vs LLF vs Gyges scheduling,
+//! four models) and micro-time a routing decision.
+
+use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::coordinator::{ActiveRequest, ClusterView, GygesPolicy, Instance, RoutePolicy};
+use gyges::sim::{EngineModel, SimTime};
+use gyges::util::stats::Bench;
+use gyges::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let horizon = args.parsed_or("horizon", 240.0);
+    let rows = gyges::experiments::fig12(horizon, &ModelConfig::eval_set());
+    assert_eq!(rows.len(), 12); // 4 models × 3 policies
+
+    println!("\nmicro-benchmarks (route() — the per-arrival hot path):");
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
+    let instances: Vec<Instance> = (0..64).map(|i| Instance::new(i, i / 8, vec![i], 1)).collect();
+    let mut policy = GygesPolicy::default();
+    let req = ActiveRequest::new(1, SimTime::ZERO, 1000, 100);
+    let long = ActiveRequest::new(2, SimTime::ZERO, 50_000, 256);
+    let view = ClusterView { instances: &instances, engine: &engine, cfg: &cfg, now: SimTime::ZERO };
+    let r = Bench::new("gyges.route(short, 64 instances)")
+        .iters(2000)
+        .run(|| policy.route(&req, &view));
+    println!("  {}", r.line());
+    let r = Bench::new("gyges.route(long, 64 instances)")
+        .iters(2000)
+        .run(|| policy.route(&long, &view));
+    println!("  {}", r.line());
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Figure 13 (TPS trend around the t=120 s long
+//! request; Gyges avoids the second scale-up that RR/LLF trigger).
+
+fn main() {
+    let rows = gyges::experiments::fig13();
+    assert_eq!(rows.len(), 3);
+    // Assert the figure's qualitative claim as a regression check.
+    let get = |policy: &str| -> f64 {
+        rows.iter()
+            .find(|r| r.get("policy").and_then(|p| p.as_str()) == Some(policy))
+            .and_then(|r| r.get("scale_ups"))
+            .and_then(|v| v.as_f64())
+            .unwrap()
+    };
+    let (gy, rr, llf) = (get("gyges"), get("rr"), get("llf"));
+    println!("\nscale-ups: gyges={gy} rr={rr} llf={llf}");
+    assert!(gy <= rr.max(llf), "gyges must not out-transform the baselines");
+}

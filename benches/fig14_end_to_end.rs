@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Figure 14 (end-to-end throughput/TTFT/TPOT:
+//! Gyges vs Gyges⁻ vs KunServe vs LoongServe across load levels,
+//! production-like trace).
+
+use gyges::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let horizon = args.parsed_or("horizon", 300.0);
+    // QPS levels that sweep this trace from moderate to saturating load
+    // (the paper highlights an SLO-critical level; for our trace mix that
+    // knee sits near 10 qps).
+    let rows = gyges::experiments::fig14(horizon, &[2.0, 6.0, 10.0]);
+    assert_eq!(rows.len(), 12); // 3 loads × 4 systems
+}

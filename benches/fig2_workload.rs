@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Figure 2 (workload dynamics) and micro-time
+//! trace generation.
+
+use gyges::util::stats::Bench;
+use gyges::workload::Trace;
+
+fn main() {
+    let rows = gyges::experiments::fig2();
+    assert!(!rows.is_empty());
+
+    println!("\nmicro-benchmarks:");
+    let r = Bench::new("Trace::hybrid_paper(1h)")
+        .iters(5)
+        .run(|| Trace::hybrid_paper(1, 3600.0).len());
+    println!("  {}", r.line());
+    let r = Bench::new("Trace::production(qps=2, 1h)")
+        .iters(5)
+        .run(|| Trace::production(1, 2.0, 3600.0).len());
+    println!("  {}", r.line());
+}

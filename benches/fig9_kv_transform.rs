@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Figure 9 (KV transformation time + memory) and
+//! micro-time the migration planner.
+
+use gyges::config::ModelConfig;
+use gyges::kvcache::{run_kv_migration, KvMigrationSpec, KvMigrationStrategy};
+use gyges::util::stats::Bench;
+
+fn main() {
+    let rows = gyges::experiments::fig9();
+    assert_eq!(rows.len(), 12);
+
+    println!("\nmicro-benchmarks (planner cost — runs on the scheduler's critical path):");
+    let spec = KvMigrationSpec::paper_default(ModelConfig::qwen2_5_32b());
+    for strat in [
+        KvMigrationStrategy::Basic,
+        KvMigrationStrategy::GygesNoOverlap,
+        KvMigrationStrategy::Gyges,
+    ] {
+        let r = Bench::new(&format!("run_kv_migration({})", strat.name()))
+            .iters(20)
+            .run(|| run_kv_migration(&spec, strat).per_layer_visible);
+        println!("  {}", r.line());
+    }
+}

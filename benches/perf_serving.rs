@@ -1,0 +1,51 @@
+//! §Perf harness: measured decode throughput of the REAL PJRT serving
+//! path (gyges-tiny) per TP degree, plus the live-transformation cost.
+//! This is the L3 hot path the perf pass optimizes; EXPERIMENTS.md §Perf
+//! records the before/after of each iteration.
+
+use gyges::runtime::TinyRuntime;
+use std::time::Instant;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let prompt = [1u32, 5, 42, 7];
+    for tp in [1usize, 2, 4] {
+        let mut rt = TinyRuntime::load(&dir, tp).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        // warmup + prompt
+        let _ = rt.generate(&mut sess, &prompt, 4).unwrap();
+        let n = 48;
+        let t0 = Instant::now();
+        let _ = rt.generate(&mut sess, &[9], n).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "decode tp{tp}: {:.1} tok/s  ({:.2} ms/step over {n} tokens)",
+            (n + 1) as f64 / dt,
+            dt * 1e3 / (n + 1) as f64
+        );
+    }
+    // Transformation cost on the real model.
+    let mut rt = TinyRuntime::load(&dir, 1).unwrap();
+    let mut sess = rt.new_session().unwrap();
+    let _ = rt.generate(&mut sess, &prompt, 8).unwrap();
+    let t0 = Instant::now();
+    rt.transform(&mut sess, 4).unwrap();
+    let up = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    rt.transform(&mut sess, 1).unwrap();
+    let down = t0.elapsed().as_secs_f64();
+    println!(
+        "live transform: up {:.1} ms ({} moved), down {:.1} ms",
+        up * 1e3,
+        gyges::util::fmt_bytes(rt.last_transform_bytes as u64),
+        down * 1e3
+    );
+    // Session setup (weight shard materialization).
+    let t0 = Instant::now();
+    let _s = rt.new_session().unwrap();
+    println!("new_session(tp1): {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Table 1 (TP1/TP2/TP4 max-seq + throughput) and
+//! micro-time the engine model's step functions.
+
+use gyges::config::{GpuSpec, ModelConfig};
+use gyges::sim::EngineModel;
+use gyges::util::stats::Bench;
+
+fn main() {
+    let rows = gyges::experiments::table1();
+    assert_eq!(rows.len(), 3);
+
+    let e = EngineModel::new(ModelConfig::qwen2_5_32b(), GpuSpec::h20());
+    println!("\nmicro-benchmarks (hot paths behind every scheduling decision):");
+    for tp in [1u64, 2, 4] {
+        let r = Bench::new(&format!("decode_step(tp{tp}, b8, ctx1k)"))
+            .iters(1000)
+            .run(|| e.decode_step(tp, 8, 1000));
+        println!("  {}", r.line());
+    }
+    let r = Bench::new("max_seq(tp4)").iters(1000).run(|| e.max_seq(4));
+    println!("  {}", r.line());
+    let r = Bench::new("prefill(tp4, 50k)").iters(1000).run(|| e.prefill(4, 50_000));
+    println!("  {}", r.line());
+}

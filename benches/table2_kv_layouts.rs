@@ -1,0 +1,29 @@
+//! Bench: regenerate paper Table 2 (layout → shift/trim complexity) and
+//! micro-time the page-allocation hot path under each layout.
+
+use gyges::config::ModelConfig;
+use gyges::kvcache::{KvLayout, KvManager};
+use gyges::util::stats::Bench;
+use gyges::util::MIB;
+
+fn main() {
+    let rows = gyges::experiments::table2();
+    assert_eq!(rows.len(), 3);
+
+    println!("\nmicro-benchmarks (admit/append/finish on the page pool):");
+    let model = ModelConfig::qwen2_5_32b();
+    for layout in [KvLayout::Raw, KvLayout::PageFriendly, KvLayout::HeaderCentric] {
+        let r = Bench::new(&format!("admit+grow+finish ({layout:?})"))
+            .iters(50)
+            .run(|| {
+                let mut mgr = KvManager::new(&model, 1, layout, 256 * MIB);
+                mgr.admit(1, 600).unwrap();
+                for _ in 0..20 {
+                    mgr.append(1, 512).unwrap();
+                }
+                mgr.finish(1).unwrap();
+                mgr.shift_ops
+            });
+        println!("  {}", r.line());
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Table 3 (pages per tensor) and micro-time the
+//! padding planner that runs at every model load.
+
+use gyges::config::ModelConfig;
+use gyges::util::stats::Bench;
+use gyges::weights::LayerPadPlan;
+
+fn main() {
+    let rows = gyges::experiments::table3();
+    assert_eq!(rows.len(), 4);
+
+    println!("\nmicro-benchmarks:");
+    for m in ModelConfig::eval_set() {
+        let r = Bench::new(&format!("LayerPadPlan::plan({})", m.name))
+            .iters(2000)
+            .run(|| LayerPadPlan::plan(&m, 4).overhead_fraction());
+        println!("  {}", r.line());
+    }
+}

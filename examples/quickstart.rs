@@ -1,0 +1,58 @@
+//! Quickstart: the Gyges public API in ~60 lines.
+//!
+//! Builds the paper's default cluster (8×H20, Qwen2.5-32B, 8×TP1 at
+//! start), serves a mixed short/long trace with the transformation-aware
+//! scheduler, and prints throughput/TTFT/TPOT plus the transformation
+//! activity.
+//!
+//! Run: cargo run --release --example quickstart
+
+use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::coordinator::{run_system, SystemKind};
+use gyges::workload::Trace;
+
+fn main() {
+    // 1. A cluster: model + GPU type + topology + scheduler knobs.
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    println!(
+        "cluster: {} on {} — {} GPUs, TP choices {:?}",
+        cfg.model.name,
+        cfg.gpu.name,
+        cfg.total_gpus(),
+        cfg.tp_choices
+    );
+
+    // 2. A workload: the §6.2.4 hybrid trace — 1K-token shorts at 60 qpm
+    //    plus bursty 50K-token longs at ~1 qpm.
+    let trace = Trace::hybrid_paper(/*seed=*/ 7, /*horizon_s=*/ 300.0);
+    println!(
+        "trace: {} requests ({} long beyond the TP1 limit)",
+        trace.len(),
+        trace.long_count(3_750)
+    );
+
+    // 3. Serve with full Gyges (header-centric KV + padded weights +
+    //    overlap + Algorithm 1/2 scheduling).
+    let out = run_system(cfg, SystemKind::Gyges, None, trace);
+
+    // 4. Results.
+    println!("{}", out.report.line());
+    println!(
+        "transformations: {} scale-ups, {} scale-downs (deferred {})",
+        out.counters.scale_ups, out.counters.scale_downs, out.counters.deferred
+    );
+
+    // 5. The cost model behind every scheduling decision is public too:
+    let cost = gyges::transform::estimate(
+        &ModelConfig::qwen2_5_32b(),
+        &gyges::config::GpuSpec::h20(),
+        1,
+        4,
+        0.9,
+        gyges::transform::Mechanism::Gyges,
+    );
+    println!(
+        "one 4x(TP1)->TP4 transformation: wall {}, serving-visible {}",
+        cost.total, cost.visible
+    );
+}

@@ -1,0 +1,59 @@
+//! Trace replay: generate a production-like trace, write it to CSV,
+//! re-load it, and serve it under every system — the §6.3 workflow on
+//! your own traces.
+//!
+//! Run: cargo run --release --example trace_replay [-- --qps 0.6 --horizon 300]
+//!      cargo run --release --example trace_replay -- --trace my.csv
+
+use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::coordinator::{run_system, SystemKind};
+use gyges::util::{Args, Table};
+use gyges::workload::Trace;
+
+fn main() -> Result<(), String> {
+    let args = Args::from_env();
+    let horizon = args.parsed_or("horizon", 300.0);
+    let qps = args.parsed_or("qps", 0.6);
+
+    // Load a user CSV or generate + persist one.
+    let trace = if let Some(path) = args.get("trace") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Trace::from_csv(&text)?
+    } else {
+        let t = Trace::production(args.parsed_or("seed", 99), qps, horizon);
+        let path = "target/trace_replay.csv";
+        std::fs::create_dir_all("target").ok();
+        std::fs::write(path, t.to_csv()).map_err(|e| e.to_string())?;
+        println!("generated {} requests -> {path} (re-run with --trace {path})", t.len());
+        t
+    };
+    println!(
+        "trace: {} requests, {} tokens total, {} long (>10K input)\n",
+        trace.len(),
+        trace.total_tokens(),
+        trace.long_count(10_000)
+    );
+
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let mut t = Table::new(["system", "tput (tps)", "ttft p50", "ttft p99", "tpot p50", "scale-ups"]);
+    for sys in [
+        SystemKind::Gyges,
+        SystemKind::GygesNoOverlap,
+        SystemKind::Basic,
+        SystemKind::Seesaw,
+        SystemKind::KunServe,
+        SystemKind::LoongServe,
+    ] {
+        let out = run_system(cfg.clone(), sys, None, trace.clone());
+        t.row([
+            sys.name().to_string(),
+            format!("{:.1}", out.report.throughput_tps),
+            format!("{:.2}s", out.report.ttft_p50_s),
+            format!("{:.2}s", out.report.ttft_p99_s),
+            format!("{:.1}ms", out.report.tpot_p50_s * 1e3),
+            format!("{}", out.counters.scale_ups),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Transformation mechanics walkthrough: plans, costs and page math for a
+//! single 4×(TP1) → TP4 transformation of Qwen2.5-32B — the paper's §4 in
+//! one runnable tour.
+//!
+//! Run: cargo run --release --example transformation_demo
+
+use gyges::config::{GpuSpec, ModelConfig};
+use gyges::kvcache::{fig9_series, KvLayout};
+use gyges::transform::{Mechanism, TransformPlan};
+use gyges::util::{fmt_bytes, Table};
+use gyges::weights::{fig10_series, page_counts, LayerPadPlan};
+
+fn main() {
+    let model = ModelConfig::qwen2_5_32b();
+    let gpu = GpuSpec::h20();
+    println!("== {} on {} ==\n", model.name, gpu.name);
+
+    // --- §4.1: layouts ---
+    println!("KV layouts (Table 2):");
+    let mut t = Table::new(["layout", "hierarchy", "head span contiguous?"]);
+    for l in [KvLayout::Raw, KvLayout::PageFriendly, KvLayout::HeaderCentric] {
+        t.row([
+            format!("{l:?}"),
+            l.hierarchy().to_string(),
+            if l == KvLayout::HeaderCentric { "yes — in-place migration".into() } else { "no".to_string() },
+        ]);
+    }
+    t.print();
+
+    // --- §4.1.2: KV migration strategies ---
+    println!("\nKV migration (Figure 9, per layer):");
+    let mut t = Table::new(["strategy", "visible time", "peak extra memory"]);
+    for r in fig9_series(model.clone()) {
+        t.row([
+            r.strategy.name().to_string(),
+            format!("{}", r.per_layer_visible),
+            fmt_bytes(r.per_layer_peak_bytes),
+        ]);
+    }
+    t.print();
+
+    // --- §4.2: padding ---
+    let plan = LayerPadPlan::plan(&model, 4);
+    println!(
+        "\nWeight padding (§4.2): TP4 shard {} -> {} pages/tensor, overhead {:.2}%",
+        page_counts(&model, 4).per_tensor,
+        plan.tensors[0].pages_per_shard(),
+        plan.overhead_fraction() * 100.0
+    );
+    println!("Weight migration (Figure 10, per layer):");
+    let mut t = Table::new(["strategy", "wall time", "bytes copied"]);
+    for r in fig10_series(model.clone()) {
+        t.row([
+            r.strategy.name().to_string(),
+            format!("{}", r.per_layer_time()),
+            fmt_bytes(r.copied_bytes),
+        ]);
+    }
+    t.print();
+
+    // --- §4.3: the hybrid plan ---
+    let plan = TransformPlan::build(&model, 1, 4, 2);
+    println!(
+        "\nHybrid plan (§4.3): {} ops over {} steps, reversed traversal (first op: layer {} {:?})",
+        plan.ops.len(),
+        plan.num_steps(),
+        plan.ops[0].layer,
+        plan.ops[0].kind
+    );
+
+    // --- the whole thing, costed ---
+    println!("\nFull-model transformation cost (scale-up, 90% KV util):");
+    let mut t = Table::new(["mechanism", "wall", "serving-visible", "blocking?"]);
+    for mech in [Mechanism::Gyges, Mechanism::GygesNoOverlap, Mechanism::Basic, Mechanism::Seesaw] {
+        let c = gyges::transform::estimate(&model, &gpu, 1, 4, 0.9, mech);
+        t.row([
+            format!("{mech:?}"),
+            format!("{}", c.total),
+            format!("{}", c.visible),
+            if c.blocking { "yes".into() } else { "no".to_string() },
+        ]);
+    }
+    t.print();
+}

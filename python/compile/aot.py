@@ -1,0 +1,174 @@
+"""AOT export: lower every serving module to HLO **text** and write the
+weight binaries + manifest that the Rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax≥0.5's 64-bit instruction ids;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Artifacts (under --outdir, default ../artifacts):
+    embed.hlo.txt                       token -> hidden
+    lm_head.hlo.txt                     hidden -> logits
+    attn_tp{1,2,4}.hlo.txt              per-worker attention shard
+    mlp_tp{1,2,4}.hlo.txt               per-worker padded-FFN shard
+    weights/*.bin                       raw little-endian f32 tensors
+    manifest.json                       shapes + model dims
+    oracle.json                         greedy tokens the Rust e2e checks
+
+Usage: (cd python && python -m compile.aot [--outdir ../artifacts])
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jitted function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_all(outdir):
+    os.makedirs(outdir, exist_ok=True)
+    wdir = os.path.join(outdir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+
+    m = model
+    manifest = {
+        "model": "gyges-tiny",
+        "hidden": m.HIDDEN,
+        "inner": m.INNER,
+        "heads": m.HEADS,
+        "head_dim": m.HEAD_DIM,
+        "layers": m.LAYERS,
+        "vocab": m.VOCAB,
+        "tokens_per_block": m.TOKENS_PER_BLOCK,
+        "s_max": m.S_MAX,
+        "blocks": m.BLOCKS,
+        "block_inner": m.BLOCK_INNER,
+        "tp_choices": list(m.TP_CHOICES),
+        "padded_shard_inner": {str(tp): m.padded_shard_inner(tp) for tp in m.TP_CHOICES},
+        "modules": {},
+        "weights": {},
+    }
+
+    # ---------------- HLO modules ----------------
+    written = {}
+
+    def emit(name, fn, args):
+        text = to_hlo_text(fn, args)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = len(text)
+        manifest["modules"][name] = f"{name}.hlo.txt"
+
+    emit(
+        "embed",
+        m.embed_fn,
+        (spec((), jnp.int32), spec((m.VOCAB, m.HIDDEN))),
+    )
+    emit(
+        "lm_head",
+        m.lm_head_fn,
+        (spec((1, m.HIDDEN)), spec((m.VOCAB, m.HIDDEN))),
+    )
+    for tp in m.TP_CHOICES:
+        h_shard = m.HEADS // tp
+        kv_shape = (m.BLOCKS, h_shard, 2, m.TOKENS_PER_BLOCK, m.HEAD_DIM)
+        qkv_shape = (3, h_shard, m.HEAD_DIM)
+        # Attention is exported as THREE single-output modules so the Rust
+        # runtime can keep every intermediate as a device buffer (PJRT
+        # tuple outputs cannot be decomposed without a host round-trip).
+        emit(
+            f"qkv_tp{tp}",
+            m.qkv_fn,
+            (
+                spec((1, m.HIDDEN)),
+                spec((m.HIDDEN, 3 * h_shard * m.HEAD_DIM)),
+                spec((m.HIDDEN,)),
+            ),
+        )
+        emit(
+            f"kvupd_tp{tp}",
+            m.kv_update_fn,
+            (spec(kv_shape), spec(qkv_shape), spec((), jnp.int32)),
+        )
+        emit(
+            f"attnout_tp{tp}",
+            m.attn_out_fn,
+            (
+                spec(qkv_shape),
+                spec(kv_shape),
+                spec((), jnp.int32),
+                spec((h_shard * m.HEAD_DIM, m.HIDDEN)),
+            ),
+        )
+        ps = m.padded_shard_inner(tp)
+        emit(
+            f"mlp_tp{tp}",
+            m.mlp_fn,
+            (
+                spec((1, m.HIDDEN)),
+                spec((m.HIDDEN, ps)),
+                spec((ps, m.HIDDEN)),
+                spec((m.HIDDEN,)),
+            ),
+        )
+
+    # ---------------- weights ----------------
+    weights = m.make_weights(seed=0)
+    for name, arr in weights.items():
+        fname = name.replace(".", "_") + ".bin"
+        arr.astype("<f4").tofile(os.path.join(wdir, fname))
+        manifest["weights"][name] = {"file": f"weights/{fname}", "shape": list(arr.shape)}
+
+    # ---------------- oracle ----------------
+    prompt = [1, 5, 42, 7, 300, 9, 250, 77]
+    n_gen = 8
+    tokens = list(prompt)
+    for _ in range(n_gen):
+        logits = m.reference_decode(weights, tokens)
+        tokens.append(int(np.argmax(logits[-1])))
+    oracle = {
+        "prompt": prompt,
+        "generated": tokens[len(prompt):],
+        "note": "greedy decode; rust serve_e2e must reproduce exactly",
+    }
+    with open(os.path.join(outdir, "oracle.json"), "w") as f:
+        json.dump(oracle, f, indent=1)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    total = sum(written.values())
+    print(f"wrote {len(written)} HLO modules ({total} chars), "
+          f"{len(manifest['weights'])} weight tensors, oracle + manifest -> {outdir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias (ignored)")
+    args = ap.parse_args()
+    export_all(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: decode attention over the page-friendly
+header-centric KV layout (paper §4.1, Table 2).
+
+The KV cache is stored `[Block, Header, K/V, Token]` — each head's K+V
+within a block is one contiguous span, which is what makes per-head
+migration in-place on the serving side. The kernel view expected by
+attention is `[Block, K/V, Token, Header]`; `kv_stride_order()` supplies
+the permutation (§4.1.1) so the kernel body is layout-agnostic.
+
+TPU adaptation: the grid iterates (head, block); each step streams one
+head-contiguous KV tile HBM→VMEM — exactly the contiguity the
+header-centric layout guarantees — and accumulates an online softmax
+(flash-decoding style: running max / running sum carried in the output
+accumulators between grid steps).
+
+interpret=True is mandatory for the CPU PJRT runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _decode_attn_kernel(ctx_ref, q_ref, kv_ref, o_ref, m_ref, l_ref, *, tokens_per_block):
+    """Grid (heads, blocks): online-softmax accumulation per head.
+
+    ctx_ref: [1]                      scalar context length (SMEM-style)
+    q_ref:  [1, head_dim]             this head's query
+    kv_ref: [1, 2, tpb, 1, head_dim]  this (block, head)'s K and V span
+    o_ref:  [1, head_dim]             output accumulator (revisited)
+    m_ref:  [1, 1]                    running max
+    l_ref:  [1, 1]                    running sum
+    """
+    b = pl.program_id(1)
+    ctx = ctx_ref[0]
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :]  # [hd]
+    k = kv_ref[0, 0, :, 0, :]  # [tpb, hd]
+    v = kv_ref[0, 1, :, 0, :]  # [tpb, hd]
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], jnp.float32))
+    scores = (k @ q) * scale  # [tpb]
+    token_ids = b * tokens_per_block + jax.lax.iota(jnp.int32, tokens_per_block)
+    scores = jnp.where(token_ids < ctx, scores, -1e30)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.maximum(m_prev, scores.max())
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(scores - m_cur)  # [tpb]
+    l_cur = l_prev * alpha + p.sum()
+    o_ref[0, :] = o_ref[0, :] * alpha + p @ v
+    m_ref[0, 0] = m_cur
+    l_ref[0, 0] = l_cur
+
+
+@functools.partial(jax.jit, static_argnames=("layout",))
+def decode_attention(q, kv_stored, context_len, layout="header_centric"):
+    """Single-token decode attention over a paged KV cache.
+
+    q:         [heads, head_dim]
+    kv_stored: KV cache stored under `layout` (see ref.LAYOUTS); the
+               header-centric storage shape is
+               [blocks, heads, 2, tokens_per_block, head_dim].
+    context_len: scalar int32 — number of valid tokens.
+
+    Returns [heads, head_dim]. Must match ref.decode_attention on the
+    kernel view.
+    """
+    # §4.1.1: permute(*kv_stride_order()) recovers the kernel view
+    # [Block, Kv, Token, Header] without touching the kernel itself.
+    order = ref.kv_stride_order(layout)
+    kv_view = jnp.transpose(kv_stored, order + (4,))
+    blocks, two, tpb, heads, hd = kv_view.shape
+    assert two == 2
+
+    ctx = jnp.asarray(context_len, jnp.int32).reshape(1)
+    out, _m, l = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, tokens_per_block=tpb),
+        grid=(heads, blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, b: (0,)),
+            pl.BlockSpec((1, hd), lambda h, b: (h, 0)),
+            pl.BlockSpec((1, 2, tpb, 1, hd), lambda h, b: (b, 0, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hd), lambda h, b: (h, 0)),
+            pl.BlockSpec((1, 1), lambda h, b: (h, 0)),
+            pl.BlockSpec((1, 1), lambda h, b: (h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((heads, hd), jnp.float32),
+            jax.ShapeDtypeStruct((heads, 1), jnp.float32),
+            jax.ShapeDtypeStruct((heads, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(ctx, q.astype(jnp.float32), kv_view.astype(jnp.float32))
+    return (out / l).astype(q.dtype)
+
+
+def store_kv(kv_view, layout="header_centric"):
+    """Store a kernel-view KV array under `layout` (helper used by the
+    model and the tests). kv_view: [blocks, 2, tpb, heads, head_dim]."""
+    view = ("block", "kv", "token", "header")
+    storage = ref.LAYOUTS[layout]
+    perm = tuple(view.index(d) for d in storage) + (4,)
+    return jnp.transpose(kv_view, perm)
+
+
+def vmem_footprint_bytes(tokens_per_block, head_dim, dtype_bytes=4):
+    """Per-grid-step VMEM estimate: one head's KV span + q + accumulators."""
+    kv_tile = 2 * tokens_per_block * head_dim
+    q = head_dim
+    acc = head_dim + 2
+    return (kv_tile + q + acc) * dtype_bytes

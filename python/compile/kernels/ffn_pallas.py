@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: the padding-compatible FFN of paper §4.2.
+
+FFN'(I) = gelu(I · U') · D'  with U' column-padded and D' row-padded at
+TP-shard boundaries so every shard is page-aligned on the serving side.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the 2 MiB CUDA-page
+constraint maps to MXU/VMEM tiling — the kernel's inner-dimension grid is
+blocked so that each padded shard is a whole number of blocks, making a
+TP re-shard pure block-dropping in the BlockSpec index map. Pad blocks of
+U' are zero, and gelu(0)·0-rows of D' contribute nothing, so skipping or
+keeping them is numerically identical; we keep them (interpret=True runs
+on CPU where the skip is a no-op anyway) and document the VMEM/MXU
+accounting in EXPERIMENTS.md §Perf.
+
+The kernel MUST be lowered with interpret=True for the CPU PJRT runtime
+(real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ffn_kernel(x_ref, up_ref, down_ref, o_ref):
+    """One (m-block, inner-block) grid step.
+
+    Grid: (M/bm, I'/bi). Each step computes the partial product
+    gelu(x·U'[:, j]) · D'[j, :] and accumulates into the output block
+    (whose index map revisits the same block for every j).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    h = ref.gelu(jnp.dot(x, up_ref[...], preferred_element_type=jnp.float32))
+    o_ref[...] += jnp.dot(h, down_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_inner"))
+def ffn_padded(x, up_p, down_p, block_m=8, block_inner=128):
+    """Padding-compatible FFN via a Pallas kernel.
+
+    x:      [M, H]       activations
+    up_p:   [H, I']      column-padded up-projection (I' = padded inner)
+    down_p: [I', H]      row-padded down-projection
+
+    Block sizes default to MXU-friendly multiples of (8, 128); M and I'
+    must divide by them (the model pads its shapes accordingly).
+    """
+    m, h = x.shape
+    h2, inner = up_p.shape
+    inner2, h3 = down_p.shape
+    assert h == h2 and h == h3 and inner == inner2, "shape mismatch"
+    assert m % block_m == 0, f"M={m} must divide block_m={block_m}"
+    assert inner % block_inner == 0, f"I'={inner} must divide block_inner={block_inner}"
+    n_inner = inner // block_inner
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(m // block_m, n_inner),
+        in_specs=[
+            pl.BlockSpec((block_m, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((h, block_inner), lambda i, j: (0, j)),
+            pl.BlockSpec((block_inner, h), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, h), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), x.dtype),
+        interpret=True,
+    )(x, up_p, down_p)
+
+
+def vmem_footprint_bytes(h, inner, block_m=8, block_inner=128, dtype_bytes=4):
+    """Static VMEM usage estimate per grid step (DESIGN.md §Perf): the
+    x block, one U' column block, one D' row block, and the accumulator."""
+    x_blk = block_m * h
+    up_blk = h * block_inner
+    down_blk = block_inner * h
+    acc = block_m * h
+    return (x_blk + up_blk + down_blk + acc) * dtype_bytes
+
+
+def mxu_utilization_estimate(h, block_m=8, block_inner=128):
+    """Fraction of MXU lanes active per inner step: the (8,128) systolic
+    tile is fully occupied iff block sizes are multiples of the tile."""
+    tile_m, tile_n = 8, 128
+    eff_m = min(block_m, tile_m) / tile_m
+    eff_n = min(block_inner, tile_n) / tile_n
+    eff_k = 1.0 if h % tile_n == 0 else (h % tile_n) / tile_n
+    return eff_m * eff_n * eff_k

@@ -1,0 +1,117 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is straight-line jax.numpy — no pallas, no tricks — so a
+disagreement between a kernel and this file is a kernel bug. The FFN-
+padding construction mirrors rust/src/weights/ffn.rs (the Rust twin is
+property-tested against the same identity, Eq. 2 of the paper), and
+`kv_stride_order` mirrors rust/src/kvcache/layout.rs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------
+# FFN (paper §4.2, Eq. 1–2)
+# ---------------------------------------------------------------------
+
+def gelu(x):
+    """tanh-approximated GELU (must match the Pallas kernel exactly)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def ffn(x, up, down):
+    """FFN(I) = f(I · U) · D."""
+    return gelu(x @ up) @ down
+
+
+def pad_ffn_weights(up, down, shards, pad_cols):
+    """Build (U', D') per §4.2: U gains zero columns after each column
+    shard; D gains matching zero rows. pad_cols is per-shard.
+
+    Returns (up_padded, down_padded).
+    """
+    h, i = up.shape
+    i2, h2 = down.shape
+    assert i == i2 and h == h2 and i % shards == 0
+    assert len(pad_cols) == shards
+    shard_w = i // shards
+    up_parts, down_parts = [], []
+    for s in range(shards):
+        up_parts.append(up[:, s * shard_w:(s + 1) * shard_w])
+        down_parts.append(down[s * shard_w:(s + 1) * shard_w, :])
+        if pad_cols[s] > 0:
+            up_parts.append(jnp.zeros((h, pad_cols[s]), up.dtype))
+            down_parts.append(jnp.zeros((pad_cols[s], h), down.dtype))
+    return jnp.concatenate(up_parts, axis=1), jnp.concatenate(down_parts, axis=0)
+
+
+def ffn_padded_ref(x, up, down, shards, pad_cols):
+    """FFN'(I) = f(I · U') · D' — must equal ffn(x, up, down)."""
+    up_p, down_p = pad_ffn_weights(up, down, shards, pad_cols)
+    return gelu(x @ up_p) @ down_p
+
+
+# ---------------------------------------------------------------------
+# KV layouts (paper §4.1, Table 2) — must mirror rust kvcache::layout
+# ---------------------------------------------------------------------
+
+# Kernel-view dimension order is [Block, Kv, Token, Header].
+LAYOUTS = {
+    "raw": ("kv", "block", "token", "header"),
+    "page_friendly": ("block", "kv", "token", "header"),
+    "header_centric": ("block", "header", "kv", "token"),
+}
+
+
+def kv_stride_order(layout):
+    """For each kernel-view dim [Block, Kv, Token, Header], which storage
+    axis supplies it. `stored.transpose(kv_stride_order(l))` yields the
+    kernel view. Mirrors rust `kvcache::layout::kv_stride_order`.
+    """
+    view = ("block", "kv", "token", "header")
+    storage = LAYOUTS[layout]
+    return tuple(storage.index(d) for d in view)
+
+
+def to_layout(kv_view, layout):
+    """Store a kernel-view array [Block, Kv, Token, Header, Dim] under
+    `layout` (the trailing head-dim axis always stays innermost)."""
+    view = ("block", "kv", "token", "header")
+    storage = LAYOUTS[layout]
+    perm = tuple(view.index(d) for d in storage) + (4,)
+    return jnp.transpose(kv_view, perm)
+
+
+def from_layout(kv_stored, layout):
+    """Recover the kernel view from storage via kv_stride_order (§4.1.1's
+    permute(*stride_order))."""
+    return jnp.transpose(kv_stored, kv_stride_order(layout) + (4,))
+
+
+# ---------------------------------------------------------------------
+# Decode attention over paged KV (oracle for the Pallas kernel)
+# ---------------------------------------------------------------------
+
+def decode_attention(q, kv_view, context_len):
+    """Single-token decode attention.
+
+    q:       [heads, head_dim]
+    kv_view: [blocks, 2, tokens_per_block, heads, head_dim] — note the
+             kernel view carries K/V at axis 1 and heads at axis 3.
+    context_len: number of valid tokens.
+
+    Returns [heads, head_dim].
+    """
+    blocks, two, tpb, heads, hd = kv_view.shape
+    assert two == 2
+    k = kv_view[:, 0].reshape(blocks * tpb, heads, hd)
+    v = kv_view[:, 1].reshape(blocks * tpb, heads, hd)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("hd,thd->ht", q, k) * scale  # [heads, tokens]
+    mask = jnp.arange(blocks * tpb)[None, :] < context_len
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=1, keepdims=True))
+    probs = probs / probs.sum(axis=1, keepdims=True)
+    return jnp.einsum("ht,thd->hd", probs, v)

@@ -1,0 +1,266 @@
+"""Layer-2: the `gyges-tiny` transformer in JAX, decomposed for tensor
+parallelism the way the Rust coordinator executes it.
+
+The model is compiled into PER-WORKER, PER-MODULE executables so that the
+Rust runtime owns every cross-worker reduction (the role NCCL all-reduce
+plays in the paper's §2 description of TP):
+
+    embed   : token_id                      -> hidden            (replicated)
+    attn_tp : hidden, pos, kv, weights      -> o_partial, kv'    (one shard)
+    mlp_tp  : hidden2, padded mlp weights   -> mlp_partial       (one shard)
+    lm_head : hidden, embedding             -> logits            (replicated)
+
+Rust drives, per layer:  h2 = hidden + Σ_workers o_partial;
+                         h3 = h2 + Σ_workers mlp_partial.
+That is exactly TP with the coordinator as the reduction fabric.
+
+The attention module calls the header-centric Pallas kernel and the MLP
+module calls the padded-FFN Pallas kernel, so both Layer-1 kernels lower
+into the serving artifacts. Shapes must stay in sync with
+rust/src/config/model.rs::gyges_tiny and runtime/artifact.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention_pallas, ffn_pallas, ref
+
+# ----------------------------------------------------------------------
+# Architecture (kept deliberately "unaligned": inner=960 exercises the
+# §4.2 padding machinery — TP4 shards of 240 pad to 256).
+# ----------------------------------------------------------------------
+HIDDEN = 256
+INNER = 960
+HEADS = 8
+HEAD_DIM = 32
+LAYERS = 4
+VOCAB = 1024
+TOKENS_PER_BLOCK = 16
+S_MAX = 128
+BLOCKS = S_MAX // TOKENS_PER_BLOCK
+BLOCK_INNER = 128  # MXU-tile-aligned pad granularity (≙ the 2 MiB page)
+EPS = 1e-5
+TP_CHOICES = (1, 2, 4)
+
+
+def padded_shard_inner(tp):
+    """Padded per-shard inner size: ceil(shard / BLOCK_INNER) blocks."""
+    shard = INNER // tp
+    return -(-shard // BLOCK_INNER) * BLOCK_INNER
+
+
+def rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + EPS) * g
+
+
+# ----------------------------------------------------------------------
+# Weight generation (deterministic; written to artifacts/ by aot.py and
+# sliced into TP shards by the Rust runtime).
+# ----------------------------------------------------------------------
+
+def make_weights(seed=0):
+    """All model weights, unpadded, as numpy arrays."""
+    rng = np.random.default_rng(seed)
+
+    def w(*shape, scale=None):
+        scale = scale or 1.0 / np.sqrt(shape[0])
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    weights = {"emb": w(VOCAB, HIDDEN, scale=0.02)}
+    for l in range(LAYERS):
+        weights[f"l{l}.wqkv"] = w(HIDDEN, 3 * HEADS * HEAD_DIM)
+        weights[f"l{l}.wo"] = w(HEADS * HEAD_DIM, HIDDEN)
+        weights[f"l{l}.up"] = w(HIDDEN, INNER)
+        weights[f"l{l}.down"] = w(INNER, HIDDEN)
+        weights[f"l{l}.ln1"] = np.ones(HIDDEN, np.float32)
+        weights[f"l{l}.ln2"] = np.ones(HIDDEN, np.float32)
+    return weights
+
+
+def shard_attn_weights(weights, layer, tp, rank):
+    """The attention shard worker `rank` of `tp` holds (head-split)."""
+    h_shard = HEADS // tp
+    wqkv = weights[f"l{layer}.wqkv"].reshape(HIDDEN, 3, HEADS, HEAD_DIM)
+    wqkv_s = wqkv[:, :, rank * h_shard:(rank + 1) * h_shard, :].reshape(
+        HIDDEN, 3 * h_shard * HEAD_DIM
+    )
+    wo = weights[f"l{layer}.wo"].reshape(HEADS, HEAD_DIM, HIDDEN)
+    wo_s = wo[rank * h_shard:(rank + 1) * h_shard].reshape(h_shard * HEAD_DIM, HIDDEN)
+    return wqkv_s, wo_s
+
+
+def shard_mlp_weights(weights, layer, tp, rank):
+    """The PADDED MLP shard (§4.2: zero columns in U, zero rows in D to
+    the BLOCK_INNER boundary)."""
+    shard = INNER // tp
+    pad = padded_shard_inner(tp) - shard
+    up = weights[f"l{layer}.up"][:, rank * shard:(rank + 1) * shard]
+    down = weights[f"l{layer}.down"][rank * shard:(rank + 1) * shard, :]
+    up_p = np.concatenate([up, np.zeros((HIDDEN, pad), np.float32)], axis=1)
+    down_p = np.concatenate([down, np.zeros((pad, HIDDEN), np.float32)], axis=0)
+    return up_p, down_p
+
+
+# ----------------------------------------------------------------------
+# Per-module forward functions (one HLO artifact each)
+# ----------------------------------------------------------------------
+
+def embed_fn(token_id, emb):
+    """token_id: [] int32 → hidden [1, HIDDEN]."""
+    return (jnp.take(emb, token_id, axis=0)[None, :],)
+
+
+def lm_head_fn(hidden, emb):
+    """Tied LM head: hidden [1, HIDDEN] → logits [VOCAB]."""
+    return (jnp.dot(hidden[0], emb.T),)
+
+
+def qkv_fn(hidden, wqkv, ln1):
+    """Norm + QKV projection for one shard: → qkv [3, h_shard, HEAD_DIM].
+
+    Single-output so the Rust runtime can keep the result as a device
+    buffer (PJRT tuple buffers cannot be decomposed device-side)."""
+    h_shard = wqkv.shape[1] // (3 * HEAD_DIM)
+    x = rmsnorm(hidden, ln1)  # [1, H]
+    return (jnp.dot(x, wqkv).reshape(3, h_shard, HEAD_DIM),)
+
+
+def kv_update_fn(kv, qkv, pos):
+    """Write this step's K,V into the header-centric cache at `pos`.
+
+    kv: [BLOCKS, h_shard, 2, TOKENS_PER_BLOCK, HEAD_DIM]. Single output =
+    the updated cache (device-resident on the Rust side)."""
+    h_shard = kv.shape[1]
+    k, v = qkv[1], qkv[2]
+    block = pos // TOKENS_PER_BLOCK
+    off = pos % TOKENS_PER_BLOCK
+    upd_k = k.reshape(1, h_shard, 1, 1, HEAD_DIM)
+    upd_v = v.reshape(1, h_shard, 1, 1, HEAD_DIM)
+    # Storage axes: [Block, Header, K/V, Token, Dim]; axis 2 selects K(0)/V(1).
+    kv = jax.lax.dynamic_update_slice(kv, upd_k, (block, 0, 0, off, 0))
+    kv = jax.lax.dynamic_update_slice(kv, upd_v, (block, 0, 1, off, 0))
+    return (kv,)
+
+
+def attn_out_fn(qkv, kv, pos, wo):
+    """Paged decode attention (Pallas kernel) + output projection:
+    → o_partial [1, HIDDEN] (this rank's partial sum)."""
+    h_shard = kv.shape[1]
+    q = qkv[0]
+    attn = attention_pallas.decode_attention(q, kv, pos + 1, layout="header_centric")
+    return (jnp.dot(attn.reshape(1, h_shard * HEAD_DIM), wo),)
+
+
+def attn_fn(hidden, pos, kv, wqkv, wo, ln1):
+    """One worker's full attention shard (composition of the three
+    single-output modules above — used by the Python-side reference and
+    the tests; the Rust runtime executes the three modules separately).
+
+    Returns (o_partial [1, HIDDEN], kv_updated).
+    """
+    (qkv,) = qkv_fn(hidden, wqkv, ln1)
+    (kv,) = kv_update_fn(kv, qkv, pos)
+    (o_partial,) = attn_out_fn(qkv, kv, pos, wo)
+    return o_partial, kv
+
+
+def mlp_fn(hidden2, up_p, down_p, ln2):
+    """One worker's padded-FFN shard: hidden2 [1, HIDDEN] → [1, HIDDEN]."""
+    x = rmsnorm(hidden2, ln2)
+    # Pallas padded-FFN kernel (block_m must divide the batch: pad 1→8).
+    x8 = jnp.concatenate([x, jnp.zeros((7, HIDDEN), x.dtype)], axis=0)
+    out = ffn_pallas.ffn_padded(x8, up_p, down_p, block_m=8, block_inner=BLOCK_INNER)
+    return (out[:1],)
+
+
+# ----------------------------------------------------------------------
+# Full-model reference (pure jnp, TP=1, no Pallas) — the oracle for the
+# Rust e2e serving example and the pytest suite.
+# ----------------------------------------------------------------------
+
+def reference_decode(weights, tokens):
+    """Greedy-decode verification path: feed `tokens` (list[int]) one at a
+    time through the full model; return the logits after each position.
+    """
+    kv = [
+        np.zeros((BLOCKS, HEADS, 2, TOKENS_PER_BLOCK, HEAD_DIM), np.float32)
+        for _ in range(LAYERS)
+    ]
+    logits_all = []
+    for pos, tok in enumerate(tokens):
+        hidden = weights["emb"][tok][None, :].astype(np.float32)
+        for l in range(LAYERS):
+            x = np.asarray(
+                rmsnorm(jnp.asarray(hidden), jnp.asarray(weights[f"l{l}.ln1"]))
+            )
+            qkv = (x @ weights[f"l{l}.wqkv"]).reshape(3, HEADS, HEAD_DIM)
+            q, k, v = qkv[0], qkv[1], qkv[2]
+            b, o = pos // TOKENS_PER_BLOCK, pos % TOKENS_PER_BLOCK
+            kv[l][b, :, 0, o, :] = k
+            kv[l][b, :, 1, o, :] = v
+            kv_view = np.transpose(kv[l], ref.kv_stride_order("header_centric") + (4,))
+            attn = np.asarray(
+                ref.decode_attention(jnp.asarray(q), jnp.asarray(kv_view), pos + 1)
+            )
+            h2 = hidden + attn.reshape(1, HEADS * HEAD_DIM) @ weights[f"l{l}.wo"]
+            x2 = np.asarray(
+                rmsnorm(jnp.asarray(h2), jnp.asarray(weights[f"l{l}.ln2"]))
+            )
+            mlp = np.asarray(
+                ref.ffn(
+                    jnp.asarray(x2),
+                    jnp.asarray(weights[f"l{l}.up"]),
+                    jnp.asarray(weights[f"l{l}.down"]),
+                )
+            )
+            hidden = h2 + mlp
+        logits_all.append(hidden[0] @ weights["emb"].T)
+    return np.stack(logits_all)
+
+
+def sharded_decode(weights, tokens, tp):
+    """TP-sharded decode mirroring EXACTLY what the Rust runtime does:
+    per-layer partial sums across `tp` workers. Used to validate that the
+    module decomposition is TP-exact before AOT export."""
+    h_shard = HEADS // tp
+    kv = [
+        [
+            jnp.zeros((BLOCKS, h_shard, 2, TOKENS_PER_BLOCK, HEAD_DIM), jnp.float32)
+            for _ in range(tp)
+        ]
+        for _ in range(LAYERS)
+    ]
+    logits_all = []
+    for pos, tok in enumerate(tokens):
+        (hidden,) = embed_fn(jnp.int32(tok), jnp.asarray(weights["emb"]))
+        for l in range(LAYERS):
+            o_sum = jnp.zeros((1, HIDDEN), jnp.float32)
+            for r in range(tp):
+                wqkv_s, wo_s = shard_attn_weights(weights, l, tp, r)
+                o_part, kv_new = attn_fn(
+                    hidden,
+                    jnp.int32(pos),
+                    kv[l][r],
+                    jnp.asarray(wqkv_s),
+                    jnp.asarray(wo_s),
+                    jnp.asarray(weights[f"l{l}.ln1"]),
+                )
+                kv[l][r] = kv_new
+                o_sum = o_sum + o_part
+            h2 = hidden + o_sum  # Rust-side reduction + residual
+            mlp_sum = jnp.zeros((1, HIDDEN), jnp.float32)
+            for r in range(tp):
+                up_p, down_p = shard_mlp_weights(weights, l, tp, r)
+                (m_part,) = mlp_fn(
+                    h2,
+                    jnp.asarray(up_p),
+                    jnp.asarray(down_p),
+                    jnp.asarray(weights[f"l{l}.ln2"]),
+                )
+                mlp_sum = mlp_sum + m_part
+            hidden = h2 + mlp_sum
+        (logits,) = lm_head_fn(hidden, jnp.asarray(weights["emb"]))
+        logits_all.append(np.asarray(logits))
+    return np.stack(logits_all)

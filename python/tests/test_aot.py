@@ -1,0 +1,79 @@
+"""AOT export sanity: HLO text artifacts, weight binaries, manifest and
+oracle are complete and well-formed."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("artifacts"))
+    aot.export_all(d)
+    return d
+
+
+def test_all_modules_emitted(outdir):
+    expected = ["embed", "lm_head"] + [
+        f"{kind}_tp{tp}"
+        for kind in ("qkv", "kvupd", "attnout", "mlp")
+        for tp in model.TP_CHOICES
+    ]
+    for name in expected:
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text, f"{name}: not HLO text"
+        assert "custom-call" not in text, f"{name}: Mosaic custom-call leaked"
+
+
+def test_manifest_consistent(outdir):
+    man = json.load(open(os.path.join(outdir, "manifest.json")))
+    assert man["hidden"] == model.HIDDEN
+    assert man["layers"] == model.LAYERS
+    expected = {"embed", "lm_head"} | {
+        f"{kind}_tp{tp}"
+        for kind in ("qkv", "kvupd", "attnout", "mlp")
+        for tp in (1, 2, 4)
+    }
+    assert set(man["modules"]) == expected
+    for name, meta in man["weights"].items():
+        path = os.path.join(outdir, meta["file"])
+        assert os.path.exists(path), name
+        n = np.prod(meta["shape"])
+        assert os.path.getsize(path) == 4 * n, f"{name}: size mismatch"
+
+
+def test_weight_binaries_roundtrip(outdir):
+    man = json.load(open(os.path.join(outdir, "manifest.json")))
+    w = model.make_weights(seed=0)
+    meta = man["weights"]["l0.up"]
+    data = np.fromfile(os.path.join(outdir, meta["file"]), dtype="<f4").reshape(
+        meta["shape"]
+    )
+    np.testing.assert_array_equal(data, w["l0.up"])
+
+
+def test_oracle_reproducible(outdir):
+    oracle = json.load(open(os.path.join(outdir, "oracle.json")))
+    w = model.make_weights(seed=0)
+    tokens = list(oracle["prompt"])
+    for expect in oracle["generated"]:
+        logits = model.reference_decode(w, tokens)
+        nxt = int(np.argmax(logits[-1]))
+        assert nxt == expect
+        tokens.append(nxt)
+
+
+def test_hlo_parameter_counts(outdir):
+    """attn modules take 6 parameters, mlp 4 — what runtime/executor.rs
+    feeds must match."""
+    for tp in model.TP_CHOICES:
+        for kind in ("qkv", "kvupd", "attnout", "mlp"):
+            text = open(os.path.join(outdir, f"{kind}_tp{tp}.hlo.txt")).read()
+            entry = [l for l in text.splitlines() if l.startswith("ENTRY")][0]
+            assert entry.count("parameter") >= 1 or "Arg_" in text

@@ -1,0 +1,105 @@
+"""L1 correctness: the padded-FFN Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, padding splits and seeds; every case asserts
+allclose against ref.ffn (the UNpadded computation — so these tests check
+both the kernel and the §4.2 padding identity at once).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ffn_pallas, ref
+
+BLOCK_INNER = 128
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def run_case(seed, m_blocks, hidden, shards, shard_cols, pad_cols):
+    rng = np.random.default_rng(seed)
+    m = 8 * m_blocks
+    inner = shards * shard_cols
+    x = rand(rng, m, hidden)
+    up = rand(rng, hidden, inner)
+    down = rand(rng, inner, hidden)
+    up_p, down_p = ref.pad_ffn_weights(up, down, shards, pad_cols)
+    padded_inner = up_p.shape[1]
+    if padded_inner % BLOCK_INNER != 0:
+        pytest.skip("padded inner must align to the block for this kernel")
+    want = ref.ffn(x, up, down)
+    got = ffn_pallas.ffn_padded(x, up_p, down_p, block_m=8, block_inner=BLOCK_INNER)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shards,shard_cols,pad", [
+    (4, 96, 32),   # 4×(96+32) = 512: the paper's per-boundary padding
+    (2, 192, 64),  # 2×(192+64) = 512
+    (4, 128, 0),   # already aligned: zero padding
+    (1, 384, 128), # single shard, large pad
+])
+def test_padded_ffn_matches_unpadded(shards, shard_cols, pad):
+    run_case(0, m_blocks=2, hidden=64, shards=shards,
+             shard_cols=shard_cols, pad_cols=[pad] * shards)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m_blocks=st.integers(1, 3),
+    hidden=st.sampled_from([32, 64, 128]),
+    shards=st.sampled_from([1, 2, 4]),
+)
+def test_padded_ffn_hypothesis_sweep(seed, m_blocks, hidden, shards):
+    # shard_cols chosen so each padded shard is exactly one 128-block
+    shard_cols = 128 - 16  # 112 real + 16 pad per shard
+    run_case(seed, m_blocks, hidden, shards, shard_cols, [16] * shards)
+
+
+def test_uneven_padding_per_boundary():
+    # Different pad widths per shard, still block-aligned in total.
+    run_case(3, m_blocks=1, hidden=64, shards=4,
+             shard_cols=120, pad_cols=[8, 8, 8, 8])
+
+
+def test_gyges_tiny_shapes():
+    """The exact shapes the serving artifacts use (inner 960 → 1024@tp4)."""
+    from compile import model
+    rng = np.random.default_rng(7)
+    x = rand(rng, 8, model.HIDDEN)
+    w = model.make_weights(seed=1)
+    up, down = w["l0.up"], w["l0.down"]
+    want = ref.ffn(jnp.asarray(x), jnp.asarray(up), jnp.asarray(down))
+    for tp in model.TP_CHOICES:
+        total = jnp.zeros_like(want)
+        for r in range(tp):
+            up_p, down_p = model.shard_mlp_weights(w, 0, tp, r)
+            part = ffn_pallas.ffn_padded(
+                x, jnp.asarray(up_p), jnp.asarray(down_p),
+                block_m=8, block_inner=model.BLOCK_INNER,
+            )
+            total = total + part
+        np.testing.assert_allclose(
+            np.asarray(total), np.asarray(want), rtol=3e-4, atol=3e-4,
+            err_msg=f"tp={tp}",
+        )
+
+
+def test_zero_input_gives_zero_output():
+    x = jnp.zeros((8, 64), jnp.float32)
+    rng = np.random.default_rng(9)
+    up = rand(rng, 64, 128)
+    down = rand(rng, 128, 64)
+    got = ffn_pallas.ffn_padded(x, up, down)
+    # gelu(0) = 0 → output must be exactly 0
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+def test_vmem_and_mxu_estimates():
+    vm = ffn_pallas.vmem_footprint_bytes(h=256, inner=1024)
+    assert 0 < vm < 16 * 1024 * 1024, "must fit VMEM"
+    assert ffn_pallas.mxu_utilization_estimate(256) == 1.0
+    assert ffn_pallas.mxu_utilization_estimate(256, block_m=4) < 1.0

@@ -1,0 +1,68 @@
+//! Baseline systems (paper §3.3 / §6.3).
+//!
+//! The *mechanism* models live where they act:
+//! * Seesaw's blocking CPU-shared-memory re-shard → [`crate::transform::Mechanism::Seesaw`]
+//! * KunServe's dynamic PP / LoongServe's elastic SP inefficiency →
+//!   [`crate::coordinator::ParallelKind`] step scaling
+//! * RR / LLF schedulers → [`crate::coordinator::scheduler`]
+//!
+//! This module adds the **static hybrid** deployment (the production
+//! practice Gyges replaces: one TP4 + four TP1 instances per 8-GPU host,
+//! §3.3) and convenience runners for the Figure 14 comparison series.
+
+pub mod static_hybrid;
+
+pub use static_hybrid::{run_static_hybrid, StaticHybridConfig};
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{run_system, SimOutcome, SystemKind};
+use crate::workload::Trace;
+
+/// The systems compared end-to-end in Figure 14.
+pub fn fig14_systems() -> Vec<SystemKind> {
+    vec![
+        SystemKind::Gyges,
+        SystemKind::GygesNoOverlap,
+        SystemKind::KunServe,
+        SystemKind::LoongServe,
+    ]
+}
+
+/// Run every Figure-14 system on the same trace.
+pub fn run_fig14(cfg: &ClusterConfig, trace: &Trace) -> Vec<SimOutcome> {
+    fig14_systems()
+        .into_iter()
+        .map(|sys| run_system(cfg.clone(), sys, None, trace.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn fig14_systems_all_run() {
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let trace = Trace::hybrid_paper(3, 90.0);
+        let outs = run_fig14(&cfg, &trace);
+        assert_eq!(outs.len(), 4);
+        for o in &outs {
+            assert!(o.report.completed > 0, "{}: nothing completed", o.report.label);
+        }
+    }
+
+    #[test]
+    fn gyges_beats_pp_sp_on_throughput() {
+        // §6.3's central claim, scaled down: on a mixed trace Gyges
+        // sustains at least the PP/SP baselines' throughput.
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let trace = Trace::hybrid_paper(17, 300.0);
+        let outs = run_fig14(&cfg, &trace);
+        let gy = outs[0].report.throughput_tps;
+        let ks = outs[2].report.throughput_tps;
+        let ls = outs[3].report.throughput_tps;
+        assert!(gy >= ks * 0.95, "gyges {gy} vs kunserve {ks}");
+        assert!(gy >= ls * 0.95, "gyges {gy} vs loongserve {ls}");
+    }
+}

@@ -1,0 +1,101 @@
+//! GPU device specifications for the simulated substrate.
+//!
+//! Constants follow the paper's testbed (§6.1): H20 (96 GB) and A100
+//! (40 GB) hosts with 8 GPUs each, NVLink intra-host. The absolute numbers
+//! only set the scale; all reproduced results are ratios between
+//! strategies that share a spec.
+
+/// A GPU device type.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Device memory capacity in bytes.
+    pub hbm_bytes: u64,
+    /// Streaming-multiprocessor count (SM contention model for all-to-all).
+    pub sm_count: u32,
+    /// Dense BF16 throughput in FLOP/s.
+    pub bf16_flops: f64,
+    /// HBM bandwidth in bytes/s.
+    pub hbm_bw: f64,
+    /// Per-direction NVLink bandwidth in bytes/s (intra-host GPU↔GPU).
+    pub nvlink_bw: f64,
+    /// PCIe bandwidth to host memory in bytes/s (Seesaw's migration path).
+    pub pcie_bw: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA H20: 96 GB HBM3, 78 SMs, ~148 TFLOPs BF16, 4.0 TB/s HBM,
+    /// 900 GB/s NVLink aggregate (450 GB/s per direction), PCIe gen5 x16.
+    pub fn h20() -> GpuSpec {
+        GpuSpec {
+            name: "h20",
+            hbm_bytes: 96 * crate::util::GIB,
+            sm_count: 78,
+            bf16_flops: 148e12,
+            hbm_bw: 4.0e12,
+            nvlink_bw: 450e9,
+            pcie_bw: 55e9,
+        }
+    }
+
+    /// NVIDIA A100 40 GB: 108 SMs, 312 TFLOPs BF16, 1.55 TB/s HBM,
+    /// 600 GB/s NVLink aggregate (300 GB/s per direction), PCIe gen4 x16.
+    pub fn a100_40g() -> GpuSpec {
+        GpuSpec {
+            name: "a100-40g",
+            hbm_bytes: 40 * crate::util::GIB,
+            sm_count: 108,
+            bf16_flops: 312e12,
+            hbm_bw: 1.55e12,
+            nvlink_bw: 300e9,
+            pcie_bw: 28e9,
+        }
+    }
+
+    /// Look up by name.
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "h20" => Some(Self::h20()),
+            "a100" | "a100-40g" | "a100_40g" => Some(Self::a100_40g()),
+            _ => None,
+        }
+    }
+
+    /// The GPU the paper pairs with this model (§6.1 Table 4): a single GPU
+    /// must fit the whole model.
+    pub fn for_model(model: &crate::config::ModelConfig) -> GpuSpec {
+        if model.total_weight_bytes() > 30 * crate::util::GIB {
+            Self::h20()
+        } else {
+            Self::a100_40g()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn capacities_match_paper() {
+        assert_eq!(GpuSpec::h20().hbm_bytes, 96 * crate::util::GIB);
+        assert_eq!(GpuSpec::a100_40g().hbm_bytes, 40 * crate::util::GIB);
+        assert_eq!(GpuSpec::h20().sm_count, 78); // paper: "using 78 SMs"
+    }
+
+    #[test]
+    fn model_gpu_pairing_matches_table4() {
+        assert_eq!(GpuSpec::for_model(&ModelConfig::llama2_7b()).name, "a100-40g");
+        assert_eq!(GpuSpec::for_model(&ModelConfig::llama3_8b()).name, "a100-40g");
+        assert_eq!(GpuSpec::for_model(&ModelConfig::qwen2_5_32b()).name, "h20");
+        assert_eq!(GpuSpec::for_model(&ModelConfig::qwen3_32b()).name, "h20");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(GpuSpec::by_name("H20").is_some());
+        assert!(GpuSpec::by_name("a100").is_some());
+        assert!(GpuSpec::by_name("tpu-v5e").is_none());
+    }
+}

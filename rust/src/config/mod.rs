@@ -1,0 +1,12 @@
+//! Configuration: model architectures, GPU specs, cluster/experiment
+//! settings, paper calibration constants, and a TOML-subset parser.
+
+pub mod calib;
+pub mod cluster;
+pub mod gpu;
+pub mod model;
+pub mod parse;
+
+pub use cluster::{ClusterConfig, Policy};
+pub use gpu::GpuSpec;
+pub use model::{MlpKind, ModelConfig};

@@ -1,0 +1,214 @@
+//! TOML-subset parser for cluster/experiment config files.
+//!
+//! Supports: `[section]` headers, `key = value` with string/int/float/bool
+//! values, `#` comments, and `key = [v1, v2]` arrays of scalars. This is
+//! all the launcher needs; the full TOML crate is unavailable offline.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key` → value. Keys before any `[section]`
+/// live in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unclosed [section]", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            map.insert(key, val);
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' begins a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word → string (lenient, convenient for model names)
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # cluster config
+            name = "demo"
+            [cluster]
+            hosts = 2
+            gpus_per_host = 8
+            qps = 0.6            # load
+            burst = true
+            tps = [1, 2, 4]
+            model = qwen2.5-32b
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "demo");
+        assert_eq!(doc.i64_or("cluster.hosts", 0), 2);
+        assert_eq!(doc.f64_or("cluster.qps", 0.0), 0.6);
+        assert!(doc.bool_or("cluster.burst", false));
+        assert_eq!(doc.str_or("cluster.model", ""), "qwen2.5-32b");
+        match doc.get("cluster.tps").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            v => panic!("expected array, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = Doc::parse("k = \"a # b\"").unwrap();
+        assert_eq!(doc.str_or("k", ""), "a # b");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.i64_or("missing", 9), 9);
+    }
+}

@@ -1,0 +1,750 @@
+//! The cluster simulation driver: event-driven serving of a request trace
+//! across instances, with runtime parallelism transformation.
+//!
+//! This is the L3 "leader" logic the paper's experiments run on: arrivals
+//! are routed by a [`RoutePolicy`], instances execute prefill/decode steps
+//! timed by the calibrated [`EngineModel`], and transformations are merged
+//! /split live with their visible overhead charged to serving steps.
+
+use super::instance::{Instance, ParallelKind, StepKind, TransformState};
+use super::request::{ActiveRequest, Phase};
+use super::scheduler::{make_policy, ClusterView, Route, RoutePolicy};
+use crate::config::{ClusterConfig, Policy};
+use crate::metrics::{Recorder, RunReport};
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::sim::{EngineModel, EventQueue};
+use crate::transform::{estimate, Mechanism, TransformExec, TransformPlan};
+use crate::workload::Trace;
+use std::collections::VecDeque;
+
+/// Which end-to-end system is being simulated (Figure 14 series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Full Gyges (TP transformation, header-centric KV, padding, overlap).
+    Gyges,
+    /// Gyges without overlapping (ablation, §6.3).
+    GygesNoOverlap,
+    /// TP transformation with basic KV/weight mechanisms.
+    Basic,
+    /// Seesaw: blocking CPU-shared-memory re-sharding.
+    Seesaw,
+    /// KunServe: dynamic pipeline parallelism.
+    KunServe,
+    /// LoongServe: elastic sequence parallelism.
+    LoongServe,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Gyges => "gyges",
+            SystemKind::GygesNoOverlap => "gyges-",
+            SystemKind::Basic => "basic",
+            SystemKind::Seesaw => "seesaw",
+            SystemKind::KunServe => "kunserve",
+            SystemKind::LoongServe => "loongserve",
+        }
+    }
+
+    fn parallel_kind(&self) -> ParallelKind {
+        match self {
+            SystemKind::KunServe => ParallelKind::Pp,
+            SystemKind::LoongServe => ParallelKind::Sp,
+            _ => ParallelKind::Tp,
+        }
+    }
+
+    fn mechanism(&self) -> Option<Mechanism> {
+        match self {
+            SystemKind::Gyges => Some(Mechanism::Gyges),
+            SystemKind::GygesNoOverlap => Some(Mechanism::GygesNoOverlap),
+            SystemKind::Basic => Some(Mechanism::Basic),
+            SystemKind::Seesaw => Some(Mechanism::Seesaw),
+            // PP/SP re-grouping needs no KV/weight re-shard: cheap and
+            // non-blocking (their cost is steady-state inefficiency).
+            SystemKind::KunServe | SystemKind::LoongServe => None,
+        }
+    }
+}
+
+enum Event {
+    Arrival(usize),
+    /// (instance id, epoch) — stale epochs are dropped.
+    Step(usize, u64),
+    TransformDone(usize, u64),
+}
+
+/// What the in-flight step of an instance will do when it completes.
+#[derive(Clone, Copy, Debug)]
+enum Pending {
+    Prefill { req_id: u64 },
+    Decode,
+    /// Idle-time transformation drain.
+    Maintenance,
+}
+
+/// Counters describing cluster-level behaviour.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimCounters {
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub deferred: u64,
+    pub steps: u64,
+}
+
+/// Result of one simulation run.
+pub struct SimOutcome {
+    pub report: RunReport,
+    pub recorder: Recorder,
+    pub counters: SimCounters,
+}
+
+/// The cluster simulator.
+pub struct ClusterSim {
+    pub cfg: ClusterConfig,
+    pub engine: EngineModel,
+    pub system: SystemKind,
+    instances: Vec<Instance>,
+    epochs: Vec<u64>,
+    pending: Vec<Option<Pending>>,
+    queue: EventQueue<Event>,
+    trace: Trace,
+    policy: Box<dyn RoutePolicy>,
+    backlog: VecDeque<ActiveRequest>,
+    pub recorder: Recorder,
+    pub counters: SimCounters,
+    /// When set, ScaleUp routes become Defer and scale-down never fires
+    /// (static deployments, §3.3 baseline).
+    transformation_disabled: bool,
+    /// Per-instance: an idle dwell re-check event is outstanding.
+    dwell_check_scheduled: Vec<bool>,
+}
+
+impl ClusterSim {
+    /// Build a simulator with `cfg.total_gpus()` initial TP1 instances.
+    pub fn new(cfg: ClusterConfig, system: SystemKind, trace: Trace) -> ClusterSim {
+        let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
+        let mut instances = Vec::new();
+        for host in 0..cfg.hosts {
+            for g in 0..cfg.gpus_per_host {
+                let id = instances.len();
+                instances.push(Instance::new(id, host, vec![host * cfg.gpus_per_host + g], 1));
+            }
+        }
+        let policy: Box<dyn RoutePolicy> = match system {
+            SystemKind::Gyges
+            | SystemKind::GygesNoOverlap
+            | SystemKind::Basic
+            | SystemKind::Seesaw => make_policy(cfg.policy),
+            // Baseline systems ship their own (least-load) scheduler.
+            SystemKind::KunServe | SystemKind::LoongServe => make_policy(Policy::LeastLoadFirst),
+        };
+        let n = instances.len();
+        ClusterSim {
+            cfg,
+            engine,
+            system,
+            instances,
+            epochs: vec![0; n],
+            pending: vec![None; n],
+            queue: EventQueue::new(),
+            trace,
+            policy,
+            backlog: VecDeque::new(),
+            recorder: Recorder::new(),
+            counters: SimCounters::default(),
+            transformation_disabled: false,
+            dwell_check_scheduled: vec![false; n],
+        }
+    }
+
+    /// Replace the initial instance layout (static-hybrid baseline). The
+    /// callback receives (host, first_gpu_of_host) and returns
+    /// (host, workers, degree) triples for that host.
+    pub fn replace_instances(
+        &mut self,
+        mut layout: impl FnMut(usize, usize) -> Vec<(usize, Vec<usize>, u64)>,
+    ) {
+        self.instances.clear();
+        for host in 0..self.cfg.hosts {
+            for (h, workers, degree) in layout(host, host * self.cfg.gpus_per_host) {
+                let id = self.instances.len();
+                self.instances.push(Instance::new(id, h, workers, degree));
+            }
+        }
+        self.epochs = vec![0; self.instances.len()];
+        self.pending = vec![None; self.instances.len()];
+        self.dwell_check_scheduled = vec![false; self.instances.len()];
+    }
+
+    /// Disable runtime transformation (static deployments).
+    pub fn disable_transformation(&mut self) {
+        self.transformation_disabled = true;
+    }
+
+    /// Tune the Gyges policy's anti-oscillation hold (ablation A3).
+    /// No-op for other policies.
+    pub fn set_gyges_hold(&mut self, hold_s: f64) {
+        let mut p = super::scheduler::GygesPolicy::default();
+        p.long_hold_s = hold_s;
+        if self.policy.name() == "gyges" {
+            self.policy = Box::new(p);
+        }
+    }
+
+    /// Override the routing policy (Figure 12 compares policies on the
+    /// same Gyges transformation machinery).
+    pub fn with_policy(mut self, policy: Policy) -> ClusterSim {
+        self.policy = make_policy(policy);
+        self
+    }
+
+    /// Run to completion and summarize.
+    pub fn run(mut self) -> SimOutcome {
+        for i in 0..self.trace.len() {
+            self.queue.push(self.trace.requests[i].arrival, Event::Arrival(i));
+        }
+        let mut guard = 0u64;
+        while let Some((now, ev)) = self.queue.pop() {
+            guard += 1;
+            assert!(guard < 200_000_000, "event-loop runaway");
+            match ev {
+                Event::Arrival(idx) => self.on_arrival(now, idx),
+                Event::Step(iid, epoch) => {
+                    if self.epochs[iid] == epoch && !self.instances[iid].retired {
+                        self.on_step(now, iid);
+                    }
+                }
+                Event::TransformDone(iid, epoch) => {
+                    if self.epochs[iid] == epoch && !self.instances[iid].retired {
+                        self.on_transform_done(now, iid);
+                    }
+                }
+            }
+        }
+        let label = format!("{}/{}", self.system.name(), self.policy.name());
+        let report = RunReport::from_recorder(&label, &self.recorder);
+        SimOutcome { report, recorder: self.recorder, counters: self.counters }
+    }
+
+    // -----------------------------------------------------------------
+    // Event handlers
+    // -----------------------------------------------------------------
+
+    fn on_arrival(&mut self, now: SimTime, idx: usize) {
+        let tr = &self.trace.requests[idx];
+        self.recorder.on_arrival(tr.id, now, tr.input_len, tr.output_len);
+        let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len);
+        self.route(now, req);
+    }
+
+    fn route(&mut self, now: SimTime, req: ActiveRequest) {
+        let view = ClusterView {
+            instances: &self.instances,
+            engine: &self.engine,
+            cfg: &self.cfg,
+            now,
+        };
+        match self.policy.route(&req, &view) {
+            Route::Assign(iid) => {
+                self.instances[iid].admit(req);
+                self.kick(now, iid);
+            }
+            Route::ScaleUp { members, to_tp } => {
+                if self.transformation_disabled {
+                    self.counters.deferred += 1;
+                    self.backlog.push_back(req);
+                } else {
+                    let iid = self.scale_up(now, members, to_tp);
+                    self.instances[iid].admit(req);
+                    self.kick(now, iid);
+                }
+            }
+            Route::Defer => {
+                self.counters.deferred += 1;
+                self.backlog.push_back(req);
+            }
+        }
+    }
+
+    fn on_step(&mut self, now: SimTime, iid: usize) {
+        self.counters.steps += 1;
+        self.instances[iid].stepping = false;
+        self.dwell_check_scheduled[iid] = false;
+        let pending = self.pending[iid].take();
+        let mut finished_any = false;
+        match pending {
+            Some(Pending::Prefill { req_id }) => {
+                let inst = &mut self.instances[iid];
+                if let Some(pos) = inst.prefill_queue.iter().position(|r| r.id == req_id) {
+                    let mut req = inst.prefill_queue.remove(pos).unwrap();
+                    req.phase = Phase::Decode;
+                    req.generated = 1; // prefill emits the first token
+                    inst.kv_tokens += req.input_len + 1;
+                    self.recorder.on_first_token(req_id, now);
+                    if req.done() {
+                        inst.kv_tokens -= req.final_len().min(inst.kv_tokens);
+                        self.recorder.on_finish(req_id, now);
+                        finished_any = true;
+                    } else {
+                        inst.running.push(req);
+                    }
+                }
+            }
+            Some(Pending::Decode) => {
+                // Only the continuous batch (max_batch_size slots) advances
+                // this step; the rest wait and the window rotates so every
+                // running request makes progress across steps.
+                let max_batch = self.cfg.max_batch_size;
+                let inst = &mut self.instances[iid];
+                let batch = inst.running.len().min(max_batch);
+                let mut done_ids = Vec::new();
+                let mut stepped_ids = Vec::with_capacity(batch);
+                for r in inst.running.iter_mut().take(batch) {
+                    r.generated += 1;
+                    inst.kv_tokens += 1;
+                    stepped_ids.push(r.id);
+                    if r.done() {
+                        done_ids.push(r.id);
+                    }
+                }
+                for id in &stepped_ids {
+                    self.recorder.on_token(*id, now);
+                }
+                for id in &done_ids {
+                    if let Some(pos) = inst.running.iter().position(|r| r.id == *id) {
+                        let req = inst.running.remove(pos);
+                        inst.kv_tokens -= req.final_len().min(inst.kv_tokens);
+                        self.recorder.on_finish(*id, now);
+                        finished_any = true;
+                    }
+                }
+                // Rotate the window for fairness.
+                let remaining_batch = batch.saturating_sub(done_ids.len());
+                let len = inst.running.len();
+                if len > remaining_batch && remaining_batch > 0 {
+                    inst.running.rotate_left(remaining_batch.min(len));
+                }
+            }
+            Some(Pending::Maintenance) => {
+                // Idle transformation drain completed.
+                if let Some(ts) = &mut self.instances[iid].transforming {
+                    while ts.exec.advance().is_some() {}
+                }
+                self.clear_transform_if_done(now, iid);
+            }
+            None => {}
+        }
+        self.clear_transform_if_done(now, iid);
+        self.maybe_scale_down(now, iid);
+        if !self.instances[iid].retired {
+            self.kick(now, iid);
+        }
+        if finished_any {
+            self.drain_backlog(now);
+        }
+    }
+
+    fn on_transform_done(&mut self, now: SimTime, iid: usize) {
+        let inst = &mut self.instances[iid];
+        if let Some(ts) = &mut inst.transforming {
+            if let Some(until) = ts.blocked_until {
+                if now >= until {
+                    inst.transforming = None;
+                    inst.last_transform = now;
+                }
+            }
+        }
+        self.kick(now, iid);
+        self.drain_backlog(now);
+    }
+
+    // -----------------------------------------------------------------
+    // Stepping
+    // -----------------------------------------------------------------
+
+    /// Schedule the next step of `iid` if it has work and none scheduled.
+    fn kick(&mut self, now: SimTime, iid: usize) {
+        let max_batch = self.cfg.max_batch_size;
+        let inst = &self.instances[iid];
+        if inst.retired || inst.stepping {
+            return;
+        }
+        if let Some(ts) = &inst.transforming {
+            if let Some(until) = ts.blocked_until {
+                // Blocked (Seesaw): wait for TransformDone.
+                let _ = until;
+                return;
+            }
+        }
+        let step = self.instances[iid].next_step(&self.engine, max_batch);
+        let (pending, mut duration) = match step {
+            Some(StepKind::Prefill { req_id, duration }) => {
+                (Pending::Prefill { req_id }, duration)
+            }
+            Some(StepKind::Decode { duration }) => (Pending::Decode, duration),
+            None => {
+                // Idle: drain any non-blocking transformation in one quantum.
+                if let Some(ts) = &self.instances[iid].transforming {
+                    if ts.blocked_until.is_none() && !ts.exec.done() {
+                        let remaining_steps =
+                            (ts.exec.plan.num_steps() - ts.exec.step) as u64;
+                        let d = SimDuration::from_millis_f64(5.0 * remaining_steps as f64);
+                        self.pending[iid] = Some(Pending::Maintenance);
+                        self.instances[iid].stepping = true;
+                        self.queue.push(now + d, Event::Step(iid, self.epochs[iid]));
+                    }
+                } else if self.instances[iid].degree > 1
+                    && !self.transformation_disabled
+                    && !self.dwell_check_scheduled[iid]
+                {
+                    // Idle high-TP instance: re-check scale-down once the
+                    // dwell window has elapsed (Algorithm 2 would
+                    // otherwise never fire without serving steps). At most
+                    // one re-check per idle period.
+                    let d = SimDuration::from_secs_f64(self.cfg.min_dwell_s);
+                    self.pending[iid] = None;
+                    self.instances[iid].stepping = true;
+                    self.dwell_check_scheduled[iid] = true;
+                    self.queue.push(now + d, Event::Step(iid, self.epochs[iid]));
+                }
+                return;
+            }
+        };
+        // Charge in-flight transformation overhead to this step.
+        if let Some(ts) = &mut self.instances[iid].transforming {
+            if ts.blocked_until.is_none() {
+                if let Some(extra) = ts.exec.advance() {
+                    duration += extra;
+                }
+            }
+        }
+        self.pending[iid] = Some(pending);
+        self.instances[iid].stepping = true;
+        self.queue.push(now + duration, Event::Step(iid, self.epochs[iid]));
+    }
+
+    fn clear_transform_if_done(&mut self, now: SimTime, iid: usize) {
+        let inst = &mut self.instances[iid];
+        if let Some(ts) = &inst.transforming {
+            if ts.blocked_until.is_none() && ts.exec.done() {
+                inst.transforming = None;
+                inst.last_transform = now;
+            }
+        }
+    }
+
+    fn drain_backlog(&mut self, now: SimTime) {
+        let mut tries = self.backlog.len();
+        while tries > 0 {
+            tries -= 1;
+            let Some(req) = self.backlog.pop_front() else { break };
+            let view = ClusterView {
+                instances: &self.instances,
+                engine: &self.engine,
+                cfg: &self.cfg,
+                now,
+            };
+            let route = self.policy.route(&req, &view);
+            match route {
+                Route::Assign(iid) => {
+                    self.instances[iid].admit(req);
+                    self.kick(now, iid);
+                }
+                Route::ScaleUp { members, to_tp } => {
+                    if self.transformation_disabled {
+                        self.backlog.push_back(req);
+                    } else {
+                        let iid = self.scale_up(now, members, to_tp);
+                        self.instances[iid].admit(req);
+                        self.kick(now, iid);
+                    }
+                }
+                Route::Defer => {
+                    self.backlog.push_back(req);
+                }
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Transformation
+    // -----------------------------------------------------------------
+
+    /// Merge `members` (TP1, same host) into one instance of degree
+    /// `to_tp`; returns the new instance id.
+    fn scale_up(&mut self, now: SimTime, members: Vec<usize>, to_tp: u64) -> usize {
+        assert_eq!(members.len() as u64, to_tp, "member count must equal target degree");
+        self.counters.scale_ups += 1;
+        let host = self.instances[members[0]].host;
+        let mut workers = Vec::new();
+        let mut running = Vec::new();
+        let mut prefill = VecDeque::new();
+        let mut kv_tokens = 0;
+        let mut avg_util = 0.0;
+        for &m in &members {
+            assert_eq!(self.instances[m].host, host, "cross-host merge");
+            assert_eq!(self.instances[m].degree, 1, "only TP1 members merge");
+            let inst = &mut self.instances[m];
+            inst.retired = true;
+            workers.extend(inst.workers.drain(..));
+            running.extend(inst.running.drain(..));
+            prefill.extend(inst.prefill_queue.drain(..));
+            kv_tokens += inst.kv_tokens;
+            avg_util += inst.load(&self.engine) / members.len() as f64;
+            self.epochs[m] += 1; // invalidate in-flight events
+        }
+        let new_id = self.instances.len();
+        let mut merged = Instance::new(new_id, host, workers, to_tp);
+        merged.kind = self.system.parallel_kind();
+        merged.running = running;
+        merged.prefill_queue = prefill;
+        merged.kv_tokens = kv_tokens;
+        merged.last_transform = now;
+        self.instances.push(merged);
+        self.epochs.push(0);
+        self.pending.push(None);
+        self.dwell_check_scheduled.push(false);
+        self.attach_transform(now, new_id, 1, to_tp, avg_util);
+        new_id
+    }
+
+    /// Split a TP>1 instance back into TP1 instances (Algorithm 2 action).
+    fn scale_down(&mut self, now: SimTime, iid: usize) {
+        self.counters.scale_downs += 1;
+        let from_tp = self.instances[iid].degree;
+        let host = self.instances[iid].host;
+        let util = self.instances[iid].load(&self.engine);
+        let (workers, running, prefill) = {
+            let inst = &mut self.instances[iid];
+            inst.retired = true;
+            self.epochs[iid] += 1;
+            (
+                std::mem::take(&mut inst.workers),
+                std::mem::take(&mut inst.running),
+                std::mem::take(&mut inst.prefill_queue),
+            )
+        };
+        let n = from_tp as usize;
+        let mut new_ids = Vec::with_capacity(n);
+        for k in 0..n {
+            let id = self.instances.len();
+            let mut inst = Instance::new(id, host, vec![workers[k]], 1);
+            inst.last_transform = now;
+            self.instances.push(inst);
+            self.epochs.push(0);
+            self.pending.push(None);
+            self.dwell_check_scheduled.push(false);
+            new_ids.push(id);
+        }
+        // Redistribute work round-robin; everything fits by the
+        // `should_scale_down` precondition (no long requests).
+        for (k, mut r) in running.into_iter().enumerate() {
+            let target = new_ids[k % n];
+            let inst = &mut self.instances[target];
+            inst.kv_tokens += r.context_len();
+            r.phase = Phase::Decode;
+            inst.running.push(r);
+        }
+        for (k, r) in prefill.into_iter().enumerate() {
+            self.instances[new_ids[k % n]].prefill_queue.push_back(r);
+        }
+        for &id in &new_ids {
+            self.attach_transform(now, id, from_tp, 1, util);
+            self.kick(now, id);
+        }
+    }
+
+    /// Attach the transformation cost machinery to an instance.
+    fn attach_transform(&mut self, now: SimTime, iid: usize, from_tp: u64, to_tp: u64, kv_util: f64) {
+        let kv_util = kv_util.clamp(0.05, 0.95);
+        match self.system.mechanism() {
+            Some(mech) => {
+                let plan = TransformPlan::build(&self.cfg.model, from_tp, to_tp, 1);
+                let exec =
+                    TransformExec::new(&self.cfg.model, &self.cfg.gpu, plan, kv_util, mech);
+                let cost =
+                    estimate(&self.cfg.model, &self.cfg.gpu, from_tp, to_tp, kv_util, mech);
+                let blocked_until = if cost.blocking { Some(now + cost.total) } else { None };
+                if let Some(until) = blocked_until {
+                    self.queue.push(until, Event::TransformDone(iid, self.epochs[iid]));
+                }
+                self.instances[iid].transforming = Some(TransformState { exec, blocked_until });
+            }
+            None => {
+                // PP/SP re-grouping: a brief non-blocking reconfiguration.
+                let until = now + SimDuration::from_millis_f64(100.0);
+                self.instances[iid].transforming = Some(TransformState {
+                    exec: TransformExec::new(
+                        &self.cfg.model,
+                        &self.cfg.gpu,
+                        TransformPlan::build(&self.cfg.model, from_tp, to_tp, self.cfg.model.num_layers as usize),
+                        kv_util,
+                        Mechanism::Gyges,
+                    ),
+                    blocked_until: Some(until),
+                });
+                self.queue.push(until, Event::TransformDone(iid, self.epochs[iid]));
+            }
+        }
+    }
+
+    fn maybe_scale_down(&mut self, now: SimTime, iid: usize) {
+        if self.transformation_disabled {
+            return;
+        }
+        let view = ClusterView {
+            instances: &self.instances,
+            engine: &self.engine,
+            cfg: &self.cfg,
+            now,
+        };
+        let inst = &self.instances[iid];
+        if self.policy.should_scale_down(inst, &view) {
+            self.scale_down(now, iid);
+        }
+    }
+}
+
+/// Convenience: run a full experiment.
+pub fn run_system(
+    cfg: ClusterConfig,
+    system: SystemKind,
+    policy: Option<Policy>,
+    trace: Trace,
+) -> SimOutcome {
+    let mut sim = ClusterSim::new(cfg, system, trace);
+    if let Some(p) = policy {
+        sim = sim.with_policy(p);
+    }
+    sim.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn small_cfg() -> ClusterConfig {
+        ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+    }
+
+    fn short_trace(n: usize) -> Trace {
+        let mut t = Trace::default();
+        for i in 0..n {
+            t.requests.push(crate::workload::TraceRequest {
+                id: i as u64,
+                arrival: SimTime::from_secs_f64(i as f64 * 0.5),
+                input_len: 1000,
+                output_len: 50,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn serves_short_trace_completely() {
+        let out = run_system(small_cfg(), SystemKind::Gyges, None, short_trace(40));
+        assert_eq!(out.report.completed, 40, "all requests must finish");
+        assert_eq!(out.counters.scale_ups, 0, "shorts never trigger scale-up");
+        assert!(out.report.throughput_tps > 0.0);
+    }
+
+    #[test]
+    fn long_request_triggers_scale_up_and_completes() {
+        let mut trace = short_trace(10);
+        trace.requests.push(crate::workload::TraceRequest {
+            id: 10,
+            arrival: SimTime::from_secs_f64(1.0),
+            input_len: 50_000,
+            output_len: 64,
+        });
+        trace.sort();
+        let out = run_system(small_cfg(), SystemKind::Gyges, None, trace);
+        assert_eq!(out.report.completed, 11);
+        assert!(out.counters.scale_ups >= 1);
+    }
+
+    #[test]
+    fn scale_down_happens_after_long_work_drains() {
+        let mut trace = Trace::default();
+        trace.requests.push(crate::workload::TraceRequest {
+            id: 0,
+            arrival: SimTime::ZERO,
+            input_len: 50_000,
+            output_len: 32,
+        });
+        // steady shorts afterwards so steps keep firing post-drain
+        for i in 1..200u64 {
+            trace.requests.push(crate::workload::TraceRequest {
+                id: i,
+                arrival: SimTime::from_secs_f64(20.0 + i as f64 * 0.5),
+                input_len: 1000,
+                output_len: 20,
+            });
+        }
+        trace.sort();
+        let out = run_system(small_cfg(), SystemKind::Gyges, None, trace);
+        assert!(out.counters.scale_ups >= 1);
+        assert!(out.counters.scale_downs >= 1, "TP4 must split back");
+        assert_eq!(out.report.completed, 200);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let t = Trace::hybrid_paper(5, 120.0);
+        let a = run_system(small_cfg(), SystemKind::Gyges, None, t.clone());
+        let b = run_system(small_cfg(), SystemKind::Gyges, None, t);
+        assert_eq!(a.report.completed, b.report.completed);
+        assert!((a.report.throughput_tps - b.report.throughput_tps).abs() < 1e-9);
+        assert_eq!(a.counters.scale_ups, b.counters.scale_ups);
+    }
+
+    #[test]
+    fn policies_differ_on_hybrid_load() {
+        let t = Trace::hybrid_paper(11, 240.0);
+        let gy = run_system(small_cfg(), SystemKind::Gyges, Some(Policy::Gyges), t.clone());
+        let rr = run_system(small_cfg(), SystemKind::Gyges, Some(Policy::RoundRobin), t.clone());
+        let llf =
+            run_system(small_cfg(), SystemKind::Gyges, Some(Policy::LeastLoadFirst), t);
+        // Gyges should not transform more often than the baselines.
+        assert!(gy.counters.scale_ups <= rr.counters.scale_ups.max(llf.counters.scale_ups));
+    }
+
+    #[test]
+    fn seesaw_blocks_and_hurts_ttft() {
+        let mut trace = short_trace(20);
+        trace.requests.push(crate::workload::TraceRequest {
+            id: 20,
+            arrival: SimTime::from_secs_f64(2.0),
+            input_len: 50_000,
+            output_len: 32,
+        });
+        trace.sort();
+        let gy = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
+        let ss = run_system(small_cfg(), SystemKind::Seesaw, None, trace);
+        assert!(ss.report.ttft_p99_s > gy.report.ttft_p99_s, "seesaw blocking must show");
+    }
+
+    #[test]
+    fn kunserve_decodes_slower_at_high_degree() {
+        let mut trace = Trace::default();
+        trace.requests.push(crate::workload::TraceRequest {
+            id: 0,
+            arrival: SimTime::ZERO,
+            input_len: 50_000,
+            output_len: 128,
+        });
+        trace.sort();
+        let gy = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
+        let ks = run_system(small_cfg(), SystemKind::KunServe, None, trace);
+        assert_eq!(gy.report.completed, 1);
+        assert_eq!(ks.report.completed, 1);
+        assert!(
+            ks.report.tpot_p50_s > gy.report.tpot_p50_s,
+            "PP decode must be slower: {} vs {}",
+            ks.report.tpot_p50_s,
+            gy.report.tpot_p50_s
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Serving-instance state machine: a TP (or baseline PP/SP) group of
+//! workers with its KV pool, request queues, and transformation state.
+
+use super::request::{ActiveRequest, Phase};
+use crate::config::calib::baselines;
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::sim::EngineModel;
+use crate::transform::TransformExec;
+use std::collections::VecDeque;
+
+/// Parallelism family of an instance (TP for Gyges; PP/SP for the
+/// KunServe/LoongServe baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelKind {
+    Tp,
+    /// Pipeline parallelism (KunServe-style dynamic PP).
+    Pp,
+    /// Sequence parallelism (LoongServe-style elastic SP).
+    Sp,
+}
+
+/// An in-flight transformation on an instance.
+#[derive(Debug)]
+pub struct TransformState {
+    pub exec: TransformExec,
+    /// Set for blocking mechanisms (Seesaw): serving resumes at this time.
+    pub blocked_until: Option<SimTime>,
+}
+
+/// One serving instance.
+#[derive(Debug)]
+pub struct Instance {
+    pub id: usize,
+    pub host: usize,
+    /// Global GPU ids owned by this instance.
+    pub workers: Vec<usize>,
+    pub degree: u64,
+    pub kind: ParallelKind,
+    /// Requests currently decoding.
+    pub running: Vec<ActiveRequest>,
+    /// Requests admitted but awaiting prefill.
+    pub prefill_queue: VecDeque<ActiveRequest>,
+    /// KV tokens currently stored.
+    pub kv_tokens: u64,
+    pub transforming: Option<TransformState>,
+    pub last_transform: SimTime,
+    /// True while a Step event is outstanding in the event queue.
+    pub stepping: bool,
+    /// Retired flag (merged into another instance).
+    pub retired: bool,
+}
+
+impl Instance {
+    pub fn new(id: usize, host: usize, workers: Vec<usize>, degree: u64) -> Instance {
+        Instance {
+            id,
+            host,
+            workers,
+            degree,
+            kind: ParallelKind::Tp,
+            running: Vec::new(),
+            prefill_queue: VecDeque::new(),
+            kv_tokens: 0,
+            transforming: None,
+            last_transform: SimTime::ZERO,
+            stepping: false,
+            retired: false,
+        }
+    }
+
+    /// KV capacity in tokens for this instance under `engine`'s model.
+    pub fn kv_capacity(&self, engine: &EngineModel) -> u64 {
+        engine.kv_capacity_tokens(self.degree)
+    }
+
+    /// Maximum supported sequence length.
+    pub fn max_seq(&self, engine: &EngineModel) -> u64 {
+        engine.max_seq(self.degree)
+    }
+
+    /// Load metric used by the schedulers: KV occupancy projected to
+    /// completion of admitted requests.
+    pub fn load(&self, engine: &EngineModel) -> f64 {
+        let cap = self.kv_capacity(engine).max(1);
+        let committed: u64 = self
+            .running
+            .iter()
+            .map(|r| r.final_len())
+            .chain(self.prefill_queue.iter().map(|r| r.final_len()))
+            .sum();
+        committed as f64 / cap as f64
+    }
+
+    /// Would admitting `req` fit (projected to completion)?
+    pub fn fits(&self, engine: &EngineModel, req: &ActiveRequest) -> bool {
+        if req.final_len() > self.max_seq(engine) {
+            return false;
+        }
+        let cap = self.kv_capacity(engine);
+        let committed: u64 = self
+            .running
+            .iter()
+            .map(|r| r.final_len())
+            .chain(self.prefill_queue.iter().map(|r| r.final_len()))
+            .sum();
+        committed + req.final_len() <= cap
+    }
+
+    /// Any running/queued request that exceeds the next-lower degree's
+    /// max sequence (Algorithm 2's `no_long_req` check)?
+    pub fn has_long_req(&self, engine: &EngineModel, lower_tp: u64) -> bool {
+        let lower_max = engine.max_seq(lower_tp);
+        self.running
+            .iter()
+            .chain(self.prefill_queue.iter())
+            .any(|r| r.final_len() > lower_max)
+    }
+
+    pub fn admit(&mut self, mut req: ActiveRequest) {
+        req.phase = Phase::Prefill;
+        self.prefill_queue.push_back(req);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.running.is_empty() && self.prefill_queue.is_empty()
+    }
+
+    /// Total active requests.
+    pub fn active_count(&self) -> usize {
+        self.running.len() + self.prefill_queue.len()
+    }
+
+    /// Duration of the next serving step; also describes what it does.
+    pub fn next_step(&self, engine: &EngineModel, max_batch: usize) -> Option<StepKind> {
+        if self.retired {
+            return None;
+        }
+        if let Some(req) = self.prefill_queue.front() {
+            let t = self.step_scale(engine.prefill(self.degree, req.input_len));
+            return Some(StepKind::Prefill { req_id: req.id, duration: t });
+        }
+        if !self.running.is_empty() {
+            let batch = self.running.len().min(max_batch) as u64;
+            let avg_ctx = self.running.iter().map(|r| r.context_len()).sum::<u64>()
+                / self.running.len() as u64;
+            let t = self.step_scale(engine.decode_step(self.degree, batch, avg_ctx));
+            return Some(StepKind::Decode { duration: t });
+        }
+        None
+    }
+
+    /// Apply the PP/SP efficiency penalty (§2 / §3.3: PP and SP activate a
+    /// fraction of GPUs per time slot; measured as 43.5% extra throughput
+    /// degradation) to a step duration.
+    fn step_scale(&self, d: SimDuration) -> SimDuration {
+        match self.kind {
+            ParallelKind::Tp => d,
+            ParallelKind::Pp | ParallelKind::Sp => {
+                if self.degree > 1 {
+                    d.scale(1.0 / (1.0 - baselines::PP_SP_EXTRA_DEGRADATION))
+                } else {
+                    d
+                }
+            }
+        }
+    }
+}
+
+/// What the next step of an instance does.
+#[derive(Clone, Copy, Debug)]
+pub enum StepKind {
+    Prefill { req_id: u64, duration: SimDuration },
+    Decode { duration: SimDuration },
+}
+
+impl StepKind {
+    pub fn duration(&self) -> SimDuration {
+        match self {
+            StepKind::Prefill { duration, .. } | StepKind::Decode { duration } => *duration,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelConfig};
+
+    fn engine() -> EngineModel {
+        EngineModel::new(ModelConfig::qwen2_5_32b(), GpuSpec::h20())
+    }
+
+    fn req(id: u64, input: u64, output: u64) -> ActiveRequest {
+        ActiveRequest::new(id, SimTime::ZERO, input, output)
+    }
+
+    #[test]
+    fn admit_and_fit() {
+        let e = engine();
+        let mut inst = Instance::new(0, 0, vec![0], 1);
+        assert!(inst.fits(&e, &req(1, 1000, 100)));
+        assert!(!inst.fits(&e, &req(2, 50_000, 100)), "long must not fit TP1");
+        inst.admit(req(1, 1000, 100));
+        assert_eq!(inst.active_count(), 1);
+        assert!(inst.load(&e) > 0.0);
+    }
+
+    #[test]
+    fn capacity_projection_blocks_overcommit() {
+        let e = engine();
+        let mut inst = Instance::new(0, 0, vec![0], 1);
+        let cap = inst.kv_capacity(&e);
+        let mut admitted = 0u64;
+        loop {
+            let r = req(admitted, 3000, 200);
+            if !inst.fits(&e, &r) {
+                break;
+            }
+            inst.admit(r);
+            admitted += 1;
+            assert!(admitted < 100_000, "runaway");
+        }
+        let committed: u64 = inst.prefill_queue.iter().map(|r| r.final_len()).sum();
+        assert!(committed <= cap);
+        assert!(admitted > 0);
+    }
+
+    #[test]
+    fn step_kind_sequence() {
+        let e = engine();
+        let mut inst = Instance::new(0, 0, vec![0], 1);
+        assert!(inst.next_step(&e, 64).is_none());
+        inst.admit(req(1, 1000, 4));
+        match inst.next_step(&e, 64) {
+            Some(StepKind::Prefill { req_id: 1, .. }) => {}
+            other => panic!("expected prefill, got {other:?}"),
+        }
+        // move to decode
+        let mut r = inst.prefill_queue.pop_front().unwrap();
+        r.phase = Phase::Decode;
+        inst.running.push(r);
+        match inst.next_step(&e, 64) {
+            Some(StepKind::Decode { .. }) => {}
+            other => panic!("expected decode, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pp_sp_penalty_applies() {
+        let e = engine();
+        let mut tp = Instance::new(0, 0, vec![0, 1, 2, 3], 4);
+        let mut r = req(1, 1000, 64);
+        r.phase = Phase::Decode;
+        tp.running.push(r.clone());
+        let t_tp = tp.next_step(&e, 64).unwrap().duration();
+        let mut pp = Instance::new(1, 0, vec![4, 5, 6, 7], 4);
+        pp.kind = ParallelKind::Pp;
+        pp.running.push(r);
+        let t_pp = pp.next_step(&e, 64).unwrap().duration();
+        let ratio = t_pp.as_secs_f64() / t_tp.as_secs_f64();
+        assert!((ratio - 1.0 / (1.0 - 0.435)).abs() < 1e-6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn long_req_detection_for_scale_down() {
+        let e = engine();
+        let mut inst = Instance::new(0, 0, vec![0, 1, 2, 3], 4);
+        let mut r = req(1, 30_000, 256);
+        r.phase = Phase::Decode;
+        inst.running.push(r);
+        assert!(inst.has_long_req(&e, 1), "30K ctx exceeds TP1 max");
+        assert!(!inst.has_long_req(&e, 2), "30K fits TP2");
+    }
+}

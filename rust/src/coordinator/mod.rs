@@ -1,0 +1,16 @@
+//! The Gyges coordinator (paper §5): request/instance state machines, the
+//! transformation-aware scheduler with RR/LLF baselines, and the
+//! event-driven cluster simulation the evaluation runs on.
+
+pub mod cluster;
+pub mod instance;
+pub mod request;
+pub mod scheduler;
+
+pub use cluster::{run_system, ClusterSim, SimCounters, SimOutcome, SystemKind};
+pub use instance::{Instance, ParallelKind, StepKind, TransformState};
+pub use request::{ActiveRequest, Phase};
+pub use scheduler::{
+    default_scale_down, make_policy, needed_tp, pick_merge_group, ClusterView, GygesPolicy,
+    LeastLoadPolicy, Route, RoundRobinPolicy, RoutePolicy,
+};

@@ -1,0 +1,76 @@
+//! Request lifecycle state inside the serving cluster.
+
+use crate::sim::clock::SimTime;
+
+/// Serving phase of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for an instance (cluster queue) or for KV room (instance
+    /// queue).
+    Queued,
+    /// Prefill scheduled/running.
+    Prefill,
+    /// Token-by-token decode.
+    Decode,
+    Finished,
+}
+
+/// A request being served.
+#[derive(Clone, Debug)]
+pub struct ActiveRequest {
+    pub id: u64,
+    pub arrival: SimTime,
+    pub input_len: u64,
+    pub output_len: u64,
+    pub generated: u64,
+    pub phase: Phase,
+}
+
+impl ActiveRequest {
+    pub fn new(id: u64, arrival: SimTime, input_len: u64, output_len: u64) -> ActiveRequest {
+        ActiveRequest { id, arrival, input_len, output_len, generated: 0, phase: Phase::Queued }
+    }
+
+    /// Current context length (input + generated tokens).
+    pub fn context_len(&self) -> u64 {
+        self.input_len + self.generated
+    }
+
+    /// KV tokens this request will occupy at completion.
+    pub fn final_len(&self) -> u64 {
+        self.input_len + self.output_len
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated >= self.output_len
+    }
+
+    /// Is this a "long" request relative to a TP1 instance's max sequence?
+    pub fn is_long(&self, tp1_max_seq: u64) -> bool {
+        self.final_len() > tp1_max_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_math() {
+        let mut r = ActiveRequest::new(1, SimTime::ZERO, 100, 10);
+        assert_eq!(r.context_len(), 100);
+        assert_eq!(r.final_len(), 110);
+        assert!(!r.done());
+        r.generated = 10;
+        assert!(r.done());
+        assert_eq!(r.context_len(), 110);
+    }
+
+    #[test]
+    fn long_classification() {
+        let r = ActiveRequest::new(1, SimTime::ZERO, 50_000, 256);
+        assert!(r.is_long(3750));
+        let s = ActiveRequest::new(2, SimTime::ZERO, 1000, 100);
+        assert!(!s.is_long(3750));
+    }
+}

@@ -1,0 +1,555 @@
+//! Request-routing policies: the transformation-aware Gyges scheduler
+//! (Algorithms 1 & 2) and the Round-Robin / Least-Load-First baselines of
+//! §6.2.4.
+
+use super::instance::Instance;
+use super::request::ActiveRequest;
+use crate::config::ClusterConfig;
+use crate::sim::clock::SimTime;
+use crate::sim::EngineModel;
+use std::collections::BTreeSet;
+
+/// Immutable view of the cluster a policy routes against.
+pub struct ClusterView<'a> {
+    pub instances: &'a [Instance],
+    pub engine: &'a EngineModel,
+    pub cfg: &'a ClusterConfig,
+    pub now: SimTime,
+}
+
+impl<'a> ClusterView<'a> {
+    /// Live (non-retired) instances.
+    pub fn live(&self) -> impl Iterator<Item = &Instance> {
+        self.instances.iter().filter(|i| !i.retired)
+    }
+
+    /// Live TP1-degree instances on `host`.
+    pub fn tp1_on_host(&self, host: usize) -> Vec<usize> {
+        self.live()
+            .filter(|i| i.host == host && i.degree == 1 && i.transforming.is_none())
+            .map(|i| i.id)
+            .collect()
+    }
+
+    /// Hosts ordered by count of mergeable TP1 instances (desc).
+    pub fn hosts_by_tp1(&self) -> Vec<(usize, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for i in self.live() {
+            if i.degree == 1 && i.transforming.is_none() {
+                *counts.entry(i.host).or_insert(0usize) += 1;
+            }
+        }
+        let mut v: Vec<(usize, usize)> = counts.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+}
+
+/// A routing decision.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Serve on this existing instance.
+    Assign(usize),
+    /// Merge `members` (same host, TP1) into one instance of degree
+    /// `to_tp`, then serve there.
+    ScaleUp { members: Vec<usize>, to_tp: u64 },
+    /// No capacity right now; retry later.
+    Defer,
+}
+
+/// A routing policy.
+pub trait RoutePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route;
+    /// Should `inst` scale down now? (Algorithm 2; baselines use the same
+    /// safety conditions so comparisons isolate the *routing* behaviour.)
+    fn should_scale_down(&mut self, inst: &Instance, view: &ClusterView<'_>) -> bool {
+        default_scale_down(inst, view)
+    }
+}
+
+/// Algorithm 2's safety conditions: TP>1, no long request in flight, load
+/// under threshold, dwell time elapsed, not already transforming.
+pub fn default_scale_down(inst: &Instance, view: &ClusterView<'_>) -> bool {
+    if inst.degree <= 1 || inst.transforming.is_some() || inst.retired {
+        return false;
+    }
+    // Scale-down decomposes all the way back to TP1 ("the TP4 instance can
+    // be elastically decomposed into four TP1 instances", §1) — every
+    // in-flight request must fit a TP1 instance.
+    let lower = 1;
+    if inst.has_long_req(view.engine, lower) {
+        return false;
+    }
+    if inst.load(view.engine) >= view.cfg.scale_down_threshold {
+        return false;
+    }
+    let dwell = view.now.since(inst.last_transform).as_secs_f64();
+    dwell >= view.cfg.min_dwell_s
+}
+
+/// Pick the TP degree needed to serve `req` (smallest allowed degree whose
+/// max-seq covers the request).
+pub fn needed_tp(req: &ActiveRequest, view: &ClusterView<'_>) -> Option<u64> {
+    view.cfg
+        .tp_choices
+        .iter()
+        .copied()
+        .find(|&tp| view.engine.max_seq(tp) >= req.final_len())
+}
+
+/// Select `n` mergeable TP1 instances on one host, preferring the host
+/// with the most candidates, then the least-loaded instances.
+pub fn pick_merge_group(view: &ClusterView<'_>, n: usize) -> Option<Vec<usize>> {
+    for (host, count) in view.hosts_by_tp1() {
+        if count < n {
+            continue;
+        }
+        let mut ids = view.tp1_on_host(host);
+        ids.sort_by(|&a, &b| {
+            let la = view.instances[a].load(view.engine);
+            let lb = view.instances[b].load(view.engine);
+            la.partial_cmp(&lb).unwrap()
+        });
+        ids.truncate(n);
+        return Some(ids);
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Gyges (Algorithms 1 & 2)
+// ---------------------------------------------------------------------
+
+/// The transformation-aware scheduler.
+pub struct GygesPolicy {
+    /// Instances currently reserved as scale-up headroom: the scheduler
+    /// keeps their load low so a transformation cannot OOM
+    /// (`check_reserve` in Algorithm 1).
+    pub reserved: BTreeSet<usize>,
+    /// Load cap applied to reserved instances for short traffic.
+    pub reserve_cap: f64,
+    /// Most recent long-request arrival the scheduler has seen. Scale-down
+    /// is held off while long traffic is active ("when consecutive long
+    /// requests occur, the scheduler prioritizes instances already
+    /// operating in higher TP configurations to minimize the number of
+    /// required transformations", §5) — this is the anti-oscillation
+    /// hysteresis that Challenge-3 calls for.
+    pub last_long_seen: Option<SimTime>,
+    /// How long after the last long request a TP>1 instance is retained.
+    pub long_hold_s: f64,
+}
+
+impl Default for GygesPolicy {
+    fn default() -> Self {
+        GygesPolicy {
+            reserved: BTreeSet::new(),
+            reserve_cap: 0.55,
+            last_long_seen: None,
+            long_hold_s: 45.0,
+        }
+    }
+}
+
+impl GygesPolicy {
+    /// Recompute the reserve (`update_reserve` in Algorithm 2): if no
+    /// TP>1 instance exists, reserve the least-loaded mergeable TP1 group;
+    /// otherwise no reserve is needed.
+    fn update_reserve(&mut self, view: &ClusterView<'_>) {
+        self.reserved.clear();
+        let has_high = view.live().any(|i| i.degree > 1);
+        if has_high {
+            return;
+        }
+        let n = (view.cfg.max_tp() as usize).min(view.cfg.gpus_per_host);
+        if let Some(group) = pick_merge_group(view, n) {
+            self.reserved.extend(group);
+        }
+    }
+}
+
+impl RoutePolicy for GygesPolicy {
+    fn name(&self) -> &'static str {
+        "gyges"
+    }
+
+    fn should_scale_down(&mut self, inst: &Instance, view: &ClusterView<'_>) -> bool {
+        // Hysteresis: while long traffic is (recently) active, keep the
+        // high-TP instance so follow-up longs reuse it instead of forcing
+        // fresh transformations (Figure 13's behaviour).
+        if let Some(t) = self.last_long_seen {
+            if view.now.since(t).as_secs_f64() < self.long_hold_s {
+                return false;
+            }
+        }
+        default_scale_down(inst, view)
+    }
+
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        self.update_reserve(view);
+        let tp1_max = view.engine.max_seq(1);
+        let long = req.is_long(tp1_max);
+        if long {
+            self.last_long_seen = Some(view.now);
+        }
+
+        if long {
+            // Prefer instances already operating at higher TP (minimises
+            // transformations; Figure 13's key behaviour).
+            let mut best: Option<(usize, f64)> = None;
+            for i in view.live().filter(|i| i.degree > 1) {
+                if i.fits(view.engine, req) && i.transforming.is_none() {
+                    let l = i.load(view.engine);
+                    if best.map(|(_, bl)| l < bl).unwrap_or(true) {
+                        best = Some((i.id, l));
+                    }
+                }
+            }
+            if let Some((id, _)) = best {
+                return Route::Assign(id);
+            }
+            // Scale up: need a degree that can hold the request.
+            let Some(to_tp) = needed_tp(req, view) else {
+                return Route::Defer;
+            };
+            if to_tp == 1 {
+                // Long by classification but fits TP1 (edge case).
+                return self.route_short(req, view);
+            }
+            // Prefer the reserved group (it was kept under-loaded).
+            let reserved: Vec<usize> = self
+                .reserved
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    let i = &view.instances[id];
+                    !i.retired && i.degree == 1 && i.transforming.is_none()
+                })
+                .collect();
+            if reserved.len() >= to_tp as usize {
+                let mut members = reserved;
+                members.truncate(to_tp as usize);
+                return Route::ScaleUp { members, to_tp };
+            }
+            if let Some(members) = pick_merge_group(view, to_tp as usize) {
+                return Route::ScaleUp { members, to_tp };
+            }
+            return Route::Defer;
+        }
+
+        self.route_short(req, view)
+    }
+}
+
+impl GygesPolicy {
+    /// Short-request routing: least expected load among fitting instances,
+    /// skipping reserved instances above the reserve cap and de-preferring
+    /// TP>1 instances (Algorithm 2 "reduces the request rate to these
+    /// instances to facilitate scaling down").
+    fn route_short(&self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        let mut best: Option<(usize, f64)> = None;
+        for i in view.live() {
+            if i.transforming.is_some() && i.degree == 1 {
+                continue;
+            }
+            if !i.fits(view.engine, req) {
+                continue;
+            }
+            let l = i.load(view.engine);
+            if self.reserved.contains(&i.id) && l > self.reserve_cap {
+                continue; // keep scale-up headroom (check_reserve)
+            }
+            // Penalise high-TP instances so they drain and scale down.
+            let score = l + if i.degree > 1 { 0.75 } else { 0.0 };
+            if best.map(|(_, bs)| score < bs).unwrap_or(true) {
+                best = Some((i.id, score));
+            }
+        }
+        match best {
+            Some((id, _)) => Route::Assign(id),
+            None => Route::Defer,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Baseline policies
+// ---------------------------------------------------------------------
+
+/// Round-Robin: next instance in rotation; if it cannot hold the request,
+/// it "collaborates with neighbouring instances" to scale up (§6.2.4).
+pub struct RoundRobinPolicy {
+    cursor: usize,
+}
+
+impl Default for RoundRobinPolicy {
+    fn default() -> Self {
+        RoundRobinPolicy { cursor: 0 }
+    }
+}
+
+impl RoutePolicy for RoundRobinPolicy {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        let live: Vec<usize> = view.live().map(|i| i.id).collect();
+        if live.is_empty() {
+            return Route::Defer;
+        }
+        // Rotate over live instances. RR is oblivious to sequence-length
+        // limits (§6.2.4): when its pick cannot hold the sequence, that
+        // instance "collaborates with neighbouring instances" to scale up
+        // (Figure 13's extra transformation). Instances that merely lack
+        // KV room right now are skipped (ordinary replica rotation).
+        for k in 0..live.len() {
+            let id = live[(self.cursor + k) % live.len()];
+            let inst = &view.instances[id];
+            if inst.transforming.is_some() {
+                continue;
+            }
+            if inst.fits(view.engine, req) {
+                self.cursor = (self.cursor + k + 1) % live.len();
+                return Route::Assign(id);
+            }
+            if req.final_len() > inst.max_seq(view.engine) {
+                // The pick can't ever hold this sequence → merge. (The
+                // merge pools the members' memory, so capacity follows.)
+                self.cursor = (self.cursor + k + 1) % live.len();
+                return scale_up_fallback(req, view);
+            }
+            // capacity-only failure → rotate on
+        }
+        Route::Defer
+    }
+}
+
+/// Absolute committed KV tokens (what a capacity-fraction-oblivious
+/// scheduler compares — a TP4 holding one 50K request looks *heavier*
+/// than an empty TP1 even though its pool is 10× larger).
+fn committed_tokens(inst: &Instance) -> u64 {
+    inst.running
+        .iter()
+        .map(|r| r.final_len())
+        .chain(inst.prefill_queue.iter().map(|r| r.final_len()))
+        .sum()
+}
+
+/// Least-Load-First: route to the least-loaded fitting instance.
+pub struct LeastLoadPolicy;
+
+impl RoutePolicy for LeastLoadPolicy {
+    fn name(&self) -> &'static str {
+        "llf"
+    }
+
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        // Least ABSOLUTE load first — LLF is oblivious to sequence-length
+        // limits and to capacity fractions: an empty TP1 beats a TP4 that
+        // is serving one long request, so a new long request lands on the
+        // TP1 and forces a scale-up (Figure 13).
+        let mut best: Option<(usize, u64)> = None;
+        for i in view.live() {
+            if i.transforming.is_some() {
+                continue;
+            }
+            let l = committed_tokens(i);
+            if best.map(|(_, bl)| l < bl).unwrap_or(true) {
+                best = Some((i.id, l));
+            }
+        }
+        let Some((id, _)) = best else {
+            return Route::Defer;
+        };
+        let inst = &view.instances[id];
+        if inst.fits(view.engine, req) {
+            return Route::Assign(id);
+        }
+        if req.final_len() > inst.max_seq(view.engine) {
+            return scale_up_fallback(req, view);
+        }
+        // Its pick is full: fall back to any fitting instance, else defer.
+        for i in view.live() {
+            if i.transforming.is_none() && i.fits(view.engine, req) {
+                return Route::Assign(i.id);
+            }
+        }
+        Route::Defer
+    }
+}
+
+/// Shared baseline fallback: form the smallest adequate TP group from the
+/// least-loaded TP1 instances, without any reservation logic.
+pub fn scale_up_fallback(req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+    let Some(to_tp) = needed_tp(req, view) else {
+        return Route::Defer;
+    };
+    if to_tp <= 1 {
+        return Route::Defer; // fits TP1 but nothing had room → wait
+    }
+    match pick_merge_group(view, to_tp as usize) {
+        Some(members) => Route::ScaleUp { members, to_tp },
+        None => Route::Defer,
+    }
+}
+
+/// Construct a policy by config.
+pub fn make_policy(policy: crate::config::Policy) -> Box<dyn RoutePolicy> {
+    match policy {
+        crate::config::Policy::Gyges => Box::new(GygesPolicy::default()),
+        crate::config::Policy::RoundRobin => Box::new(RoundRobinPolicy::default()),
+        crate::config::Policy::LeastLoadFirst => Box::new(LeastLoadPolicy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    fn setup() -> (ClusterConfig, EngineModel, Vec<Instance>) {
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
+        let instances: Vec<Instance> =
+            (0..8).map(|i| Instance::new(i, 0, vec![i], 1)).collect();
+        (cfg, engine, instances)
+    }
+
+    fn view<'a>(
+        cfg: &'a ClusterConfig,
+        engine: &'a EngineModel,
+        instances: &'a [Instance],
+    ) -> ClusterView<'a> {
+        ClusterView { instances, engine, cfg, now: SimTime::from_secs_f64(100.0) }
+    }
+
+    fn long_req() -> ActiveRequest {
+        ActiveRequest::new(1, SimTime::ZERO, 50_000, 256)
+    }
+
+    fn short_req(id: u64) -> ActiveRequest {
+        ActiveRequest::new(id, SimTime::ZERO, 1000, 100)
+    }
+
+    #[test]
+    fn gyges_long_request_triggers_scale_up_when_no_tp4() {
+        let (cfg, engine, instances) = setup();
+        let mut p = GygesPolicy::default();
+        let r = p.route(&long_req(), &view(&cfg, &engine, &instances));
+        match r {
+            Route::ScaleUp { members, to_tp } => {
+                assert_eq!(to_tp, 4);
+                assert_eq!(members.len(), 4);
+            }
+            other => panic!("expected scale-up, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gyges_prefers_existing_tp4_for_long_requests() {
+        let (cfg, engine, mut instances) = setup();
+        // Replace 4 TP1s with one TP4 that is *more loaded* than the TP1s.
+        for i in 0..4 {
+            instances[i].retired = true;
+        }
+        let mut tp4 = Instance::new(8, 0, vec![0, 1, 2, 3], 4);
+        let mut busy = ActiveRequest::new(99, SimTime::ZERO, 40_000, 512);
+        busy.phase = super::super::request::Phase::Decode;
+        tp4.running.push(busy);
+        instances.push(tp4);
+        let mut p = GygesPolicy::default();
+        let r = p.route(&long_req(), &view(&cfg, &engine, &instances));
+        assert_eq!(r, Route::Assign(8), "must route to the existing TP4");
+    }
+
+    #[test]
+    fn llf_picks_tp1_when_tp4_is_loaded() {
+        // Figure 13: LLF sends the long request to a TP1 instance
+        // (triggering another transformation) because TP4 is loaded.
+        let (cfg, engine, mut instances) = setup();
+        for i in 0..4 {
+            instances[i].retired = true;
+        }
+        let mut tp4 = Instance::new(8, 0, vec![0, 1, 2, 3], 4);
+        let mut busy = ActiveRequest::new(99, SimTime::ZERO, 60_000, 512);
+        busy.phase = super::super::request::Phase::Decode;
+        tp4.running.push(busy);
+        instances.push(tp4);
+        let mut p = LeastLoadPolicy;
+        let r = p.route(&long_req(), &view(&cfg, &engine, &instances));
+        // TP4 is loaded (60K committed), TP1s are empty but can't fit 50K
+        // → LLF falls back to scaling up fresh TP1s.
+        match r {
+            Route::ScaleUp { to_tp: 4, members } => assert_eq!(members.len(), 4),
+            Route::Assign(8) => panic!("llf should not prefer the loaded TP4 here"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rr_rotates_over_short_requests() {
+        let (cfg, engine, instances) = setup();
+        let mut p = RoundRobinPolicy::default();
+        let mut seen = BTreeSet::new();
+        for k in 0..8 {
+            match p.route(&short_req(k), &view(&cfg, &engine, &instances)) {
+                Route::Assign(id) => {
+                    seen.insert(id);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(seen.len(), 8, "RR must touch all instances");
+    }
+
+    #[test]
+    fn gyges_short_avoids_high_tp_instances() {
+        let (cfg, engine, mut instances) = setup();
+        for i in 0..4 {
+            instances[i].retired = true;
+        }
+        instances.push(Instance::new(8, 0, vec![0, 1, 2, 3], 4));
+        let mut p = GygesPolicy::default();
+        match p.route(&short_req(1), &view(&cfg, &engine, &instances)) {
+            Route::Assign(id) => assert_ne!(id, 8, "short must go to a TP1"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scale_down_conditions() {
+        let (cfg, engine, _) = setup();
+        let mut inst = Instance::new(0, 0, vec![0, 1, 2, 3], 4);
+        inst.last_transform = SimTime::ZERO;
+        let instances = vec![];
+        let v = ClusterView {
+            instances: &instances,
+            engine: &engine,
+            cfg: &cfg,
+            now: SimTime::from_secs_f64(100.0),
+        };
+        assert!(default_scale_down(&inst, &v), "idle TP4 should scale down");
+        // long request blocks it
+        let mut r = ActiveRequest::new(1, SimTime::ZERO, 30_000, 256);
+        r.phase = super::super::request::Phase::Decode;
+        inst.running.push(r);
+        assert!(!default_scale_down(&inst, &v));
+        inst.running.clear();
+        // dwell not elapsed
+        inst.last_transform = SimTime::from_secs_f64(99.0);
+        assert!(!default_scale_down(&inst, &v));
+    }
+
+    #[test]
+    fn needed_tp_classification() {
+        let (cfg, engine, instances) = setup();
+        let v = view(&cfg, &engine, &instances);
+        assert_eq!(needed_tp(&short_req(1), &v), Some(1));
+        assert_eq!(needed_tp(&long_req(), &v), Some(4));
+        let mid = ActiveRequest::new(3, SimTime::ZERO, 20_000, 256);
+        assert_eq!(needed_tp(&mid, &v), Some(2));
+        let huge = ActiveRequest::new(4, SimTime::ZERO, 200_000, 256);
+        assert_eq!(needed_tp(&huge, &v), None);
+    }
+}

@@ -1,0 +1,160 @@
+//! Per-request block tables: map a request's logical token range onto
+//! physical KV blocks, vLLM-style.
+
+use std::collections::BTreeMap;
+
+/// Identifier of a physical KV block on a worker.
+pub type BlockId = u64;
+
+/// Identifier of a request.
+pub type RequestId = u64;
+
+/// The block table of one request on one worker.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    /// Physical blocks in logical order.
+    pub blocks: Vec<BlockId>,
+    /// Tokens stored (may leave the last block partially filled).
+    pub num_tokens: u64,
+    pub tokens_per_block: u64,
+}
+
+impl BlockTable {
+    pub fn new(tokens_per_block: u64) -> BlockTable {
+        BlockTable { blocks: Vec::new(), num_tokens: 0, tokens_per_block }
+    }
+
+    /// Blocks needed to store `tokens` tokens.
+    pub fn blocks_needed(tokens: u64, tokens_per_block: u64) -> u64 {
+        tokens.div_ceil(tokens_per_block)
+    }
+
+    /// How many new blocks must be appended to accommodate `extra` tokens.
+    pub fn blocks_to_grow(&self, extra: u64) -> u64 {
+        let need = Self::blocks_needed(self.num_tokens + extra, self.tokens_per_block);
+        need.saturating_sub(self.blocks.len() as u64)
+    }
+
+    /// Record appended blocks + tokens.
+    pub fn extend(&mut self, new_blocks: Vec<BlockId>, tokens: u64) {
+        self.blocks.extend(new_blocks);
+        self.num_tokens += tokens;
+        debug_assert!(
+            Self::blocks_needed(self.num_tokens, self.tokens_per_block)
+                <= self.blocks.len() as u64,
+            "block table under-provisioned"
+        );
+    }
+
+    /// Physical block + in-block offset of a logical token index.
+    pub fn locate(&self, token: u64) -> Option<(BlockId, u64)> {
+        if token >= self.num_tokens {
+            return None;
+        }
+        let b = (token / self.tokens_per_block) as usize;
+        Some((self.blocks[b], token % self.tokens_per_block))
+    }
+
+    /// Free slots in the last block.
+    pub fn tail_slack(&self) -> u64 {
+        let cap = self.blocks.len() as u64 * self.tokens_per_block;
+        cap - self.num_tokens
+    }
+}
+
+/// All block tables of a worker, by request.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTableSet {
+    tables: BTreeMap<RequestId, BlockTable>,
+}
+
+impl BlockTableSet {
+    pub fn get(&self, req: RequestId) -> Option<&BlockTable> {
+        self.tables.get(&req)
+    }
+
+    pub fn get_mut(&mut self, req: RequestId) -> Option<&mut BlockTable> {
+        self.tables.get_mut(&req)
+    }
+
+    pub fn insert(&mut self, req: RequestId, table: BlockTable) {
+        self.tables.insert(req, table);
+    }
+
+    pub fn remove(&mut self, req: RequestId) -> Option<BlockTable> {
+        self.tables.remove(&req)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&RequestId, &BlockTable)> {
+        self.tables.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tables.is_empty()
+    }
+
+    /// Total tokens stored across requests.
+    pub fn total_tokens(&self) -> u64 {
+        self.tables.values().map(|t| t.num_tokens).sum()
+    }
+
+    /// Total physical blocks referenced.
+    pub fn total_blocks(&self) -> u64 {
+        self.tables.values().map(|t| t.blocks.len() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_math() {
+        let mut t = BlockTable::new(16);
+        assert_eq!(t.blocks_to_grow(1), 1);
+        t.extend(vec![7], 10);
+        assert_eq!(t.blocks_to_grow(6), 0); // fits in slack
+        assert_eq!(t.tail_slack(), 6);
+        assert_eq!(t.blocks_to_grow(7), 1);
+        t.extend(vec![9], 7);
+        assert_eq!(t.num_tokens, 17);
+        assert_eq!(t.blocks, vec![7, 9]);
+    }
+
+    #[test]
+    fn locate_tokens() {
+        let mut t = BlockTable::new(4);
+        t.extend(vec![100, 200], 6);
+        assert_eq!(t.locate(0), Some((100, 0)));
+        assert_eq!(t.locate(3), Some((100, 3)));
+        assert_eq!(t.locate(4), Some((200, 0)));
+        assert_eq!(t.locate(5), Some((200, 1)));
+        assert_eq!(t.locate(6), None);
+    }
+
+    #[test]
+    fn set_accounting() {
+        let mut s = BlockTableSet::default();
+        let mut a = BlockTable::new(4);
+        a.extend(vec![1, 2], 8);
+        let mut b = BlockTable::new(4);
+        b.extend(vec![3], 2);
+        s.insert(10, a);
+        s.insert(11, b);
+        assert_eq!(s.total_tokens(), 10);
+        assert_eq!(s.total_blocks(), 3);
+        s.remove(10);
+        assert_eq!(s.total_blocks(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "under-provisioned")]
+    fn overflow_detected_in_debug() {
+        let mut t = BlockTable::new(4);
+        t.extend(vec![1], 9); // 9 tokens need 3 blocks, only 1 given
+    }
+}

@@ -1,0 +1,283 @@
+//! KV-cache layouts (paper Table 2) and their indexing math.
+//!
+//! A KV cache for one layer is a 4-dimensional array over
+//! (Block, K/V, Token-in-block, Header); the three layouts order these
+//! dimensions differently, which determines
+//! (a) whether appending a page shifts existing data, and
+//! (b) whether per-head migration segments are contiguous.
+//!
+//! | Layout               | Hierarchy                    | Benefit |
+//! |----------------------|------------------------------|---------|
+//! | Raw                  | [K/V, Block, Token, Header]  | —       |
+//! | Page-friendly        | [Block, K/V, Token, Header]  | O(#pages)→0 shifting |
+//! | Header-centric       | [Block, Header, K/V, Token]  | O(#tokens)→O(1) trim |
+//!
+//! The same stride orders are implemented by `kv_stride_order()` in
+//! python/compile/kernels/attention_pallas.py; test_kernels.py checks the
+//! two agree element-for-element.
+
+/// One of the four logical dimensions of the KV cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dim {
+    Block,
+    Kv,
+    Token,
+    Header,
+}
+
+/// KV-cache layout variants from paper Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvLayout {
+    /// `[K/V, Block, Token, Header]` — K and V each contiguous across the
+    /// whole cache (vLLM-style preallocated tensor).
+    Raw,
+    /// `[Block, K/V, Token, Header]` — block-major; pages append freely.
+    PageFriendly,
+    /// `[Block, Header, K/V, Token]` — additionally groups each head's
+    /// K+V contiguously inside a block (Gyges).
+    HeaderCentric,
+}
+
+/// Geometry of one layer's KV cache.
+#[derive(Clone, Copy, Debug)]
+pub struct KvGeometry {
+    pub num_blocks: u64,
+    pub tokens_per_block: u64,
+    pub num_heads: u64,
+    /// Bytes of one K (or V) vector for one token of one head.
+    pub head_elem_bytes: u64,
+}
+
+impl KvGeometry {
+    /// Total bytes of the cache.
+    pub fn total_bytes(&self) -> u64 {
+        self.num_blocks * self.block_bytes()
+    }
+
+    /// Bytes of one block.
+    pub fn block_bytes(&self) -> u64 {
+        2 * self.tokens_per_block * self.num_heads * self.head_elem_bytes
+    }
+
+    /// Bytes one head contributes to one block (its K and V).
+    pub fn head_bytes_per_block(&self) -> u64 {
+        2 * self.tokens_per_block * self.head_elem_bytes
+    }
+}
+
+impl KvLayout {
+    /// Dimension order, outermost first (paper Table 2 "Detailed Hierarchy").
+    pub fn stride_order(&self) -> [Dim; 4] {
+        match self {
+            KvLayout::Raw => [Dim::Kv, Dim::Block, Dim::Token, Dim::Header],
+            KvLayout::PageFriendly => [Dim::Block, Dim::Kv, Dim::Token, Dim::Header],
+            KvLayout::HeaderCentric => [Dim::Block, Dim::Header, Dim::Kv, Dim::Token],
+        }
+    }
+
+    /// Linear element offset of (block, kv, token, header) under this
+    /// layout. `kv` is 0 for K, 1 for V. Offsets are in units of one
+    /// head-element (multiply by `head_elem_bytes` for bytes).
+    pub fn linear_offset(&self, g: &KvGeometry, block: u64, kv: u64, token: u64, header: u64) -> u64 {
+        debug_assert!(block < g.num_blocks && kv < 2);
+        debug_assert!(token < g.tokens_per_block && header < g.num_heads);
+        let (b, t, h) = (g.num_blocks, g.tokens_per_block, g.num_heads);
+        let _ = b;
+        match self {
+            KvLayout::Raw => ((kv * g.num_blocks + block) * t + token) * h + header,
+            KvLayout::PageFriendly => ((block * 2 + kv) * t + token) * h + header,
+            KvLayout::HeaderCentric => ((block * h + header) * 2 + kv) * t + token,
+        }
+    }
+
+    /// Number of existing *pages* that must be shifted (copied or
+    /// remapped) when appending one new block of KV at the end.
+    ///
+    /// Raw keeps K and V each globally contiguous, so growing the block
+    /// region displaces everything after the K-region boundary —
+    /// O(#pages). The block-major layouts append in place.
+    pub fn shift_ops_on_append(&self, existing_pages: u64) -> u64 {
+        match self {
+            KvLayout::Raw => existing_pages,
+            KvLayout::PageFriendly | KvLayout::HeaderCentric => 0,
+        }
+    }
+
+    /// Number of contiguous byte-segments per block occupied by ONE head's
+    /// K+V data. Migration moves heads between workers, so this is the
+    /// scatter/gather granularity: 1 ⇒ a head's data is one contiguous
+    /// span (in-place migration possible).
+    pub fn segments_per_head_per_block(&self, g: &KvGeometry) -> u64 {
+        match self {
+            // token-major inside the block: each (kv, token) row holds one
+            // element of this head → 2 × tokens_per_block scattered pieces.
+            KvLayout::Raw | KvLayout::PageFriendly => 2 * g.tokens_per_block,
+            // head-major: K and V of the head are adjacent → one span.
+            KvLayout::HeaderCentric => 1,
+        }
+    }
+
+    /// Copy operations required to *trim* (compact) one block after a
+    /// scale-up migration removed `heads_removed` of `g.num_heads` heads.
+    ///
+    /// Header-centric keeps the retained heads contiguous, so the freed
+    /// space is a single span that can be reused directly: O(1), and when
+    /// the retained range starts at offset 0 (worker keeps its own shard
+    /// in place) zero copies are needed. Token-major layouts interleave
+    /// retained and freed data per token: O(#tokens-in-block) copies.
+    pub fn trim_copies_per_block(&self, g: &KvGeometry, heads_removed: u64) -> u64 {
+        if heads_removed == 0 {
+            return 0;
+        }
+        match self {
+            KvLayout::Raw | KvLayout::PageFriendly => 2 * g.tokens_per_block,
+            KvLayout::HeaderCentric => 0,
+        }
+    }
+
+    /// Human-readable hierarchy string (Table 2).
+    pub fn hierarchy(&self) -> &'static str {
+        match self {
+            KvLayout::Raw => "[K/V, Block, Token, Header]",
+            KvLayout::PageFriendly => "[Block, K/V, Token, Header]",
+            KvLayout::HeaderCentric => "[Block, Header, K/V, Token]",
+        }
+    }
+}
+
+/// The permutation mapping a layout's storage order back to the attention
+/// kernel's expected [Block, Kv, Token, Header] view — the
+/// `kv_stride_order()` of §4.1.1. Returns, for each kernel-view dimension,
+/// which storage dimension supplies it.
+pub fn kv_stride_order(layout: KvLayout) -> [usize; 4] {
+    // kernel view order:          [Block, Kv, Token, Header]
+    let view = [Dim::Block, Dim::Kv, Dim::Token, Dim::Header];
+    let storage = layout.stride_order();
+    let mut out = [0usize; 4];
+    for (i, d) in view.iter().enumerate() {
+        out[i] = storage.iter().position(|s| s == d).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> KvGeometry {
+        KvGeometry { num_blocks: 4, tokens_per_block: 16, num_heads: 8, head_elem_bytes: 256 }
+    }
+
+    /// Every layout must be a bijection over the index space.
+    #[test]
+    fn offsets_are_bijective() {
+        let g = geo();
+        let n = (2 * g.num_blocks * g.tokens_per_block * g.num_heads) as usize;
+        for layout in [KvLayout::Raw, KvLayout::PageFriendly, KvLayout::HeaderCentric] {
+            let mut seen = vec![false; n];
+            for b in 0..g.num_blocks {
+                for kv in 0..2 {
+                    for t in 0..g.tokens_per_block {
+                        for h in 0..g.num_heads {
+                            let off = layout.linear_offset(&g, b, kv, t, h) as usize;
+                            assert!(off < n, "{layout:?} out of range");
+                            assert!(!seen[off], "{layout:?} collision at {off}");
+                            seen[off] = true;
+                        }
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{layout:?} not surjective");
+        }
+    }
+
+    /// Header-centric: one head's K+V within a block is a contiguous span.
+    #[test]
+    fn header_centric_head_span_contiguous() {
+        let g = geo();
+        let l = KvLayout::HeaderCentric;
+        for b in 0..g.num_blocks {
+            for h in 0..g.num_heads {
+                let mut offs: Vec<u64> = Vec::new();
+                for kv in 0..2 {
+                    for t in 0..g.tokens_per_block {
+                        offs.push(l.linear_offset(&g, b, kv, t, h));
+                    }
+                }
+                offs.sort_unstable();
+                let span = offs[offs.len() - 1] - offs[0] + 1;
+                assert_eq!(span as usize, offs.len(), "head {h} not contiguous");
+            }
+        }
+    }
+
+    /// Token-major layouts scatter a head across the block.
+    #[test]
+    fn page_friendly_head_span_scattered() {
+        let g = geo();
+        let l = KvLayout::PageFriendly;
+        let mut offs: Vec<u64> = Vec::new();
+        for kv in 0..2 {
+            for t in 0..g.tokens_per_block {
+                offs.push(l.linear_offset(&g, 0, kv, t, 3));
+            }
+        }
+        offs.sort_unstable();
+        let span = offs[offs.len() - 1] - offs[0] + 1;
+        assert!(span as usize > offs.len(), "expected holes");
+    }
+
+    /// Blocks must be self-contained (block-major) for the page-friendly
+    /// and header-centric layouts, but NOT for Raw.
+    #[test]
+    fn block_locality() {
+        let g = geo();
+        let block_elems = 2 * g.tokens_per_block * g.num_heads;
+        for layout in [KvLayout::PageFriendly, KvLayout::HeaderCentric] {
+            for b in 0..g.num_blocks {
+                for kv in 0..2 {
+                    for t in 0..g.tokens_per_block {
+                        for h in 0..g.num_heads {
+                            let off = layout.linear_offset(&g, b, kv, t, h);
+                            assert_eq!(off / block_elems, b, "{layout:?}");
+                        }
+                    }
+                }
+            }
+        }
+        // Raw: V of block 0 lives in the second half — not block-local.
+        let off = KvLayout::Raw.linear_offset(&g, 0, 1, 0, 0);
+        assert_ne!(off / block_elems, 0);
+    }
+
+    #[test]
+    fn table2_shift_and_trim_complexity() {
+        let g = geo();
+        // O(#pages) → 0
+        assert_eq!(KvLayout::Raw.shift_ops_on_append(1000), 1000);
+        assert_eq!(KvLayout::PageFriendly.shift_ops_on_append(1000), 0);
+        assert_eq!(KvLayout::HeaderCentric.shift_ops_on_append(1000), 0);
+        // O(#tokens) → O(1)
+        assert_eq!(KvLayout::PageFriendly.trim_copies_per_block(&g, 6), 2 * g.tokens_per_block);
+        assert_eq!(KvLayout::HeaderCentric.trim_copies_per_block(&g, 6), 0);
+        assert_eq!(KvLayout::HeaderCentric.trim_copies_per_block(&g, 0), 0);
+    }
+
+    #[test]
+    fn stride_order_permutations() {
+        // PageFriendly storage == kernel view → identity permutation.
+        assert_eq!(kv_stride_order(KvLayout::PageFriendly), [0, 1, 2, 3]);
+        // HeaderCentric: [Block, Header, K/V, Token] → view picks 0,2,3,1.
+        assert_eq!(kv_stride_order(KvLayout::HeaderCentric), [0, 2, 3, 1]);
+        // Raw: [K/V, Block, Token, Header] → view picks 1,0,2,3.
+        assert_eq!(kv_stride_order(KvLayout::Raw), [1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn geometry_byte_math() {
+        let g = geo();
+        assert_eq!(g.block_bytes(), 2 * 16 * 8 * 256);
+        assert_eq!(g.total_bytes(), 4 * g.block_bytes());
+        assert_eq!(g.head_bytes_per_block() * g.num_heads, g.block_bytes());
+    }
+}

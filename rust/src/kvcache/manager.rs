@@ -1,0 +1,192 @@
+//! Per-worker KV-cache manager: page-granular allocation of block tables
+//! under a chosen layout.
+//!
+//! The manager models ONE representative transformer layer (all layers are
+//! symmetric; totals multiply by `num_layers`), keeping per-block realism
+//! tractable: one KV block occupies exactly one 2 MiB VMM page, matching
+//! vAttention-style page-per-layer management.
+
+use super::block_table::{BlockTable, BlockTableSet, RequestId};
+use super::layout::{KvGeometry, KvLayout};
+use crate::config::ModelConfig;
+use crate::sim::vmm::{PagePool, VmmError};
+use crate::util::bytes::VMM_PAGE;
+
+/// KV-cache manager for one worker (one layer's pool; symmetric layers).
+#[derive(Clone, Debug)]
+pub struct KvManager {
+    pub layout: KvLayout,
+    pub pool: PagePool,
+    pub tables: BlockTableSet,
+    /// Tokens that fit in one block (= one VMM page) of this layer.
+    pub tokens_per_block: u64,
+    /// KV bytes per token for this layer (all local heads).
+    pub kv_bytes_per_token: u64,
+    pub num_heads: u64,
+    pub head_elem_bytes: u64,
+    /// Count of shift operations incurred by appends (Raw layout only).
+    pub shift_ops: u64,
+}
+
+impl KvManager {
+    /// Build a manager for `model` at TP degree `tp` with `layer_pool_bytes`
+    /// of device memory dedicated to this layer's KV.
+    pub fn new(model: &ModelConfig, tp: u64, layout: KvLayout, layer_pool_bytes: u64) -> KvManager {
+        let local_heads = (model.num_kv_heads / tp).max(1);
+        let kv_bytes_per_token = 2 * local_heads * model.head_dim * model.dtype_bytes;
+        let tokens_per_block = (VMM_PAGE / kv_bytes_per_token).max(1);
+        KvManager {
+            layout,
+            pool: PagePool::new(layer_pool_bytes),
+            tables: BlockTableSet::default(),
+            tokens_per_block,
+            kv_bytes_per_token,
+            num_heads: local_heads,
+            head_elem_bytes: model.head_dim * model.dtype_bytes,
+            shift_ops: 0,
+        }
+    }
+
+    /// Geometry handle for layout math.
+    pub fn geometry(&self) -> KvGeometry {
+        KvGeometry {
+            num_blocks: self.pool.total_pages(),
+            tokens_per_block: self.tokens_per_block,
+            num_heads: self.num_heads,
+            head_elem_bytes: self.head_elem_bytes,
+        }
+    }
+
+    /// Admit a new request with `tokens` of prefill KV.
+    pub fn admit(&mut self, req: RequestId, tokens: u64) -> Result<(), VmmError> {
+        let mut table = BlockTable::new(self.tokens_per_block);
+        let need = table.blocks_to_grow(tokens);
+        let pages = self.pool.alloc(need)?;
+        self.shift_ops += self.layout.shift_ops_on_append(self.pool.allocated_pages());
+        table.extend(pages, tokens);
+        self.tables.insert(req, table);
+        Ok(())
+    }
+
+    /// Append `tokens` decode tokens to an existing request.
+    pub fn append(&mut self, req: RequestId, tokens: u64) -> Result<(), VmmError> {
+        // Count shifts before borrowing the table mutably.
+        let allocated = self.pool.allocated_pages();
+        let table = self.tables.get_mut(req).ok_or(VmmError::NotAllocated(req))?;
+        let need = table.blocks_to_grow(tokens);
+        if need > 0 {
+            let pages = self.pool.alloc(need)?;
+            self.shift_ops += self.layout.shift_ops_on_append(allocated);
+            table.extend(pages, tokens);
+        } else {
+            table.extend(Vec::new(), tokens);
+        }
+        Ok(())
+    }
+
+    /// Release a finished request's blocks.
+    pub fn finish(&mut self, req: RequestId) -> Result<(), VmmError> {
+        let table = self.tables.remove(req).ok_or(VmmError::NotAllocated(req))?;
+        self.pool.release(&table.blocks)
+    }
+
+    /// Fraction of the pool currently allocated.
+    pub fn utilization(&self) -> f64 {
+        if self.pool.total_pages() == 0 {
+            return 0.0;
+        }
+        self.pool.allocated_pages() as f64 / self.pool.total_pages() as f64
+    }
+
+    /// Total KV bytes stored (token-exact, ignoring tail slack).
+    pub fn stored_bytes(&self) -> u64 {
+        self.tables.total_tokens() * self.kv_bytes_per_token
+    }
+
+    /// Bytes occupied including tail slack (page-granular truth).
+    pub fn occupied_bytes(&self) -> u64 {
+        self.tables.total_blocks() * VMM_PAGE
+    }
+
+    /// Fill the pool to approximately `util` utilization with synthetic
+    /// requests of `req_tokens` tokens each (bench/experiment helper).
+    pub fn fill_to(&mut self, util: f64, req_tokens: u64, first_id: RequestId) -> Vec<RequestId> {
+        let mut ids = Vec::new();
+        let target = (self.pool.total_pages() as f64 * util) as u64;
+        let mut next = first_id;
+        while self.pool.allocated_pages() < target {
+            let remaining_pages = target - self.pool.allocated_pages();
+            let tokens = req_tokens.min(remaining_pages * self.tokens_per_block);
+            if tokens == 0 || self.admit(next, tokens).is_err() {
+                break;
+            }
+            ids.push(next);
+            next += 1;
+        }
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    fn mk(layout: KvLayout) -> KvManager {
+        KvManager::new(&ModelConfig::qwen2_5_32b(), 1, layout, 64 * MIB)
+    }
+
+    #[test]
+    fn tokens_per_block_matches_page() {
+        let m = mk(KvLayout::HeaderCentric);
+        // Qwen TP1: 2×8 heads×128 dim×2 B = 4096 B/token/layer → 512 tok/page
+        assert_eq!(m.kv_bytes_per_token, 4096);
+        assert_eq!(m.tokens_per_block, 512);
+    }
+
+    #[test]
+    fn admit_append_finish_accounting() {
+        let mut m = mk(KvLayout::HeaderCentric);
+        m.admit(1, 700).unwrap(); // 2 blocks
+        assert_eq!(m.pool.allocated_pages(), 2);
+        m.append(1, 300).unwrap(); // 1000 tokens → still 2 blocks
+        assert_eq!(m.pool.allocated_pages(), 2);
+        m.append(1, 100).unwrap(); // 1100 → 3 blocks
+        assert_eq!(m.pool.allocated_pages(), 3);
+        m.finish(1).unwrap();
+        assert_eq!(m.pool.allocated_pages(), 0);
+        assert_eq!(m.shift_ops, 0); // header-centric never shifts
+    }
+
+    #[test]
+    fn raw_layout_accumulates_shift_ops() {
+        let mut m = mk(KvLayout::Raw);
+        m.admit(1, 512).unwrap();
+        m.append(1, 512).unwrap();
+        m.append(1, 512).unwrap();
+        assert!(m.shift_ops > 0, "raw layout must shift on growth");
+    }
+
+    #[test]
+    fn fill_to_reaches_target() {
+        let mut m = mk(KvLayout::HeaderCentric);
+        let ids = m.fill_to(0.9, 600, 100);
+        assert!(!ids.is_empty());
+        assert!((m.utilization() - 0.9).abs() < 0.1, "util {}", m.utilization());
+    }
+
+    #[test]
+    fn oom_on_overfill() {
+        let mut m = mk(KvLayout::HeaderCentric);
+        let cap_tokens = m.pool.total_pages() * m.tokens_per_block;
+        assert!(m.admit(1, cap_tokens + 1).is_err());
+    }
+
+    #[test]
+    fn stored_vs_occupied() {
+        let mut m = mk(KvLayout::HeaderCentric);
+        m.admit(1, 10).unwrap(); // tiny request, one full page occupied
+        assert_eq!(m.stored_bytes(), 10 * 4096);
+        assert_eq!(m.occupied_bytes(), 2 * MIB);
+    }
+}

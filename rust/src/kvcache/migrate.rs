@@ -1,0 +1,357 @@
+//! KV-cache migration during parallelism transformation (§4.1.2).
+//!
+//! Three strategies over the same migration volume (scale-up
+//! `n×(TP1) → TPn`: every worker keeps its own head shard of local tokens
+//! and exchanges the rest all-to-all):
+//!
+//! * **Basic** — single-shot all-to-all into freshly reserved pages, then
+//!   *trim*: token-granular compaction copies of every local block
+//!   (token-major layout leaves retained heads interleaved with holes).
+//! * **Gyges⁻** — header-centric layout: retained heads are contiguous, no
+//!   trim; *phased* all-to-all reuses pages freed by earlier stages, so
+//!   peak extra memory is one stage's volume (+ metadata).
+//! * **Gyges** — Gyges⁻ plus overlapping: driver calls run concurrently
+//!   with compute and the all-to-all launches on an independent stream
+//!   that consumes only spare SMs.
+//!
+//! Transformation is layer-by-layer (§4.3), so costs are reported per
+//! layer: **wall** (Figure 9a-style transformation time) and **visible**
+//! (what a serving step absorbs — Figure 11's currency), plus per-layer
+//! peak extra memory (Figure 9b).
+
+use super::layout::KvLayout;
+use super::manager::KvManager;
+use crate::config::{GpuSpec, ModelConfig};
+use crate::sim::clock::SimDuration;
+use crate::sim::comm::CommModel;
+use crate::sim::link::Link;
+use crate::sim::vmm::VmmCosts;
+
+/// Migration strategy under comparison (Figure 9 series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMigrationStrategy {
+    Basic,
+    GygesNoOverlap,
+    Gyges,
+}
+
+impl KvMigrationStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvMigrationStrategy::Basic => "basic",
+            KvMigrationStrategy::GygesNoOverlap => "gyges-",
+            KvMigrationStrategy::Gyges => "gyges",
+        }
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        match self {
+            KvMigrationStrategy::Basic => KvLayout::PageFriendly,
+            _ => KvLayout::HeaderCentric,
+        }
+    }
+}
+
+/// Calibration constants (DESIGN.md §5), fit against §6.2.1:
+/// Basic extra time 3.15–4 ms/layer; Gyges⁻ ≈61% lower; Gyges ≈86% lower;
+/// Gyges peak extra memory < 70 MB; header-centric −91.6% memory.
+mod cal {
+    /// Device-side scatter/gather launch latency per segment (µs) during
+    /// trim compaction (batched copy kernel, not a driver call each).
+    pub const TRIM_SEG_LATENCY_US: f64 = 0.02;
+    /// Share of the all-to-all that stays visible for Gyges⁻ (phased but
+    /// not stream-overlapped: stage syncs interleave with steps).
+    pub const PHASED_VISIBLE_SHARE: f64 = 0.15;
+    /// SM-busy share during decode — the only part of the overlapped
+    /// all-to-all that contends with serving kernels (Gyges).
+    pub const OVERLAP_VISIBLE_SHARE: f64 = 0.05;
+    /// Default per-stage volume cap for phased migration.
+    pub const STAGE_BYTES: u64 = 32 * 1024 * 1024;
+}
+
+/// Parameters of one KV transformation experiment.
+#[derive(Clone, Debug)]
+pub struct KvMigrationSpec {
+    pub model: ModelConfig,
+    pub gpu: GpuSpec,
+    /// Source worker count (e.g. 4 TP1 instances merging).
+    pub workers: u32,
+    /// Target TP degree (== workers for the canonical 4×TP1→TP4).
+    pub target_tp: u64,
+    /// KV-pool utilization at transformation time (paper uses 0.9).
+    pub kv_util: f64,
+    /// SMs granted to migration copy kernels.
+    pub sms: u32,
+    /// Per-stage volume cap for phased migration (bytes).
+    pub stage_bytes: u64,
+}
+
+impl KvMigrationSpec {
+    /// The paper's canonical microbenchmark setting (§6.2.1).
+    pub fn paper_default(model: ModelConfig) -> KvMigrationSpec {
+        let gpu = GpuSpec::for_model(&model);
+        KvMigrationSpec {
+            model,
+            gpu,
+            workers: 4,
+            target_tp: 4,
+            kv_util: 0.9,
+            sms: 78,
+            stage_bytes: cal::STAGE_BYTES,
+        }
+    }
+
+    /// Per-worker KV capacity in bytes (all layers) before transformation.
+    pub fn worker_kv_bytes(&self) -> u64 {
+        let e = crate::sim::EngineModel::new(self.model.clone(), self.gpu.clone());
+        e.kv_capacity_bytes(1)
+    }
+
+    /// Per-worker KV bytes actually occupied (utilization applied).
+    pub fn local_kv_bytes(&self) -> u64 {
+        (self.worker_kv_bytes() as f64 * self.kv_util) as u64
+    }
+
+    /// Bytes each worker sends (it keeps its own 1/tp head shard).
+    pub fn sent_bytes_per_worker(&self) -> u64 {
+        self.local_kv_bytes() * (self.target_tp - 1) / self.target_tp
+    }
+}
+
+/// Outcome of one simulated KV transformation.
+#[derive(Clone, Debug)]
+pub struct KvMigrationReport {
+    pub strategy: KvMigrationStrategy,
+    /// Wall time per layer.
+    pub per_layer_wall: SimDuration,
+    /// Serving-visible extra time per layer (Figure 9a's quantity).
+    pub per_layer_visible: SimDuration,
+    /// Peak extra device memory while one layer transforms (Figure 9b).
+    pub per_layer_peak_bytes: u64,
+    /// All-to-all bytes sent per worker (whole model).
+    pub a2a_bytes: u64,
+    /// Bytes copied on-device for trimming (whole model).
+    pub trim_copy_bytes: u64,
+    /// Number of all-to-all stages per layer.
+    pub stages: u32,
+}
+
+impl KvMigrationReport {
+    /// Whole-model wall time.
+    pub fn total_wall(&self, layers: u64) -> SimDuration {
+        SimDuration(self.per_layer_wall.0 * layers)
+    }
+
+    /// Whole-model serving-visible time.
+    pub fn total_visible(&self, layers: u64) -> SimDuration {
+        SimDuration(self.per_layer_visible.0 * layers)
+    }
+}
+
+/// Simulate one KV transformation under `strategy`.
+pub fn run_kv_migration(spec: &KvMigrationSpec, strategy: KvMigrationStrategy) -> KvMigrationReport {
+    let comm = CommModel::for_gpu(&spec.gpu);
+    let vmm = VmmCosts::default();
+    let layers = spec.model.num_layers;
+    let sent_total = spec.sent_bytes_per_worker();
+    let sent_layer = sent_total / layers;
+    let local_layer = spec.local_kv_bytes() / layers;
+    let kept_layer = local_layer - sent_layer;
+
+    // Per-layer mechanics on a real page pool.
+    let layer_pool = spec.worker_kv_bytes() / layers;
+    let mut mgr = KvManager::new(&spec.model, 1, strategy.layout(), layer_pool);
+    mgr.fill_to(spec.kv_util, 2048, 1);
+    let geo = mgr.geometry();
+    let local_blocks = mgr.tables.total_blocks();
+    let heads_removed = geo.num_heads - geo.num_heads / spec.target_tp;
+
+    // Per-layer all-to-all wall time.
+    let a2a_layer = comm.all_to_all(spec.workers, sent_layer, spec.sms);
+
+    match strategy {
+        KvMigrationStrategy::Basic => {
+            // Trim: token-granular compaction copies of every local block.
+            let copies_per_block =
+                strategy.layout().trim_copies_per_block(&geo, heads_removed);
+            let total_copies = copies_per_block * local_blocks;
+            let seg_bytes = geo.head_elem_bytes * (geo.num_heads - heads_removed);
+            let scatter = Link { alpha_us: cal::TRIM_SEG_LATENCY_US, bw: spec.gpu.hbm_bw };
+            let trim = scatter.transfer_time_n(total_copies, seg_bytes);
+            // Freed pages unmapped in one batched driver call per layer.
+            let driver = vmm.op_time(local_blocks.max(1));
+            // Received bytes land in NEW pages before any local page can be
+            // freed (holes until trim), plus the compacted copy of kept KV.
+            let peak = sent_layer + kept_layer;
+            KvMigrationReport {
+                strategy,
+                per_layer_wall: a2a_layer + trim + driver,
+                per_layer_visible: trim + driver,
+                per_layer_peak_bytes: peak,
+                a2a_bytes: sent_total,
+                trim_copy_bytes: total_copies * seg_bytes * layers,
+                stages: 1,
+            }
+        }
+        KvMigrationStrategy::GygesNoOverlap | KvMigrationStrategy::Gyges => {
+            // Phased: stage k frees its pages for stage k+1's landing zone.
+            let stages = (sent_layer.div_ceil(spec.stage_bytes)).max(1) as u32;
+            let a2a_phased =
+                comm.all_to_all_phased(spec.workers, sent_layer, spec.sms, stages);
+            let meta_bytes = 4096u64 * stages as u64;
+            let peak = spec.stage_bytes.min(sent_layer.max(1)) + meta_bytes;
+            // Batched remap per stage — each stage remaps only the blocks
+            // it freed (header-centric: freed head segments are contiguous
+            // → block reshaping is metadata only).
+            let blocks_per_stage = (local_blocks / stages as u64).max(1);
+            let driver = vmm.op_time_calls(stages as u64, blocks_per_stage);
+            let (wall, visible) = if strategy == KvMigrationStrategy::Gyges {
+                (
+                    a2a_phased,
+                    a2a_layer.scale(cal::OVERLAP_VISIBLE_SHARE),
+                )
+            } else {
+                (
+                    a2a_phased + driver,
+                    a2a_layer.scale(cal::PHASED_VISIBLE_SHARE) + driver,
+                )
+            };
+            KvMigrationReport {
+                strategy,
+                per_layer_wall: wall,
+                per_layer_visible: visible,
+                per_layer_peak_bytes: peak,
+                a2a_bytes: sent_total,
+                trim_copy_bytes: 0,
+                stages,
+            }
+        }
+    }
+}
+
+/// Run all three strategies (Figure 9 rows) for one model.
+pub fn fig9_series(model: ModelConfig) -> Vec<KvMigrationReport> {
+    let spec = KvMigrationSpec::paper_default(model);
+    [
+        KvMigrationStrategy::Basic,
+        KvMigrationStrategy::GygesNoOverlap,
+        KvMigrationStrategy::Gyges,
+    ]
+    .into_iter()
+    .map(|s| run_kv_migration(&spec, s))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> KvMigrationSpec {
+        KvMigrationSpec::paper_default(ModelConfig::qwen2_5_32b())
+    }
+
+    #[test]
+    fn volumes_are_consistent() {
+        let s = spec();
+        assert_eq!(s.sent_bytes_per_worker(), s.local_kv_bytes() * 3 / 4);
+        assert!(s.local_kv_bytes() < s.worker_kv_bytes());
+    }
+
+    #[test]
+    fn whole_model_a2a_wall_near_paper_anchor() {
+        // The 4×TP1→TP4 full-KV move at 78 SMs anchors to 522 ms (§3.4).
+        let s = spec();
+        let r = run_kv_migration(&s, KvMigrationStrategy::GygesNoOverlap);
+        let wall_s = r.total_wall(s.model.num_layers).as_secs_f64();
+        assert!((0.40..0.75).contains(&wall_s), "wall {wall_s}s");
+    }
+
+    #[test]
+    fn basic_visible_in_paper_band() {
+        // §6.2.1: Basic adds 3.15–4 ms per layer across the paper's
+        // models. Our mechanistic trim model spreads wider across
+        // architectures (MHA llama2 has 4× the KV of the GQA models);
+        // the Qwen anchor must stay in-band, others within 0.5–12 ms.
+        for m in ModelConfig::eval_set() {
+            let s = KvMigrationSpec::paper_default(m.clone());
+            let r = run_kv_migration(&s, KvMigrationStrategy::Basic);
+            let ms = r.per_layer_visible.as_millis_f64();
+            assert!((0.5..12.0).contains(&ms), "{}: basic visible {ms} ms", m.name);
+        }
+        let s = KvMigrationSpec::paper_default(ModelConfig::qwen2_5_32b());
+        let r = run_kv_migration(&s, KvMigrationStrategy::Basic);
+        let ms = r.per_layer_visible.as_millis_f64();
+        assert!((1.5..6.0).contains(&ms), "qwen anchor {ms} ms");
+    }
+
+    #[test]
+    fn gyges_minus_saving_near_61pct() {
+        let s = spec();
+        let basic = run_kv_migration(&s, KvMigrationStrategy::Basic);
+        let minus = run_kv_migration(&s, KvMigrationStrategy::GygesNoOverlap);
+        let saving = 1.0
+            - minus.per_layer_visible.as_secs_f64() / basic.per_layer_visible.as_secs_f64();
+        assert!((0.40..0.80).contains(&saving), "saving {saving}");
+        assert_eq!(minus.trim_copy_bytes, 0);
+        assert!(basic.trim_copy_bytes > 0);
+    }
+
+    #[test]
+    fn gyges_saving_near_86pct() {
+        let s = spec();
+        let basic = run_kv_migration(&s, KvMigrationStrategy::Basic);
+        let full = run_kv_migration(&s, KvMigrationStrategy::Gyges);
+        let saving = 1.0
+            - full.per_layer_visible.as_secs_f64() / basic.per_layer_visible.as_secs_f64();
+        assert!((0.75..0.97).contains(&saving), "saving {saving}");
+    }
+
+    #[test]
+    fn gyges_peak_memory_below_70mb() {
+        let s = spec();
+        let full = run_kv_migration(&s, KvMigrationStrategy::Gyges);
+        assert!(
+            full.per_layer_peak_bytes
+                < crate::config::calib::transform::GYGES_PEAK_EXTRA_BYTES,
+            "peak {}",
+            crate::util::fmt_bytes(full.per_layer_peak_bytes)
+        );
+        // Header-centric phased migration saves ~91.6% memory vs Basic.
+        let basic = run_kv_migration(&s, KvMigrationStrategy::Basic);
+        let saving =
+            1.0 - full.per_layer_peak_bytes as f64 / basic.per_layer_peak_bytes as f64;
+        assert!((0.80..0.99).contains(&saving), "memory saving {saving}");
+    }
+
+    #[test]
+    fn series_runs_for_all_eval_models() {
+        for m in ModelConfig::eval_set() {
+            let series = fig9_series(m.clone());
+            assert_eq!(series.len(), 3);
+            for r in &series {
+                assert!(r.per_layer_wall.0 > 0, "{}: zero wall", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_sms_slow_the_move() {
+        let mut s = spec();
+        let fast = run_kv_migration(&s, KvMigrationStrategy::GygesNoOverlap);
+        s.sms = 1;
+        let slow = run_kv_migration(&s, KvMigrationStrategy::GygesNoOverlap);
+        assert!(
+            slow.per_layer_wall.as_secs_f64() > 2.0 * fast.per_layer_wall.as_secs_f64()
+        );
+    }
+
+    #[test]
+    fn totals_scale_with_layers() {
+        let s = spec();
+        let r = run_kv_migration(&s, KvMigrationStrategy::Gyges);
+        assert_eq!(
+            r.total_visible(10).0,
+            r.per_layer_visible.0 * 10
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! KV-cache subsystem (paper §4.1): layouts, block tables, the per-worker
+//! page-granular manager, and the migration strategies compared in
+//! Figure 9 / Table 2.
+
+pub mod block_table;
+pub mod layout;
+pub mod manager;
+pub mod migrate;
+
+pub use block_table::{BlockId, BlockTable, BlockTableSet, RequestId};
+pub use layout::{kv_stride_order, Dim, KvGeometry, KvLayout};
+pub use manager::KvManager;
+pub use migrate::{
+    fig9_series, run_kv_migration, KvMigrationReport, KvMigrationSpec, KvMigrationStrategy,
+};

@@ -1,0 +1,36 @@
+//! # Gyges — Dynamic Cross-Instance Parallelism Transformation
+//!
+//! Reproduction of *Gyges: Dynamic Cross-Instance Parallelism
+//! Transformation for Efficient LLM Inference* (cs.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the serving coordinator: page-friendly
+//!   header-centric KV-cache management ([`kvcache`]), parallelism-aware
+//!   weight padding and in-place transformation ([`weights`]),
+//!   layer-staggered hybrid transformation ([`transform`]), and the
+//!   transformation-aware scheduler ([`coordinator`]) with RR/LLF and
+//!   Seesaw/KunServe/LoongServe [`baselines`] — all running over a
+//!   calibrated GPU-cluster substrate ([`sim`]).
+//! - **Layer 2/1 (python/)** — the JAX transformer model and Pallas
+//!   kernels, AOT-lowered to HLO text artifacts executed from the Rust
+//!   request path via PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod transform;
+pub mod workload;
+pub mod kvcache;
+pub mod weights;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod util;
+
+pub use config::{ClusterConfig, GpuSpec, ModelConfig, Policy};
+pub use sim::{EngineModel, SimDuration, SimTime};

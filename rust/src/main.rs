@@ -1,0 +1,191 @@
+//! `gyges` — the leader binary: cluster-simulation serving, real-model
+//! PJRT serving, and experiment reproduction.
+//!
+//! Usage:
+//!   gyges info
+//!   gyges serve       [--model M] [--policy gyges|rr|llf] [--system S]
+//!                     [--qps Q | --hybrid] [--horizon SECS] [--seed N]
+//!                     [--config FILE]
+//!   gyges serve-real  [--artifacts DIR] [--shorts N] [--longs N]
+//!   gyges repro       <table1|table2|table3|fig2|fig9|fig10|fig11|fig12|
+//!                      fig13|fig14|static|all> [--horizon SECS]
+
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::coordinator::{run_system, SystemKind};
+use gyges::serve::{synthetic_workload, RealServer, ServerConfig};
+use gyges::util::Args;
+use gyges::workload::Trace;
+
+fn main() {
+    gyges::util::logging::init(log::LevelFilter::Info);
+    let args = Args::from_env();
+    let code = match args.command() {
+        Some("info") => cmd_info(),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-real") => cmd_serve_real(&args),
+        Some("repro") => cmd_repro(&args),
+        _ => {
+            eprintln!("usage: gyges <info|serve|serve-real|repro> [options]  (see rust/src/main.rs)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_info() -> i32 {
+    let mut t = gyges::util::Table::new(["model", "weights", "layers", "heads/kv", "MLP frac", "GPU"]);
+    for m in ModelConfig::all() {
+        let gpu = gyges::config::GpuSpec::for_model(&m);
+        t.row([
+            m.name.to_string(),
+            gyges::util::fmt_bytes(m.total_weight_bytes()),
+            format!("{}", m.num_layers),
+            format!("{}/{}", m.num_heads, m.num_kv_heads),
+            format!("{:.1}%", m.mlp_weight_fraction() * 100.0),
+            gpu.name.to_string(),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
+    if let Some(path) = args.get("config") {
+        return ClusterConfig::from_file(path);
+    }
+    let model_name = args.get_or("model", "qwen2.5-32b");
+    let model = ModelConfig::by_name(&model_name)
+        .ok_or_else(|| format!("unknown model {model_name:?}"))?;
+    let mut cfg = ClusterConfig::paper_default(model);
+    if let Some(p) = args.get("policy") {
+        cfg.policy = Policy::by_name(p).ok_or_else(|| format!("unknown policy {p:?}"))?;
+    }
+    cfg.hosts = args.parsed_or("hosts", cfg.hosts);
+    cfg.seed = args.parsed_or("seed", cfg.seed);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = match build_cluster(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let system = match args.get_or("system", "gyges").as_str() {
+        "gyges" => SystemKind::Gyges,
+        "gyges-" => SystemKind::GygesNoOverlap,
+        "basic" => SystemKind::Basic,
+        "seesaw" => SystemKind::Seesaw,
+        "kunserve" => SystemKind::KunServe,
+        "loongserve" => SystemKind::LoongServe,
+        other => {
+            eprintln!("unknown system {other:?}");
+            return 2;
+        }
+    };
+    let horizon = args.parsed_or("horizon", 600.0);
+    let trace = if args.flag("hybrid") || args.get("qps").is_none() {
+        Trace::hybrid_paper(cfg.seed, horizon)
+    } else {
+        Trace::production(cfg.seed, args.parsed_or("qps", 1.0), horizon)
+    };
+    println!(
+        "serving {} requests over {horizon}s on {} ({} GPUs, policy {}, system {})",
+        trace.len(),
+        cfg.model.name,
+        cfg.total_gpus(),
+        cfg.policy.name(),
+        system.name()
+    );
+    let out = run_system(cfg, system, None, trace);
+    println!("{}", out.report.line());
+    println!(
+        "scale-ups {}  scale-downs {}  deferred {}  steps {}",
+        out.counters.scale_ups, out.counters.scale_downs, out.counters.deferred, out.counters.steps
+    );
+    0
+}
+
+fn cmd_serve_real(args: &Args) -> i32 {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let mut server = match RealServer::new(&artifacts, ServerConfig::default()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("failed to load artifacts from {artifacts:?}: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "loaded gyges-tiny from {} (tp={})",
+        server.rt.man.dir.display(),
+        server.rt.tp
+    );
+    if let Err(e) = server.rt.verify_oracle() {
+        eprintln!("oracle verification FAILED: {e:#}");
+        return 1;
+    }
+    println!("oracle verified: rust serving path matches the python reference exactly");
+    let shorts = args.parsed_or("shorts", 6usize);
+    let longs = args.parsed_or("longs", 2usize);
+    let reqs = synthetic_workload(args.parsed_or("seed", 42), shorts, longs, server.rt.man.vocab);
+    match server.serve(&reqs) {
+        Ok(rep) => {
+            println!(
+                "served {} requests in {:.2}s  throughput {:.1} tok/s  transforms {} ({} moved)",
+                rep.results.len(),
+                rep.wall_s,
+                rep.throughput_tps,
+                rep.transforms,
+                gyges::util::fmt_bytes(rep.transform_bytes as u64)
+            );
+            println!(
+                "TTFT p50 {:.1} ms p99 {:.1} ms   TPOT p50 {:.1} ms p99 {:.1} ms",
+                rep.ttft.p50 * 1e3,
+                rep.ttft.p99 * 1e3,
+                rep.tpot.p50 * 1e3,
+                rep.tpot.p99 * 1e3
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_repro(args: &Args) -> i32 {
+    use gyges::experiments as exp;
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let horizon = args.parsed_or("horizon", 300.0);
+    let run = |name: &str| match name {
+        "table1" => drop(exp::table1()),
+        "table2" => drop(exp::table2()),
+        "table3" => drop(exp::table3()),
+        "fig2" => drop(exp::fig2()),
+        "fig9" => drop(exp::fig9()),
+        "fig10" => drop(exp::fig10()),
+        "fig11" => drop(exp::fig11()),
+        "fig12" => drop(exp::fig12(horizon, &ModelConfig::eval_set())),
+        "fig13" => drop(exp::fig13()),
+        "fig14" => drop(exp::fig14(horizon, &[2.0, 6.0, 10.0])),
+        "static" => drop(exp::static_hybrid_compare(horizon)),
+        other => eprintln!("unknown experiment {other:?}"),
+    };
+    if what == "all" {
+        for name in [
+            "table1", "table2", "table3", "fig2", "fig9", "fig10", "fig11", "fig12", "fig13",
+            "fig14", "static",
+        ] {
+            println!();
+            run(name);
+        }
+    } else {
+        run(what);
+    }
+    println!("\nJSON rows written under target/repro/");
+    0
+}

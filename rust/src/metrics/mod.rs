@@ -1,0 +1,8 @@
+//! Metrics: per-request TTFT/TPOT/throughput recording and report
+//! rendering for the evaluation harness.
+
+pub mod recorder;
+pub mod report;
+
+pub use recorder::{Recorder, RequestRecord};
+pub use report::RunReport;

@@ -1,0 +1,227 @@
+//! Per-request and cluster-level metric recording: TTFT, TPOT,
+//! throughput — the three quantities of Figure 14.
+
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+/// Lifecycle timestamps of one request.
+#[derive(Clone, Debug, Default)]
+pub struct RequestRecord {
+    pub arrival: SimTime,
+    /// First token emitted (prefill complete).
+    pub first_token: Option<SimTime>,
+    /// Completion time.
+    pub finished: Option<SimTime>,
+    pub input_len: u64,
+    pub output_len: u64,
+    /// Tokens generated so far.
+    pub generated: u64,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> Option<SimDuration> {
+        self.first_token.map(|t| t.since(self.arrival))
+    }
+
+    /// Time-per-output-token (excludes the first token, vLLM convention).
+    pub fn tpot(&self) -> Option<SimDuration> {
+        match (self.first_token, self.finished) {
+            (Some(f), Some(d)) if self.generated > 1 => {
+                Some(SimDuration((d.since(f)).0 / (self.generated - 1)))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Collects records for a whole experiment run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    records: BTreeMap<u64, RequestRecord>,
+    /// Output-token completions bucketed per second (Fig. 13 TPS trend).
+    tps_buckets: BTreeMap<u64, u64>,
+    pub horizon: SimTime,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn on_arrival(&mut self, id: u64, at: SimTime, input_len: u64, output_len: u64) {
+        self.records.insert(
+            id,
+            RequestRecord { arrival: at, input_len, output_len, ..Default::default() },
+        );
+        self.horizon = self.horizon.max(at);
+    }
+
+    pub fn on_first_token(&mut self, id: u64, at: SimTime) {
+        if let Some(r) = self.records.get_mut(&id) {
+            if r.first_token.is_none() {
+                r.first_token = Some(at);
+                r.generated = 1;
+                *self.tps_buckets.entry(at.as_secs_f64() as u64).or_insert(0) += 1;
+            }
+        }
+        self.horizon = self.horizon.max(at);
+    }
+
+    pub fn on_token(&mut self, id: u64, at: SimTime) {
+        if let Some(r) = self.records.get_mut(&id) {
+            r.generated += 1;
+            *self.tps_buckets.entry(at.as_secs_f64() as u64).or_insert(0) += 1;
+        }
+        self.horizon = self.horizon.max(at);
+    }
+
+    pub fn on_finish(&mut self, id: u64, at: SimTime) {
+        if let Some(r) = self.records.get_mut(&id) {
+            r.finished = Some(at);
+        }
+        self.horizon = self.horizon.max(at);
+    }
+
+    pub fn get(&self, id: u64) -> Option<&RequestRecord> {
+        self.records.get(&id)
+    }
+
+    pub fn total(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn completed(&self) -> usize {
+        self.records.values().filter(|r| r.finished.is_some()).count()
+    }
+
+    /// Output tokens per second over the run.
+    pub fn throughput_tps(&self) -> f64 {
+        let tokens: u64 = self.records.values().map(|r| r.generated).sum();
+        let secs = self.horizon.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            tokens as f64 / secs
+        }
+    }
+
+    /// TTFT summary in seconds over completed-prefill requests.
+    pub fn ttft_summary(&self) -> Summary {
+        let xs: Vec<f64> = self
+            .records
+            .values()
+            .filter_map(|r| r.ttft())
+            .map(|d| d.as_secs_f64())
+            .collect();
+        Summary::of(&xs)
+    }
+
+    /// TPOT summary in seconds.
+    pub fn tpot_summary(&self) -> Summary {
+        let xs: Vec<f64> = self
+            .records
+            .values()
+            .filter_map(|r| r.tpot())
+            .map(|d| d.as_secs_f64())
+            .collect();
+        Summary::of(&xs)
+    }
+
+    /// Fraction of requests meeting the paper's SLOs (TTFT<10 s,
+    /// TPOT<100 ms).
+    pub fn slo_attainment(&self, ttft_s: f64, tpot_s: f64) -> f64 {
+        let done: Vec<&RequestRecord> =
+            self.records.values().filter(|r| r.finished.is_some()).collect();
+        if done.is_empty() {
+            return 0.0;
+        }
+        let ok = done
+            .iter()
+            .filter(|r| {
+                r.ttft().map(|t| t.as_secs_f64() < ttft_s).unwrap_or(false)
+                    && r.tpot().map(|t| t.as_secs_f64() < tpot_s).unwrap_or(true)
+            })
+            .count();
+        ok as f64 / done.len() as f64
+    }
+
+    /// Tokens/s series bucketed per second (Figure 13).
+    pub fn tps_series(&self) -> Vec<(u64, u64)> {
+        self.tps_buckets.iter().map(|(&s, &c)| (s, c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn ttft_and_tpot() {
+        let mut rec = Recorder::new();
+        rec.on_arrival(1, t(0.0), 100, 4);
+        rec.on_first_token(1, t(2.0));
+        rec.on_token(1, t(2.1));
+        rec.on_token(1, t(2.2));
+        rec.on_token(1, t(2.3));
+        rec.on_finish(1, t(2.3));
+        let r = rec.get(1).unwrap();
+        assert!((r.ttft().unwrap().as_secs_f64() - 2.0).abs() < 1e-9);
+        assert!((r.tpot().unwrap().as_secs_f64() - 0.1).abs() < 1e-6);
+        assert_eq!(rec.completed(), 1);
+    }
+
+    #[test]
+    fn throughput_counts_all_tokens() {
+        let mut rec = Recorder::new();
+        for id in 0..10 {
+            rec.on_arrival(id, t(0.0), 10, 2);
+            rec.on_first_token(id, t(1.0));
+            rec.on_token(id, t(2.0));
+            rec.on_finish(id, t(2.0));
+        }
+        // 20 tokens over 2 s
+        assert!((rec.throughput_tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment_filters() {
+        let mut rec = Recorder::new();
+        // meets SLO
+        rec.on_arrival(1, t(0.0), 10, 2);
+        rec.on_first_token(1, t(1.0));
+        rec.on_token(1, t(1.05));
+        rec.on_finish(1, t(1.05));
+        // violates TTFT
+        rec.on_arrival(2, t(0.0), 10, 2);
+        rec.on_first_token(2, t(20.0));
+        rec.on_token(2, t(20.05));
+        rec.on_finish(2, t(20.05));
+        assert!((rec.slo_attainment(10.0, 0.1) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tps_series_buckets() {
+        let mut rec = Recorder::new();
+        rec.on_arrival(1, t(0.0), 1, 3);
+        rec.on_first_token(1, t(0.5));
+        rec.on_token(1, t(0.9));
+        rec.on_token(1, t(1.1));
+        let series = rec.tps_series();
+        assert_eq!(series, vec![(0, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn incomplete_requests_have_no_tpot() {
+        let mut rec = Recorder::new();
+        rec.on_arrival(1, t(0.0), 10, 5);
+        rec.on_first_token(1, t(1.0));
+        assert!(rec.get(1).unwrap().tpot().is_none());
+        assert_eq!(rec.completed(), 0);
+        assert_eq!(rec.total(), 1);
+    }
+}

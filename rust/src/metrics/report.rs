@@ -1,0 +1,89 @@
+//! Experiment report rendering: summary lines and JSON rows for
+//! `target/repro/`.
+
+use super::recorder::Recorder;
+use crate::util::json::Json;
+
+/// Headline numbers of one run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub label: String,
+    pub throughput_tps: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+    pub completed: usize,
+    pub total: usize,
+    pub slo_attainment: f64,
+}
+
+impl RunReport {
+    pub fn from_recorder(label: &str, rec: &Recorder) -> RunReport {
+        let ttft = rec.ttft_summary();
+        let tpot = rec.tpot_summary();
+        RunReport {
+            label: label.to_string(),
+            throughput_tps: rec.throughput_tps(),
+            ttft_p50_s: ttft.p50,
+            ttft_p99_s: ttft.p99,
+            tpot_p50_s: tpot.p50,
+            tpot_p99_s: tpot.p99,
+            completed: rec.completed(),
+            total: rec.total(),
+            slo_attainment: rec.slo_attainment(
+                crate::config::calib::workload::SLO_TTFT_S,
+                crate::config::calib::workload::SLO_TPOT_S,
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("label", self.label.as_str())
+            .set("throughput_tps", self.throughput_tps)
+            .set("ttft_p50_s", self.ttft_p50_s)
+            .set("ttft_p99_s", self.ttft_p99_s)
+            .set("tpot_p50_s", self.tpot_p50_s)
+            .set("tpot_p99_s", self.tpot_p99_s)
+            .set("completed", self.completed)
+            .set("total", self.total)
+            .set("slo_attainment", self.slo_attainment);
+        o
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<14} tput {:>8.1} tps   TTFT p50 {:>7.3}s p99 {:>7.3}s   TPOT p50 {:>6.1}ms p99 {:>6.1}ms   done {}/{}   SLO {:.1}%",
+            self.label,
+            self.throughput_tps,
+            self.ttft_p50_s,
+            self.ttft_p99_s,
+            self.tpot_p50_s * 1e3,
+            self.tpot_p99_s * 1e3,
+            self.completed,
+            self.total,
+            self.slo_attainment * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::SimTime;
+
+    #[test]
+    fn report_roundtrip() {
+        let mut rec = Recorder::new();
+        rec.on_arrival(1, SimTime::ZERO, 10, 2);
+        rec.on_first_token(1, SimTime::from_secs_f64(1.0));
+        rec.on_token(1, SimTime::from_secs_f64(1.1));
+        rec.on_finish(1, SimTime::from_secs_f64(1.1));
+        let rep = RunReport::from_recorder("test", &rec);
+        assert_eq!(rep.completed, 1);
+        let j = rep.to_json();
+        assert_eq!(j.get("label").unwrap().as_str(), Some("test"));
+        assert!(rep.line().contains("test"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Artifact loading: manifest.json, weight binaries, oracle.json —
+//! everything `make artifacts` produced on the Python side.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest.json: gyges-tiny dims + module/weight catalogue.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hidden: usize,
+    pub inner: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub tokens_per_block: usize,
+    pub s_max: usize,
+    pub blocks: usize,
+    pub block_inner: usize,
+    pub tp_choices: Vec<usize>,
+    pub padded_shard_inner: BTreeMap<usize, usize>,
+    pub modules: BTreeMap<String, String>,
+    pub weights: BTreeMap<String, WeightMeta>,
+}
+
+/// One weight tensor's file + shape.
+#[derive(Clone, Debug)]
+pub struct WeightMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+impl WeightMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .map(|x| x as usize)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut padded = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("padded_shard_inner") {
+            for (k, v) in m {
+                padded.insert(
+                    k.parse::<usize>().map_err(|e| anyhow!("bad tp key: {e}"))?,
+                    v.as_f64().unwrap_or(0.0) as usize,
+                );
+            }
+        }
+        let mut modules = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("modules") {
+            for (k, v) in m {
+                modules.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+            }
+        }
+        let mut weights = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("weights") {
+            for (k, v) in m {
+                let file = v
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("weight {k}: no file"))?
+                    .to_string();
+                let shape = v
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow!("weight {k}: no shape"))?
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(0.0) as usize)
+                    .collect();
+                weights.insert(k.clone(), WeightMeta { file, shape });
+            }
+        }
+        let tp_choices = j
+            .get("tp_choices")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as usize).collect())
+            .unwrap_or_else(|| vec![1, 2, 4]);
+
+        Ok(Manifest {
+            hidden: get_usize(&j, "hidden")?,
+            inner: get_usize(&j, "inner")?,
+            heads: get_usize(&j, "heads")?,
+            head_dim: get_usize(&j, "head_dim")?,
+            layers: get_usize(&j, "layers")?,
+            vocab: get_usize(&j, "vocab")?,
+            tokens_per_block: get_usize(&j, "tokens_per_block")?,
+            s_max: get_usize(&j, "s_max")?,
+            blocks: get_usize(&j, "blocks")?,
+            block_inner: get_usize(&j, "block_inner")?,
+            tp_choices,
+            padded_shard_inner: padded,
+            modules,
+            weights,
+            dir,
+        })
+    }
+
+    /// Path of a module's HLO text file.
+    pub fn module_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .modules
+            .get(name)
+            .ok_or_else(|| anyhow!("module {name:?} not in manifest"))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Load one weight tensor as f32 (little-endian on disk).
+    pub fn load_weight(&self, name: &str) -> Result<Vec<f32>> {
+        let meta = self
+            .weights
+            .get(name)
+            .ok_or_else(|| anyhow!("weight {name:?} not in manifest"))?;
+        let path = self.dir.join(&meta.file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * meta.numel() {
+            bail!(
+                "{name}: expected {} bytes, file has {}",
+                4 * meta.numel(),
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// oracle.json: the greedy-decode continuation the e2e example verifies.
+#[derive(Clone, Debug)]
+pub struct Oracle {
+    pub prompt: Vec<u32>,
+    pub generated: Vec<u32>,
+}
+
+impl Oracle {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Oracle> {
+        let path = dir.as_ref().join("oracle.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("oracle parse: {e}"))?;
+        let ints = |key: &str| -> Result<Vec<u32>> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect())
+                .ok_or_else(|| anyhow!("oracle missing {key}"))
+        };
+        Ok(Oracle { prompt: ints("prompt")?, generated: ints("generated")? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_loads_and_is_consistent() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.hidden, 256);
+        assert_eq!(m.heads, 8);
+        assert_eq!(m.modules.len(), 14);
+        for tp in &m.tp_choices {
+            assert_eq!(m.padded_shard_inner[tp] % m.block_inner, 0);
+        }
+        // every module file exists
+        for name in m.modules.keys() {
+            assert!(m.module_path(name).unwrap().exists(), "{name}");
+        }
+    }
+
+    #[test]
+    fn weights_load_with_right_sizes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let emb = m.load_weight("emb").unwrap();
+        assert_eq!(emb.len(), m.vocab * m.hidden);
+        let up = m.load_weight("l0.up").unwrap();
+        assert_eq!(up.len(), m.hidden * m.inner);
+        assert!(m.load_weight("nonexistent").is_err());
+    }
+
+    #[test]
+    fn oracle_loads() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let o = Oracle::load(&dir).unwrap();
+        assert!(!o.prompt.is_empty());
+        assert_eq!(o.generated.len(), 8);
+    }
+}

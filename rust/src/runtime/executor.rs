@@ -1,0 +1,428 @@
+//! The gyges-tiny serving runtime: executes the AOT-compiled per-module
+//! HLO artifacts with the Rust coordinator acting as the TP reduction
+//! fabric, and performs LIVE parallelism transformation of the weight
+//! shards and per-head KV caches — the paper's mechanism on a real model.
+//!
+//! Per decode step and per layer:
+//!     o_partial[r]  = attn_tp{tp}(hidden, pos, kv[r], shard_r)   ∀ ranks
+//!     h2            = hidden + Σ_r o_partial[r]          (rust all-reduce)
+//!     mlp_partial[r]= mlp_tp{tp}(h2, padded shard_r)             ∀ ranks
+//!     hidden        = h2 + Σ_r mlp_partial[r]            (rust all-reduce)
+//!
+//! §Perf: weights and KV caches live as DEVICE buffers (`execute_b`);
+//! only [1, hidden] activations and scalars cross the host boundary each
+//! step. Weight shards are built once per TP degree and shared across
+//! sessions via `Rc`. (Before this pass every step deep-cloned ~13 MB of
+//! literals; see EXPERIMENTS.md §Perf for the measured delta.)
+
+use super::artifact::{Manifest, Oracle};
+use super::client::{to_f32, Engine};
+use super::shard::{shard_attn, shard_mlp, LayerWeights};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// One rank's immutable weight-shard buffers for one layer.
+struct RankWeights {
+    wqkv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    up_p: xla::PjRtBuffer,
+    down_p: xla::PjRtBuffer,
+}
+
+/// Per-rank, per-layer session state.
+struct RankLayer {
+    weights: Rc<RankWeights>,
+    /// KV cache buffer [blocks, h_shard, 2, tpb, hd], device-resident and
+    /// fed back into the next step's execute_b.
+    kv: xla::PjRtBuffer,
+}
+
+/// A serving session for one sequence (its KV caches live here).
+pub struct Session {
+    /// ranks × layers
+    state: Vec<Vec<RankLayer>>,
+    pub pos: usize,
+    pub tokens: Vec<u32>,
+}
+
+/// The tiny-model runtime at a given TP degree.
+pub struct TinyRuntime {
+    pub man: Manifest,
+    pub tp: usize,
+    engine: Engine,
+    layers: Vec<LayerWeights>,
+    emb_buf: xla::PjRtBuffer,
+    ln1: Vec<xla::PjRtBuffer>,
+    ln2: Vec<xla::PjRtBuffer>,
+    /// Weight-shard buffers per TP degree: [rank][layer], built lazily
+    /// once and shared by every session (weights are immutable).
+    shard_cache: BTreeMap<usize, Vec<Vec<Rc<RankWeights>>>>,
+    /// Bytes moved by the last transformation (reporting).
+    pub last_transform_bytes: usize,
+}
+
+impl TinyRuntime {
+    /// Load artifacts and compile every module.
+    pub fn load(artifacts: impl AsRef<std::path::Path>, tp: usize) -> Result<TinyRuntime> {
+        let man = Manifest::load(artifacts)?;
+        ensure!(man.tp_choices.contains(&tp), "tp {tp} not exported");
+        let mut engine = Engine::cpu()?;
+        engine.load_module("embed", man.module_path("embed")?)?;
+        engine.load_module("lm_head", man.module_path("lm_head")?)?;
+        for &t in &man.tp_choices {
+            for kind in ["qkv", "kvupd", "attnout", "mlp"] {
+                let name = format!("{kind}_tp{t}");
+                engine.load_module(&name, man.module_path(&name)?)?;
+            }
+        }
+        let layers: Vec<LayerWeights> = (0..man.layers)
+            .map(|l| LayerWeights::load(&man, l))
+            .collect::<Result<_>>()?;
+        let emb = man.load_weight("emb")?;
+        let emb_buf = engine.buffer_f32(&emb, &[man.vocab, man.hidden])?;
+        let ln1 = layers
+            .iter()
+            .map(|w| engine.buffer_f32(&w.ln1, &[man.hidden]))
+            .collect::<Result<_>>()?;
+        let ln2 = layers
+            .iter()
+            .map(|w| engine.buffer_f32(&w.ln2, &[man.hidden]))
+            .collect::<Result<_>>()?;
+        Ok(TinyRuntime {
+            man,
+            tp,
+            engine,
+            layers,
+            emb_buf,
+            ln1,
+            ln2,
+            shard_cache: BTreeMap::new(),
+            last_transform_bytes: 0,
+        })
+    }
+
+    fn kv_dims(&self, tp: usize) -> [usize; 5] {
+        [
+            self.man.blocks,
+            self.man.heads / tp,
+            2,
+            self.man.tokens_per_block,
+            self.man.head_dim,
+        ]
+    }
+
+    /// Build (or fetch) the shared weight-shard buffers for `tp`.
+    fn shards_for(&mut self, tp: usize) -> Result<&Vec<Vec<Rc<RankWeights>>>> {
+        if !self.shard_cache.contains_key(&tp) {
+            let hs = self.man.heads / tp;
+            let ps = self.man.padded_shard_inner[&tp];
+            let mut ranks = Vec::with_capacity(tp);
+            for rank in 0..tp {
+                let mut per_layer = Vec::with_capacity(self.man.layers);
+                for l in 0..self.man.layers {
+                    let (wqkv, wo) = shard_attn(&self.man, &self.layers[l], tp, rank);
+                    let (up_p, down_p) = shard_mlp(&self.man, &self.layers[l], tp, rank);
+                    per_layer.push(Rc::new(RankWeights {
+                        wqkv: self
+                            .engine
+                            .buffer_f32(&wqkv, &[self.man.hidden, 3 * hs * self.man.head_dim])?,
+                        wo: self
+                            .engine
+                            .buffer_f32(&wo, &[hs * self.man.head_dim, self.man.hidden])?,
+                        up_p: self.engine.buffer_f32(&up_p, &[self.man.hidden, ps])?,
+                        down_p: self.engine.buffer_f32(&down_p, &[ps, self.man.hidden])?,
+                    }));
+                }
+                ranks.push(per_layer);
+            }
+            self.shard_cache.insert(tp, ranks);
+        }
+        Ok(&self.shard_cache[&tp])
+    }
+
+    /// Start a fresh session (empty KV caches; weight shards shared).
+    pub fn new_session(&mut self) -> Result<Session> {
+        let tp = self.tp;
+        let kv_dims = self.kv_dims(tp);
+        let kv_len: usize = kv_dims.iter().product();
+        let zeros = vec![0.0f32; kv_len];
+        // Clone the shard Rc matrix up front (cheap) to end the borrow.
+        let shards: Vec<Vec<Rc<RankWeights>>> = self.shards_for(tp)?.clone();
+        let mut state = Vec::with_capacity(tp);
+        for per_layer in shards {
+            let mut layers = Vec::with_capacity(self.man.layers);
+            for weights in per_layer {
+                layers.push(RankLayer {
+                    weights,
+                    kv: self.engine.buffer_f32(&zeros, &kv_dims)?,
+                });
+            }
+            state.push(layers);
+        }
+        Ok(Session { state, pos: 0, tokens: Vec::new() })
+    }
+
+    /// Feed one token; returns the logits. (Prefill = feeding the prompt
+    /// token by token; decode = feeding the last generated token.)
+    pub fn step(&mut self, sess: &mut Session, token: u32) -> Result<Vec<f32>> {
+        ensure!(sess.pos < self.man.s_max, "sequence exceeds S_MAX");
+        ensure!(sess.state.len() == self.tp, "session built for a different TP degree");
+        let tp = self.tp;
+        // embed (device)
+        let tok_buf = self.engine.buffer_i32(token as i32)?;
+        let hidden_buf = self
+            .engine
+            .run_b("embed", &[&tok_buf, &self.emb_buf])?
+            .pop()
+            .unwrap();
+        let mut hidden = to_f32(&hidden_buf.to_literal_sync()?)?;
+        let pos_buf = self.engine.buffer_i32(sess.pos as i32)?;
+        let qkv_mod = format!("qkv_tp{tp}");
+        let kvupd_mod = format!("kvupd_tp{tp}");
+        let attnout_mod = format!("attnout_tp{tp}");
+        let mlp_mod = format!("mlp_tp{tp}");
+
+        for l in 0..self.man.layers {
+            // ---- attention (all ranks) + rust all-reduce ----
+            // Three single-output device-side executes per rank: qkv
+            // projection, KV-cache update (stays on device), attention +
+            // output projection. Only the [1,hidden] partial returns.
+            let hidden_dev = self.engine.buffer_f32(&hidden, &[1, self.man.hidden])?;
+            let mut o_sum = vec![0.0f32; self.man.hidden];
+            for rank in 0..tp {
+                let rl = &mut sess.state[rank][l];
+                let qkv = self
+                    .engine
+                    .run_b(&qkv_mod, &[&hidden_dev, &rl.weights.wqkv, &self.ln1[l]])?
+                    .pop()
+                    .unwrap();
+                rl.kv = self
+                    .engine
+                    .run_b(&kvupd_mod, &[&rl.kv, &qkv, &pos_buf])?
+                    .pop()
+                    .unwrap();
+                let outs = self.engine.run_b(
+                    &attnout_mod,
+                    &[&qkv, &rl.kv, &pos_buf, &rl.weights.wo],
+                )?;
+                let part = to_f32(&outs[0].to_literal_sync()?)?;
+                for (a, b) in o_sum.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            let h2: Vec<f32> = hidden.iter().zip(&o_sum).map(|(a, b)| a + b).collect();
+
+            // ---- MLP (all ranks) + rust all-reduce ----
+            let h2_dev = self.engine.buffer_f32(&h2, &[1, self.man.hidden])?;
+            let mut m_sum = vec![0.0f32; self.man.hidden];
+            for rank in 0..tp {
+                let rl = &sess.state[rank][l];
+                let outs = self.engine.run_b(
+                    &mlp_mod,
+                    &[&h2_dev, &rl.weights.up_p, &rl.weights.down_p, &self.ln2[l]],
+                )?;
+                let part = to_f32(&outs[0].to_literal_sync()?)?;
+                for (a, b) in m_sum.iter_mut().zip(&part) {
+                    *a += b;
+                }
+            }
+            hidden = h2.iter().zip(&m_sum).map(|(a, b)| a + b).collect();
+        }
+
+        let hidden_dev = self.engine.buffer_f32(&hidden, &[1, self.man.hidden])?;
+        let out = self.engine.run_b("lm_head", &[&hidden_dev, &self.emb_buf])?;
+        let logits = to_f32(&out[0].to_literal_sync()?)?;
+        sess.pos += 1;
+        sess.tokens.push(token);
+        Ok(logits)
+    }
+
+    /// Greedy-generate `n` tokens after feeding `prompt`.
+    pub fn generate(&mut self, sess: &mut Session, prompt: &[u32], n: usize) -> Result<Vec<u32>> {
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.step(sess, t)?;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            logits = self.step(sess, next)?;
+        }
+        Ok(out)
+    }
+
+    /// LIVE parallelism transformation: re-shard every session KV cache
+    /// and switch the weight-shard set from the current degree to `to_tp`.
+    /// The header-centric layout makes each (block, head) span contiguous,
+    /// so KV moves as whole per-head spans (§4.1.2); weights need no copy
+    /// at all — the padded shard buffers per degree are immutable, and
+    /// scale-up simply stops referencing 3/4 of them (the runtime twin of
+    /// "release the pages").
+    pub fn transform(&mut self, sess: &mut Session, to_tp: usize) -> Result<()> {
+        ensure!(self.man.tp_choices.contains(&to_tp), "tp {to_tp} not exported");
+        let from_tp = self.tp;
+        if from_tp == to_tp {
+            return Ok(());
+        }
+        let man = self.man.clone();
+        let (blocks, heads, tpb, hd) =
+            (man.blocks, man.heads, man.tokens_per_block, man.head_dim);
+        let hs_old = heads / from_tp;
+        let hs_new = heads / to_tp;
+        let head_span = 2 * tpb * hd;
+        let kv_dims_new = self.kv_dims(to_tp);
+        let mut moved = 0usize;
+
+        // Make sure the target shard buffers exist (shared, no copies).
+        let shards: Vec<Vec<Rc<RankWeights>>> = self.shards_for(to_tp)?.clone();
+
+        let mut new_state: Vec<Vec<RankLayer>> = (0..to_tp)
+            .map(|_| Vec::with_capacity(man.layers))
+            .collect();
+        for l in 0..man.layers {
+            // 1) Gather full-head KV from the old shards.
+            let mut full = vec![0.0f32; blocks * heads * head_span];
+            for (rank, per_layer) in sess.state.iter().enumerate().take(from_tp) {
+                let kv = to_f32(&per_layer[l].kv.to_literal_sync()?)?;
+                for b in 0..blocks {
+                    for h in 0..hs_old {
+                        let src = (b * hs_old + h) * head_span;
+                        let dst = (b * heads + rank * hs_old + h) * head_span;
+                        full[dst..dst + head_span].copy_from_slice(&kv[src..src + head_span]);
+                        moved += head_span * 4;
+                    }
+                }
+            }
+            // 2) Scatter into the new shard layout (contiguous spans).
+            for (rank, state) in new_state.iter_mut().enumerate() {
+                let mut shard = vec![0.0f32; blocks * hs_new * head_span];
+                for b in 0..blocks {
+                    for h in 0..hs_new {
+                        let src = (b * heads + rank * hs_new + h) * head_span;
+                        let dst = (b * hs_new + h) * head_span;
+                        shard[dst..dst + head_span].copy_from_slice(&full[src..src + head_span]);
+                    }
+                }
+                state.push(RankLayer {
+                    weights: shards[rank][l].clone(),
+                    kv: self.engine.buffer_f32(&shard, &kv_dims_new)?,
+                });
+            }
+        }
+        sess.state = new_state;
+        self.tp = to_tp;
+        self.last_transform_bytes = moved;
+        Ok(())
+    }
+
+    /// Verify the artifacts reproduce the Python oracle exactly.
+    pub fn verify_oracle(&mut self) -> Result<()> {
+        let oracle = Oracle::load(&self.man.dir)?;
+        let mut sess = self.new_session()?;
+        let got = self.generate(&mut sess, &oracle.prompt, oracle.generated.len())?;
+        ensure!(
+            got == oracle.generated,
+            "oracle mismatch: got {got:?}, want {:?}",
+            oracle.generated
+        );
+        Ok(())
+    }
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn oracle_reproduced_at_tp1() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = TinyRuntime::load(&dir, 1).unwrap();
+        rt.verify_oracle().unwrap();
+    }
+
+    #[test]
+    fn all_tp_degrees_agree() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let prompt = [3u32, 17, 200, 41];
+        let mut reference = None;
+        for tp in [1usize, 2, 4] {
+            let mut rt = TinyRuntime::load(&dir, tp).unwrap();
+            let mut sess = rt.new_session().unwrap();
+            let got = rt.generate(&mut sess, &prompt, 6).unwrap();
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert_eq!(&got, want, "tp{tp} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn live_transformation_preserves_generation() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let prompt = [5u32, 9, 100, 7, 63];
+        // Uninterrupted TP1 run.
+        let mut rt_ref = TinyRuntime::load(&dir, 1).unwrap();
+        let mut s_ref = rt_ref.new_session().unwrap();
+        let want = rt_ref.generate(&mut s_ref, &prompt, 6).unwrap();
+
+        // TP1 → prefill → TRANSFORM to TP4 mid-stream → continue decode.
+        let mut rt = TinyRuntime::load(&dir, 1).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        let mut logits = Vec::new();
+        for &t in &prompt {
+            logits = rt.step(&mut sess, t).unwrap();
+        }
+        rt.transform(&mut sess, 4).unwrap();
+        assert!(rt.last_transform_bytes > 0);
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            let next = argmax(&logits) as u32;
+            got.push(next);
+            logits = rt.step(&mut sess, next).unwrap();
+        }
+        assert_eq!(got, want, "transformation must not change results");
+
+        // And back down to TP1 (scale-down path).
+        rt.transform(&mut sess, 1).unwrap();
+        let next = argmax(&logits) as u32;
+        let _ = rt.step(&mut sess, next).unwrap();
+    }
+
+    #[test]
+    fn shard_cache_is_shared_across_sessions() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = TinyRuntime::load(&dir, 2).unwrap();
+        let _a = rt.new_session().unwrap();
+        let _b = rt.new_session().unwrap();
+        assert_eq!(rt.shard_cache.len(), 1);
+        assert_eq!(rt.shard_cache[&2].len(), 2); // ranks
+    }
+}

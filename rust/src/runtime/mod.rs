@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the HLO-text artifacts `make artifacts` produced
+//! and executes them on the request path (Python never runs here).
+//!
+//! - [`artifact`] — manifest/weights/oracle loading
+//! - [`client`] — PJRT CPU client + module compilation
+//! - [`shard`] — TP weight sharding + §4.2 padding (Rust twin of model.py)
+//! - [`executor`] — the per-layer TP serving loop with Rust as the
+//!   all-reduce fabric, plus LIVE KV/weight transformation
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod shard;
+
+pub use artifact::{Manifest, Oracle, WeightMeta};
+pub use client::{literal_f32, literal_i32, to_f32, Engine};
+pub use executor::{argmax, Session, TinyRuntime};
+pub use shard::{mlp_pad_bytes, shard_attn, shard_mlp, LayerWeights};

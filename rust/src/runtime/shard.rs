@@ -1,0 +1,180 @@
+//! Weight sharding + §4.2 padding on the Rust side — the serving twin of
+//! python/compile/model.py's `shard_attn_weights` / `shard_mlp_weights`.
+//!
+//! The runtime holds the UNpadded full weights (as loaded from
+//! artifacts/weights) and materializes per-rank shards for whatever TP
+//! degree an instance currently runs — this is exactly the "transformation"
+//! act: scale-up drops shard columns (page release), scale-down
+//! re-materializes them. Padding inserts zero columns/rows to the
+//! `block_inner` boundary so the padded-FFN artifacts accept the shards.
+
+use super::artifact::Manifest;
+
+/// One layer's full (unpadded, unsharded) weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wqkv: Vec<f32>, // [hidden, 3*heads*head_dim]
+    pub wo: Vec<f32>,   // [heads*head_dim, hidden]
+    pub up: Vec<f32>,   // [hidden, inner]
+    pub down: Vec<f32>, // [inner, hidden]
+    pub ln1: Vec<f32>,  // [hidden]
+    pub ln2: Vec<f32>,  // [hidden]
+}
+
+impl LayerWeights {
+    pub fn load(man: &Manifest, layer: usize) -> anyhow::Result<LayerWeights> {
+        Ok(LayerWeights {
+            wqkv: man.load_weight(&format!("l{layer}.wqkv"))?,
+            wo: man.load_weight(&format!("l{layer}.wo"))?,
+            up: man.load_weight(&format!("l{layer}.up"))?,
+            down: man.load_weight(&format!("l{layer}.down"))?,
+            ln1: man.load_weight(&format!("l{layer}.ln1"))?,
+            ln2: man.load_weight(&format!("l{layer}.ln2"))?,
+        })
+    }
+}
+
+/// Attention shard of worker `rank` at degree `tp`:
+/// (wqkv_shard [hidden, 3*h_shard*hd], wo_shard [h_shard*hd, hidden]).
+pub fn shard_attn(
+    man: &Manifest,
+    w: &LayerWeights,
+    tp: usize,
+    rank: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (hidden, heads, hd) = (man.hidden, man.heads, man.head_dim);
+    assert!(heads % tp == 0 && rank < tp);
+    let hs = heads / tp;
+    // wqkv logical shape [hidden, 3, heads, hd] row-major.
+    let mut wqkv_s = Vec::with_capacity(hidden * 3 * hs * hd);
+    for row in 0..hidden {
+        for t in 0..3 {
+            for h in rank * hs..(rank + 1) * hs {
+                let base = ((row * 3 + t) * heads + h) * hd;
+                wqkv_s.extend_from_slice(&w.wqkv[base..base + hd]);
+            }
+        }
+    }
+    // wo logical shape [heads, hd, hidden]: take this rank's head rows.
+    let rows = hs * hd;
+    let start = rank * rows * hidden;
+    let wo_s = w.wo[start..start + rows * hidden].to_vec();
+    (wqkv_s, wo_s)
+}
+
+/// Padded MLP shard of worker `rank` at degree `tp`:
+/// (up_p [hidden, ps], down_p [ps, hidden]) with ps = padded_shard_inner.
+pub fn shard_mlp(
+    man: &Manifest,
+    w: &LayerWeights,
+    tp: usize,
+    rank: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (hidden, inner) = (man.hidden, man.inner);
+    assert!(inner % tp == 0 && rank < tp);
+    let shard = inner / tp;
+    let ps = man.padded_shard_inner[&tp];
+    let pad = ps - shard;
+    // up [hidden, inner] → columns [rank*shard, (rank+1)*shard) + zero pad.
+    let mut up_p = Vec::with_capacity(hidden * ps);
+    for row in 0..hidden {
+        let base = row * inner + rank * shard;
+        up_p.extend_from_slice(&w.up[base..base + shard]);
+        up_p.extend(std::iter::repeat(0.0).take(pad));
+    }
+    // down [inner, hidden] → rows, then zero rows.
+    let mut down_p = Vec::with_capacity(ps * hidden);
+    let start = rank * shard * hidden;
+    down_p.extend_from_slice(&w.down[start..start + shard * hidden]);
+    down_p.extend(std::iter::repeat(0.0).take(pad * hidden));
+    (up_p, down_p)
+}
+
+/// Bytes of padding a rank's MLP shard carries (the §4.2 overhead).
+pub fn mlp_pad_bytes(man: &Manifest, tp: usize) -> usize {
+    let shard = man.inner / tp;
+    let ps = man.padded_shard_inner[&tp];
+    (ps - shard) * man.hidden * 4 * 2 // zero cols in up + zero rows in down
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then(|| Manifest::load(&d).unwrap())
+    }
+
+    #[test]
+    fn attn_shards_partition_wqkv() {
+        let Some(man) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let w = LayerWeights::load(&man, 0).unwrap();
+        for tp in [1usize, 2, 4] {
+            // Reassemble the full wqkv from shards and compare.
+            let hs = man.heads / tp;
+            let shards: Vec<Vec<f32>> =
+                (0..tp).map(|r| shard_attn(&man, &w, tp, r).0).collect();
+            let mut rebuilt = vec![0.0f32; w.wqkv.len()];
+            for (r, s) in shards.iter().enumerate() {
+                for row in 0..man.hidden {
+                    for t in 0..3 {
+                        for h in 0..hs {
+                            let src = ((row * 3 + t) * hs + h) * man.head_dim;
+                            let dst =
+                                ((row * 3 + t) * man.heads + r * hs + h) * man.head_dim;
+                            rebuilt[dst..dst + man.head_dim]
+                                .copy_from_slice(&s[src..src + man.head_dim]);
+                        }
+                    }
+                }
+            }
+            assert_eq!(rebuilt, w.wqkv, "tp={tp}");
+        }
+    }
+
+    #[test]
+    fn mlp_shards_are_padded_with_zeros() {
+        let Some(man) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let w = LayerWeights::load(&man, 1).unwrap();
+        for tp in [1usize, 2, 4] {
+            let shard = man.inner / tp;
+            let ps = man.padded_shard_inner[&tp];
+            let (up_p, down_p) = shard_mlp(&man, &w, tp, 0);
+            assert_eq!(up_p.len(), man.hidden * ps);
+            assert_eq!(down_p.len(), ps * man.hidden);
+            // pad columns are zero
+            for row in 0..man.hidden {
+                for c in shard..ps {
+                    assert_eq!(up_p[row * ps + c], 0.0);
+                }
+            }
+            for r in shard..ps {
+                for c in 0..man.hidden {
+                    assert_eq!(down_p[r * man.hidden + c], 0.0);
+                }
+            }
+            // real region matches the source
+            assert_eq!(up_p[0..shard], w.up[0..shard]);
+        }
+    }
+
+    #[test]
+    fn tp1_shard_covers_everything() {
+        let Some(man) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let w = LayerWeights::load(&man, 0).unwrap();
+        let (wqkv_s, wo_s) = shard_attn(&man, &w, 1, 0);
+        assert_eq!(wqkv_s, w.wqkv);
+        assert_eq!(wo_s, w.wo);
+        assert!(mlp_pad_bytes(&man, 4) > 0, "inner=960 must pad at tp4");
+    }
+}

@@ -1,0 +1,205 @@
+//! Real-model serving front end: batched request intake over the PJRT
+//! runtime with wall-clock TTFT/TPOT/throughput measurement, including
+//! live parallelism transformation when a long request arrives.
+//!
+//! This is the path `examples/serve_e2e.rs` exercises end to end.
+
+use crate::runtime::{argmax, TinyRuntime};
+use crate::util::stats::Summary;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One serving request for the tiny model.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+/// Measured outcome of one request.
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    pub id: u64,
+    pub output: Vec<u32>,
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    pub total_s: f64,
+}
+
+/// Aggregate serving report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub results: Vec<ServeResult>,
+    pub wall_s: f64,
+    pub total_tokens: usize,
+    pub throughput_tps: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub transforms: usize,
+    pub transform_bytes: usize,
+}
+
+/// Serving policy knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// TP degree to start at.
+    pub initial_tp: usize,
+    /// Prompt length above which the server scales up to `high_tp`.
+    pub long_threshold: usize,
+    pub high_tp: usize,
+    /// Scale back down when no long request is active.
+    pub auto_scale_down: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { initial_tp: 1, long_threshold: 48, high_tp: 4, auto_scale_down: true }
+    }
+}
+
+/// A single-instance real-model server (the e2e demonstrator).
+pub struct RealServer {
+    pub rt: TinyRuntime,
+    pub cfg: ServerConfig,
+    transforms: usize,
+    transform_bytes: usize,
+}
+
+impl RealServer {
+    pub fn new(artifacts: impl AsRef<std::path::Path>, cfg: ServerConfig) -> Result<RealServer> {
+        let rt = TinyRuntime::load(artifacts, cfg.initial_tp)?;
+        Ok(RealServer { rt, cfg, transforms: 0, transform_bytes: 0 })
+    }
+
+    /// Serve a batch of requests FIFO, transforming parallelism when the
+    /// workload demands it (long prompt → scale up; afterwards → down).
+    pub fn serve(&mut self, requests: &[ServeRequest]) -> Result<ServeReport> {
+        let wall0 = Instant::now();
+        let mut results = Vec::with_capacity(requests.len());
+        let mut total_tokens = 0usize;
+
+        for req in requests {
+            // Transformation-aware placement (the §5 decision, single
+            // instance edition): long prompts need the high-TP config.
+            let needs_high = req.prompt.len() + req.max_new_tokens >= self.cfg.long_threshold;
+            let mut sess = self.rt.new_session()?;
+            if needs_high && self.rt.tp != self.cfg.high_tp {
+                self.rt.transform(&mut sess, self.cfg.high_tp)?;
+                self.transforms += 1;
+                self.transform_bytes += self.rt.last_transform_bytes;
+            } else if !needs_high && self.cfg.auto_scale_down && self.rt.tp != self.cfg.initial_tp
+            {
+                self.rt.transform(&mut sess, self.cfg.initial_tp)?;
+                self.transforms += 1;
+                self.transform_bytes += self.rt.last_transform_bytes;
+            }
+
+            let t0 = Instant::now();
+            let mut logits = Vec::new();
+            for &t in &req.prompt {
+                logits = self.rt.step(&mut sess, t)?;
+            }
+            let ttft = t0.elapsed().as_secs_f64();
+            let mut output = Vec::with_capacity(req.max_new_tokens);
+            let gen0 = Instant::now();
+            for _ in 0..req.max_new_tokens {
+                if sess.pos >= self.rt.man.s_max {
+                    break;
+                }
+                let next = argmax(&logits) as u32;
+                output.push(next);
+                logits = self.rt.step(&mut sess, next)?;
+            }
+            let gen_s = gen0.elapsed().as_secs_f64();
+            let n_out = output.len().max(1);
+            total_tokens += output.len();
+            results.push(ServeResult {
+                id: req.id,
+                tpot_s: gen_s / n_out as f64,
+                ttft_s: ttft,
+                total_s: t0.elapsed().as_secs_f64(),
+                output,
+            });
+        }
+
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let ttft = Summary::of(&results.iter().map(|r| r.ttft_s).collect::<Vec<_>>());
+        let tpot = Summary::of(&results.iter().map(|r| r.tpot_s).collect::<Vec<_>>());
+        Ok(ServeReport {
+            results,
+            wall_s,
+            total_tokens,
+            throughput_tps: total_tokens as f64 / wall_s.max(1e-9),
+            ttft,
+            tpot,
+            transforms: self.transforms,
+            transform_bytes: self.transform_bytes,
+        })
+    }
+}
+
+/// Build a mixed short/long workload over the tiny model's vocab.
+pub fn synthetic_workload(seed: u64, shorts: usize, longs: usize, vocab: usize) -> Vec<ServeRequest> {
+    let mut rng = crate::util::Prng::new(seed);
+    let mut reqs = Vec::new();
+    for i in 0..shorts {
+        let len = 4 + rng.index(8);
+        let prompt = (0..len).map(|_| rng.index(vocab) as u32).collect();
+        reqs.push(ServeRequest { id: i as u64, prompt, max_new_tokens: 8 });
+    }
+    for i in 0..longs {
+        let len = 56 + rng.index(16);
+        let prompt = (0..len).map(|_| rng.index(vocab) as u32).collect();
+        reqs.push(ServeRequest {
+            id: (shorts + i) as u64,
+            prompt,
+            max_new_tokens: 12,
+        });
+    }
+    rng.shuffle(&mut reqs);
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn serves_mixed_workload_with_transformations() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut server = RealServer::new(&dir, ServerConfig::default()).unwrap();
+        let reqs = synthetic_workload(1, 3, 1, server.rt.man.vocab);
+        let report = server.serve(&reqs).unwrap();
+        assert_eq!(report.results.len(), 4);
+        assert!(report.throughput_tps > 0.0);
+        assert!(report.transforms >= 1, "the long request must trigger a transform");
+        for r in &report.results {
+            assert!(!r.output.is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic_outputs_across_runs() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reqs = synthetic_workload(2, 2, 0, 1024);
+        let mut a = RealServer::new(&dir, ServerConfig::default()).unwrap();
+        let mut b = RealServer::new(&dir, ServerConfig::default()).unwrap();
+        let ra = a.serve(&reqs).unwrap();
+        let rb = b.serve(&reqs).unwrap();
+        for (x, y) in ra.results.iter().zip(&rb.results) {
+            assert_eq!(x.output, y.output);
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Simulated time: nanosecond-resolution monotonic clock.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time (ns since simulation start).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(pub u64);
+
+/// A span of simulated time (ns).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimDuration(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        SimTime((s.max(0.0) * 1e9) as u64)
+    }
+
+    pub fn as_secs_f64(&self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn as_millis_f64(&self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    /// Saturating difference.
+    pub fn since(&self, earlier: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    pub fn from_secs_f64(s: f64) -> SimDuration {
+        SimDuration((s.max(0.0) * 1e9) as u64)
+    }
+
+    pub fn from_millis_f64(ms: f64) -> SimDuration {
+        SimDuration((ms.max(0.0) * 1e6) as u64)
+    }
+
+    pub fn from_micros_f64(us: f64) -> SimDuration {
+        SimDuration((us.max(0.0) * 1e3) as u64)
+    }
+
+    pub fn as_secs_f64(&self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn as_millis_f64(&self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    /// Max of two durations (critical path of parallel work).
+    pub fn max_of(self, other: SimDuration) -> SimDuration {
+        SimDuration(self.0.max(other.0))
+    }
+
+    /// Scale by a factor.
+    pub fn scale(self, f: f64) -> SimDuration {
+        SimDuration((self.0 as f64 * f.max(0.0)) as u64)
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: SimDuration) -> SimTime {
+        SimTime(self.0 + d.0)
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    fn add_assign(&mut self, d: SimDuration) {
+        self.0 += d.0;
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, o: SimDuration) -> SimDuration {
+        SimDuration(self.0 + o.0)
+    }
+}
+
+impl AddAssign for SimDuration {
+    fn add_assign(&mut self, o: SimDuration) {
+        self.0 += o.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimDuration;
+    fn sub(self, o: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(o.0))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ns = self.0 as f64;
+        if ns < 1e3 {
+            write!(f, "{ns}ns")
+        } else if ns < 1e6 {
+            write!(f, "{:.1}µs", ns / 1e3)
+        } else if ns < 1e9 {
+            write!(f, "{:.2}ms", ns / 1e6)
+        } else {
+            write!(f, "{:.3}s", ns / 1e9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::from_secs_f64(1.0) + SimDuration::from_millis_f64(500.0);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-9);
+        let d = t - SimTime::from_secs_f64(1.0);
+        assert!((d.as_millis_f64() - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saturating_sub() {
+        let d = SimTime::from_secs_f64(1.0) - SimTime::from_secs_f64(2.0);
+        assert_eq!(d, SimDuration::ZERO);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime::from_secs_f64(1.0) < SimTime::from_secs_f64(2.0));
+        assert_eq!(
+            SimDuration::from_millis_f64(3.0).max_of(SimDuration::from_millis_f64(7.0)),
+            SimDuration::from_millis_f64(7.0)
+        );
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(format!("{}", SimDuration::from_micros_f64(1.5)), "1.5µs");
+        assert_eq!(format!("{}", SimDuration::from_millis_f64(2.25)), "2.25ms");
+    }
+}

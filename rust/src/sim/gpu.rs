@@ -1,0 +1,101 @@
+//! Per-device state: page pool plus reserved weight/activation regions.
+
+use super::vmm::{PagePool, VmmError};
+use crate::config::GpuSpec;
+use crate::util::bytes::VMM_PAGE;
+
+/// One simulated GPU: 2 MiB-page pool with named reservations.
+#[derive(Clone, Debug)]
+pub struct GpuDevice {
+    pub spec: GpuSpec,
+    pub pool: PagePool,
+    weight_pages: Vec<u64>,
+    activation_pages: Vec<u64>,
+}
+
+impl GpuDevice {
+    pub fn new(spec: GpuSpec) -> GpuDevice {
+        let pool = PagePool::new(spec.hbm_bytes);
+        GpuDevice { spec, pool, weight_pages: Vec::new(), activation_pages: Vec::new() }
+    }
+
+    /// Commit the model-weight region (bytes rounded up to pages).
+    pub fn reserve_weights(&mut self, bytes: u64) -> Result<(), VmmError> {
+        assert!(self.weight_pages.is_empty(), "weights already reserved");
+        self.weight_pages = self.pool.alloc_bytes(bytes)?;
+        Ok(())
+    }
+
+    /// Replace the weight reservation with a smaller/larger one, returning
+    /// (pages_released, pages_added). Used by weight transformation.
+    pub fn resize_weights(&mut self, new_bytes: u64) -> Result<(i64, i64), VmmError> {
+        let new_pages = new_bytes.div_ceil(VMM_PAGE);
+        let cur = self.weight_pages.len() as u64;
+        if new_pages < cur {
+            let n_release = (cur - new_pages) as usize;
+            let released: Vec<u64> =
+                self.weight_pages.drain(self.weight_pages.len() - n_release..).collect();
+            self.pool.release(&released)?;
+            Ok((n_release as i64, 0))
+        } else if new_pages > cur {
+            let extra = self.pool.alloc(new_pages - cur)?;
+            let n = extra.len() as i64;
+            self.weight_pages.extend(extra);
+            Ok((0, n))
+        } else {
+            Ok((0, 0))
+        }
+    }
+
+    /// Commit the runtime-activation region.
+    pub fn reserve_activations(&mut self, bytes: u64) -> Result<(), VmmError> {
+        assert!(self.activation_pages.is_empty(), "activations already reserved");
+        self.activation_pages = self.pool.alloc_bytes(bytes)?;
+        Ok(())
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.weight_pages.len() as u64 * VMM_PAGE
+    }
+
+    /// Bytes left for the KV cache (and transformation scratch).
+    pub fn free_bytes(&self) -> u64 {
+        self.pool.free_pages() * VMM_PAGE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::calib::memory;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn h20_qwen_memory_budget() {
+        let mut g = GpuDevice::new(GpuSpec::h20());
+        g.reserve_weights(ModelConfig::qwen2_5_32b().total_weight_bytes()).unwrap();
+        g.reserve_activations(memory::ACTIVATION_BYTES).unwrap();
+        // Remaining KV space must be positive and below total.
+        let free = g.free_bytes();
+        assert!(free > 10_000_000_000, "free={free}");
+        assert!(free < g.spec.hbm_bytes);
+    }
+
+    #[test]
+    fn resize_weights_releases_pages() {
+        let mut g = GpuDevice::new(GpuSpec::h20());
+        g.reserve_weights(40 * crate::util::GIB).unwrap();
+        let before = g.free_bytes();
+        let (released, added) = g.resize_weights(10 * crate::util::GIB).unwrap();
+        assert!(released > 0 && added == 0);
+        assert!(g.free_bytes() > before);
+        let (released2, added2) = g.resize_weights(20 * crate::util::GIB).unwrap();
+        assert!(released2 == 0 && added2 > 0);
+    }
+
+    #[test]
+    fn cannot_over_reserve() {
+        let mut g = GpuDevice::new(GpuSpec::a100_40g());
+        assert!(g.reserve_weights(100 * crate::util::GIB).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Interconnect timing: α–β model for NVLink / PCIe transfers.
+
+use super::clock::SimDuration;
+
+/// A point-to-point link with latency α and bandwidth β.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Per-transfer latency in microseconds.
+    pub alpha_us: f64,
+    /// Bandwidth in bytes per second.
+    pub bw: f64,
+}
+
+impl Link {
+    pub fn nvlink(bw: f64) -> Link {
+        Link { alpha_us: 8.0, bw }
+    }
+
+    pub fn pcie(bw: f64) -> Link {
+        Link { alpha_us: 25.0, bw }
+    }
+
+    /// Time to move `bytes` across the link.
+    pub fn transfer_time(&self, bytes: u64) -> SimDuration {
+        SimDuration::from_micros_f64(self.alpha_us + bytes as f64 / self.bw * 1e6)
+    }
+
+    /// Time for `n` back-to-back transfers of `bytes` each (latency paid
+    /// once per transfer — models unbatched page-at-a-time copies).
+    pub fn transfer_time_n(&self, n: u64, bytes: u64) -> SimDuration {
+        SimDuration::from_micros_f64(
+            (self.alpha_us + bytes as f64 / self.bw * 1e6) * n as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let l = Link::nvlink(450e9);
+        let t = l.transfer_time(45_000_000_000); // 45 GB
+        assert!((t.as_secs_f64() - 0.1).abs() < 0.001, "{t}");
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let l = Link::nvlink(450e9);
+        let t = l.transfer_time(64);
+        assert!(t.as_secs_f64() > 7e-6);
+    }
+
+    #[test]
+    fn batching_beats_page_at_a_time() {
+        let l = Link::nvlink(450e9);
+        let batched = l.transfer_time(1000 * 2 * 1024 * 1024);
+        let paged = l.transfer_time_n(1000, 2 * 1024 * 1024);
+        assert!(batched < paged);
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated GPU substrate: discrete-event clock/queue, device memory with
+//! CUDA-VMM 2 MiB pages, interconnect + collective timing, and the
+//! Table-1-calibrated instance performance model.
+//!
+//! Everything the paper measured on H20/A100 hosts runs here against the
+//! same cost constants the paper publishes (DESIGN.md §5), so reproduced
+//! comparisons preserve the paper's ratios.
+
+pub mod clock;
+pub mod comm;
+pub mod engine;
+pub mod event;
+pub mod gpu;
+pub mod link;
+pub mod vmm;
+
+pub use clock::{SimDuration, SimTime};
+pub use comm::CommModel;
+pub use engine::EngineModel;
+pub use event::EventQueue;
+pub use gpu::GpuDevice;
+pub use link::Link;
+pub use vmm::{PagePool, VmmCosts, VmmError};

@@ -1,0 +1,200 @@
+//! CUDA virtual-memory-management model: 2 MiB-granularity pages with
+//! driver-call latencies (cuMemCreate/Map/Unmap/SetAccess).
+//!
+//! The paper's Challenge-1 hinges on this layer: weights and KV cache are
+//! carved out of page-granular physical allocations, and the key property
+//! exploited by overlapping (§4.1/§4.2) is that driver calls run on the
+//! CPU, *in parallel with GPU kernels* — unlike copies/all-to-alls which
+//! need SMs.
+
+use super::clock::SimDuration;
+use crate::util::bytes::VMM_PAGE;
+use std::collections::BTreeSet;
+
+/// Latency model for the driver calls (measured-order-of-magnitude
+/// constants; only ratios between strategies matter).
+#[derive(Clone, Debug)]
+pub struct VmmCosts {
+    /// Fixed per-call overhead.
+    pub call_us: f64,
+    /// Additional cost per page touched by a map/unmap/set-access.
+    pub per_page_us: f64,
+}
+
+impl Default for VmmCosts {
+    fn default() -> Self {
+        // cuMemMap and friends are tens-of-µs calls; batching pages into a
+        // single call amortizes the fixed part.
+        VmmCosts { call_us: 25.0, per_page_us: 1.5 }
+    }
+}
+
+impl VmmCosts {
+    /// Time to (un)map `pages` pages in one batched driver call.
+    pub fn op_time(&self, pages: u64) -> SimDuration {
+        SimDuration::from_micros_f64(self.call_us + self.per_page_us * pages as f64)
+    }
+
+    /// Time for `calls` separate driver calls of `pages_each` pages.
+    pub fn op_time_calls(&self, calls: u64, pages_each: u64) -> SimDuration {
+        SimDuration::from_micros_f64(
+            (self.call_us + self.per_page_us * pages_each as f64) * calls as f64,
+        )
+    }
+}
+
+/// Error type for the page pool.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum VmmError {
+    #[error("out of device pages: requested {requested}, free {free}")]
+    OutOfPages { requested: u64, free: u64 },
+    #[error("page {0} is not allocated")]
+    NotAllocated(u64),
+    #[error("double free of page {0}")]
+    DoubleFree(u64),
+}
+
+/// Physical page pool of one GPU: tracks which 2 MiB pages are committed.
+///
+/// Page ids are dense indices into the device's physical space; the pool
+/// also records the high-water mark so benches can report peak usage.
+#[derive(Clone, Debug)]
+pub struct PagePool {
+    total_pages: u64,
+    free: BTreeSet<u64>,
+    allocated: BTreeSet<u64>,
+    peak_allocated: u64,
+}
+
+impl PagePool {
+    /// A pool over `capacity_bytes` of device memory.
+    pub fn new(capacity_bytes: u64) -> PagePool {
+        let total_pages = capacity_bytes / VMM_PAGE;
+        PagePool {
+            total_pages,
+            free: (0..total_pages).collect(),
+            allocated: BTreeSet::new(),
+            peak_allocated: 0,
+        }
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> u64 {
+        self.free.len() as u64
+    }
+
+    pub fn allocated_pages(&self) -> u64 {
+        self.allocated.len() as u64
+    }
+
+    pub fn allocated_bytes(&self) -> u64 {
+        self.allocated_pages() * VMM_PAGE
+    }
+
+    /// Highest simultaneous allocation seen (pages).
+    pub fn peak_allocated_pages(&self) -> u64 {
+        self.peak_allocated
+    }
+
+    /// Reset the peak tracker to the current level (bench helper).
+    pub fn reset_peak(&mut self) {
+        self.peak_allocated = self.allocated.len() as u64;
+    }
+
+    /// Allocate `n` pages; returns their ids (ascending).
+    pub fn alloc(&mut self, n: u64) -> Result<Vec<u64>, VmmError> {
+        if (self.free.len() as u64) < n {
+            return Err(VmmError::OutOfPages { requested: n, free: self.free.len() as u64 });
+        }
+        let ids: Vec<u64> = self.free.iter().take(n as usize).copied().collect();
+        for id in &ids {
+            self.free.remove(id);
+            self.allocated.insert(*id);
+        }
+        self.peak_allocated = self.peak_allocated.max(self.allocated.len() as u64);
+        Ok(ids)
+    }
+
+    /// Free previously allocated pages.
+    pub fn release(&mut self, ids: &[u64]) -> Result<(), VmmError> {
+        for &id in ids {
+            if !self.allocated.remove(&id) {
+                return if self.free.contains(&id) {
+                    Err(VmmError::DoubleFree(id))
+                } else {
+                    Err(VmmError::NotAllocated(id))
+                };
+            }
+            self.free.insert(id);
+        }
+        Ok(())
+    }
+
+    /// Allocate enough pages to hold `bytes`.
+    pub fn alloc_bytes(&mut self, bytes: u64) -> Result<Vec<u64>, VmmError> {
+        self.alloc(bytes.div_ceil(VMM_PAGE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MIB;
+
+    #[test]
+    fn alloc_and_release_roundtrip() {
+        let mut p = PagePool::new(20 * MIB); // 10 pages
+        assert_eq!(p.total_pages(), 10);
+        let ids = p.alloc(4).unwrap();
+        assert_eq!(ids.len(), 4);
+        assert_eq!(p.free_pages(), 6);
+        p.release(&ids).unwrap();
+        assert_eq!(p.free_pages(), 10);
+    }
+
+    #[test]
+    fn oom_reported() {
+        let mut p = PagePool::new(4 * MIB); // 2 pages
+        assert_eq!(
+            p.alloc(3),
+            Err(VmmError::OutOfPages { requested: 3, free: 2 })
+        );
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut p = PagePool::new(4 * MIB);
+        let ids = p.alloc(1).unwrap();
+        p.release(&ids).unwrap();
+        assert_eq!(p.release(&ids), Err(VmmError::DoubleFree(ids[0])));
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut p = PagePool::new(20 * MIB);
+        let a = p.alloc(6).unwrap();
+        p.release(&a[..4]).unwrap();
+        let _b = p.alloc(1).unwrap();
+        assert_eq!(p.peak_allocated_pages(), 6);
+        p.reset_peak();
+        assert_eq!(p.peak_allocated_pages(), 3);
+    }
+
+    #[test]
+    fn op_time_scales_with_pages() {
+        let c = VmmCosts::default();
+        assert!(c.op_time(100) > c.op_time(1));
+        // one batched call is cheaper than many small calls
+        assert!(c.op_time(64) < c.op_time_calls(64, 1));
+    }
+
+    #[test]
+    fn alloc_bytes_rounds_up() {
+        let mut p = PagePool::new(20 * MIB);
+        let ids = p.alloc_bytes(3 * MIB).unwrap(); // 1.5 pages → 2
+        assert_eq!(ids.len(), 2);
+    }
+}

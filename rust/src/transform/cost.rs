@@ -1,0 +1,166 @@
+//! Transformation cost model: the scheduler's view of "what would this
+//! transformation cost?", and per-step overhead for the executor.
+
+use crate::config::{GpuSpec, ModelConfig};
+use crate::kvcache::{run_kv_migration, KvMigrationSpec, KvMigrationStrategy};
+use crate::sim::clock::SimDuration;
+use crate::weights::{run_weight_migration, WeightMigrationSpec, WeightStrategy};
+
+/// Which transformation machinery an instance uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    /// Full Gyges: header-centric KV + padded weights + overlap.
+    Gyges,
+    /// Gyges without overlapping (ablation).
+    GygesNoOverlap,
+    /// Basic migrate+trim KV and partial-swap weights.
+    Basic,
+    /// Seesaw-style re-shard through CPU shared memory.
+    Seesaw,
+}
+
+/// Effective bandwidth factor of Seesaw's CPU-shared-memory path relative
+/// to raw PCIe: serialization through host buffers, pageable copies and
+/// re-partitioning on the CPU (fits the paper's "up to 41×" §6.2.3).
+const SEESAW_SHM_EFFICIENCY: f64 = 0.12;
+
+/// Cost estimate for transforming one instance `from_tp → to_tp`.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformCost {
+    /// Total wall time until the transformation completes.
+    pub total: SimDuration,
+    /// Extra serving-visible time (spread across steps by staggering).
+    pub visible: SimDuration,
+    /// Peak extra device memory per worker.
+    pub peak_extra_bytes: u64,
+    /// Whether serving pauses entirely during the transformation.
+    pub blocking: bool,
+}
+
+/// Estimate the cost of a full-model transformation.
+pub fn estimate(
+    model: &ModelConfig,
+    gpu: &GpuSpec,
+    from_tp: u64,
+    to_tp: u64,
+    kv_util: f64,
+    mech: Mechanism,
+) -> TransformCost {
+    let layers = model.num_layers;
+    let mut kv_spec = KvMigrationSpec::paper_default(model.clone());
+    kv_spec.gpu = gpu.clone();
+    kv_spec.workers = from_tp.max(to_tp) as u32;
+    kv_spec.target_tp = from_tp.max(to_tp);
+    kv_spec.kv_util = kv_util;
+    let w_spec = WeightMigrationSpec { model: model.clone(), gpu: gpu.clone(), from_tp, to_tp };
+
+    match mech {
+        Mechanism::Gyges | Mechanism::GygesNoOverlap | Mechanism::Basic => {
+            let (kv_s, w_s) = match mech {
+                Mechanism::Gyges => (KvMigrationStrategy::Gyges, WeightStrategy::Gyges),
+                Mechanism::GygesNoOverlap => {
+                    (KvMigrationStrategy::GygesNoOverlap, WeightStrategy::GygesNoOverlap)
+                }
+                _ => (KvMigrationStrategy::Basic, WeightStrategy::PartialSwap),
+            };
+            let kv = run_kv_migration(&kv_spec, kv_s);
+            let w = run_weight_migration(&w_spec, w_s);
+            TransformCost {
+                total: kv.total_wall(layers) + w.total_wall(layers),
+                visible: kv.total_visible(layers) + w.total_visible(layers),
+                peak_extra_bytes: kv.per_layer_peak_bytes + w.peak_extra_bytes,
+                blocking: false,
+            }
+        }
+        Mechanism::Seesaw => {
+            // Re-shard via CPU shared memory: weights + KV make a full
+            // round trip over PCIe (device→host, re-partition, host→device)
+            // and serving blocks meanwhile (§3.3: up to 41× time cost).
+            let kv_bytes = (kv_spec.worker_kv_bytes() as f64 * kv_util) as u64;
+            let w_bytes = model.total_weight_bytes() / from_tp.max(1);
+            let shm = crate::sim::link::Link {
+                alpha_us: 50.0,
+                bw: gpu.pcie_bw * SEESAW_SHM_EFFICIENCY,
+            };
+            let t = shm.transfer_time(2 * (kv_bytes + w_bytes));
+            TransformCost { total: t, visible: t, peak_extra_bytes: 0, blocking: true }
+        }
+    }
+}
+
+/// Per-serving-step overhead when the transformation staggers
+/// `layers_per_step` layers per step (§6.2.3 / Figure 11 x-axis).
+pub fn per_step_overhead(
+    model: &ModelConfig,
+    gpu: &GpuSpec,
+    kv_util: f64,
+    mech: Mechanism,
+    layers_per_step: u64,
+) -> SimDuration {
+    let c = estimate(model, gpu, 1, 4, kv_util, mech);
+    let steps = model.num_layers.div_ceil(layers_per_step.max(1));
+    SimDuration(c.visible.0 / steps.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setting() -> (ModelConfig, GpuSpec) {
+        (ModelConfig::qwen2_5_32b(), GpuSpec::h20())
+    }
+
+    #[test]
+    fn gyges_beats_basic_beats_seesaw() {
+        let (m, g) = setting();
+        let gy = estimate(&m, &g, 1, 4, 0.9, Mechanism::Gyges);
+        let basic = estimate(&m, &g, 1, 4, 0.9, Mechanism::Basic);
+        let seesaw = estimate(&m, &g, 1, 4, 0.9, Mechanism::Seesaw);
+        assert!(gy.visible < basic.visible);
+        assert!(basic.visible < seesaw.visible);
+        assert!(seesaw.blocking && !gy.blocking);
+    }
+
+    #[test]
+    fn seesaw_factor_vs_gyges_large() {
+        // §6.2.3: Seesaw costs ~41× more (visible cost, all layers).
+        let (m, g) = setting();
+        let gy = estimate(&m, &g, 1, 4, 0.9, Mechanism::Gyges);
+        let seesaw = estimate(&m, &g, 1, 4, 0.9, Mechanism::Seesaw);
+        let factor = seesaw.visible.as_secs_f64() / gy.visible.as_secs_f64();
+        assert!((10.0..2000.0).contains(&factor), "factor {factor}");
+    }
+
+    #[test]
+    fn overlap_ablation_direction() {
+        let (m, g) = setting();
+        let with = estimate(&m, &g, 1, 4, 0.9, Mechanism::Gyges);
+        let without = estimate(&m, &g, 1, 4, 0.9, Mechanism::GygesNoOverlap);
+        assert!(with.visible < without.visible);
+        assert!(!with.blocking);
+    }
+
+    #[test]
+    fn per_step_overhead_decreases_with_stagger() {
+        let (m, g) = setting();
+        let one = per_step_overhead(&m, &g, 0.9, Mechanism::Gyges, 1);
+        let all = per_step_overhead(&m, &g, 0.9, Mechanism::Gyges, m.num_layers);
+        assert!(one < all, "staggering lowers per-step cost: {one} vs {all}");
+    }
+
+    #[test]
+    fn scale_down_estimate_works() {
+        let (m, g) = setting();
+        let c = estimate(&m, &g, 4, 1, 0.3, Mechanism::Gyges);
+        assert!(c.total.0 > 0);
+    }
+
+    #[test]
+    fn gyges_visible_total_is_subsecond() {
+        // Premise of Figure 11's <1% overhead at production step times.
+        let (m, g) = setting();
+        let gy = estimate(&m, &g, 1, 4, 0.9, Mechanism::Gyges);
+        assert!(gy.visible.as_secs_f64() < 0.2, "visible {}", gy.visible);
+        assert!(gy.total.as_secs_f64() < 2.5, "wall {}", gy.total);
+    }
+}

@@ -1,0 +1,11 @@
+//! Hybrid parallelism transformation (paper §4.3): planning (MLP-first,
+//! layer-staggered, reversed), cost estimation for the scheduler, and the
+//! step-driven executor behind Figure 11.
+
+pub mod cost;
+pub mod executor;
+pub mod plan;
+
+pub use cost::{estimate, per_step_overhead, Mechanism, TransformCost};
+pub use executor::{fig11_sweep, StepOverheadRow, TransformExec};
+pub use plan::{Direction, OpKind, TransformOp, TransformPlan};

@@ -1,0 +1,184 @@
+//! Hybrid parallelism transformation planning (§4.3).
+//!
+//! A transformation is executed module-by-module across layers:
+//! * **MLP-first** (scale-up): each layer's MLP weights transform before
+//!   its KV cache, releasing memory as early as possible (Figure 8 ①→②).
+//! * **Layer-staggered** (scale-down): MLP re-expansions are spread across
+//!   inference steps to avoid allocation spikes.
+//! * **Reversed traversal**: layers transform from last to first, so
+//!   in-flight requests keep the old parallelism until they cross the
+//!   transformation boundary and switch exactly once.
+
+use crate::config::ModelConfig;
+
+/// Direction of a transformation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    ScaleUp,
+    ScaleDown,
+}
+
+/// One unit of transformation work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Transform one layer's MLP weights.
+    MlpWeights,
+    /// Transform one layer's KV cache.
+    KvCache,
+}
+
+/// One step of the plan: which layer, which module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformOp {
+    pub layer: u64,
+    pub kind: OpKind,
+}
+
+/// A complete ordered transformation plan.
+#[derive(Clone, Debug)]
+pub struct TransformPlan {
+    pub direction: Direction,
+    pub from_tp: u64,
+    pub to_tp: u64,
+    pub num_layers: u64,
+    /// Ordered ops; executed `ops_per_step` per inference step.
+    pub ops: Vec<TransformOp>,
+    /// Stagger width: how many layer-ops run per serving step.
+    pub ops_per_step: usize,
+}
+
+impl TransformPlan {
+    /// Build the §4.3 plan for `model` transforming `from_tp → to_tp`,
+    /// staggering `layers_per_step` layers per inference step.
+    pub fn build(
+        model: &ModelConfig,
+        from_tp: u64,
+        to_tp: u64,
+        layers_per_step: usize,
+    ) -> TransformPlan {
+        assert_ne!(from_tp, to_tp);
+        let direction = if to_tp > from_tp { Direction::ScaleUp } else { Direction::ScaleDown };
+        let n = model.num_layers;
+        let mut ops = Vec::with_capacity(2 * n as usize);
+        // Reversed traversal: last layer first.
+        for layer in (0..n).rev() {
+            match direction {
+                Direction::ScaleUp => {
+                    // MLP-first: release weight memory before KV needs it.
+                    ops.push(TransformOp { layer, kind: OpKind::MlpWeights });
+                    ops.push(TransformOp { layer, kind: OpKind::KvCache });
+                }
+                Direction::ScaleDown => {
+                    // KV shrinks first to make room for re-expanded MLP.
+                    ops.push(TransformOp { layer, kind: OpKind::KvCache });
+                    ops.push(TransformOp { layer, kind: OpKind::MlpWeights });
+                }
+            }
+        }
+        TransformPlan {
+            direction,
+            from_tp,
+            to_tp,
+            num_layers: n,
+            ops,
+            ops_per_step: layers_per_step.max(1) * 2,
+        }
+    }
+
+    /// Number of serving steps the staggered plan spans.
+    pub fn num_steps(&self) -> usize {
+        self.ops.len().div_ceil(self.ops_per_step)
+    }
+
+    /// Ops executed during serving step `step` (0-based).
+    pub fn ops_for_step(&self, step: usize) -> &[TransformOp] {
+        let lo = step * self.ops_per_step;
+        if lo >= self.ops.len() {
+            return &[];
+        }
+        let hi = (lo + self.ops_per_step).min(self.ops.len());
+        &self.ops[lo..hi]
+    }
+
+    /// The layer index below which (exclusive) layers still run the OLD
+    /// parallelism after `step` steps — the transformation boundary a
+    /// request crosses at most once (reversed traversal guarantee).
+    pub fn boundary_after_step(&self, step: usize) -> u64 {
+        let done_ops = ((step + 1) * self.ops_per_step).min(self.ops.len());
+        let layers_done = (done_ops / 2) as u64;
+        self.num_layers - layers_done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelConfig {
+        ModelConfig::qwen2_5_32b()
+    }
+
+    #[test]
+    fn scale_up_is_mlp_first_reversed() {
+        let p = TransformPlan::build(&model(), 1, 4, 1);
+        assert_eq!(p.direction, Direction::ScaleUp);
+        // first op: LAST layer's MLP
+        assert_eq!(p.ops[0], TransformOp { layer: 63, kind: OpKind::MlpWeights });
+        assert_eq!(p.ops[1], TransformOp { layer: 63, kind: OpKind::KvCache });
+        assert_eq!(p.ops[2].layer, 62);
+        assert_eq!(p.ops.len() as u64, 2 * model().num_layers);
+    }
+
+    #[test]
+    fn scale_down_is_kv_first() {
+        let p = TransformPlan::build(&model(), 4, 1, 2);
+        assert_eq!(p.direction, Direction::ScaleDown);
+        assert_eq!(p.ops[0].kind, OpKind::KvCache);
+        assert_eq!(p.ops[1].kind, OpKind::MlpWeights);
+    }
+
+    #[test]
+    fn stagger_partitions_all_ops() {
+        let p = TransformPlan::build(&model(), 1, 4, 3);
+        let mut seen = 0;
+        for s in 0..p.num_steps() {
+            seen += p.ops_for_step(s).len();
+        }
+        assert_eq!(seen, p.ops.len());
+        assert!(p.ops_for_step(p.num_steps()).is_empty());
+    }
+
+    #[test]
+    fn each_layer_transformed_exactly_once_per_module() {
+        let p = TransformPlan::build(&model(), 1, 4, 4);
+        let mut mlp = vec![0u32; model().num_layers as usize];
+        let mut kv = vec![0u32; model().num_layers as usize];
+        for op in &p.ops {
+            match op.kind {
+                OpKind::MlpWeights => mlp[op.layer as usize] += 1,
+                OpKind::KvCache => kv[op.layer as usize] += 1,
+            }
+        }
+        assert!(mlp.iter().all(|&c| c == 1));
+        assert!(kv.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn boundary_monotonically_descends() {
+        let p = TransformPlan::build(&model(), 1, 4, 2);
+        let mut prev = model().num_layers;
+        for s in 0..p.num_steps() {
+            let b = p.boundary_after_step(s);
+            assert!(b <= prev, "boundary must not ascend");
+            prev = b;
+        }
+        assert_eq!(prev, 0, "all layers transformed at the end");
+    }
+
+    #[test]
+    fn single_step_transformation() {
+        let m = model();
+        let p = TransformPlan::build(&m, 1, 4, m.num_layers as usize);
+        assert_eq!(p.num_steps(), 1);
+    }
+}

@@ -1,0 +1,83 @@
+//! Byte-size constants and formatting shared across the memory models.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// CUDA virtual-memory-management minimum allocation granularity (2 MiB).
+/// This is the page size every layout/padding decision in the paper (and in
+/// `kvcache`/`weights`) revolves around.
+pub const VMM_PAGE: u64 = 2 * MIB;
+
+/// Round `bytes` up to a multiple of `unit`.
+#[inline]
+pub fn align_up(bytes: u64, unit: u64) -> u64 {
+    debug_assert!(unit > 0);
+    bytes.div_ceil(unit) * unit
+}
+
+/// Number of `unit`-sized pages needed to hold `bytes` (ceiling).
+#[inline]
+pub fn pages_for(bytes: u64, unit: u64) -> u64 {
+    bytes.div_ceil(unit)
+}
+
+/// Exact page count as a fraction (Table 3 reports decimals like 1012.5).
+#[inline]
+pub fn pages_exact(bytes: u64, unit: u64) -> f64 {
+    bytes as f64 / unit as f64
+}
+
+/// Human-readable size ("62.34 GB" style, decimal units to match the paper).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Human-readable binary size ("2.00 MiB").
+pub fn fmt_bytes_bin(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= GIB as f64 {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if b >= MIB as f64 {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if b >= KIB as f64 {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basics() {
+        assert_eq!(align_up(0, VMM_PAGE), 0);
+        assert_eq!(align_up(1, VMM_PAGE), VMM_PAGE);
+        assert_eq!(align_up(VMM_PAGE, VMM_PAGE), VMM_PAGE);
+        assert_eq!(align_up(VMM_PAGE + 1, VMM_PAGE), 2 * VMM_PAGE);
+    }
+
+    #[test]
+    fn pages_exact_matches_table3_style() {
+        // 1012.5 pages ↔ 2025 MiB
+        assert!((pages_exact(2025 * MIB, VMM_PAGE) - 1012.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_bytes(62_340_000_000), "62.34 GB");
+        assert!(fmt_bytes_bin(2 * MIB).contains("MiB"));
+        assert_eq!(fmt_bytes(12), "12 B");
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Used by the `gyges` binary, the examples, and the bench
+//! harnesses.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first element must NOT be argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option (parse error → None).
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Typed option with default.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get_parsed(key).unwrap_or(default)
+    }
+
+    /// Was a bare `--flag` given? (`--flag=true/false` also honoured.)
+    pub fn flag(&self, key: &str) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// First positional, if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value() {
+        let a = parse("serve --model qwen2.5-32b --qps 0.6");
+        assert_eq!(a.command(), Some("serve"));
+        assert_eq!(a.get("model"), Some("qwen2.5-32b"));
+        assert_eq!(a.get_parsed::<f64>("qps"), Some(0.6));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("--seed=42 --name=x");
+        assert_eq!(a.get_parsed::<u64>("seed"), Some(42));
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = parse("bench --verbose --samples 10");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_parsed::<usize>("samples"), Some(10));
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+        assert_eq!(a.parsed_or::<u64>("seed", 7), 7);
+        assert!(a.command().is_none());
+    }
+
+    #[test]
+    fn positional_order_preserved() {
+        let a = parse("one two --k v three");
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Tiny `log` facade backend: level-filtered stderr logger.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static LOGGER: StderrLogger = StderrLogger;
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger (idempotent). `GYGES_LOG` env var overrides:
+/// error|warn|info|debug|trace.
+pub fn init(default: LevelFilter) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let filter = match std::env::var("GYGES_LOG").ok().as_deref() {
+        Some("error") => LevelFilter::Error,
+        Some("warn") => LevelFilter::Warn,
+        Some("info") => LevelFilter::Info,
+        Some("debug") => LevelFilter::Debug,
+        Some("trace") => LevelFilter::Trace,
+        _ => default,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(filter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init(LevelFilter::Warn);
+        init(LevelFilter::Trace); // second call must not panic
+        log::info!("smoke");
+    }
+}

@@ -1,0 +1,21 @@
+//! Shared utilities: PRNG, statistics/bench harness, CLI/JSON parsing,
+//! byte math, table rendering, logging.
+//!
+//! These substitute for crates (clap/serde/criterion/rand) that are absent
+//! from the offline registry snapshot — see DESIGN.md §9.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+
+pub use bytes::{align_up, fmt_bytes, pages_exact, pages_for, GIB, KIB, MIB, VMM_PAGE};
+pub use cli::Args;
+pub use json::Json;
+pub use prng::Prng;
+pub use stats::{Bench, BenchResult, Summary};
+pub use table::Table;

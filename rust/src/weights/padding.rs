@@ -1,0 +1,212 @@
+//! Parallelism-aware weight padding (§4.2, Figure 6c).
+//!
+//! For every potential TP split boundary (determined by the largest TP
+//! degree the instance may transform into), each shard is padded so it
+//! starts and ends on a 2 MiB page boundary. Padding is expressed as
+//! (a) whole zero columns — which keep FFN′ == FFN per Eq. 2 — plus
+//! (b) a sub-column byte tail that is never read by the GEMM.
+//! With this plan, scale-up is pure page release and scale-down is pure
+//! page re-map: no weight bytes are ever copied.
+
+use super::shapes::{mlp_shards, Proj, TensorShard};
+use crate::config::ModelConfig;
+use crate::util::bytes::{align_up, VMM_PAGE};
+
+/// Padding plan for one projection tensor under a maximum TP degree.
+#[derive(Clone, Debug)]
+pub struct TensorPadPlan {
+    pub proj: Proj,
+    /// Unpadded bytes of one TP-`max_tp` shard.
+    pub shard_bytes: u64,
+    /// Shard bytes after padding (page-aligned).
+    pub padded_shard_bytes: u64,
+    /// Zero columns (Up/Gate) or zero rows (Down) inserted per boundary.
+    pub zero_vectors: u64,
+    /// Sub-column tail padding bytes per boundary.
+    pub tail_bytes: u64,
+    /// Number of shards (= max_tp).
+    pub shards: u64,
+}
+
+impl TensorPadPlan {
+    pub fn plan(shard: &TensorShard, max_tp: u64) -> TensorPadPlan {
+        // Column-split tensors shard by columns; row-split by rows. Either
+        // way the "vector" (one column / one row) byte size is:
+        let vec_bytes = match shard.proj {
+            Proj::Up | Proj::Gate => shard.rows * shard.dtype_bytes, // per column
+            Proj::Down => shard.cols * shard.dtype_bytes,            // per row
+        };
+        let shard_bytes = shard.bytes(); // already a TP-`max_tp` shard
+        let padded = align_up(shard_bytes, VMM_PAGE);
+        let pad = padded - shard_bytes;
+        TensorPadPlan {
+            proj: shard.proj,
+            shard_bytes,
+            padded_shard_bytes: padded,
+            zero_vectors: pad / vec_bytes,
+            tail_bytes: pad % vec_bytes,
+            shards: max_tp,
+        }
+    }
+
+    /// Total padded tensor bytes (all shards).
+    pub fn padded_total(&self) -> u64 {
+        self.padded_shard_bytes * self.shards
+    }
+
+    /// Total unpadded tensor bytes.
+    pub fn unpadded_total(&self) -> u64 {
+        self.shard_bytes * self.shards
+    }
+
+    /// Pages per padded shard (always integral — that is the point).
+    pub fn pages_per_shard(&self) -> u64 {
+        self.padded_shard_bytes / VMM_PAGE
+    }
+}
+
+/// Padding plan for a whole layer's MLP at a given max TP degree.
+#[derive(Clone, Debug)]
+pub struct LayerPadPlan {
+    pub tensors: Vec<TensorPadPlan>,
+    pub max_tp: u64,
+    /// Experts multiplier (MoE).
+    pub experts: u64,
+}
+
+impl LayerPadPlan {
+    /// Build the plan for `model` supporting transformation up to `max_tp`.
+    pub fn plan(model: &ModelConfig, max_tp: u64) -> LayerPadPlan {
+        let tensors = mlp_shards(model, max_tp)
+            .iter()
+            .map(|s| TensorPadPlan::plan(s, max_tp))
+            .collect();
+        LayerPadPlan { tensors, max_tp, experts: model.num_experts.max(1) }
+    }
+
+    /// Padded layer MLP bytes.
+    pub fn padded_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.padded_total()).sum::<u64>() * self.experts
+    }
+
+    /// Unpadded layer MLP bytes.
+    pub fn unpadded_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.unpadded_total()).sum::<u64>() * self.experts
+    }
+
+    /// Memory overhead fraction introduced by padding (Figure 10b:
+    /// 0%–14% across models).
+    pub fn overhead_fraction(&self) -> f64 {
+        let u = self.unpadded_bytes();
+        if u == 0 {
+            return 0.0;
+        }
+        (self.padded_bytes() - u) as f64 / u as f64
+    }
+
+    /// Per-worker padded MLP bytes at TP degree `tp` (tp ≤ max_tp and the
+    /// worker holds max_tp/tp padded shards per tensor).
+    pub fn worker_bytes(&self, tp: u64) -> u64 {
+        assert!(tp <= self.max_tp && self.max_tp % tp == 0);
+        self.padded_bytes() / tp
+    }
+
+    /// Pages RELEASED per worker per layer when scaling `from_tp → to_tp`
+    /// (scale-up): the shards handed off to other workers. With padding,
+    /// these are whole pages — release is a driver call, zero copies.
+    pub fn pages_released_per_worker(&self, from_tp: u64, to_tp: u64) -> u64 {
+        assert!(to_tp > from_tp);
+        let before = self.worker_bytes(from_tp);
+        let after = self.worker_bytes(to_tp);
+        (before - after) / VMM_PAGE
+    }
+
+    /// Bytes each worker must RECEIVE per layer when scaling down
+    /// `from_tp → to_tp` (it re-acquires shards other workers held).
+    pub fn bytes_received_per_worker(&self, from_tp: u64, to_tp: u64) -> u64 {
+        assert!(to_tp < from_tp);
+        self.worker_bytes(to_tp) - self.worker_bytes(from_tp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_shards_are_page_aligned() {
+        for m in ModelConfig::all() {
+            if m.inter_size % 4 != 0 {
+                continue;
+            }
+            let plan = LayerPadPlan::plan(&m, 4);
+            for t in &plan.tensors {
+                assert_eq!(t.padded_shard_bytes % VMM_PAGE, 0, "{}", m.name);
+                assert!(t.padded_shard_bytes >= t.shard_bytes);
+                assert!(t.padded_shard_bytes - t.shard_bytes < VMM_PAGE);
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_within_paper_band() {
+        // Figure 10b: padding overhead ranges 0%–14%.
+        for m in ModelConfig::eval_set() {
+            let plan = LayerPadPlan::plan(&m, 4);
+            let f = plan.overhead_fraction();
+            assert!((0.0..=0.14).contains(&f), "{}: overhead {f}", m.name);
+        }
+    }
+
+    #[test]
+    fn aligned_models_need_no_padding_at_tp1() {
+        // Llama-3.1-70B TP1 tensors are exactly 224 pages — zero padding.
+        let m = ModelConfig::llama3_1_70b();
+        let plan = LayerPadPlan::plan(&m, 1);
+        assert_eq!(plan.overhead_fraction(), 0.0);
+    }
+
+    #[test]
+    fn qwen_tp4_pads_33_75_to_34_pages() {
+        let m = ModelConfig::qwen2_5_32b();
+        let plan = LayerPadPlan::plan(&m, 4);
+        let up = plan.tensors.iter().find(|t| t.proj == Proj::Up).unwrap();
+        assert_eq!(up.pages_per_shard(), 34); // 33.75 → 34
+    }
+
+    #[test]
+    fn zero_vector_decomposition_consistent() {
+        for m in ModelConfig::eval_set() {
+            let plan = LayerPadPlan::plan(&m, 4);
+            for t in &plan.tensors {
+                let vec_bytes = match t.proj {
+                    Proj::Up | Proj::Gate => m.hidden_size * m.dtype_bytes,
+                    Proj::Down => m.hidden_size * m.dtype_bytes,
+                };
+                let pad = t.padded_shard_bytes - t.shard_bytes;
+                assert_eq!(t.zero_vectors * vec_bytes + t.tail_bytes, pad, "{}", m.name);
+                assert!(t.tail_bytes < vec_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_up_releases_expected_pages() {
+        let m = ModelConfig::qwen2_5_32b();
+        let plan = LayerPadPlan::plan(&m, 4);
+        let released = plan.pages_released_per_worker(1, 4);
+        // Worker drops 3/4 of its padded MLP layer.
+        let expect = (plan.padded_bytes() - plan.padded_bytes() / 4) / VMM_PAGE;
+        assert_eq!(released, expect);
+        assert!(released > 0);
+    }
+
+    #[test]
+    fn scale_down_receives_what_scale_up_released() {
+        let m = ModelConfig::llama3_8b();
+        let plan = LayerPadPlan::plan(&m, 4);
+        let released_bytes = plan.pages_released_per_worker(1, 4) * VMM_PAGE;
+        let received = plan.bytes_received_per_worker(4, 1);
+        assert_eq!(released_bytes, received);
+    }
+}

@@ -1,0 +1,125 @@
+//! Table 3: MLP weight page counts per tensor under the 2 MiB CUDA VMM
+//! granularity — "decimals mean unaligned placements of tensors".
+//!
+//! A fractional page count means a TP shard boundary falls inside a page:
+//! direct partitioning would strand partially-used pages (Figure 6a),
+//! which is exactly what the padding of §4.2 eliminates.
+
+use crate::config::ModelConfig;
+use crate::util::bytes::{pages_exact, VMM_PAGE};
+
+/// Page counts for one model at one TP degree.
+#[derive(Clone, Debug)]
+pub struct PageCounts {
+    pub model: &'static str,
+    pub tp: u64,
+    /// Pages of one projection tensor shard (× experts for MoE) — the
+    /// first number in the paper's Table 3 cells.
+    pub per_tensor: f64,
+    /// Pages of the fused gate+up shard (the second number where the
+    /// paper reports a pair).
+    pub per_fused_tensor: f64,
+    /// True iff the shard does NOT align to the 2 MiB granularity.
+    pub unaligned: bool,
+}
+
+/// Compute Table-3 page counts for `model` at TP `tp`.
+pub fn page_counts(model: &ModelConfig, tp: u64) -> PageCounts {
+    let experts = model.num_experts.max(1);
+    let shard_bytes = model.up_proj_bytes() / tp * experts;
+    let fused_bytes = 2 * model.up_proj_bytes() / tp * experts;
+    let per_tensor = pages_exact(shard_bytes, VMM_PAGE);
+    let per_fused = pages_exact(fused_bytes, VMM_PAGE);
+    PageCounts {
+        model: model.name,
+        tp,
+        per_tensor,
+        per_fused_tensor: per_fused,
+        unaligned: shard_bytes % VMM_PAGE != 0,
+    }
+}
+
+/// Number of pages wasted per tensor shard without padding (the stranded
+/// tail of the last page, expressed in pages).
+pub fn stranded_fraction(model: &ModelConfig, tp: u64) -> f64 {
+    let c = page_counts(model, tp);
+    let frac = c.per_tensor - c.per_tensor.floor();
+    if frac == 0.0 {
+        0.0
+    } else {
+        1.0 - frac
+    }
+}
+
+/// The paper's Table 3 rows (model, TP1 pair, TP4 pair).
+pub fn table3_rows() -> Vec<(ModelConfig, (f64, f64), (f64, f64))> {
+    vec![
+        (ModelConfig::gpt_oss_120b(), (1012.5, 2025.0), (253.125, 506.25)),
+        (ModelConfig::gpt_oss_20b(), (253.125, 506.25), (63.28125, 126.5625)),
+        (ModelConfig::llama3_1_70b(), (224.0, 224.0), (56.0, 56.0)),
+        (ModelConfig::qwen2_5_32b(), (135.0, 135.0), (33.75, 33.75)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reproduce every Table 3 cell exactly.
+    #[test]
+    fn table3_exact_reproduction() {
+        for (model, (tp1_single, _tp1_fused), (tp4_single, _tp4_fused)) in table3_rows() {
+            let c1 = page_counts(&model, 1);
+            let c4 = page_counts(&model, 4);
+            assert!(
+                (c1.per_tensor - tp1_single).abs() < 1e-9,
+                "{}: TP1 {} vs paper {}",
+                model.name,
+                c1.per_tensor,
+                tp1_single
+            );
+            assert!(
+                (c4.per_tensor - tp4_single).abs() < 1e-9,
+                "{}: TP4 {} vs paper {}",
+                model.name,
+                c4.per_tensor,
+                tp4_single
+            );
+        }
+    }
+
+    #[test]
+    fn fused_is_double_single() {
+        for (model, (tp1_single, tp1_fused), _) in table3_rows() {
+            let c = page_counts(&model, 1);
+            assert!((c.per_fused_tensor - 2.0 * c.per_tensor).abs() < 1e-9);
+            // cross-check against the paper's pairs where they differ
+            if (tp1_fused - tp1_single).abs() > 1e-9 {
+                assert!((c.per_fused_tensor - tp1_fused).abs() < 1e-9);
+            }
+        }
+    }
+
+    /// "More than half of the models encounter this fragmentation issue."
+    #[test]
+    fn misalignment_detection() {
+        assert!(page_counts(&ModelConfig::gpt_oss_120b(), 1).unaligned);
+        assert!(page_counts(&ModelConfig::gpt_oss_20b(), 4).unaligned);
+        assert!(!page_counts(&ModelConfig::llama3_1_70b(), 1).unaligned);
+        assert!(!page_counts(&ModelConfig::qwen2_5_32b(), 1).unaligned);
+        assert!(page_counts(&ModelConfig::qwen2_5_32b(), 4).unaligned); // 33.75
+    }
+
+    #[test]
+    fn stranded_fraction_bounds() {
+        for m in ModelConfig::all() {
+            for tp in [1, 2, 4] {
+                if m.inter_size % tp != 0 {
+                    continue;
+                }
+                let s = stranded_fraction(&m, tp);
+                assert!((0.0..1.0).contains(&s), "{}: {s}", m.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Per-layer weight tensor shapes under tensor parallelism.
+//!
+//! TP splits the MLP column-wise on `up_proj`/`gate_proj` (output dim) and
+//! row-wise on `down_proj` (input dim); each worker holds a
+//! `[hidden, inter/tp]` and `[inter/tp, hidden]` slice. These shapes feed
+//! the Table-3 page math and the padding planner.
+
+use crate::config::{MlpKind, ModelConfig};
+
+/// Which MLP projection a tensor is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proj {
+    /// `[hidden, inter]`, column-split under TP.
+    Up,
+    /// `[hidden, inter]`, column-split (SwiGLU only).
+    Gate,
+    /// `[inter, hidden]`, row-split under TP.
+    Down,
+}
+
+/// One worker's shard of one projection tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorShard {
+    pub proj: Proj,
+    pub rows: u64,
+    pub cols: u64,
+    pub dtype_bytes: u64,
+}
+
+impl TensorShard {
+    pub fn bytes(&self) -> u64 {
+        self.rows * self.cols * self.dtype_bytes
+    }
+}
+
+/// The MLP tensor shards one worker holds for one layer at TP `tp`
+/// (per expert for MoE models).
+pub fn mlp_shards(model: &ModelConfig, tp: u64) -> Vec<TensorShard> {
+    assert!(tp >= 1 && model.inter_size % tp == 0, "tp must divide inter_size");
+    let shard_inter = model.inter_size / tp;
+    let d = model.dtype_bytes;
+    let mut v = vec![TensorShard { proj: Proj::Up, rows: model.hidden_size, cols: shard_inter, dtype_bytes: d }];
+    if model.mlp == MlpKind::SwiGlu {
+        v.push(TensorShard { proj: Proj::Gate, rows: model.hidden_size, cols: shard_inter, dtype_bytes: d });
+    }
+    v.push(TensorShard { proj: Proj::Down, rows: shard_inter, cols: model.hidden_size, dtype_bytes: d });
+    v
+}
+
+/// Total per-worker MLP bytes for one layer at TP `tp` (all experts).
+pub fn mlp_shard_bytes(model: &ModelConfig, tp: u64) -> u64 {
+    let per_expert: u64 = mlp_shards(model, tp).iter().map(|s| s.bytes()).sum();
+    per_expert * model.num_experts.max(1)
+}
+
+/// Byte offset ranges (within the layer's contiguous MLP region) that
+/// belong to worker `rank` of `tp`, assuming tensors are laid out
+/// [up | gate? | down] with each tensor stored shard-major (shard r of
+/// every tensor is contiguous). Used by the migration planner.
+pub fn shard_ranges(model: &ModelConfig, tp: u64, rank: u64) -> Vec<(u64, u64)> {
+    assert!(rank < tp);
+    let mut ranges = Vec::new();
+    let mut base = 0u64;
+    for s in mlp_shards(model, 1) {
+        let full = s.bytes();
+        let shard = full / tp;
+        let start = base + rank * shard;
+        ranges.push((start, start + shard));
+        base += full;
+    }
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_sizes_divide_evenly() {
+        let m = ModelConfig::qwen2_5_32b();
+        for tp in [1, 2, 4] {
+            let total: u64 = mlp_shard_bytes(&m, tp);
+            assert_eq!(total, m.mlp_layer_bytes() / tp);
+        }
+    }
+
+    #[test]
+    fn swiglu_has_three_tensors() {
+        let m = ModelConfig::qwen2_5_32b();
+        assert_eq!(mlp_shards(&m, 1).len(), 3);
+        let tiny = ModelConfig::gyges_tiny(); // Gelu
+        assert_eq!(mlp_shards(&tiny, 1).len(), 2);
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_layer() {
+        let m = ModelConfig::llama3_8b();
+        let tp = 4;
+        let mut all: Vec<(u64, u64)> = (0..tp).flat_map(|r| shard_ranges(&m, tp, r)).collect();
+        all.sort_unstable();
+        // Ranges must tile [0, layer_bytes) without gaps or overlaps.
+        let mut expect = 0u64;
+        for (a, b) in &all {
+            assert_eq!(*a, expect, "gap/overlap at {a}");
+            expect = *b;
+        }
+        let per_expert_total: u64 = mlp_shards(&m, 1).iter().map(|s| s.bytes()).sum();
+        assert_eq!(expect, per_expert_total);
+    }
+
+    #[test]
+    fn up_and_down_transpose_shapes() {
+        let m = ModelConfig::llama2_7b();
+        let shards = mlp_shards(&m, 2);
+        let up = shards.iter().find(|s| s.proj == Proj::Up).unwrap();
+        let down = shards.iter().find(|s| s.proj == Proj::Down).unwrap();
+        assert_eq!(up.rows, m.hidden_size);
+        assert_eq!(up.cols, m.inter_size / 2);
+        assert_eq!(down.rows, m.inter_size / 2);
+        assert_eq!(down.cols, m.hidden_size);
+    }
+}

@@ -1,0 +1,138 @@
+//! Arrival processes (paper Figure 2b): Poisson short-request background
+//! plus bursty, sporadic long-request traffic.
+
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::util::prng::Prng;
+
+/// A homogeneous Poisson process.
+#[derive(Clone, Debug)]
+pub struct Poisson {
+    /// Rate in events per second.
+    pub rate: f64,
+}
+
+impl Poisson {
+    pub fn per_minute(qpm: f64) -> Poisson {
+        Poisson { rate: qpm / 60.0 }
+    }
+
+    /// Next inter-arrival gap.
+    pub fn gap(&self, rng: &mut Prng) -> SimDuration {
+        SimDuration::from_secs_f64(rng.exp(self.rate))
+    }
+
+    /// All arrival times within `[0, horizon)`.
+    pub fn arrivals(&self, rng: &mut Prng, horizon: SimTime) -> Vec<SimTime> {
+        let mut out = Vec::new();
+        let mut t = SimTime::ZERO + self.gap(rng);
+        while t < horizon {
+            out.push(t);
+            t = t + self.gap(rng);
+        }
+        out
+    }
+}
+
+/// A Markov-modulated (bursty) process: alternates quiet and burst phases,
+/// matching the sporadic long-request pattern of Figure 2b.
+#[derive(Clone, Debug)]
+pub struct BurstyProcess {
+    /// Base rate during quiet phases (events/s).
+    pub quiet_rate: f64,
+    /// Rate during bursts.
+    pub burst_rate: f64,
+    /// Mean quiet-phase duration (s).
+    pub quiet_mean_s: f64,
+    /// Mean burst duration (s).
+    pub burst_mean_s: f64,
+}
+
+impl BurstyProcess {
+    /// Calibrated to the paper's §6.2.4 long-request load: ~1 query/min
+    /// on average, arriving in clusters.
+    pub fn paper_long_requests() -> BurstyProcess {
+        BurstyProcess {
+            quiet_rate: 1.0 / 240.0, // one per 4 min when quiet
+            burst_rate: 1.0 / 15.0,  // one per 15 s inside a burst
+            quiet_mean_s: 300.0,
+            burst_mean_s: 90.0,
+        }
+    }
+
+    /// Average event rate (events/s).
+    pub fn mean_rate(&self) -> f64 {
+        let (q, b) = (self.quiet_mean_s, self.burst_mean_s);
+        (self.quiet_rate * q + self.burst_rate * b) / (q + b)
+    }
+
+    /// Arrival times within `[0, horizon)`.
+    pub fn arrivals(&self, rng: &mut Prng, horizon: SimTime) -> Vec<SimTime> {
+        let mut out = Vec::new();
+        let mut t = 0.0f64;
+        let hz = horizon.as_secs_f64();
+        let mut in_burst = false;
+        let mut phase_end = rng.exp(1.0 / self.quiet_mean_s);
+        while t < hz {
+            let rate = if in_burst { self.burst_rate } else { self.quiet_rate };
+            let gap = rng.exp(rate);
+            if t + gap < phase_end.min(hz) {
+                t += gap;
+                out.push(SimTime::from_secs_f64(t));
+            } else {
+                t = phase_end;
+                in_burst = !in_burst;
+                let mean = if in_burst { self.burst_mean_s } else { self.quiet_mean_s };
+                phase_end = t + rng.exp(1.0 / mean);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_close() {
+        let p = Poisson::per_minute(60.0); // 1/s
+        let mut rng = Prng::new(1);
+        let arr = p.arrivals(&mut rng, SimTime::from_secs_f64(10_000.0));
+        let rate = arr.len() as f64 / 10_000.0;
+        assert!((rate - 1.0).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn poisson_sorted() {
+        let p = Poisson::per_minute(120.0);
+        let mut rng = Prng::new(2);
+        let arr = p.arrivals(&mut rng, SimTime::from_secs_f64(100.0));
+        for w in arr.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn bursty_mean_rate_near_one_per_minute() {
+        let b = BurstyProcess::paper_long_requests();
+        let analytic = b.mean_rate() * 60.0;
+        assert!((0.5..2.5).contains(&analytic), "analytic {analytic}/min");
+        let mut rng = Prng::new(3);
+        let arr = b.arrivals(&mut rng, SimTime::from_secs_f64(36_000.0)); // 10 h
+        let per_min = arr.len() as f64 / 600.0;
+        assert!((0.3..3.0).contains(&per_min), "measured {per_min}/min");
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        // Compare coefficient of variation of inter-arrival gaps.
+        let b = BurstyProcess::paper_long_requests();
+        let mut rng = Prng::new(4);
+        let arr = b.arrivals(&mut rng, SimTime::from_secs_f64(200_000.0));
+        let gaps: Vec<f64> = arr.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.2, "cv {cv} should exceed Poisson's 1.0");
+    }
+}

@@ -1,0 +1,134 @@
+//! Request length distributions (paper Figure 2a).
+//!
+//! Production input lengths are heavy-tailed: the bulk of requests is
+//! short (∼1K tokens) while a thin Pareto tail reaches 100K+. Output
+//! length contributes only ~10.3% of the total sequence (§5).
+
+use crate::config::calib::workload as calib;
+use crate::util::prng::Prng;
+
+/// A fitted input/output length model.
+#[derive(Clone, Debug)]
+pub struct LengthModel {
+    /// Log-normal body: mu/sigma of ln(input_len).
+    pub body_mu: f64,
+    pub body_sigma: f64,
+    /// Probability a request comes from the long tail.
+    pub tail_prob: f64,
+    /// Pareto tail: scale (tokens) and shape.
+    pub tail_scale: f64,
+    pub tail_alpha: f64,
+    /// Output length as a fraction of total sequence (mean).
+    pub output_fraction: f64,
+    /// Hard cap (tokenizer/window limit).
+    pub max_len: u64,
+}
+
+impl LengthModel {
+    /// Parameters fit to the published distribution shape: median ≈ 700
+    /// tokens, ~3% of requests beyond 10K, tail reaching ≥100K.
+    pub fn production() -> LengthModel {
+        LengthModel {
+            body_mu: 6.55, // ln ≈ 700
+            body_sigma: 0.9,
+            tail_prob: 0.03,
+            tail_scale: 8_000.0,
+            tail_alpha: 1.1,
+            output_fraction: calib::OUTPUT_FRACTION,
+            max_len: 120_000,
+        }
+    }
+
+    /// Sample an input length.
+    pub fn sample_input(&self, rng: &mut Prng) -> u64 {
+        let x = if rng.chance(self.tail_prob) {
+            rng.pareto(self.tail_scale, self.tail_alpha)
+        } else {
+            rng.lognormal(self.body_mu, self.body_sigma)
+        };
+        (x as u64).clamp(16, self.max_len)
+    }
+
+    /// Sample an output length for a given input length, keeping the
+    /// output ≈ `output_fraction` of total on average.
+    pub fn sample_output(&self, rng: &mut Prng, input_len: u64) -> u64 {
+        // output = f/(1-f) × input on average, jittered log-normally.
+        let mean = self.output_fraction / (1.0 - self.output_fraction) * input_len as f64;
+        let jitter = rng.lognormal(0.0, 0.5);
+        ((mean * jitter) as u64).clamp(8, 4096)
+    }
+
+    /// Empirical CCDF of input lengths over `n` samples (Figure 2a data).
+    pub fn ccdf(&self, seed: u64, n: usize, thresholds: &[u64]) -> Vec<(u64, f64)> {
+        let mut rng = Prng::new(seed);
+        let samples: Vec<u64> = (0..n).map(|_| self.sample_input(&mut rng)).collect();
+        thresholds
+            .iter()
+            .map(|&t| {
+                let above = samples.iter().filter(|&&s| s >= t).count();
+                (t, above as f64 / n as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_requests_dominate() {
+        let m = LengthModel::production();
+        let mut rng = Prng::new(1);
+        let n = 50_000;
+        let short = (0..n)
+            .filter(|_| m.sample_input(&mut rng) < 4000)
+            .count();
+        assert!(short as f64 / n as f64 > 0.85, "short fraction {}", short as f64 / n as f64);
+    }
+
+    #[test]
+    fn long_tail_exists() {
+        let m = LengthModel::production();
+        let ccdf = m.ccdf(2, 100_000, &[10_000, 50_000, 100_000]);
+        assert!(ccdf[0].1 > 0.005, "≥10K share {}", ccdf[0].1);
+        assert!(ccdf[1].1 > 0.0005, "≥50K share {}", ccdf[1].1);
+        assert!(ccdf[0].1 < 0.10);
+    }
+
+    #[test]
+    fn ccdf_monotone() {
+        let m = LengthModel::production();
+        let ccdf = m.ccdf(3, 20_000, &[100, 1000, 10_000, 100_000]);
+        for w in ccdf.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn output_fraction_near_paper() {
+        // §5: output contributes ~10.3% of total length.
+        let m = LengthModel::production();
+        let mut rng = Prng::new(4);
+        let mut tot_in = 0u64;
+        let mut tot_out = 0u64;
+        for _ in 0..50_000 {
+            let i = m.sample_input(&mut rng);
+            let o = m.sample_output(&mut rng, i);
+            tot_in += i;
+            tot_out += o;
+        }
+        let f = tot_out as f64 / (tot_in + tot_out) as f64;
+        assert!((f - 0.103).abs() < 0.06, "output fraction {f}");
+    }
+
+    #[test]
+    fn lengths_within_caps() {
+        let m = LengthModel::production();
+        let mut rng = Prng::new(5);
+        for _ in 0..10_000 {
+            let i = m.sample_input(&mut rng);
+            assert!((16..=m.max_len).contains(&i));
+        }
+    }
+}

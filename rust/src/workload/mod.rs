@@ -1,0 +1,11 @@
+//! Workload modelling (paper §3.2 / Figure 2): heavy-tailed length
+//! distributions, Poisson + bursty arrival processes, and trace
+//! generation/replay.
+
+pub mod arrivals;
+pub mod dist;
+pub mod trace;
+
+pub use arrivals::{BurstyProcess, Poisson};
+pub use dist::LengthModel;
+pub use trace::{Trace, TraceRequest};

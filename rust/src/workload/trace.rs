@@ -1,0 +1,236 @@
+//! Trace generation and replay: the request streams driving §6.2.4
+//! (hybrid short/long) and §6.3 (production-like end-to-end).
+
+use super::arrivals::{BurstyProcess, Poisson};
+use super::dist::LengthModel;
+use crate::config::calib::workload as calib;
+use crate::sim::clock::SimTime;
+use crate::util::prng::Prng;
+
+/// One request in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub arrival: SimTime,
+    pub input_len: u64,
+    pub output_len: u64,
+}
+
+impl TraceRequest {
+    pub fn total_len(&self) -> u64 {
+        self.input_len + self.output_len
+    }
+}
+
+/// A time-ordered request trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn sort(&mut self) {
+        self.requests.sort_by_key(|r| (r.arrival, r.id));
+        for (i, r) in self.requests.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+    }
+
+    /// §6.2.4 hybrid microbenchmark workload: 1K-token shorts at 60 qpm
+    /// (Poisson) + 50K-token longs at ~1 qpm (bursty), over `horizon_s`.
+    pub fn hybrid_paper(seed: u64, horizon_s: f64) -> Trace {
+        let mut rng = Prng::new(seed);
+        let horizon = SimTime::from_secs_f64(horizon_s);
+        let mut requests = Vec::new();
+        let shorts = Poisson::per_minute(calib::SHORT_QPM).arrivals(&mut rng, horizon);
+        for t in shorts {
+            let out = 80 + rng.gen_range(0, 80); // ~10% of total length
+            requests.push(TraceRequest {
+                id: 0,
+                arrival: t,
+                input_len: calib::SHORT_INPUT_LEN,
+                output_len: out,
+            });
+        }
+        let longs = BurstyProcess::paper_long_requests().arrivals(&mut rng, horizon);
+        for t in longs {
+            let out = 256 + rng.gen_range(0, 256);
+            requests.push(TraceRequest {
+                id: 0,
+                arrival: t,
+                input_len: calib::LONG_INPUT_LEN,
+                output_len: out,
+            });
+        }
+        let mut tr = Trace { requests };
+        tr.sort();
+        tr
+    }
+
+    /// Saturating variant of the §6.2.4 hybrid workload: short-request
+    /// decode demand is pushed near the degraded-cluster capacity so that
+    /// scheduler-induced transformations show up in throughput (the
+    /// operating point of Figure 12). Shorts: 1K in / 400 out at 4 qps;
+    /// longs: 50K in, bursty ~1/min.
+    pub fn hybrid_intense(seed: u64, horizon_s: f64) -> Trace {
+        let mut rng = Prng::new(seed);
+        let horizon = SimTime::from_secs_f64(horizon_s);
+        let mut requests = Vec::new();
+        let shorts = Poisson { rate: 4.0 }.arrivals(&mut rng, horizon);
+        for t in shorts {
+            let out = 350 + rng.gen_range(0, 100);
+            requests.push(TraceRequest {
+                id: 0,
+                arrival: t,
+                input_len: calib::SHORT_INPUT_LEN,
+                output_len: out,
+            });
+        }
+        let longs = BurstyProcess::paper_long_requests().arrivals(&mut rng, horizon);
+        for t in longs {
+            let out = 256 + rng.gen_range(0, 256);
+            requests.push(TraceRequest {
+                id: 0,
+                arrival: t,
+                input_len: calib::LONG_INPUT_LEN,
+                output_len: out,
+            });
+        }
+        let mut tr = Trace { requests };
+        tr.sort();
+        tr
+    }
+
+    /// §6.3 production-like trace: lengths from [`LengthModel`], Poisson
+    /// arrivals at `qps`, over `horizon_s`.
+    pub fn production(seed: u64, qps: f64, horizon_s: f64) -> Trace {
+        let mut rng = Prng::new(seed);
+        let horizon = SimTime::from_secs_f64(horizon_s);
+        let model = LengthModel::production();
+        let arrivals = Poisson { rate: qps }.arrivals(&mut rng, horizon);
+        let mut requests = Vec::new();
+        for t in arrivals {
+            let input = model.sample_input(&mut rng);
+            let output = model.sample_output(&mut rng, input);
+            requests.push(TraceRequest { id: 0, arrival: t, input_len: input, output_len: output });
+        }
+        let mut tr = Trace { requests };
+        tr.sort();
+        tr
+    }
+
+    /// Total tokens (in + out) in the trace.
+    pub fn total_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.total_len()).sum()
+    }
+
+    /// Count of requests whose input exceeds `threshold`.
+    pub fn long_count(&self, threshold: u64) -> usize {
+        self.requests.iter().filter(|r| r.input_len > threshold).count()
+    }
+
+    /// Serialize to a simple CSV (id,arrival_s,input,output).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("id,arrival_s,input_len,output_len\n");
+        for r in &self.requests {
+            s.push_str(&format!(
+                "{},{:.9},{},{}\n",
+                r.id,
+                r.arrival.as_secs_f64(),
+                r.input_len,
+                r.output_len
+            ));
+        }
+        s
+    }
+
+    /// Parse the CSV format produced by [`Trace::to_csv`].
+    pub fn from_csv(text: &str) -> Result<Trace, String> {
+        let mut requests = Vec::new();
+        for (i, line) in text.lines().enumerate().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() != 4 {
+                return Err(format!("line {}: expected 4 columns", i + 1));
+            }
+            requests.push(TraceRequest {
+                id: cols[0].parse().map_err(|e| format!("line {}: {e}", i + 1))?,
+                arrival: SimTime::from_secs_f64(
+                    cols[1].parse().map_err(|e| format!("line {}: {e}", i + 1))?,
+                ),
+                input_len: cols[2].parse().map_err(|e| format!("line {}: {e}", i + 1))?,
+                output_len: cols[3].trim().parse().map_err(|e| format!("line {}: {e}", i + 1))?,
+            });
+        }
+        Ok(Trace { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_trace_rates() {
+        let t = Trace::hybrid_paper(7, 3600.0);
+        let shorts = t.requests.iter().filter(|r| r.input_len == 1000).count();
+        let longs = t.requests.iter().filter(|r| r.input_len == 50_000).count();
+        // 60 qpm × 60 min ≈ 3600 shorts; ~1 qpm × 60 ≈ 60 longs (bursty).
+        assert!((3000..4200).contains(&shorts), "shorts {shorts}");
+        assert!((15..200).contains(&longs), "longs {longs}");
+    }
+
+    #[test]
+    fn traces_are_sorted_with_dense_ids() {
+        let t = Trace::hybrid_paper(8, 600.0);
+        for (i, w) in t.requests.windows(2).enumerate() {
+            assert!(w[0].arrival <= w[1].arrival, "unsorted at {i}");
+        }
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn production_trace_has_tail() {
+        let t = Trace::production(9, 2.0, 3600.0);
+        assert!(t.len() > 6000);
+        assert!(t.long_count(10_000) > 0, "no long requests in tail");
+        let frac = t.long_count(10_000) as f64 / t.len() as f64;
+        assert!(frac < 0.1, "tail too fat: {frac}");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = Trace::production(10, 1.0, 120.0);
+        let csv = t.to_csv();
+        let back = Trace::from_csv(&csv).unwrap();
+        assert_eq!(t.requests.len(), back.requests.len());
+        assert_eq!(t.requests[0], back.requests[0]);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(Trace::from_csv("header\n1,2,3\n").is_err());
+        assert!(Trace::from_csv("header\na,b,c,d\n").is_err());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Trace::hybrid_paper(42, 600.0);
+        let b = Trace::hybrid_paper(42, 600.0);
+        assert_eq!(a.requests, b.requests);
+        let c = Trace::hybrid_paper(43, 600.0);
+        assert_ne!(a.requests, c.requests);
+    }
+}

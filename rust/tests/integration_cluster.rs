@@ -1,0 +1,172 @@
+//! Integration tests: end-to-end cluster behaviour across modules
+//! (workload → scheduler → transformation → metrics), plus failure
+//! injection on the serving loop.
+
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::coordinator::{run_system, ClusterSim, SystemKind};
+use gyges::sim::SimTime;
+use gyges::workload::{Trace, TraceRequest};
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+}
+
+fn mk_trace(reqs: &[(f64, u64, u64)]) -> Trace {
+    let mut t = Trace::default();
+    for (i, &(at, input, output)) in reqs.iter().enumerate() {
+        t.requests.push(TraceRequest {
+            id: i as u64,
+            arrival: SimTime::from_secs_f64(at),
+            input_len: input,
+            output_len: output,
+        });
+    }
+    t.sort();
+    t
+}
+
+#[test]
+fn full_lifecycle_scale_up_serve_scale_down() {
+    // One long request forces 4×TP1 → TP4; afterwards the cluster returns
+    // to 8×TP1 and keeps serving shorts.
+    let mut reqs: Vec<(f64, u64, u64)> = vec![(1.0, 50_000, 128)];
+    for i in 0..400 {
+        reqs.push((i as f64 * 0.5, 1000, 60));
+    }
+    let out = run_system(cfg(), SystemKind::Gyges, None, mk_trace(&reqs));
+    assert_eq!(out.report.completed, out.report.total, "all must finish");
+    assert!(out.counters.scale_ups >= 1);
+    assert!(out.counters.scale_downs >= 1);
+    // TTFT of the long request stays finite and bounded.
+    let long = out.recorder.get(0).unwrap();
+    let ttft = long.ttft().unwrap().as_secs_f64();
+    assert!(ttft < 120.0, "long TTFT {ttft}");
+}
+
+#[test]
+fn every_system_serves_the_same_trace() {
+    let trace = Trace::hybrid_paper(3, 120.0);
+    for sys in [
+        SystemKind::Gyges,
+        SystemKind::GygesNoOverlap,
+        SystemKind::Basic,
+        SystemKind::Seesaw,
+        SystemKind::KunServe,
+        SystemKind::LoongServe,
+    ] {
+        let out = run_system(cfg(), sys, None, trace.clone());
+        assert_eq!(
+            out.report.completed, out.report.total,
+            "{}: incomplete",
+            sys.name()
+        );
+    }
+}
+
+#[test]
+fn overload_degrades_gracefully_not_fatally() {
+    // Demand far above capacity: the simulator must still terminate with
+    // every request eventually served (queueing, not dropping).
+    let mut reqs = Vec::new();
+    for i in 0..2000 {
+        reqs.push((i as f64 * 0.01, 1000, 120)); // 100 qps
+    }
+    let out = run_system(cfg(), SystemKind::Gyges, None, mk_trace(&reqs));
+    assert_eq!(out.report.completed, 2000);
+    // p99 TTFT reflects the overload.
+    assert!(out.report.ttft_p99_s > out.report.ttft_p50_s);
+}
+
+#[test]
+fn unserveable_request_is_deferred_not_crashing() {
+    // 200K input exceeds even TP4's max-seq → stays deferred while the
+    // rest of the system keeps working.
+    let reqs = vec![(0.5, 200_000, 64), (1.0, 1000, 32), (1.5, 1000, 32)];
+    let out = run_system(cfg(), SystemKind::Gyges, None, mk_trace(&reqs));
+    assert_eq!(out.report.completed, 2, "the two shorts must finish");
+    assert!(out.counters.deferred >= 1);
+}
+
+#[test]
+fn burst_of_longs_reuses_one_tp4_under_gyges() {
+    let mut reqs: Vec<(f64, u64, u64)> = (0..4).map(|k| (10.0 + 20.0 * k as f64, 50_000, 64)).collect();
+    for i in 0..200 {
+        reqs.push((i as f64 * 0.5, 1000, 40));
+    }
+    let gy = run_system(cfg(), SystemKind::Gyges, None, mk_trace(&reqs));
+    assert_eq!(gy.report.completed, gy.report.total);
+    assert!(
+        gy.counters.scale_ups <= 2,
+        "gyges should reuse the TP4 across the burst (got {} scale-ups)",
+        gy.counters.scale_ups
+    );
+}
+
+#[test]
+fn policies_share_transformation_machinery_but_differ_in_routing() {
+    let trace = Trace::hybrid_paper(9, 180.0);
+    let mut tputs = Vec::new();
+    for p in [Policy::Gyges, Policy::RoundRobin, Policy::LeastLoadFirst] {
+        let out = run_system(cfg(), SystemKind::Gyges, Some(p), trace.clone());
+        assert_eq!(out.report.completed, out.report.total, "{p:?}");
+        tputs.push(out.report.throughput_tps);
+    }
+    for t in &tputs {
+        assert!(*t > 0.0);
+    }
+}
+
+#[test]
+fn multi_host_cluster_works() {
+    let mut c = cfg();
+    c.hosts = 2;
+    let mut reqs: Vec<(f64, u64, u64)> = vec![(1.0, 50_000, 64), (2.0, 50_000, 64)];
+    for i in 0..200 {
+        reqs.push((i as f64 * 0.25, 1000, 40));
+    }
+    let out = run_system(c, SystemKind::Gyges, None, mk_trace(&reqs));
+    assert_eq!(out.report.completed, out.report.total);
+}
+
+#[test]
+fn seesaw_blocking_visible_in_tail_latency() {
+    let mut reqs: Vec<(f64, u64, u64)> = vec![(5.0, 50_000, 64)];
+    for i in 0..120 {
+        reqs.push((i as f64 * 0.25, 1000, 40));
+    }
+    let trace = mk_trace(&reqs);
+    let long_id = trace
+        .requests
+        .iter()
+        .find(|r| r.input_len == 50_000)
+        .unwrap()
+        .id;
+    let gy = run_system(cfg(), SystemKind::Gyges, None, trace.clone());
+    let ss = run_system(cfg(), SystemKind::Seesaw, None, trace);
+    // The long request pays Seesaw's blocking CPU round-trip in full.
+    let gy_ttft = gy.recorder.get(long_id).unwrap().ttft().unwrap().as_secs_f64();
+    let ss_ttft = ss.recorder.get(long_id).unwrap().ttft().unwrap().as_secs_f64();
+    assert!(
+        ss_ttft > gy_ttft + 5.0,
+        "seesaw long TTFT {ss_ttft} vs gyges {gy_ttft}"
+    );
+}
+
+#[test]
+fn static_layout_replacement_is_respected() {
+    let trace = Trace::hybrid_paper(5, 60.0);
+    let mut sim = ClusterSim::new(cfg(), SystemKind::Gyges, trace);
+    sim.replace_instances(|host, base| {
+        vec![
+            (host, (base..base + 4).collect(), 4),
+            (host, vec![base + 4], 1),
+            (host, vec![base + 5], 1),
+            (host, vec![base + 6], 1),
+            (host, vec![base + 7], 1),
+        ]
+    });
+    sim.disable_transformation();
+    let out = sim.run();
+    assert_eq!(out.counters.scale_ups, 0);
+    assert!(out.report.completed > 0);
+}

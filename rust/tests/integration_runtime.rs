@@ -1,0 +1,107 @@
+//! Integration tests over the REAL PJRT serving path (requires
+//! `make artifacts`; tests self-skip when artifacts are absent so
+//! `cargo test` works before the python step).
+
+use gyges::runtime::{argmax, Manifest, Oracle, TinyRuntime};
+use gyges::serve::{synthetic_workload, RealServer, ServerConfig};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.json").exists().then_some(d)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn oracle_reproduced_at_every_tp_degree() {
+    let dir = require_artifacts!();
+    let oracle = Oracle::load(&dir).unwrap();
+    for tp in [1usize, 2, 4] {
+        let mut rt = TinyRuntime::load(&dir, tp).unwrap();
+        let mut sess = rt.new_session().unwrap();
+        let got = rt.generate(&mut sess, &oracle.prompt, oracle.generated.len()).unwrap();
+        assert_eq!(got, oracle.generated, "tp{tp} diverged from the python oracle");
+    }
+}
+
+#[test]
+fn transformation_chain_1_2_4_2_1_preserves_decode() {
+    let dir = require_artifacts!();
+    let prompt = [7u32, 301, 55, 12];
+    // Reference: uninterrupted TP1.
+    let mut rt_ref = TinyRuntime::load(&dir, 1).unwrap();
+    let mut s_ref = rt_ref.new_session().unwrap();
+    let want = rt_ref.generate(&mut s_ref, &prompt, 8).unwrap();
+
+    // Chain of live transformations between every generated token.
+    let mut rt = TinyRuntime::load(&dir, 1).unwrap();
+    let mut sess = rt.new_session().unwrap();
+    let mut logits = Vec::new();
+    for &t in &prompt {
+        logits = rt.step(&mut sess, t).unwrap();
+    }
+    let chain = [2usize, 4, 2, 1, 4, 1, 2, 1];
+    let mut got = Vec::new();
+    for &tp in &chain {
+        rt.transform(&mut sess, tp).unwrap();
+        let next = argmax(&logits) as u32;
+        got.push(next);
+        logits = rt.step(&mut sess, next).unwrap();
+    }
+    assert_eq!(got, want, "transformation chain changed the output");
+}
+
+#[test]
+fn manifest_matches_rust_model_config() {
+    let dir = require_artifacts!();
+    let man = Manifest::load(&dir).unwrap();
+    let m = gyges::config::ModelConfig::gyges_tiny();
+    assert_eq!(man.hidden as u64, m.hidden_size);
+    assert_eq!(man.heads as u64, m.num_heads);
+    assert_eq!(man.head_dim as u64, m.head_dim);
+    assert_eq!(man.layers as u64, m.num_layers);
+    assert_eq!(man.vocab as u64, m.vocab_size);
+}
+
+#[test]
+fn server_scales_up_for_long_and_down_after() {
+    let dir = require_artifacts!();
+    let mut server = RealServer::new(&dir, ServerConfig::default()).unwrap();
+    let mut reqs = synthetic_workload(7, 1, 1, server.rt.man.vocab);
+    // order: short then long then short (force up + down)
+    reqs.sort_by_key(|r| r.prompt.len());
+    let short2 = reqs[0].clone();
+    let mut reqs = vec![reqs[0].clone(), reqs[1].clone(), short2];
+    reqs[2].id = 99;
+    let rep = server.serve(&reqs).unwrap();
+    assert!(rep.transforms >= 2, "up for the long, down after: {}", rep.transforms);
+    assert_eq!(rep.results.len(), 3);
+}
+
+#[test]
+fn sequence_cap_is_enforced() {
+    let dir = require_artifacts!();
+    let mut rt = TinyRuntime::load(&dir, 1).unwrap();
+    let mut sess = rt.new_session().unwrap();
+    for i in 0..rt.man.s_max {
+        rt.step(&mut sess, (i % 100) as u32).unwrap();
+    }
+    assert!(rt.step(&mut sess, 0).is_err(), "must refuse past S_MAX");
+}
+
+#[test]
+fn unknown_tp_rejected() {
+    let dir = require_artifacts!();
+    assert!(TinyRuntime::load(&dir, 3).is_err());
+    assert!(TinyRuntime::load(&dir, 8).is_err());
+}

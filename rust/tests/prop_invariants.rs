@@ -1,0 +1,313 @@
+//! Property-based tests over the coordinator's core invariants:
+//! routing, batching, page accounting, padding equivalence, plans.
+//!
+//! Uses the in-crate proptest-lite harness (seeded generation + replay
+//! info on failure); case counts scale with GYGES_PROPTEST_CASES.
+
+use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::coordinator::{
+    make_policy, ActiveRequest, ClusterView, Instance, Route,
+};
+use gyges::kvcache::{KvLayout, KvManager};
+use gyges::sim::{EngineModel, SimTime};
+use gyges::transform::TransformPlan;
+use gyges::util::proptest::{forall, Config};
+use gyges::util::Prng;
+use gyges::weights::ffn::{ffn, gelu, pad_columns, pad_rows, Mat};
+use gyges::weights::LayerPadPlan;
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+}
+
+fn engine(c: &ClusterConfig) -> EngineModel {
+    EngineModel::new(c.model.clone(), c.gpu.clone())
+}
+
+/// Build a random cluster state: mix of TP1/TP2/TP4 instances with random
+/// load, one 8-GPU host.
+fn random_instances(rng: &mut Prng, e: &EngineModel) -> Vec<Instance> {
+    let mut out = Vec::new();
+    let mut gpu = 0usize;
+    let mut id = 0usize;
+    while gpu < 8 {
+        let degree = match rng.index(4) {
+            0 if gpu + 4 <= 8 => 4u64,
+            1 if gpu + 2 <= 8 => 2,
+            _ => 1,
+        };
+        let workers: Vec<usize> = (gpu..gpu + degree as usize).collect();
+        gpu += degree as usize;
+        let mut inst = Instance::new(id, 0, workers, degree);
+        // random resident requests within capacity
+        let cap = inst.kv_capacity(e);
+        let mut committed = 0u64;
+        for r in 0..rng.index(6) {
+            let len = 500 + rng.gen_range(0, e.max_seq(degree).max(600).min(40_000));
+            if committed + len + 200 > cap {
+                break;
+            }
+            committed += len + 200;
+            let mut req = ActiveRequest::new((id * 100 + r) as u64, SimTime::ZERO, len, 200);
+            req.phase = gyges::coordinator::Phase::Decode;
+            inst.running.push(req);
+        }
+        out.push(inst);
+        id += 1;
+    }
+    out
+}
+
+/// INVARIANT: every policy's Assign choice can actually hold the request
+/// (capacity + max-seq), and ScaleUp groups are disjoint TP1 instances on
+/// one host with exactly `to_tp` members.
+#[test]
+fn prop_routing_decisions_are_sound() {
+    let c = cfg();
+    let e = engine(&c);
+    for policy_kind in [
+        gyges::config::Policy::Gyges,
+        gyges::config::Policy::RoundRobin,
+        gyges::config::Policy::LeastLoadFirst,
+    ] {
+        forall(
+            &format!("routing-sound-{policy_kind:?}"),
+            Config { cases: 200, seed: 0xA11C },
+            |rng| {
+                let instances = random_instances(rng, &e);
+                let input = 100 + rng.gen_range(0, 60_000);
+                (instances, input)
+            },
+            |(instances, input)| {
+                let mut policy = make_policy(policy_kind);
+                let req = ActiveRequest::new(9999, SimTime::ZERO, *input, 256);
+                let view = ClusterView {
+                    instances,
+                    engine: &e,
+                    cfg: &c,
+                    now: SimTime::from_secs_f64(1000.0),
+                };
+                match policy.route(&req, &view) {
+                    Route::Assign(id) => {
+                        let inst = &instances[id];
+                        if inst.retired {
+                            return Err(format!("assigned to retired instance {id}"));
+                        }
+                        if !inst.fits(&e, &req) {
+                            return Err(format!(
+                                "assigned to instance {id} (tp{}) that cannot hold {} tokens",
+                                inst.degree,
+                                req.final_len()
+                            ));
+                        }
+                        Ok(())
+                    }
+                    Route::ScaleUp { members, to_tp } => {
+                        if members.len() != to_tp as usize {
+                            return Err(format!("group size {} != to_tp {to_tp}", members.len()));
+                        }
+                        let mut seen = std::collections::BTreeSet::new();
+                        let host = instances[members[0]].host;
+                        for &m in members.iter() {
+                            if !seen.insert(m) {
+                                return Err("duplicate member".into());
+                            }
+                            let inst = &instances[m];
+                            if inst.degree != 1 || inst.retired || inst.host != host {
+                                return Err(format!("bad member {m}"));
+                            }
+                        }
+                        // the merged degree must actually hold the request
+                        if e.max_seq(to_tp) < req.final_len() {
+                            return Err(format!(
+                                "scale-up to tp{to_tp} still cannot hold {}",
+                                req.final_len()
+                            ));
+                        }
+                        Ok(())
+                    }
+                    Route::Defer => Ok(()),
+                }
+            },
+        );
+    }
+}
+
+/// INVARIANT: KV page accounting never leaks — allocated pages equal the
+/// sum of live block tables, and finishing everything returns the pool to
+/// empty.
+#[test]
+fn prop_kv_page_accounting_balances() {
+    let model = ModelConfig::qwen2_5_32b();
+    forall(
+        "kv-page-accounting",
+        Config { cases: 150, seed: 0x5ACC },
+        |rng| {
+            // random op sequence: (admit | append | finish)
+            let ops: Vec<(u8, u64)> = (0..rng.index(60))
+                .map(|_| (rng.index(3) as u8, 1 + rng.gen_range(0, 2000)))
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut mgr = KvManager::new(&model, 1, KvLayout::HeaderCentric, 2 * gyges::util::GIB);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for (op, arg) in ops {
+                match op {
+                    0 => {
+                        if mgr.admit(next_id, *arg).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 => {
+                        if let Some(&id) = live.first() {
+                            let _ = mgr.append(id, *arg % 600 + 1);
+                        }
+                    }
+                    _ => {
+                        if let Some(id) = live.pop() {
+                            mgr.finish(id).map_err(|e| format!("finish: {e}"))?;
+                        }
+                    }
+                }
+                let table_pages = mgr.tables.total_blocks();
+                if table_pages != mgr.pool.allocated_pages() {
+                    return Err(format!(
+                        "leak: tables reference {table_pages} pages, pool says {}",
+                        mgr.pool.allocated_pages()
+                    ));
+                }
+            }
+            for id in live.drain(..) {
+                mgr.finish(id).map_err(|e| format!("final finish: {e}"))?;
+            }
+            if mgr.pool.allocated_pages() != 0 {
+                return Err(format!("{} pages leaked", mgr.pool.allocated_pages()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// INVARIANT (Eq. 2): FFN′ == FFN for random shapes, shards and paddings.
+#[test]
+fn prop_padded_ffn_identity() {
+    forall(
+        "padded-ffn-identity",
+        Config { cases: 120, seed: 0xFF17 },
+        |rng| {
+            let b = 1 + rng.index(4);
+            let h = 2 + rng.index(12);
+            let shards = [1usize, 2, 4][rng.index(3)];
+            let shard_w = 1 + rng.index(8);
+            let pads: Vec<usize> = (0..shards).map(|_| rng.index(5)).collect();
+            let seed = rng.next();
+            (b, h, shards, shard_w, pads, seed)
+        },
+        |(b, h, shards, shard_w, pads, seed)| {
+            let mut rng = Prng::new(*seed);
+            let i = shards * shard_w;
+            let x = Mat::from_fn(*b, *h, |_, _| rng.normal());
+            let up = Mat::from_fn(*h, i, |_, _| rng.normal());
+            let down = Mat::from_fn(i, *h, |_, _| rng.normal());
+            let up_p = pad_columns(&up, *shards, pads);
+            let down_p = pad_rows(&down, *shards, pads);
+            let raw = ffn(&x, &up, &down, gelu);
+            let padded = ffn(&x, &up_p, &down_p, gelu);
+            let err = raw.max_abs_diff(&padded);
+            if err > 1e-10 {
+                return Err(format!("identity violated: max err {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// INVARIANT: padded shards are page-aligned and scale-up page release is
+/// conserved (what one worker releases equals what the others would need
+/// to receive on scale-down).
+#[test]
+fn prop_pad_plan_conservation() {
+    let models = ModelConfig::all();
+    forall(
+        "pad-plan-conservation",
+        Config { cases: 100, seed: 0x9AD },
+        |rng| {
+            let m = models[rng.index(models.len())].clone();
+            let max_tp = [1u64, 2, 4][rng.index(3)];
+            (m, max_tp)
+        },
+        |(m, max_tp)| {
+            if m.inter_size % max_tp != 0 {
+                return Ok(()); // not a valid TP degree for this model
+            }
+            let plan = LayerPadPlan::plan(m, *max_tp);
+            for t in &plan.tensors {
+                if t.padded_shard_bytes % gyges::util::VMM_PAGE != 0 {
+                    return Err(format!("{:?} shard not page aligned", t.proj));
+                }
+            }
+            if *max_tp > 1 {
+                let released = plan.pages_released_per_worker(1, *max_tp) * gyges::util::VMM_PAGE;
+                let received = plan.bytes_received_per_worker(*max_tp, 1);
+                if released != received {
+                    return Err(format!("release {released} != receive {received}"));
+                }
+            }
+            let f = plan.overhead_fraction();
+            if f < 0.0 {
+                return Err(format!("negative overhead {f}"));
+            }
+            // The paper's <=14% bound holds for production-size tensors;
+            // toy models (gyges-tiny) legitimately pad much more because
+            // a shard is smaller than one 2 MiB page.
+            let shard_bytes = m.up_proj_bytes() / max_tp;
+            if shard_bytes >= 16 * 1024 * 1024 && f > 0.25 {
+                return Err(format!("overhead {f} out of range for large shards"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// INVARIANT: transformation plans cover every layer exactly once per
+/// module, in reversed order, for random stagger widths.
+#[test]
+fn prop_transform_plan_coverage() {
+    let models = ModelConfig::all();
+    forall(
+        "transform-plan-coverage",
+        Config { cases: 100, seed: 0x9147 },
+        |rng| {
+            let m = models[rng.index(models.len())].clone();
+            let stagger = 1 + rng.index(8);
+            let up = rng.chance(0.5);
+            (m, stagger, up)
+        },
+        |(m, stagger, up)| {
+            let (from, to) = if *up { (1, 4) } else { (4, 1) };
+            let plan = TransformPlan::build(m, from, to, *stagger);
+            let mut mlp = vec![0u32; m.num_layers as usize];
+            let mut kv = vec![0u32; m.num_layers as usize];
+            let mut last_layer = m.num_layers;
+            for s in 0..plan.num_steps() {
+                for op in plan.ops_for_step(s) {
+                    match op.kind {
+                        gyges::transform::OpKind::MlpWeights => mlp[op.layer as usize] += 1,
+                        gyges::transform::OpKind::KvCache => kv[op.layer as usize] += 1,
+                    }
+                    if op.layer > last_layer {
+                        return Err("traversal not descending".into());
+                    }
+                    last_layer = op.layer;
+                }
+            }
+            if mlp.iter().any(|&c| c != 1) || kv.iter().any(|&c| c != 1) {
+                return Err("layer transformed != exactly once".into());
+            }
+            Ok(())
+        },
+    );
+}
