@@ -1,0 +1,137 @@
+//! Perf harness for the cluster-simulator hot paths. Emits a
+//! machine-readable `BENCH_sim.json` (schema documented in PERF.md) so the
+//! events/sec and sweep wall-time trajectory is tracked from PR 1 onward.
+//!
+//!   cargo bench --bench bench_sim [-- --out BENCH_sim.json
+//!       --requests 10000 --sweep-horizon 120 --samples 3]
+//!
+//! Measures:
+//!  1. Single-threaded events/sec replaying a ~10k-request production
+//!     trace through the full Gyges system (recorder + routing + steps).
+//!  2. Wall time of the Figure-13-style policy × QPS sweep, serial vs
+//!     parallel, with the merged outputs checked byte-identical.
+
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::coordinator::{run_system, SystemKind};
+use gyges::experiments::sweep::{
+    results_to_jsonl, run_sweep_parallel, run_sweep_serial, sweep_threads, SweepJob,
+};
+use gyges::util::json::Json;
+use gyges::util::Args;
+use gyges::workload::Trace;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Policy × QPS grid around the Figure 13 operating point.
+fn fig13_qps_sweep_jobs(horizon_s: f64) -> Vec<SweepJob> {
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let mut jobs = Vec::new();
+    for qps in [2.0f64, 4.0, 6.0, 8.0] {
+        let trace = Arc::new(Trace::production(0xF16_13, qps, horizon_s));
+        for policy in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
+            jobs.push(SweepJob::new(
+                format!("qps{qps}/{}", policy.name()),
+                cfg.clone(),
+                SystemKind::Gyges,
+                Some(policy),
+                Arc::clone(&trace),
+            ));
+        }
+    }
+    jobs
+}
+
+fn main() {
+    let args = Args::from_env();
+    let out_path = args.get_or("out", "BENCH_sim.json");
+    let target_requests = args.parsed_or("requests", 10_000usize);
+    let sweep_horizon = args.parsed_or("sweep-horizon", 120.0f64);
+    let samples = args.parsed_or("samples", 3usize).max(1);
+
+    // ---- 1. single-threaded events/sec on a ~10k-request trace --------
+    // Production lengths at 10 qps: ~1000 s of simulated traffic ≈ 10k.
+    let horizon = target_requests as f64 / 10.0;
+    let trace = Trace::production(0xBE7C, 10.0, horizon);
+    println!(
+        "single-thread: replaying {} requests ({} tokens) through gyges/gyges",
+        trace.len(),
+        trace.total_tokens()
+    );
+    let mut best_wall = f64::INFINITY;
+    let mut events = 0u64;
+    let mut completed = 0usize;
+    for s in 0..=samples {
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let t0 = Instant::now();
+        let out = run_system(cfg, SystemKind::Gyges, None, trace.clone());
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(out.error.is_none(), "bench run hit the event cap");
+        events = out.counters.events;
+        completed = out.report.completed;
+        if s > 0 {
+            // sample 0 is warmup
+            best_wall = best_wall.min(wall);
+        }
+        println!(
+            "  sample {s}: {:.3} s wall, {} events, {:.0} events/s{}",
+            wall,
+            out.counters.events,
+            out.counters.events as f64 / wall,
+            if s == 0 { "  (warmup)" } else { "" }
+        );
+    }
+    let events_per_sec = events as f64 / best_wall;
+    println!(
+        "single-thread best: {best_wall:.3} s wall, {events} events → {events_per_sec:.0} events/s ({completed} completed)"
+    );
+
+    // ---- 2. figure-13 policy × QPS sweep, serial vs parallel ----------
+    let jobs = fig13_qps_sweep_jobs(sweep_horizon);
+    let threads = sweep_threads();
+    println!("\nsweep: {} jobs (policy × QPS), {} worker threads", jobs.len(), threads);
+    let t0 = Instant::now();
+    let serial = run_sweep_serial(&jobs);
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let parallel = run_sweep_parallel(&jobs, threads);
+    let parallel_wall = t0.elapsed().as_secs_f64();
+    let serial_bytes = results_to_jsonl(&serial);
+    assert_eq!(
+        serial_bytes,
+        results_to_jsonl(&parallel),
+        "parallel sweep diverged from serial (determinism violation)"
+    );
+    let speedup = serial_wall / parallel_wall;
+    println!(
+        "  serial {serial_wall:.3} s, parallel {parallel_wall:.3} s → {speedup:.2}x ({} jobs byte-identical)",
+        jobs.len()
+    );
+
+    // ---- 3. machine-readable report -----------------------------------
+    let mut single = Json::obj();
+    single
+        .set("trace_requests", trace.len())
+        .set("trace_tokens", trace.total_tokens())
+        .set("events", events)
+        .set("wall_s", best_wall)
+        .set("events_per_sec", events_per_sec)
+        .set("completed", completed);
+    let mut sweep = Json::obj();
+    sweep
+        .set("jobs", jobs.len())
+        .set("sweep_horizon_s", sweep_horizon)
+        .set("threads", threads)
+        .set("serial_wall_s", serial_wall)
+        .set("parallel_wall_s", parallel_wall)
+        .set("speedup", speedup)
+        .set("byte_identical", true);
+    let mut root = Json::obj();
+    root.set("schema_version", 1u64)
+        .set("bench", "bench_sim")
+        .set("measured", true)
+        .set("single_thread", single)
+        .set("sweep", sweep);
+    std::fs::write(&out_path, format!("{}\n", root.to_string()))
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
+}

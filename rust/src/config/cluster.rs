@@ -54,6 +54,10 @@ pub struct ClusterConfig {
     pub max_batch_tokens: u64,
     /// Maximum concurrent decode slots per instance at TP1.
     pub max_batch_size: usize,
+    /// Event-loop budget: a run that would process more simulation events
+    /// than this terminates with a structured `SimError::EventCapExceeded`
+    /// in its outcome instead of aborting the process.
+    pub max_events: u64,
     pub seed: u64,
 }
 
@@ -77,6 +81,7 @@ impl ClusterConfig {
             // this beyond the calibration batch would let high-TP
             // instances escape their measured efficiency penalty.
             max_batch_size: 8,
+            max_events: 200_000_000,
             seed: 0xE5EED,
         }
     }
@@ -123,6 +128,7 @@ impl ClusterConfig {
         cfg.min_dwell_s = doc.f64_or("scheduler.min_dwell_s", cfg.min_dwell_s);
         cfg.max_batch_tokens = doc.i64_or("batch.max_tokens", cfg.max_batch_tokens as i64) as u64;
         cfg.max_batch_size = doc.i64_or("batch.max_size", cfg.max_batch_size as i64) as usize;
+        cfg.max_events = doc.i64_or("sim.max_events", cfg.max_events as i64) as u64;
         cfg.seed = doc.i64_or("seed", cfg.seed as i64) as u64;
         if let Some(super::parse::Value::Arr(tps)) = doc.get("cluster.tp_choices") {
             let mut v: Vec<u64> = tps.iter().filter_map(|t| t.as_i64()).map(|t| t as u64).collect();
@@ -167,6 +173,9 @@ impl ClusterConfig {
         }
         if !(0.0..=1.0).contains(&self.scale_down_threshold) {
             return Err("scale_down_threshold must be in [0,1]".into());
+        }
+        if self.max_events == 0 {
+            return Err("max_events must be positive".into());
         }
         Ok(())
     }
@@ -215,6 +224,22 @@ mod tests {
         assert_eq!(cfg.policy, Policy::LeastLoadFirst);
         assert_eq!(cfg.gpu.name, "a100-40g"); // paired automatically
         assert!((cfg.scale_down_threshold - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_events_parsed_and_validated() {
+        let doc = Doc::parse(
+            r#"
+            [sim]
+            max_events = 1234
+            "#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.max_events, 1234);
+        let mut bad = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        bad.max_events = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -1,5 +1,12 @@
 //! Serving-instance state machine: a TP (or baseline PP/SP) group of
 //! workers with its KV pool, request queues, and transformation state.
+//!
+//! Hot-path contract (see PERF.md): `load`/`fits`/`next_step` are O(1) —
+//! the committed-token and context-token sums the schedulers and the step
+//! model need are maintained incrementally by the queue-mutation methods
+//! below. Mutate `running`/`prefill_queue` only through those methods;
+//! direct pushes desynchronise the aggregates (debug builds catch this
+//! via [`Instance::debug_assert_consistent`]).
 
 use super::request::{ActiveRequest, Phase};
 use crate::config::calib::baselines;
@@ -36,12 +43,20 @@ pub struct Instance {
     pub workers: Vec<usize>,
     pub degree: u64,
     pub kind: ParallelKind,
-    /// Requests currently decoding.
-    pub running: Vec<ActiveRequest>,
+    /// Requests currently decoding. The front `max_batch_size` entries are
+    /// the active continuous batch; stepped survivors rotate to the back.
+    /// Mutate through the queue methods, not directly.
+    pub running: VecDeque<ActiveRequest>,
     /// Requests admitted but awaiting prefill.
     pub prefill_queue: VecDeque<ActiveRequest>,
-    /// KV tokens currently stored.
+    /// KV tokens currently stored (exact: grows by `input_len + 1` at
+    /// prefill completion and by 1 per decoded token; shrinks by the
+    /// request's full `context_len` at finish).
     pub kv_tokens: u64,
+    /// Sum of `final_len` over running + prefill queues (incremental).
+    committed_tokens: u64,
+    /// Sum of `context_len` over running requests (incremental).
+    ctx_tokens: u64,
     pub transforming: Option<TransformState>,
     pub last_transform: SimTime,
     /// True while a Step event is outstanding in the event queue.
@@ -58,9 +73,11 @@ impl Instance {
             workers,
             degree,
             kind: ParallelKind::Tp,
-            running: Vec::new(),
+            running: VecDeque::new(),
             prefill_queue: VecDeque::new(),
             kv_tokens: 0,
+            committed_tokens: 0,
+            ctx_tokens: 0,
             transforming: None,
             last_transform: SimTime::ZERO,
             stepping: false,
@@ -78,32 +95,24 @@ impl Instance {
         engine.max_seq(self.degree)
     }
 
-    /// Load metric used by the schedulers: KV occupancy projected to
-    /// completion of admitted requests.
-    pub fn load(&self, engine: &EngineModel) -> f64 {
-        let cap = self.kv_capacity(engine).max(1);
-        let committed: u64 = self
-            .running
-            .iter()
-            .map(|r| r.final_len())
-            .chain(self.prefill_queue.iter().map(|r| r.final_len()))
-            .sum();
-        committed as f64 / cap as f64
+    /// Sum of `final_len` over all admitted requests (O(1)).
+    pub fn committed_tokens(&self) -> u64 {
+        self.committed_tokens
     }
 
-    /// Would admitting `req` fit (projected to completion)?
+    /// Load metric used by the schedulers: KV occupancy projected to
+    /// completion of admitted requests (O(1)).
+    pub fn load(&self, engine: &EngineModel) -> f64 {
+        let cap = self.kv_capacity(engine).max(1);
+        self.committed_tokens as f64 / cap as f64
+    }
+
+    /// Would admitting `req` fit (projected to completion)? O(1).
     pub fn fits(&self, engine: &EngineModel, req: &ActiveRequest) -> bool {
         if req.final_len() > self.max_seq(engine) {
             return false;
         }
-        let cap = self.kv_capacity(engine);
-        let committed: u64 = self
-            .running
-            .iter()
-            .map(|r| r.final_len())
-            .chain(self.prefill_queue.iter().map(|r| r.final_len()))
-            .sum();
-        committed + req.final_len() <= cap
+        self.committed_tokens + req.final_len() <= self.kv_capacity(engine)
     }
 
     /// Any running/queued request that exceeds the next-lower degree's
@@ -116,9 +125,100 @@ impl Instance {
             .any(|r| r.final_len() > lower_max)
     }
 
+    /// Admit a new request into the prefill queue.
     pub fn admit(&mut self, mut req: ActiveRequest) {
         req.phase = Phase::Prefill;
+        self.committed_tokens += req.final_len();
         self.prefill_queue.push_back(req);
+    }
+
+    /// Re-enqueue a request that is already counted as prefilling on some
+    /// instance (merge transfer): no phase change.
+    pub fn enqueue_prefill(&mut self, req: ActiveRequest) {
+        self.committed_tokens += req.final_len();
+        self.prefill_queue.push_back(req);
+    }
+
+    /// Complete the prefill of `req_id`: the request leaves the prefill
+    /// queue with its first token generated and its KV resident. The
+    /// caller decides whether it finishes immediately or keeps decoding
+    /// (via [`Instance::enqueue_running`] / [`Instance::release_kv`]).
+    pub fn complete_prefill(&mut self, req_id: u64) -> Option<ActiveRequest> {
+        let pos = self.prefill_queue.iter().position(|r| r.id == req_id)?;
+        let mut req = self.prefill_queue.remove(pos)?;
+        self.committed_tokens -= req.final_len();
+        req.phase = Phase::Decode;
+        req.generated = 1; // prefill emits the first token
+        self.kv_tokens += req.input_len + 1;
+        Some(req)
+    }
+
+    /// Enqueue a decoding request whose KV is already accounted for
+    /// (prefill completion or merge transfer).
+    pub fn enqueue_running(&mut self, req: ActiveRequest) {
+        self.committed_tokens += req.final_len();
+        self.ctx_tokens += req.context_len();
+        self.running.push_back(req);
+    }
+
+    /// Receive a decoding request from a split: KV materialises here.
+    pub fn receive_running(&mut self, mut req: ActiveRequest) {
+        req.phase = Phase::Decode;
+        self.kv_tokens += req.context_len();
+        self.enqueue_running(req);
+    }
+
+    /// Release the KV a finished request held (its full context).
+    pub fn release_kv(&mut self, context_len: u64) {
+        debug_assert!(
+            self.kv_tokens >= context_len,
+            "instance {}: releasing {context_len} KV tokens but only {} stored",
+            self.id,
+            self.kv_tokens
+        );
+        self.kv_tokens -= context_len;
+    }
+
+    /// Advance the continuous batch one decode step: the front
+    /// `min(len, max_batch)` requests each generate a token; survivors
+    /// rotate to the back of the queue (batching-window rotation — every
+    /// running request makes progress across steps), finished requests
+    /// are removed with exact KV/aggregate bookkeeping. Stepped ids are
+    /// appended to `stepped`, finished ids to `finished`. O(batch).
+    pub fn decode_advance(
+        &mut self,
+        max_batch: usize,
+        stepped: &mut Vec<u64>,
+        finished: &mut Vec<u64>,
+    ) {
+        let batch = self.running.len().min(max_batch);
+        for _ in 0..batch {
+            let Some(mut r) = self.running.pop_front() else { break };
+            self.ctx_tokens -= r.context_len();
+            self.committed_tokens -= r.final_len();
+            r.generated += 1;
+            self.kv_tokens += 1;
+            stepped.push(r.id);
+            if r.done() {
+                self.release_kv(r.context_len());
+                finished.push(r.id);
+            } else {
+                self.ctx_tokens += r.context_len();
+                self.committed_tokens += r.final_len();
+                self.running.push_back(r);
+            }
+        }
+    }
+
+    /// Drain all queued work (merge/split), returning
+    /// `(running, prefill, kv_tokens)` and zeroing the aggregates.
+    pub fn take_work(&mut self) -> (VecDeque<ActiveRequest>, VecDeque<ActiveRequest>, u64) {
+        let running = std::mem::take(&mut self.running);
+        let prefill = std::mem::take(&mut self.prefill_queue);
+        let kv = std::mem::take(&mut self.kv_tokens);
+        self.committed_tokens = 0;
+        self.ctx_tokens = 0;
+        (running, prefill, kv)
     }
 
     pub fn is_idle(&self) -> bool {
@@ -130,7 +230,41 @@ impl Instance {
         self.running.len() + self.prefill_queue.len()
     }
 
+    /// Recompute the incremental aggregates from the queues and compare
+    /// (debug builds only). An idle instance must hold zero KV tokens —
+    /// the admission/finish bookkeeping is exact, not saturating.
+    pub fn debug_assert_consistent(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let committed: u64 = self
+                .running
+                .iter()
+                .map(|r| r.final_len())
+                .chain(self.prefill_queue.iter().map(|r| r.final_len()))
+                .sum();
+            assert_eq!(
+                committed, self.committed_tokens,
+                "instance {}: committed-token aggregate drifted",
+                self.id
+            );
+            let ctx: u64 = self.running.iter().map(|r| r.context_len()).sum();
+            assert_eq!(
+                ctx, self.ctx_tokens,
+                "instance {}: context-token aggregate drifted",
+                self.id
+            );
+            if self.is_idle() {
+                assert_eq!(
+                    self.kv_tokens, 0,
+                    "instance {}: KV tokens must drain to zero when idle",
+                    self.id
+                );
+            }
+        }
+    }
+
     /// Duration of the next serving step; also describes what it does.
+    /// O(1): the decode average context uses the incremental sum.
     pub fn next_step(&self, engine: &EngineModel, max_batch: usize) -> Option<StepKind> {
         if self.retired {
             return None;
@@ -141,8 +275,7 @@ impl Instance {
         }
         if !self.running.is_empty() {
             let batch = self.running.len().min(max_batch) as u64;
-            let avg_ctx = self.running.iter().map(|r| r.context_len()).sum::<u64>()
-                / self.running.len() as u64;
+            let avg_ctx = self.ctx_tokens / self.running.len() as u64;
             let t = self.step_scale(engine.decode_step(self.degree, batch, avg_ctx));
             return Some(StepKind::Decode { duration: t });
         }
@@ -203,6 +336,7 @@ mod tests {
         inst.admit(req(1, 1000, 100));
         assert_eq!(inst.active_count(), 1);
         assert!(inst.load(&e) > 0.0);
+        inst.debug_assert_consistent();
     }
 
     #[test]
@@ -222,6 +356,7 @@ mod tests {
         }
         let committed: u64 = inst.prefill_queue.iter().map(|r| r.final_len()).sum();
         assert!(committed <= cap);
+        assert_eq!(committed, inst.committed_tokens(), "aggregate matches rescan");
         assert!(admitted > 0);
     }
 
@@ -236,13 +371,13 @@ mod tests {
             other => panic!("expected prefill, got {other:?}"),
         }
         // move to decode
-        let mut r = inst.prefill_queue.pop_front().unwrap();
-        r.phase = Phase::Decode;
-        inst.running.push(r);
+        let r = inst.complete_prefill(1).unwrap();
+        inst.enqueue_running(r);
         match inst.next_step(&e, 64) {
             Some(StepKind::Decode { .. }) => {}
             other => panic!("expected decode, got {other:?}"),
         }
+        inst.debug_assert_consistent();
     }
 
     #[test]
@@ -251,11 +386,12 @@ mod tests {
         let mut tp = Instance::new(0, 0, vec![0, 1, 2, 3], 4);
         let mut r = req(1, 1000, 64);
         r.phase = Phase::Decode;
-        tp.running.push(r.clone());
+        r.generated = 1;
+        tp.enqueue_running(r.clone());
         let t_tp = tp.next_step(&e, 64).unwrap().duration();
         let mut pp = Instance::new(1, 0, vec![4, 5, 6, 7], 4);
         pp.kind = ParallelKind::Pp;
-        pp.running.push(r);
+        pp.enqueue_running(r);
         let t_pp = pp.next_step(&e, 64).unwrap().duration();
         let ratio = t_pp.as_secs_f64() / t_tp.as_secs_f64();
         assert!((ratio - 1.0 / (1.0 - 0.435)).abs() < 1e-6, "ratio {ratio}");
@@ -267,8 +403,47 @@ mod tests {
         let mut inst = Instance::new(0, 0, vec![0, 1, 2, 3], 4);
         let mut r = req(1, 30_000, 256);
         r.phase = Phase::Decode;
-        inst.running.push(r);
+        inst.enqueue_running(r);
         assert!(inst.has_long_req(&e, 1), "30K ctx exceeds TP1 max");
         assert!(!inst.has_long_req(&e, 2), "30K fits TP2");
+    }
+
+    #[test]
+    fn full_lifecycle_drains_kv_exactly() {
+        let mut inst = Instance::new(0, 0, vec![0], 1);
+        inst.admit(req(1, 100, 3));
+        let r = inst.complete_prefill(1).unwrap();
+        assert_eq!(inst.kv_tokens, 101);
+        inst.enqueue_running(r);
+        let (mut stepped, mut finished) = (Vec::new(), Vec::new());
+        // 2 more tokens to reach output_len = 3
+        inst.decode_advance(8, &mut stepped, &mut finished);
+        assert_eq!(inst.kv_tokens, 102);
+        assert!(finished.is_empty());
+        inst.decode_advance(8, &mut stepped, &mut finished);
+        assert_eq!(finished, vec![1]);
+        assert!(inst.is_idle());
+        assert_eq!(inst.kv_tokens, 0, "drained instance holds no KV");
+        inst.debug_assert_consistent();
+    }
+
+    #[test]
+    fn decode_window_rotates_for_fairness() {
+        let mut inst = Instance::new(0, 0, vec![0], 1);
+        for id in 0..4u64 {
+            inst.admit(req(id, 10, 100));
+            let r = inst.complete_prefill(id).unwrap();
+            inst.enqueue_running(r);
+        }
+        let (mut stepped, mut finished) = (Vec::new(), Vec::new());
+        inst.decode_advance(2, &mut stepped, &mut finished);
+        assert_eq!(stepped, vec![0, 1]);
+        // The stepped pair rotated behind the waiting pair.
+        let order: Vec<u64> = inst.running.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![2, 3, 0, 1]);
+        stepped.clear();
+        inst.decode_advance(2, &mut stepped, &mut finished);
+        assert_eq!(stepped, vec![2, 3]);
+        inst.debug_assert_consistent();
     }
 }

@@ -1,13 +1,135 @@
 //! Request-routing policies: the transformation-aware Gyges scheduler
 //! (Algorithms 1 & 2) and the Round-Robin / Least-Load-First baselines of
 //! §6.2.4.
+//!
+//! Hot-path contract (see PERF.md): routing a request must not allocate on
+//! the `Route::Assign` path of a warm cluster. The per-host candidate sets
+//! the policies consult come from [`HostIndex`], which [`crate::
+//! coordinator::ClusterSim`] maintains incrementally as instances merge,
+//! split, retire, and finish transforming — no per-request rescan of the
+//! instance table, and the policies reuse internal scratch buffers instead
+//! of collecting fresh `Vec`s per request.
 
 use super::instance::Instance;
 use super::request::ActiveRequest;
 use crate::config::ClusterConfig;
 use crate::sim::clock::SimTime;
 use crate::sim::EngineModel;
-use std::collections::BTreeSet;
+
+/// Incrementally-maintained index of the cluster topology: which live,
+/// non-transforming TP1 instances sit on each host (the merge candidates
+/// of Algorithm 1), plus the count of live TP>1 instances.
+///
+/// [`HostIndex::note`] is the single update entry point: call it with an
+/// instance after any change to its `retired` / `degree` / `transforming`
+/// state and the index converges to the truth. Per-host candidate lists
+/// are kept sorted by instance id so consumers see the same deterministic
+/// order a full rescan would produce.
+#[derive(Clone, Debug, Default)]
+pub struct HostIndex {
+    /// Per host: ids of live, non-transforming TP1 instances, ascending.
+    per_host: Vec<Vec<usize>>,
+    /// Per instance id: currently present in its host's candidate list?
+    mergeable: Vec<bool>,
+    /// Per instance id: currently counted as a live TP>1 instance?
+    high: Vec<bool>,
+    /// Count of live TP>1 instances.
+    high_live: usize,
+}
+
+impl HostIndex {
+    pub fn new(hosts: usize) -> HostIndex {
+        HostIndex { per_host: vec![Vec::new(); hosts], ..HostIndex::default() }
+    }
+
+    /// Index an existing instance table from scratch.
+    pub fn build(instances: &[Instance], hosts: usize) -> HostIndex {
+        let mut idx = HostIndex::new(hosts);
+        for inst in instances {
+            idx.note(inst);
+        }
+        idx
+    }
+
+    /// Reconcile the index with `inst`'s current state.
+    pub fn note(&mut self, inst: &Instance) {
+        if inst.id >= self.mergeable.len() {
+            self.mergeable.resize(inst.id + 1, false);
+            self.high.resize(inst.id + 1, false);
+        }
+        if inst.host >= self.per_host.len() {
+            self.per_host.resize_with(inst.host + 1, Vec::new);
+        }
+        let m = !inst.retired && inst.degree == 1 && inst.transforming.is_none();
+        if m != self.mergeable[inst.id] {
+            self.mergeable[inst.id] = m;
+            let list = &mut self.per_host[inst.host];
+            if m {
+                let pos = list.partition_point(|&x| x < inst.id);
+                list.insert(pos, inst.id);
+            } else if let Ok(pos) = list.binary_search(&inst.id) {
+                list.remove(pos);
+            }
+        }
+        let h = !inst.retired && inst.degree > 1;
+        if h != self.high[inst.id] {
+            self.high[inst.id] = h;
+            if h {
+                self.high_live += 1;
+            } else {
+                self.high_live -= 1;
+            }
+        }
+    }
+
+    /// Mergeable TP1 instance ids on `host`, ascending.
+    pub fn mergeable_on(&self, host: usize) -> &[usize] {
+        self.per_host.get(host).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn count(&self, host: usize) -> usize {
+        self.per_host.get(host).map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.per_host.len()
+    }
+
+    /// Any live TP>1 instance in the cluster?
+    pub fn has_high_tp(&self) -> bool {
+        self.high_live > 0
+    }
+
+    /// Host with the most mergeable TP1 instances, requiring at least `n`
+    /// (ties resolve to the lowest host id, matching a full rescan).
+    pub fn best_merge_host(&self, n: usize) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (count, host)
+        for (host, list) in self.per_host.iter().enumerate() {
+            if best.map(|(c, _)| list.len() > c).unwrap_or(true) {
+                best = Some((list.len(), host));
+            }
+        }
+        match best {
+            Some((count, host)) if count >= n => Some(host),
+            _ => None,
+        }
+    }
+
+    /// Recompute from scratch and compare (debug builds; test hook).
+    pub fn debug_verify(&self, instances: &[Instance]) {
+        #[cfg(debug_assertions)]
+        {
+            let rebuilt = HostIndex::build(instances, self.per_host.len());
+            assert_eq!(
+                rebuilt.per_host, self.per_host,
+                "host index diverged from the instance table"
+            );
+            assert_eq!(rebuilt.high_live, self.high_live, "high-TP count diverged");
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = instances;
+    }
+}
 
 /// Immutable view of the cluster a policy routes against.
 pub struct ClusterView<'a> {
@@ -15,6 +137,10 @@ pub struct ClusterView<'a> {
     pub engine: &'a EngineModel,
     pub cfg: &'a ClusterConfig,
     pub now: SimTime,
+    /// Incremental merge-candidate index. `None` falls back to scanning
+    /// `instances` (tests and ad-hoc views); the simulator always supplies
+    /// it, keeping routing allocation-free.
+    pub tp1: Option<&'a HostIndex>,
 }
 
 impl<'a> ClusterView<'a> {
@@ -23,23 +149,63 @@ impl<'a> ClusterView<'a> {
         self.instances.iter().filter(|i| !i.retired)
     }
 
-    /// Live TP1-degree instances on `host`.
-    pub fn tp1_on_host(&self, host: usize) -> Vec<usize> {
-        self.live()
-            .filter(|i| i.host == host && i.degree == 1 && i.transforming.is_none())
-            .map(|i| i.id)
-            .collect()
+    fn is_mergeable(i: &Instance) -> bool {
+        i.degree == 1 && i.transforming.is_none()
     }
 
-    /// Hosts ordered by count of mergeable TP1 instances (desc).
-    pub fn hosts_by_tp1(&self) -> Vec<(usize, usize)> {
-        let mut counts = std::collections::BTreeMap::new();
-        for i in self.live() {
-            if i.degree == 1 && i.transforming.is_none() {
-                *counts.entry(i.host).or_insert(0usize) += 1;
-            }
+    /// Any live TP>1 instance?
+    pub fn has_high_tp(&self) -> bool {
+        match self.tp1 {
+            Some(idx) => idx.has_high_tp(),
+            None => self.live().any(|i| i.degree > 1),
         }
-        let mut v: Vec<(usize, usize)> = counts.into_iter().collect();
+    }
+
+    /// Fill `out` with the live TP1-degree instance ids on `host`,
+    /// ascending, without allocating (beyond `out`'s retained capacity).
+    pub fn tp1_on_host_into(&self, host: usize, out: &mut Vec<usize>) {
+        out.clear();
+        match self.tp1 {
+            Some(idx) => out.extend_from_slice(idx.mergeable_on(host)),
+            None => out.extend(
+                self.live().filter(|i| i.host == host && Self::is_mergeable(i)).map(|i| i.id),
+            ),
+        }
+    }
+
+    /// Live TP1-degree instances on `host` (allocating convenience).
+    pub fn tp1_on_host(&self, host: usize) -> Vec<usize> {
+        let mut v = Vec::new();
+        self.tp1_on_host_into(host, &mut v);
+        v
+    }
+
+    /// Host with the most mergeable TP1 instances, requiring at least `n`.
+    pub fn best_merge_host(&self, n: usize) -> Option<usize> {
+        match self.tp1 {
+            Some(idx) => idx.best_merge_host(n),
+            None => self.hosts_by_tp1().into_iter().find(|&(_, c)| c >= n).map(|(h, _)| h),
+        }
+    }
+
+    /// Hosts ordered by count of mergeable TP1 instances (desc; ties
+    /// ascend by host id). Allocates — prefer [`Self::best_merge_host`].
+    pub fn hosts_by_tp1(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = match self.tp1 {
+            Some(idx) => (0..idx.hosts())
+                .filter(|&h| idx.count(h) > 0)
+                .map(|h| (h, idx.count(h)))
+                .collect(),
+            None => {
+                let mut counts = std::collections::BTreeMap::new();
+                for i in self.live() {
+                    if Self::is_mergeable(i) {
+                        *counts.entry(i.host).or_insert(0usize) += 1;
+                    }
+                }
+                counts.into_iter().collect()
+            }
+        };
         v.sort_by(|a, b| b.1.cmp(&a.1));
         v
     }
@@ -98,23 +264,30 @@ pub fn needed_tp(req: &ActiveRequest, view: &ClusterView<'_>) -> Option<u64> {
         .find(|&tp| view.engine.max_seq(tp) >= req.final_len())
 }
 
-/// Select `n` mergeable TP1 instances on one host, preferring the host
-/// with the most candidates, then the least-loaded instances.
+/// Select `n` mergeable TP1 instances on one host into `out`, preferring
+/// the host with the most candidates, then the least-loaded instances.
+/// Returns false (and clears `out`) when no host has `n` candidates.
+/// Allocation-free given retained `out` capacity (the candidate list is at
+/// most `gpus_per_host` long, below the stable sort's allocation cutover).
+pub fn pick_merge_group_into(view: &ClusterView<'_>, n: usize, out: &mut Vec<usize>) -> bool {
+    let Some(host) = view.best_merge_host(n) else {
+        out.clear();
+        return false;
+    };
+    view.tp1_on_host_into(host, out);
+    out.sort_by(|&a, &b| {
+        let la = view.instances[a].load(view.engine);
+        let lb = view.instances[b].load(view.engine);
+        la.partial_cmp(&lb).unwrap()
+    });
+    out.truncate(n);
+    true
+}
+
+/// Allocating convenience wrapper over [`pick_merge_group_into`].
 pub fn pick_merge_group(view: &ClusterView<'_>, n: usize) -> Option<Vec<usize>> {
-    for (host, count) in view.hosts_by_tp1() {
-        if count < n {
-            continue;
-        }
-        let mut ids = view.tp1_on_host(host);
-        ids.sort_by(|&a, &b| {
-            let la = view.instances[a].load(view.engine);
-            let lb = view.instances[b].load(view.engine);
-            la.partial_cmp(&lb).unwrap()
-        });
-        ids.truncate(n);
-        return Some(ids);
-    }
-    None
+    let mut out = Vec::new();
+    pick_merge_group_into(view, n, &mut out).then_some(out)
 }
 
 // ---------------------------------------------------------------------
@@ -125,8 +298,9 @@ pub fn pick_merge_group(view: &ClusterView<'_>, n: usize) -> Option<Vec<usize>> 
 pub struct GygesPolicy {
     /// Instances currently reserved as scale-up headroom: the scheduler
     /// keeps their load low so a transformation cannot OOM
-    /// (`check_reserve` in Algorithm 1).
-    pub reserved: BTreeSet<usize>,
+    /// (`check_reserve` in Algorithm 1). Small; linear scans beat set
+    /// lookups and the buffer is reused across requests.
+    pub reserved: Vec<usize>,
     /// Load cap applied to reserved instances for short traffic.
     pub reserve_cap: f64,
     /// Most recent long-request arrival the scheduler has seen. Scale-down
@@ -138,15 +312,18 @@ pub struct GygesPolicy {
     pub last_long_seen: Option<SimTime>,
     /// How long after the last long request a TP>1 instance is retained.
     pub long_hold_s: f64,
+    /// Reused candidate buffer for reserve computation.
+    scratch: Vec<usize>,
 }
 
 impl Default for GygesPolicy {
     fn default() -> Self {
         GygesPolicy {
-            reserved: BTreeSet::new(),
+            reserved: Vec::new(),
             reserve_cap: 0.55,
             last_long_seen: None,
             long_hold_s: 45.0,
+            scratch: Vec::new(),
         }
     }
 }
@@ -157,13 +334,15 @@ impl GygesPolicy {
     /// otherwise no reserve is needed.
     fn update_reserve(&mut self, view: &ClusterView<'_>) {
         self.reserved.clear();
-        let has_high = view.live().any(|i| i.degree > 1);
-        if has_high {
+        if view.has_high_tp() {
             return;
         }
         let n = (view.cfg.max_tp() as usize).min(view.cfg.gpus_per_host);
-        if let Some(group) = pick_merge_group(view, n) {
-            self.reserved.extend(group);
+        if pick_merge_group_into(view, n, &mut self.scratch) {
+            self.reserved.extend_from_slice(&self.scratch);
+            // Ascending-id order, matching the ordered set this used to be
+            // (scale-up member selection draws from the front).
+            self.reserved.sort_unstable();
         }
     }
 }
@@ -278,14 +457,11 @@ impl GygesPolicy {
 
 /// Round-Robin: next instance in rotation; if it cannot hold the request,
 /// it "collaborates with neighbouring instances" to scale up (§6.2.4).
+#[derive(Default)]
 pub struct RoundRobinPolicy {
     cursor: usize,
-}
-
-impl Default for RoundRobinPolicy {
-    fn default() -> Self {
-        RoundRobinPolicy { cursor: 0 }
-    }
+    /// Reused live-id buffer.
+    scratch: Vec<usize>,
 }
 
 impl RoutePolicy for RoundRobinPolicy {
@@ -294,7 +470,19 @@ impl RoutePolicy for RoundRobinPolicy {
     }
 
     fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
-        let live: Vec<usize> = view.live().map(|i| i.id).collect();
+        // Reuse the live-id buffer across calls (allocation-free once
+        // warm); take it out of `self` so the cursor stays mutable.
+        let mut live = std::mem::take(&mut self.scratch);
+        live.clear();
+        live.extend(view.live().map(|i| i.id));
+        let route = self.route_over(req, view, &live);
+        self.scratch = live;
+        route
+    }
+}
+
+impl RoundRobinPolicy {
+    fn route_over(&mut self, req: &ActiveRequest, view: &ClusterView<'_>, live: &[usize]) -> Route {
         if live.is_empty() {
             return Route::Defer;
         }
@@ -325,17 +513,6 @@ impl RoutePolicy for RoundRobinPolicy {
     }
 }
 
-/// Absolute committed KV tokens (what a capacity-fraction-oblivious
-/// scheduler compares — a TP4 holding one 50K request looks *heavier*
-/// than an empty TP1 even though its pool is 10× larger).
-fn committed_tokens(inst: &Instance) -> u64 {
-    inst.running
-        .iter()
-        .map(|r| r.final_len())
-        .chain(inst.prefill_queue.iter().map(|r| r.final_len()))
-        .sum()
-}
-
 /// Least-Load-First: route to the least-loaded fitting instance.
 pub struct LeastLoadPolicy;
 
@@ -348,13 +525,15 @@ impl RoutePolicy for LeastLoadPolicy {
         // Least ABSOLUTE load first — LLF is oblivious to sequence-length
         // limits and to capacity fractions: an empty TP1 beats a TP4 that
         // is serving one long request, so a new long request lands on the
-        // TP1 and forces a scale-up (Figure 13).
+        // TP1 and forces a scale-up (Figure 13). `committed_tokens` is the
+        // absolute committed-KV count a capacity-fraction-oblivious
+        // scheduler compares.
         let mut best: Option<(usize, u64)> = None;
         for i in view.live() {
             if i.transforming.is_some() {
                 continue;
             }
-            let l = committed_tokens(i);
+            let l = i.committed_tokens();
             if best.map(|(_, bl)| l < bl).unwrap_or(true) {
                 best = Some((i.id, l));
             }
@@ -407,6 +586,7 @@ pub fn make_policy(policy: crate::config::Policy) -> Box<dyn RoutePolicy> {
 mod tests {
     use super::*;
     use crate::config::{ClusterConfig, ModelConfig};
+    use std::collections::BTreeSet;
 
     fn setup() -> (ClusterConfig, EngineModel, Vec<Instance>) {
         let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
@@ -421,7 +601,7 @@ mod tests {
         engine: &'a EngineModel,
         instances: &'a [Instance],
     ) -> ClusterView<'a> {
-        ClusterView { instances, engine, cfg, now: SimTime::from_secs_f64(100.0) }
+        ClusterView { instances, engine, cfg, now: SimTime::from_secs_f64(100.0), tp1: None }
     }
 
     fn long_req() -> ActiveRequest {
@@ -430,6 +610,11 @@ mod tests {
 
     fn short_req(id: u64) -> ActiveRequest {
         ActiveRequest::new(id, SimTime::ZERO, 1000, 100)
+    }
+
+    fn decoding(mut req: ActiveRequest) -> ActiveRequest {
+        req.phase = super::super::request::Phase::Decode;
+        req
     }
 
     #[test]
@@ -454,9 +639,7 @@ mod tests {
             instances[i].retired = true;
         }
         let mut tp4 = Instance::new(8, 0, vec![0, 1, 2, 3], 4);
-        let mut busy = ActiveRequest::new(99, SimTime::ZERO, 40_000, 512);
-        busy.phase = super::super::request::Phase::Decode;
-        tp4.running.push(busy);
+        tp4.enqueue_running(decoding(ActiveRequest::new(99, SimTime::ZERO, 40_000, 512)));
         instances.push(tp4);
         let mut p = GygesPolicy::default();
         let r = p.route(&long_req(), &view(&cfg, &engine, &instances));
@@ -472,9 +655,7 @@ mod tests {
             instances[i].retired = true;
         }
         let mut tp4 = Instance::new(8, 0, vec![0, 1, 2, 3], 4);
-        let mut busy = ActiveRequest::new(99, SimTime::ZERO, 60_000, 512);
-        busy.phase = super::super::request::Phase::Decode;
-        tp4.running.push(busy);
+        tp4.enqueue_running(decoding(ActiveRequest::new(99, SimTime::ZERO, 60_000, 512)));
         instances.push(tp4);
         let mut p = LeastLoadPolicy;
         let r = p.route(&long_req(), &view(&cfg, &engine, &instances));
@@ -528,14 +709,13 @@ mod tests {
             engine: &engine,
             cfg: &cfg,
             now: SimTime::from_secs_f64(100.0),
+            tp1: None,
         };
         assert!(default_scale_down(&inst, &v), "idle TP4 should scale down");
         // long request blocks it
-        let mut r = ActiveRequest::new(1, SimTime::ZERO, 30_000, 256);
-        r.phase = super::super::request::Phase::Decode;
-        inst.running.push(r);
+        inst.enqueue_running(decoding(ActiveRequest::new(1, SimTime::ZERO, 30_000, 256)));
         assert!(!default_scale_down(&inst, &v));
-        inst.running.clear();
+        let _ = inst.take_work();
         // dwell not elapsed
         inst.last_transform = SimTime::from_secs_f64(99.0);
         assert!(!default_scale_down(&inst, &v));
@@ -551,5 +731,63 @@ mod tests {
         assert_eq!(needed_tp(&mid, &v), Some(2));
         let huge = ActiveRequest::new(4, SimTime::ZERO, 200_000, 256);
         assert_eq!(needed_tp(&huge, &v), None);
+    }
+
+    #[test]
+    fn host_index_matches_scan() {
+        let (cfg, engine, mut instances) = setup();
+        // Retire one, transform one, raise one to TP2.
+        instances[2].retired = true;
+        instances[5].degree = 2;
+        let mut idx = HostIndex::build(&instances, 1);
+        idx.debug_verify(&instances);
+        assert_eq!(idx.mergeable_on(0), &[0, 1, 3, 4, 6, 7]);
+        assert!(idx.has_high_tp());
+        // Flip states and re-note: the index reconciles incrementally.
+        instances[2].retired = false;
+        idx.note(&instances[2]);
+        instances[5].degree = 1;
+        idx.note(&instances[5]);
+        idx.debug_verify(&instances);
+        assert_eq!(idx.mergeable_on(0), &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(!idx.has_high_tp());
+        // The indexed view agrees with the scanning fallback.
+        let with_idx = ClusterView {
+            instances: &instances,
+            engine: &engine,
+            cfg: &cfg,
+            now: SimTime::ZERO,
+            tp1: Some(&idx),
+        };
+        let scanned = view(&cfg, &engine, &instances);
+        assert_eq!(with_idx.tp1_on_host(0), scanned.tp1_on_host(0));
+        assert_eq!(with_idx.best_merge_host(4), scanned.best_merge_host(4));
+        assert_eq!(with_idx.hosts_by_tp1(), scanned.hosts_by_tp1());
+    }
+
+    #[test]
+    fn pick_merge_group_reuses_buffer_and_prefers_least_loaded() {
+        let (cfg, engine, mut instances) = setup();
+        // Load instance 0 so it is not picked for a group of 4.
+        for k in 0..3 {
+            instances[0].admit(ActiveRequest::new(100 + k, SimTime::ZERO, 3000, 200));
+        }
+        let idx = HostIndex::build(&instances, 1);
+        let v = ClusterView {
+            instances: &instances,
+            engine: &engine,
+            cfg: &cfg,
+            now: SimTime::ZERO,
+            tp1: Some(&idx),
+        };
+        let mut buf = Vec::new();
+        assert!(pick_merge_group_into(&v, 4, &mut buf));
+        assert_eq!(buf.len(), 4);
+        assert!(!buf.contains(&0), "the loaded instance must be skipped");
+        // Same answer as the allocating wrapper.
+        assert_eq!(pick_merge_group(&v, 4), Some(buf.clone()));
+        // Asking for more candidates than exist fails cleanly.
+        assert!(!pick_merge_group_into(&v, 9, &mut buf));
+        assert!(buf.is_empty());
     }
 }

@@ -2,19 +2,26 @@
 //! the paper's number next to the measured one and writing JSON rows to
 //! `target/repro/`. The `benches/` binaries and the `gyges repro` CLI both
 //! dispatch here (see DESIGN.md §4 for the experiment index).
+//!
+//! Simulation sweeps (Figures 12–14) go through the [`sweep`] driver: jobs
+//! fan out across cores and merge in fixed order, so the printed tables
+//! and `target/repro/` rows are identical to a serial run.
 
-use crate::baselines::{run_fig14, run_static_hybrid, StaticHybridConfig};
+pub mod sweep;
+
+use crate::baselines::{fig14_systems, run_static_hybrid, StaticHybridConfig};
 use crate::config::calib;
 use crate::config::{ClusterConfig, GpuSpec, ModelConfig, Policy};
 use crate::coordinator::{run_system, SystemKind};
 use crate::kvcache::fig9_series;
-use crate::metrics::RunReport;
 use crate::sim::{EngineModel, SimTime};
 use crate::transform::fig11_sweep;
 use crate::util::json::{write_repro_rows, Json};
 use crate::util::table::Table;
 use crate::weights::{fig10_series, page_counts, LayerPadPlan};
 use crate::workload::{LengthModel, Trace};
+use std::sync::Arc;
+use sweep::{run_sweep, SweepJob};
 
 fn row_json(pairs: &[(&str, Json)]) -> Json {
     let mut o = Json::obj();
@@ -323,23 +330,40 @@ pub fn fig12_trace(cfg: &ClusterConfig, seed: u64, horizon_s: f64) -> Trace {
     trace
 }
 
-/// Figure 12: scheduler comparison (RR / LLF / Gyges) per model.
-pub fn fig12(horizon_s: f64, models: &[ModelConfig]) -> Vec<Json> {
-    let mut t = Table::new(["model", "policy", "tput (tps)", "ttft p50", "scale-ups", "gain vs best baseline"]);
-    let mut rows = Vec::new();
+/// The Figure-12 policy set, in table order (baselines first).
+pub const FIG12_POLICIES: [Policy; 3] = [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges];
+
+/// Build the Figure-12 job list (model × policy) for the sweep driver.
+pub fn fig12_jobs(horizon_s: f64, models: &[ModelConfig]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
     for m in models {
         let cfg = ClusterConfig::paper_default(m.clone());
-        let trace = fig12_trace(&cfg, 0xF16_12, horizon_s);
-        let mut by_policy = Vec::new();
-        for policy in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
-            let out = run_system(cfg.clone(), SystemKind::Gyges, Some(policy), trace.clone());
-            by_policy.push((policy, out));
+        let trace = Arc::new(fig12_trace(&cfg, 0xF16_12, horizon_s));
+        for policy in FIG12_POLICIES {
+            jobs.push(SweepJob::new(
+                format!("{}/{}", m.name, policy.name()),
+                cfg.clone(),
+                SystemKind::Gyges,
+                Some(policy),
+                Arc::clone(&trace),
+            ));
         }
+    }
+    jobs
+}
+
+/// Figure 12: scheduler comparison (RR / LLF / Gyges) per model.
+pub fn fig12(horizon_s: f64, models: &[ModelConfig]) -> Vec<Json> {
+    let results = run_sweep(&fig12_jobs(horizon_s, models));
+    sweep::warn_on_errors(&results);
+    let mut t = Table::new(["model", "policy", "tput (tps)", "ttft p50", "scale-ups", "gain vs best baseline"]);
+    let mut rows = Vec::new();
+    for (m, by_policy) in models.iter().zip(results.chunks(FIG12_POLICIES.len())) {
         let best_baseline = by_policy[..2]
             .iter()
-            .map(|(_, o)| o.report.throughput_tps)
+            .map(|o| o.report.throughput_tps)
             .fold(0.0, f64::max);
-        for (policy, out) in &by_policy {
+        for (policy, out) in FIG12_POLICIES.iter().zip(by_policy) {
             let gain = out.report.throughput_tps / best_baseline - 1.0;
             t.row([
                 m.name.to_string(),
@@ -349,13 +373,17 @@ pub fn fig12(horizon_s: f64, models: &[ModelConfig]) -> Vec<Json> {
                 format!("{}", out.counters.scale_ups),
                 if *policy == Policy::Gyges { format!("{:+.1}%", gain * 100.0) } else { "-".into() },
             ]);
-            rows.push(row_json(&[
+            let mut row = row_json(&[
                 ("model", Json::from(m.name)),
                 ("policy", Json::from(policy.name())),
                 ("tput", Json::from(out.report.throughput_tps)),
                 ("ttft_p50", Json::from(out.report.ttft_p50_s)),
                 ("scale_ups", Json::from(out.counters.scale_ups)),
-            ]));
+            ]);
+            if let Some(e) = &out.error {
+                row.set("error", e.as_str());
+            }
+            rows.push(row);
         }
     }
     println!("Figure 12 — scheduling strategies (paper: gyges +26.1%..39.2% vs RR/LLF)");
@@ -364,10 +392,9 @@ pub fn fig12(horizon_s: f64, models: &[ModelConfig]) -> Vec<Json> {
     rows
 }
 
-/// Figure 13: TPS trend around a long-request arrival at t=120 s.
-pub fn fig13() -> Vec<Json> {
-    // Scripted scenario: background shorts, one long at t=10 (creates a
-    // TP4), a second long at t=120 — the policies diverge there.
+/// The scripted Figure-13 trace: background shorts, one long at t=10
+/// (creates a TP4), a second long at t=120 — the policies diverge there.
+pub fn fig13_trace() -> Trace {
     let mut trace = Trace::default();
     let mut id = 0u64;
     for i in 0..2400 {
@@ -389,12 +416,35 @@ pub fn fig13() -> Vec<Json> {
         id += 1;
     }
     trace.sort();
+    trace
+}
+
+/// Build the Figure-13 job list (one trace, three policies).
+pub fn fig13_jobs() -> Vec<SweepJob> {
     let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let trace = Arc::new(fig13_trace());
+    FIG12_POLICIES
+        .iter()
+        .map(|&policy| {
+            SweepJob::new(
+                format!("fig13/{}", policy.name()),
+                cfg.clone(),
+                SystemKind::Gyges,
+                Some(policy),
+                Arc::clone(&trace),
+            )
+        })
+        .collect()
+}
+
+/// Figure 13: TPS trend around a long-request arrival at t=120 s.
+pub fn fig13() -> Vec<Json> {
+    let results = run_sweep(&fig13_jobs());
+    sweep::warn_on_errors(&results);
     let mut rows = Vec::new();
     let mut t = Table::new(["policy", "scale-ups", "tput (tps)", "tps@110-120s", "tps@120-130s", "tps@130-140s"]);
-    for policy in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
-        let out = run_system(cfg.clone(), SystemKind::Gyges, Some(policy), trace.clone());
-        let series = out.recorder.tps_series();
+    for (policy, out) in FIG12_POLICIES.iter().zip(&results) {
+        let series = &out.tps_series;
         let bucket = |lo: u64, hi: u64| -> f64 {
             let sum: u64 = series.iter().filter(|(s, _)| *s >= lo && *s < hi).map(|(_, c)| c).sum();
             sum as f64 / (hi - lo) as f64
@@ -407,12 +457,16 @@ pub fn fig13() -> Vec<Json> {
             format!("{:.1}", bucket(120, 130)),
             format!("{:.1}", bucket(130, 140)),
         ]);
-        rows.push(row_json(&[
+        let mut row = row_json(&[
             ("policy", Json::from(policy.name())),
             ("scale_ups", Json::from(out.counters.scale_ups)),
             ("tput", Json::from(out.report.throughput_tps)),
             ("tps_120_130", Json::from(bucket(120, 130))),
-        ]));
+        ]);
+        if let Some(e) = &out.error {
+            row.set("error", e.as_str());
+        }
+        rows.push(row);
     }
     println!("Figure 13 — TPS trend (paper: RR/LLF trigger a 2nd scale-up at t=120 s; gyges routes to the existing TP4)");
     t.print();
@@ -420,20 +474,39 @@ pub fn fig13() -> Vec<Json> {
     rows
 }
 
+/// Build the Figure-14 job list (QPS × system) for the sweep driver.
+pub fn fig14_jobs(horizon_s: f64, qps_list: &[f64]) -> Vec<SweepJob> {
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let mut jobs = Vec::new();
+    for &qps in qps_list {
+        let trace = Arc::new(Trace::production(0xF16_14, qps, horizon_s));
+        for sys in fig14_systems() {
+            jobs.push(SweepJob::new(
+                format!("qps{qps}/{}", sys.name()),
+                cfg.clone(),
+                sys,
+                None,
+                Arc::clone(&trace),
+            ));
+        }
+    }
+    jobs
+}
+
 /// Figure 14: end-to-end throughput / TTFT / TPOT vs KunServe/LoongServe.
 pub fn fig14(horizon_s: f64, qps_list: &[f64]) -> Vec<Json> {
-    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let n_systems = fig14_systems().len();
+    let results = run_sweep(&fig14_jobs(horizon_s, qps_list));
+    sweep::warn_on_errors(&results);
     let mut t = Table::new(["qps", "system", "tput (tps)", "ttft p50", "ttft p99", "tpot p50", "gain vs best alt"]);
     let mut rows = Vec::new();
-    for &qps in qps_list {
-        let trace = Trace::production(0xF16_14, qps, horizon_s);
-        let outs = run_fig14(&cfg, &trace);
-        let reports: Vec<&RunReport> = outs.iter().map(|o| &o.report).collect();
+    for (&qps, outs) in qps_list.iter().zip(results.chunks(n_systems)) {
+        let reports: Vec<&crate::metrics::RunReport> = outs.iter().map(|o| &o.report).collect();
         let best_alt = reports[2..]
             .iter()
             .map(|r| r.throughput_tps)
             .fold(0.0, f64::max);
-        for r in &reports {
+        for (r, out) in reports.iter().zip(outs) {
             let is_gyges = r.label.starts_with("gyges/");
             t.row([
                 format!("{qps:.1}"),
@@ -444,14 +517,18 @@ pub fn fig14(horizon_s: f64, qps_list: &[f64]) -> Vec<Json> {
                 format!("{:.1}ms", r.tpot_p50_s * 1e3),
                 if is_gyges { format!("{:.2}x", r.throughput_tps / best_alt.max(1e-9)) } else { "-".into() },
             ]);
-            rows.push(row_json(&[
+            let mut row = row_json(&[
                 ("qps", Json::from(qps)),
                 ("system", Json::from(r.label.clone())),
                 ("tput", Json::from(r.throughput_tps)),
                 ("ttft_p50", Json::from(r.ttft_p50_s)),
                 ("ttft_p99", Json::from(r.ttft_p99_s)),
                 ("tpot_p50", Json::from(r.tpot_p50_s)),
-            ]));
+            ]);
+            if let Some(e) = &out.error {
+                row.set("error", e.as_str());
+            }
+            rows.push(row);
         }
     }
     println!("Figure 14 — end-to-end (paper: gyges 1.75x-6.57x tput, TTFT -53%, TPOT -74%; overlap -26.7% TTFT)");

@@ -1,0 +1,247 @@
+//! Parallel, deterministic sweep driver.
+//!
+//! An experiment sweep (policy × model × QPS, Figures 12–14) is a list of
+//! independent [`ClusterSim`](crate::coordinator::ClusterSim) runs. Each
+//! run is a pure function of its [`SweepJob`], so the driver fans jobs out
+//! across OS threads with a work-stealing shared counter (rayon is not in
+//! the offline registry snapshot; `std::thread::scope` + an atomic next-job
+//! index gives the same dynamic load balancing for coarse-grained jobs)
+//! and merges results **by job index** — the merged output is byte-
+//! identical to the serial driver's, which the `determinism` integration
+//! test and [`tests::parallel_matches_serial_bytes`] both enforce.
+//!
+//! Thread count: `GYGES_SWEEP_THREADS` env var, else the machine's
+//! available parallelism. Set it to 1 to force the serial path.
+
+use crate::config::{ClusterConfig, Policy};
+use crate::coordinator::{run_system, SimCounters, SystemKind};
+use crate::metrics::RunReport;
+use crate::util::json::Json;
+use crate::workload::Trace;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One independent simulation in a sweep. Traces are shared via `Arc` so
+/// a policy sweep over one workload does not deep-copy it per job at
+/// submission time (each run still clones its own working copy).
+#[derive(Clone)]
+pub struct SweepJob {
+    /// Caller-chosen identifier, carried through to the result.
+    pub key: String,
+    pub cfg: ClusterConfig,
+    pub system: SystemKind,
+    pub policy: Option<Policy>,
+    pub trace: Arc<Trace>,
+}
+
+impl SweepJob {
+    pub fn new(
+        key: impl Into<String>,
+        cfg: ClusterConfig,
+        system: SystemKind,
+        policy: Option<Policy>,
+        trace: Arc<Trace>,
+    ) -> SweepJob {
+        SweepJob { key: key.into(), cfg, system, policy, trace }
+    }
+}
+
+/// The portable outcome of one job: everything the figure renderers need,
+/// without the full per-request recorder.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub key: String,
+    pub report: RunReport,
+    pub counters: SimCounters,
+    /// Per-second output-token series (Figure 13).
+    pub tps_series: Vec<(u64, u64)>,
+    /// Stringified [`crate::coordinator::SimError`], if the run was cut.
+    pub error: Option<String>,
+}
+
+impl SweepResult {
+    /// Canonical JSON form (object keys sort deterministically), used by
+    /// the byte-identity tests and `BENCH_sim.json`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        counters
+            .set("scale_ups", self.counters.scale_ups)
+            .set("scale_downs", self.counters.scale_downs)
+            .set("deferred", self.counters.deferred)
+            .set("steps", self.counters.steps)
+            .set("events", self.counters.events);
+        let series: Vec<Json> = self
+            .tps_series
+            .iter()
+            .map(|&(s, c)| Json::Arr(vec![Json::from(s), Json::from(c)]))
+            .collect();
+        let mut o = Json::obj();
+        o.set("key", self.key.as_str())
+            .set("report", self.report.to_json())
+            .set("counters", counters)
+            .set("tps_series", Json::Arr(series))
+            .set(
+                "error",
+                self.error.as_deref().map(Json::from).unwrap_or(Json::Null),
+            );
+        o
+    }
+}
+
+fn run_job(job: &SweepJob) -> SweepResult {
+    let out = run_system(job.cfg.clone(), job.system, job.policy, (*job.trace).clone());
+    SweepResult {
+        key: job.key.clone(),
+        tps_series: out.recorder.tps_series(),
+        report: out.report,
+        counters: out.counters,
+        error: out.error.map(|e| e.to_string()),
+    }
+}
+
+/// Worker count: `GYGES_SWEEP_THREADS` override, else hardware threads.
+pub fn sweep_threads() -> usize {
+    if let Some(n) = std::env::var("GYGES_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run every job on the calling thread, in order.
+pub fn run_sweep_serial(jobs: &[SweepJob]) -> Vec<SweepResult> {
+    jobs.iter().map(run_job).collect()
+}
+
+/// Run jobs across `threads` workers. Workers steal the next unclaimed job
+/// index; results land in per-job slots and are merged in job order, so
+/// the output is byte-identical to [`run_sweep_serial`] regardless of
+/// completion order.
+pub fn run_sweep_parallel(jobs: &[SweepJob], threads: usize) -> Vec<SweepResult> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let workers = threads.clamp(1, jobs.len());
+    if workers == 1 {
+        return run_sweep_serial(jobs);
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SweepResult>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let result = run_job(&jobs[i]);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every claimed job stores a result"))
+        .collect()
+}
+
+/// The default driver: parallel across [`sweep_threads`] workers.
+pub fn run_sweep(jobs: &[SweepJob]) -> Vec<SweepResult> {
+    run_sweep_parallel(jobs, sweep_threads())
+}
+
+/// Surface cut runs loudly (stderr) and report whether any job errored.
+/// Figure renderers call this so an event-capped run can never silently
+/// contribute partial numbers to a table.
+pub fn warn_on_errors(results: &[SweepResult]) -> bool {
+    let mut any = false;
+    for r in results {
+        if let Some(e) = &r.error {
+            eprintln!("WARNING: sweep job {:?} terminated early: {e} — its rows are partial", r.key);
+            any = true;
+        }
+    }
+    any
+}
+
+/// Serialize a merged result list to one canonical string (one JSON object
+/// per line, in job order).
+pub fn results_to_jsonl(results: &[SweepResult]) -> String {
+    let mut s = String::new();
+    for r in results {
+        s.push_str(&r.to_json().to_string());
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn small_jobs() -> Vec<SweepJob> {
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let trace = Arc::new(Trace::hybrid_paper(3, 60.0));
+        [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges]
+            .into_iter()
+            .map(|p| {
+                SweepJob::new(
+                    format!("hybrid/{}", p.name()),
+                    cfg.clone(),
+                    SystemKind::Gyges,
+                    Some(p),
+                    Arc::clone(&trace),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_bytes() {
+        let jobs = small_jobs();
+        let serial = run_sweep_serial(&jobs);
+        let parallel = run_sweep_parallel(&jobs, 4);
+        assert_eq!(
+            results_to_jsonl(&serial),
+            results_to_jsonl(&parallel),
+            "parallel merge must be byte-identical to the serial driver"
+        );
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        let jobs = small_jobs();
+        let out = run_sweep_parallel(&jobs, 64);
+        assert_eq!(out.len(), jobs.len());
+        for (job, res) in jobs.iter().zip(&out) {
+            assert_eq!(job.key, res.key, "results stay in job order");
+            assert!(res.report.completed > 0);
+            assert!(res.error.is_none());
+        }
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        assert!(run_sweep_parallel(&[], 8).is_empty());
+        assert!(run_sweep_serial(&[]).is_empty());
+    }
+
+    #[test]
+    fn event_cap_surfaces_per_job() {
+        let mut cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        cfg.max_events = 10;
+        let trace = Arc::new(Trace::hybrid_paper(4, 30.0));
+        let jobs = vec![SweepJob::new(
+            "capped",
+            cfg,
+            SystemKind::Gyges,
+            Some(Policy::Gyges),
+            trace,
+        )];
+        let out = run_sweep(&jobs);
+        assert!(out[0].error.as_deref().unwrap_or("").contains("event cap"));
+    }
+}

@@ -27,7 +27,9 @@ pub mod transform;
 pub mod workload;
 pub mod kvcache;
 pub mod weights;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod sim;
 pub mod util;

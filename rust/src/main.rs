@@ -12,12 +12,11 @@
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
 use gyges::coordinator::{run_system, SystemKind};
-use gyges::serve::{synthetic_workload, RealServer, ServerConfig};
 use gyges::util::Args;
 use gyges::workload::Trace;
 
 fn main() {
-    gyges::util::logging::init(log::LevelFilter::Info);
+    gyges::util::logging::init(gyges::util::logging::Level::Info);
     let args = Args::from_env();
     let code = match args.command() {
         Some("info") => cmd_info(),
@@ -109,7 +108,15 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_real(_args: &Args) -> i32 {
+    eprintln!("serve-real needs the PJRT runtime: rebuild with `--features pjrt`");
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve_real(args: &Args) -> i32 {
+    use gyges::serve::{synthetic_workload, RealServer, ServerConfig};
     let artifacts = args.get_or("artifacts", "artifacts");
     let mut server = match RealServer::new(&artifacts, ServerConfig::default()) {
         Ok(s) => s,

@@ -1,12 +1,18 @@
 //! Per-request and cluster-level metric recording: TTFT, TPOT,
 //! throughput — the three quantities of Figure 14.
+//!
+//! Hot-path contract (see PERF.md): `on_arrival` / `on_first_token` /
+//! `on_token` / `on_finish` are O(1) — records live in a dense `Vec` slab
+//! keyed by request id (traces assign dense ids in [`crate::workload::
+//! Trace::sort`]), TPS buckets are a `Vec` indexed by simulated second,
+//! and completed/token totals are maintained incrementally so the
+//! end-of-run report never rescans the slab for them.
 
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::util::stats::Summary;
-use std::collections::BTreeMap;
 
 /// Lifecycle timestamps of one request.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RequestRecord {
     pub arrival: SimTime,
     /// First token emitted (prefill complete).
@@ -38,9 +44,18 @@ impl RequestRecord {
 /// Collects records for a whole experiment run.
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
-    records: BTreeMap<u64, RequestRecord>,
-    /// Output-token completions bucketed per second (Fig. 13 TPS trend).
-    tps_buckets: BTreeMap<u64, u64>,
+    /// Slab keyed by request id. Ids are expected to be dense (memory is
+    /// O(max id)); sparse test ids merely leave `None` holes.
+    records: Vec<Option<RequestRecord>>,
+    /// Count of occupied slab slots.
+    total: usize,
+    /// Count of finished requests (incremental; O(1) reads).
+    completed: usize,
+    /// Total output tokens generated (throughput numerator).
+    tokens: u64,
+    /// Output-token completions bucketed per second (Fig. 13 TPS trend),
+    /// indexed by whole simulated second.
+    tps_buckets: Vec<u64>,
     pub horizon: SimTime,
 }
 
@@ -49,69 +64,117 @@ impl Recorder {
         Recorder::default()
     }
 
+    fn slot_mut(&mut self, id: u64) -> &mut Option<RequestRecord> {
+        let idx = id as usize;
+        if idx >= self.records.len() {
+            self.records.resize(idx + 1, None);
+        }
+        &mut self.records[idx]
+    }
+
+    fn bump_bucket(&mut self, at: SimTime) {
+        let idx = at.as_secs_f64() as usize;
+        if idx >= self.tps_buckets.len() {
+            self.tps_buckets.resize(idx + 1, 0);
+        }
+        self.tps_buckets[idx] += 1;
+    }
+
     pub fn on_arrival(&mut self, id: u64, at: SimTime, input_len: u64, output_len: u64) {
-        self.records.insert(
-            id,
-            RequestRecord { arrival: at, input_len, output_len, ..Default::default() },
-        );
+        let record = RequestRecord { arrival: at, input_len, output_len, ..Default::default() };
+        let slot = self.slot_mut(id);
+        match slot.replace(record) {
+            // Re-registering an id unwinds the old record's contributions
+            // so the incremental totals stay exact.
+            Some(old) => {
+                self.tokens -= old.generated;
+                if old.finished.is_some() {
+                    self.completed -= 1;
+                }
+            }
+            None => self.total += 1,
+        }
         self.horizon = self.horizon.max(at);
     }
 
     pub fn on_first_token(&mut self, id: u64, at: SimTime) {
-        if let Some(r) = self.records.get_mut(&id) {
+        let mut emitted = false;
+        if let Some(r) = self.slot_mut(id).as_mut() {
             if r.first_token.is_none() {
                 r.first_token = Some(at);
                 r.generated = 1;
-                *self.tps_buckets.entry(at.as_secs_f64() as u64).or_insert(0) += 1;
+                emitted = true;
             }
+        }
+        if emitted {
+            self.tokens += 1;
+            self.bump_bucket(at);
         }
         self.horizon = self.horizon.max(at);
     }
 
     pub fn on_token(&mut self, id: u64, at: SimTime) {
-        if let Some(r) = self.records.get_mut(&id) {
+        let mut emitted = false;
+        if let Some(r) = self.slot_mut(id).as_mut() {
             r.generated += 1;
-            *self.tps_buckets.entry(at.as_secs_f64() as u64).or_insert(0) += 1;
+            emitted = true;
+        }
+        if emitted {
+            self.tokens += 1;
+            self.bump_bucket(at);
         }
         self.horizon = self.horizon.max(at);
     }
 
     pub fn on_finish(&mut self, id: u64, at: SimTime) {
-        if let Some(r) = self.records.get_mut(&id) {
-            r.finished = Some(at);
+        let mut newly_finished = false;
+        if let Some(r) = self.slot_mut(id).as_mut() {
+            if r.finished.is_none() {
+                r.finished = Some(at);
+                newly_finished = true;
+            }
+        }
+        if newly_finished {
+            self.completed += 1;
         }
         self.horizon = self.horizon.max(at);
     }
 
     pub fn get(&self, id: u64) -> Option<&RequestRecord> {
-        self.records.get(&id)
+        self.records.get(id as usize)?.as_ref()
+    }
+
+    /// All records with their ids, in id order.
+    pub fn records(&self) -> impl Iterator<Item = (u64, &RequestRecord)> {
+        self.records
+            .iter()
+            .enumerate()
+            .filter_map(|(id, r)| r.as_ref().map(|r| (id as u64, r)))
     }
 
     pub fn total(&self) -> usize {
-        self.records.len()
+        self.total
     }
 
     pub fn completed(&self) -> usize {
-        self.records.values().filter(|r| r.finished.is_some()).count()
+        self.completed
     }
 
     /// Output tokens per second over the run.
     pub fn throughput_tps(&self) -> f64 {
-        let tokens: u64 = self.records.values().map(|r| r.generated).sum();
         let secs = self.horizon.as_secs_f64();
         if secs <= 0.0 {
             0.0
         } else {
-            tokens as f64 / secs
+            self.tokens as f64 / secs
         }
     }
 
     /// TTFT summary in seconds over completed-prefill requests.
     pub fn ttft_summary(&self) -> Summary {
         let xs: Vec<f64> = self
-            .records
-            .values()
-            .filter_map(|r| r.ttft())
+            .records()
+            .filter_map(|(_, r)| r.ttft())
             .map(|d| d.as_secs_f64())
             .collect();
         Summary::of(&xs)
@@ -120,9 +183,8 @@ impl Recorder {
     /// TPOT summary in seconds.
     pub fn tpot_summary(&self) -> Summary {
         let xs: Vec<f64> = self
-            .records
-            .values()
-            .filter_map(|r| r.tpot())
+            .records()
+            .filter_map(|(_, r)| r.tpot())
             .map(|d| d.as_secs_f64())
             .collect();
         Summary::of(&xs)
@@ -131,24 +193,34 @@ impl Recorder {
     /// Fraction of requests meeting the paper's SLOs (TTFT<10 s,
     /// TPOT<100 ms).
     pub fn slo_attainment(&self, ttft_s: f64, tpot_s: f64) -> f64 {
-        let done: Vec<&RequestRecord> =
-            self.records.values().filter(|r| r.finished.is_some()).collect();
-        if done.is_empty() {
+        let mut done = 0usize;
+        let mut ok = 0usize;
+        for (_, r) in self.records() {
+            if r.finished.is_none() {
+                continue;
+            }
+            done += 1;
+            let ttft_ok = r.ttft().map(|t| t.as_secs_f64() < ttft_s).unwrap_or(false);
+            let tpot_ok = r.tpot().map(|t| t.as_secs_f64() < tpot_s).unwrap_or(true);
+            if ttft_ok && tpot_ok {
+                ok += 1;
+            }
+        }
+        if done == 0 {
             return 0.0;
         }
-        let ok = done
-            .iter()
-            .filter(|r| {
-                r.ttft().map(|t| t.as_secs_f64() < ttft_s).unwrap_or(false)
-                    && r.tpot().map(|t| t.as_secs_f64() < tpot_s).unwrap_or(true)
-            })
-            .count();
-        ok as f64 / done.len() as f64
+        ok as f64 / done as f64
     }
 
-    /// Tokens/s series bucketed per second (Figure 13).
+    /// Tokens/s series bucketed per second (Figure 13); seconds with no
+    /// completions are omitted, matching the sparse-map behaviour.
     pub fn tps_series(&self) -> Vec<(u64, u64)> {
-        self.tps_buckets.iter().map(|(&s, &c)| (s, c)).collect()
+        self.tps_buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, &c)| (s as u64, c))
+            .collect()
     }
 }
 
@@ -223,5 +295,34 @@ mod tests {
         assert!(rec.get(1).unwrap().tpot().is_none());
         assert_eq!(rec.completed(), 0);
         assert_eq!(rec.total(), 1);
+    }
+
+    #[test]
+    fn sparse_ids_leave_holes_not_records() {
+        let mut rec = Recorder::new();
+        rec.on_arrival(7, t(0.0), 10, 2);
+        assert_eq!(rec.total(), 1);
+        assert!(rec.get(3).is_none());
+        assert_eq!(rec.records().count(), 1);
+    }
+
+    #[test]
+    fn incremental_totals_survive_rearrival() {
+        let mut rec = Recorder::new();
+        rec.on_arrival(1, t(0.0), 10, 2);
+        rec.on_first_token(1, t(1.0));
+        rec.on_token(1, t(1.1));
+        rec.on_finish(1, t(1.1));
+        assert_eq!(rec.completed(), 1);
+        // Re-registering the id resets its contributions exactly.
+        rec.on_arrival(1, t(2.0), 10, 2);
+        assert_eq!(rec.completed(), 0);
+        assert_eq!(rec.total(), 1);
+        rec.on_first_token(1, t(3.0));
+        rec.on_token(1, t(3.1));
+        rec.on_finish(1, t(3.1));
+        assert_eq!(rec.completed(), 1);
+        // 2 tokens live (second pass) over horizon 3.1 s.
+        assert!((rec.throughput_tps() - 2.0 / 3.1).abs() < 1e-9);
     }
 }

@@ -1,51 +1,105 @@
-//! Tiny `log` facade backend: level-filtered stderr logger.
+//! Level-filtered stderr logging, dependency-free (the `log` facade crate
+//! is unavailable in the offline registry snapshot, like clap/serde —
+//! see DESIGN.md §9).
+//!
+//! Use the [`crate::log_error!`]..[`crate::log_trace!`] macros, or call
+//! [`log`] directly. Until [`init`] runs, everything is filtered out.
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-static LOGGER: StderrLogger = StderrLogger;
-static INSTALLED: AtomicBool = AtomicBool::new(false);
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
 
-struct StderrLogger;
-
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let lvl = match record.level() {
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+        }
     }
 
-    fn flush(&self) {}
+    pub fn by_name(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
 }
 
-/// Install the stderr logger (idempotent). `GYGES_LOG` env var overrides:
-/// error|warn|info|debug|trace.
-pub fn init(default: LevelFilter) {
-    if INSTALLED.swap(true, Ordering::SeqCst) {
-        return;
+/// 0 = off (pre-init); otherwise the maximum enabled `Level as u8`.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Install the stderr logger (idempotent — the first call wins). The
+/// `GYGES_LOG` env var overrides: error|warn|info|debug|trace.
+pub fn init(default: Level) {
+    let level = std::env::var("GYGES_LOG")
+        .ok()
+        .as_deref()
+        .and_then(Level::by_name)
+        .unwrap_or(default);
+    let _ = MAX_LEVEL.compare_exchange(0, level as u8, Ordering::SeqCst, Ordering::SeqCst);
+}
+
+/// Is `level` currently enabled?
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr if `level` is enabled.
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {target}: {msg}", level.name());
     }
-    let filter = match std::env::var("GYGES_LOG").ok().as_deref() {
-        Some("error") => LevelFilter::Error,
-        Some("warn") => LevelFilter::Warn,
-        Some("info") => LevelFilter::Info,
-        Some("debug") => LevelFilter::Debug,
-        Some("trace") => LevelFilter::Trace,
-        _ => default,
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($t)*))
     };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(filter);
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($t)*))
+    };
 }
 
 #[cfg(test)]
@@ -53,9 +107,23 @@ mod tests {
     use super::*;
 
     #[test]
-    fn init_is_idempotent() {
-        init(LevelFilter::Warn);
-        init(LevelFilter::Trace); // second call must not panic
-        log::info!("smoke");
+    fn init_is_idempotent_and_first_call_wins() {
+        init(Level::Warn);
+        init(Level::Trace); // second call must not raise the level
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        // GYGES_LOG may override in a dev shell; without it, Trace is off.
+        if std::env::var("GYGES_LOG").is_err() {
+            assert!(!enabled(Level::Trace));
+        }
+        crate::log_info!("smoke {}", 42);
+    }
+
+    #[test]
+    fn level_names_roundtrip() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::by_name(l.name().trim()), Some(l));
+        }
+        assert_eq!(Level::by_name("nope"), None);
     }
 }

@@ -1,0 +1,95 @@
+//! Determinism guarantees the experiment harness depends on:
+//!
+//! 1. Same trace + seed → identical `RunReport` (and identical per-request
+//!    records) across repeated runs of the simulator.
+//! 2. The parallel sweep driver's merged output is byte-identical to the
+//!    serial driver's, for the Figure 12/13 experiment sets.
+
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::coordinator::{run_system, SystemKind};
+use gyges::experiments::sweep::{
+    results_to_jsonl, run_sweep_parallel, run_sweep_serial, SweepJob,
+};
+use gyges::experiments::{fig12_jobs, fig13_jobs};
+use gyges::metrics::RequestRecord;
+use gyges::workload::Trace;
+use std::sync::Arc;
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+}
+
+/// Full observable state of one run, for exact comparison.
+fn snapshot(out: &gyges::coordinator::SimOutcome) -> (String, Vec<(u64, RequestRecord)>) {
+    let records: Vec<(u64, RequestRecord)> =
+        out.recorder.records().map(|(id, r)| (id, r.clone())).collect();
+    (out.report.to_json().to_string(), records)
+}
+
+#[test]
+fn repeated_runs_are_identical() {
+    let trace = Trace::hybrid_paper(0xD0, 180.0);
+    let first = run_system(cfg(), SystemKind::Gyges, None, trace.clone());
+    let (report0, records0) = snapshot(&first);
+    for _ in 0..2 {
+        let again = run_system(cfg(), SystemKind::Gyges, None, trace.clone());
+        let (report, records) = snapshot(&again);
+        assert_eq!(report0, report, "RunReport must be identical run-to-run");
+        assert_eq!(records0, records, "per-request records must be identical");
+        assert_eq!(first.counters, again.counters, "counters must be identical");
+    }
+}
+
+#[test]
+fn repeated_runs_identical_across_systems() {
+    let trace = Trace::production(0xD1, 3.0, 120.0);
+    for sys in [SystemKind::Gyges, SystemKind::Seesaw, SystemKind::LoongServe] {
+        let a = run_system(cfg(), sys, None, trace.clone());
+        let b = run_system(cfg(), sys, None, trace.clone());
+        assert_eq!(snapshot(&a), snapshot(&b), "{} diverged", sys.name());
+    }
+}
+
+#[test]
+fn parallel_sweep_matches_serial_fig12_set() {
+    // One model at a short horizon keeps the test fast while exercising
+    // the real Figure-12 job construction.
+    let jobs = fig12_jobs(90.0, &[ModelConfig::qwen2_5_32b()]);
+    assert_eq!(jobs.len(), 3);
+    let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+    let parallel = results_to_jsonl(&run_sweep_parallel(&jobs, 4));
+    assert_eq!(serial, parallel, "fig12 sweep: parallel must merge byte-identically");
+    // A second parallel run must not be affected by thread scheduling.
+    let parallel2 = results_to_jsonl(&run_sweep_parallel(&jobs, 2));
+    assert_eq!(serial, parallel2);
+}
+
+#[test]
+fn parallel_sweep_matches_serial_fig13_set() {
+    let jobs = fig13_jobs();
+    assert_eq!(jobs.len(), 3);
+    let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+    let parallel = results_to_jsonl(&run_sweep_parallel(&jobs, 8));
+    assert_eq!(serial, parallel, "fig13 sweep: parallel must merge byte-identically");
+}
+
+#[test]
+fn mixed_system_sweep_is_deterministic() {
+    let trace = Arc::new(Trace::hybrid_paper(0xD2, 90.0));
+    let jobs: Vec<SweepJob> = [
+        (SystemKind::Gyges, Some(Policy::Gyges)),
+        (SystemKind::Gyges, Some(Policy::RoundRobin)),
+        (SystemKind::KunServe, None),
+        (SystemKind::LoongServe, None),
+        (SystemKind::Seesaw, None),
+    ]
+    .into_iter()
+    .enumerate()
+    .map(|(k, (sys, policy))| {
+        SweepJob::new(format!("job{k}/{}", sys.name()), cfg(), sys, policy, Arc::clone(&trace))
+    })
+    .collect();
+    let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+    let parallel = results_to_jsonl(&run_sweep_parallel(&jobs, 5));
+    assert_eq!(serial, parallel);
+}

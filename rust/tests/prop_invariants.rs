@@ -50,7 +50,7 @@ fn random_instances(rng: &mut Prng, e: &EngineModel) -> Vec<Instance> {
             committed += len + 200;
             let mut req = ActiveRequest::new((id * 100 + r) as u64, SimTime::ZERO, len, 200);
             req.phase = gyges::coordinator::Phase::Decode;
-            inst.running.push(req);
+            inst.enqueue_running(req);
         }
         out.push(inst);
         id += 1;
@@ -81,13 +81,34 @@ fn prop_routing_decisions_are_sound() {
             |(instances, input)| {
                 let mut policy = make_policy(policy_kind);
                 let req = ActiveRequest::new(9999, SimTime::ZERO, *input, 256);
+                // The simulator always routes through the incremental
+                // HostIndex; a fresh policy over a scanning view must make
+                // the same decision (index/scan equivalence).
+                let index = gyges::coordinator::HostIndex::build(instances, 1);
+                index.debug_verify(instances);
                 let view = ClusterView {
                     instances,
                     engine: &e,
                     cfg: &c,
                     now: SimTime::from_secs_f64(1000.0),
+                    tp1: Some(&index),
                 };
-                match policy.route(&req, &view) {
+                let scan_view = ClusterView {
+                    instances,
+                    engine: &e,
+                    cfg: &c,
+                    now: SimTime::from_secs_f64(1000.0),
+                    tp1: None,
+                };
+                let mut scan_policy = make_policy(policy_kind);
+                let indexed_route = policy.route(&req, &view);
+                let scanned_route = scan_policy.route(&req, &scan_view);
+                if indexed_route != scanned_route {
+                    return Err(format!(
+                        "index/scan divergence: {indexed_route:?} vs {scanned_route:?}"
+                    ));
+                }
+                match indexed_route {
                     Route::Assign(id) => {
                         let inst = &instances[id];
                         if inst.retired {
