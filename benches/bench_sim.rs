@@ -1,24 +1,33 @@
 //! Perf harness for the cluster-simulator hot paths. Emits a
-//! machine-readable `BENCH_sim.json` (schema documented in PERF.md) so the
-//! events/sec and sweep wall-time trajectory is tracked from PR 1 onward.
+//! machine-readable `BENCH_sim.json` (schema v2, documented in PERF.md)
+//! so the events/sec and sweep wall-time trajectory is tracked from PR 1
+//! onward.
 //!
 //!   cargo bench --bench bench_sim [-- --out BENCH_sim.json
-//!       --requests 10000 --sweep-horizon 120 --samples 3]
+//!       --requests 10000 --sweep-horizon 120 --samples 3
+//!       --fleet-hosts 32 --route-requests 20000]
 //!
 //! Measures:
 //!  1. Single-threaded events/sec replaying a ~10k-request production
-//!     trace through the full Gyges system (recorder + routing + steps).
-//!  2. Wall time of the Figure-13-style policy × QPS sweep, serial vs
+//!     trace through the full Gyges system (recorder + routing + steps),
+//!     plus a profiled pass attributing wall time per event type and
+//!     route/kick/drain_backlog sub-phase (schema v2).
+//!  2. A large-fleet routing microbench (default 256 instances): the same
+//!     short-heavy trace routed with the incremental LoadIndex/HostIndex
+//!     versus the full-scan baseline, with the outcomes asserted
+//!     decision-identical — the O(instances)→O(log) claim as a number.
+//!  3. Wall time of the Figure-13-style policy × QPS sweep, serial vs
 //!     parallel, with the merged outputs checked byte-identical.
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
-use gyges::coordinator::{run_system, SystemKind};
+use gyges::coordinator::{run_system, ClusterSim, SimOutcome, SystemKind};
 use gyges::experiments::sweep::{
     results_to_jsonl, run_sweep_parallel, run_sweep_serial, sweep_threads, SweepJob,
 };
+use gyges::sim::SimTime;
 use gyges::util::json::Json;
 use gyges::util::Args;
-use gyges::workload::Trace;
+use gyges::workload::{Trace, TraceRequest};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -41,12 +50,47 @@ fn fig13_qps_sweep_jobs(horizon_s: f64) -> Vec<SweepJob> {
     jobs
 }
 
+/// Routing-dominated workload: a dense stream of short requests with tiny
+/// outputs, so per-arrival routing (not decode stepping) is the bulk of
+/// the event-loop work on a large fleet.
+fn routing_trace(requests: usize) -> Trace {
+    let mut t = Trace::default();
+    for i in 0..requests {
+        t.requests.push(TraceRequest {
+            id: i as u64,
+            arrival: SimTime::from_secs_f64(i as f64 * 0.005), // 200 qps
+            input_len: 1000,
+            output_len: 4,
+        });
+    }
+    t.sort();
+    t
+}
+
+fn run_fleet(cfg: &ClusterConfig, trace: &Trace, indexed: bool) -> (SimOutcome, f64) {
+    let mut sim = ClusterSim::new(cfg.clone(), SystemKind::Gyges, trace.clone());
+    if !indexed {
+        sim.disable_routing_index();
+    }
+    let t0 = Instant::now();
+    let out = sim.run();
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(out.error.is_none(), "routing microbench hit the event cap");
+    (out, wall)
+}
+
+fn outcome_fingerprint(out: &SimOutcome) -> (String, gyges::coordinator::SimCounters) {
+    (out.report.to_json().to_string(), out.counters)
+}
+
 fn main() {
     let args = Args::from_env();
     let out_path = args.get_or("out", "BENCH_sim.json");
     let target_requests = args.parsed_or("requests", 10_000usize);
     let sweep_horizon = args.parsed_or("sweep-horizon", 120.0f64);
     let samples = args.parsed_or("samples", 3usize).max(1);
+    let fleet_hosts = args.parsed_or("fleet-hosts", 32usize).max(1);
+    let route_requests = args.parsed_or("route-requests", 20_000usize).max(100);
 
     // ---- 1. single-threaded events/sec on a ~10k-request trace --------
     // Production lengths at 10 qps: ~1000 s of simulated traffic ≈ 10k.
@@ -85,7 +129,99 @@ fn main() {
         "single-thread best: {best_wall:.3} s wall, {events} events → {events_per_sec:.0} events/s ({completed} completed)"
     );
 
-    // ---- 2. figure-13 policy × QPS sweep, serial vs parallel ----------
+    // Profiled pass: per-event-type wall attribution (separate from the
+    // timed samples so Instant overhead never pollutes events/sec).
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let mut sim = ClusterSim::new(cfg, SystemKind::Gyges, trace.clone());
+    sim.enable_profiling();
+    let profiled = sim.run();
+    let prof = profiled.profile.expect("profiling was enabled");
+    let c = profiled.counters;
+    println!("per-event wall attribution (profiled pass):");
+    println!("  arrival        {:>10.4} s over {} events", prof.arrival_s, c.arrival_events);
+    println!("  step           {:>10.4} s over {} events", prof.step_s, c.step_events);
+    println!(
+        "  transform_done {:>10.4} s over {} events",
+        prof.transform_done_s, c.transform_done_events
+    );
+    println!(
+        "  backlog_wakeup {:>10.4} s over {} events",
+        prof.backlog_wakeup_s, c.backlog_wakeup_events
+    );
+    println!(
+        "  sub-phases: route {:.4} s / {} calls, kick {:.4} s / {} calls, drain {:.4} s",
+        prof.route_s, c.routes, prof.kick_s, c.kicks, prof.drain_backlog_s
+    );
+
+    let mut per_event = Json::obj();
+    let pair = |wall: f64, count: u64| {
+        let mut o = Json::obj();
+        o.set("events", count).set("wall_s", wall);
+        o
+    };
+    per_event
+        .set("arrival", pair(prof.arrival_s, c.arrival_events))
+        .set("step", pair(prof.step_s, c.step_events))
+        .set("transform_done", pair(prof.transform_done_s, c.transform_done_events))
+        .set("backlog_wakeup", pair(prof.backlog_wakeup_s, c.backlog_wakeup_events))
+        .set("stale", pair(0.0, c.stale_events));
+    let mut sub = Json::obj();
+    let mut route = Json::obj();
+    route.set("calls", c.routes).set("wall_s", prof.route_s);
+    let mut kick = Json::obj();
+    kick.set("calls", c.kicks).set("wall_s", prof.kick_s);
+    let mut drain = Json::obj();
+    drain
+        .set("wall_s", prof.drain_backlog_s)
+        .set("retries", c.backlog_retries)
+        .set("requeues", c.backlog_requeues)
+        .set("suppressed", c.backlog_suppressed)
+        .set("wait_s", c.backlog_wait.as_secs_f64());
+    sub.set("route", route).set("kick", kick).set("drain_backlog", drain);
+
+    // ---- 2. large-fleet routing microbench (indexed vs scan) ----------
+    let mut fleet_cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    fleet_cfg.hosts = fleet_hosts;
+    let fleet_instances = fleet_cfg.total_gpus();
+    let rtrace = routing_trace(route_requests);
+    println!(
+        "\nrouting microbench: {} instances ({} hosts), {} short requests",
+        fleet_instances,
+        fleet_hosts,
+        rtrace.len()
+    );
+    let (scan_out, scan_wall) = run_fleet(&fleet_cfg, &rtrace, false);
+    let (idx_out, idx_wall) = run_fleet(&fleet_cfg, &rtrace, true);
+    assert_eq!(
+        outcome_fingerprint(&scan_out),
+        outcome_fingerprint(&idx_out),
+        "indexed routing diverged from the scan baseline"
+    );
+    let scan_eps = scan_out.counters.events as f64 / scan_wall;
+    let idx_eps = idx_out.counters.events as f64 / idx_wall;
+    let route_speedup = idx_eps / scan_eps;
+    println!(
+        "  scan    {scan_wall:.3} s, {:.0} events/s\n  indexed {idx_wall:.3} s, {:.0} events/s → {route_speedup:.2}x (decisions identical)",
+        scan_eps, idx_eps
+    );
+    let mut micro = Json::obj();
+    let leg = |wall: f64, out: &SimOutcome| {
+        let mut o = Json::obj();
+        o.set("wall_s", wall)
+            .set("events", out.counters.events)
+            .set("events_per_sec", out.counters.events as f64 / wall);
+        o
+    };
+    micro
+        .set("instances", fleet_instances)
+        .set("hosts", fleet_hosts)
+        .set("requests", rtrace.len())
+        .set("scan", leg(scan_wall, &scan_out))
+        .set("indexed", leg(idx_wall, &idx_out))
+        .set("speedup", route_speedup)
+        .set("decisions_identical", true);
+
+    // ---- 3. figure-13 policy × QPS sweep, serial vs parallel ----------
     let jobs = fig13_qps_sweep_jobs(sweep_horizon);
     let threads = sweep_threads();
     println!("\nsweep: {} jobs (policy × QPS), {} worker threads", jobs.len(), threads);
@@ -107,7 +243,7 @@ fn main() {
         jobs.len()
     );
 
-    // ---- 3. machine-readable report -----------------------------------
+    // ---- 4. machine-readable report -----------------------------------
     let mut single = Json::obj();
     single
         .set("trace_requests", trace.len())
@@ -115,7 +251,9 @@ fn main() {
         .set("events", events)
         .set("wall_s", best_wall)
         .set("events_per_sec", events_per_sec)
-        .set("completed", completed);
+        .set("completed", completed)
+        .set("per_event", per_event)
+        .set("sub_phases", sub);
     let mut sweep = Json::obj();
     sweep
         .set("jobs", jobs.len())
@@ -126,10 +264,11 @@ fn main() {
         .set("speedup", speedup)
         .set("byte_identical", true);
     let mut root = Json::obj();
-    root.set("schema_version", 1u64)
+    root.set("schema_version", 2u64)
         .set("bench", "bench_sim")
         .set("measured", true)
         .set("single_thread", single)
+        .set("routing_microbench", micro)
         .set("sweep", sweep);
     std::fs::write(&out_path, format!("{}\n", root.to_string()))
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));

@@ -2,7 +2,9 @@
 //! four models) and micro-time a routing decision.
 
 use gyges::config::{ClusterConfig, ModelConfig};
-use gyges::coordinator::{ActiveRequest, ClusterView, GygesPolicy, HostIndex, Instance, RoutePolicy};
+use gyges::coordinator::{
+    ActiveRequest, ClusterView, GygesPolicy, HostIndex, Instance, LoadIndex, RoutePolicy,
+};
 use gyges::sim::{EngineModel, SimTime};
 use gyges::util::stats::Bench;
 use gyges::util::Args;
@@ -17,9 +19,10 @@ fn main() {
     let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
     let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
     let instances: Vec<Instance> = (0..64).map(|i| Instance::new(i, i / 8, vec![i], 1)).collect();
-    // Route through the incremental merge-candidate index, as the
-    // simulator does (the fallback scan path is not the hot path).
+    // Route through the incremental merge-candidate + load indices, as
+    // the simulator does (the fallback scan path is not the hot path).
     let index = HostIndex::build(&instances, 8);
+    let load = LoadIndex::build(&instances, &engine);
     let mut policy = GygesPolicy::default();
     let req = ActiveRequest::new(1, SimTime::ZERO, 1000, 100);
     let long = ActiveRequest::new(2, SimTime::ZERO, 50_000, 256);
@@ -29,6 +32,7 @@ fn main() {
         cfg: &cfg,
         now: SimTime::ZERO,
         tp1: Some(&index),
+        load: Some(&load),
     };
     let r = Bench::new("gyges.route(short, 64 instances)")
         .iters(2000)

@@ -24,7 +24,9 @@ fn main() {
         trace.long_count(3750)
     );
 
-    let mut t = Table::new(["scheduler", "tput (tps)", "ttft p50", "tpot p50", "scale-ups", "scale-downs"]);
+    let mut t = Table::new([
+        "scheduler", "tput (tps)", "ttft p50", "tpot p50", "scale-ups", "scale-downs",
+    ]);
     for policy in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
         let out = run_system(cfg.clone(), SystemKind::Gyges, Some(policy), trace.clone());
         t.row([

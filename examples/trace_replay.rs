@@ -35,7 +35,8 @@ fn main() -> Result<(), String> {
     );
 
     let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
-    let mut t = Table::new(["system", "tput (tps)", "ttft p50", "ttft p99", "tpot p50", "scale-ups"]);
+    let mut t =
+        Table::new(["system", "tput (tps)", "ttft p50", "ttft p99", "tpot p50", "scale-ups"]);
     for sys in [
         SystemKind::Gyges,
         SystemKind::GygesNoOverlap,

@@ -22,7 +22,11 @@ fn main() {
         t.row([
             format!("{l:?}"),
             l.hierarchy().to_string(),
-            if l == KvLayout::HeaderCentric { "yes — in-place migration".into() } else { "no".to_string() },
+            if l == KvLayout::HeaderCentric {
+                "yes — in-place migration".into()
+            } else {
+                "no".to_string()
+            },
         ]);
     }
     t.print();

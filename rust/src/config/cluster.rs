@@ -50,6 +50,12 @@ pub struct ClusterConfig {
     /// Minimum dwell time between transformations on one instance
     /// (oscillation damping), seconds.
     pub min_dwell_s: f64,
+    /// Cooldown after a backlog drain pass that placed nothing: no retry
+    /// pass runs until it elapses (a scheduled wakeup then retries), so
+    /// deferrals are not re-routed on every finish/transform event under
+    /// sustained overload. `0` disables the cooldown (retry on every
+    /// finish, the pre-PR-2 behaviour).
+    pub backlog_retry_cooldown_s: f64,
     /// Continuous-batching token budget per step per worker.
     pub max_batch_tokens: u64,
     /// Maximum concurrent decode slots per instance at TP1.
@@ -74,6 +80,7 @@ impl ClusterConfig {
             policy: Policy::Gyges,
             scale_down_threshold: super::calib::workload::SCALE_DOWN_LOAD_THRESHOLD,
             min_dwell_s: 5.0,
+            backlog_retry_cooldown_s: 0.05,
             max_batch_tokens: 8192,
             // Decode-batch cap at the Table-1 calibration point: the
             // paper's throughput anchors are measured under its
@@ -126,6 +133,8 @@ impl ClusterConfig {
         cfg.scale_down_threshold =
             doc.f64_or("scheduler.scale_down_threshold", cfg.scale_down_threshold);
         cfg.min_dwell_s = doc.f64_or("scheduler.min_dwell_s", cfg.min_dwell_s);
+        cfg.backlog_retry_cooldown_s =
+            doc.f64_or("scheduler.backlog_retry_cooldown_s", cfg.backlog_retry_cooldown_s);
         cfg.max_batch_tokens = doc.i64_or("batch.max_tokens", cfg.max_batch_tokens as i64) as u64;
         cfg.max_batch_size = doc.i64_or("batch.max_size", cfg.max_batch_size as i64) as usize;
         cfg.max_events = doc.i64_or("sim.max_events", cfg.max_events as i64) as u64;
@@ -173,6 +182,9 @@ impl ClusterConfig {
         }
         if !(0.0..=1.0).contains(&self.scale_down_threshold) {
             return Err("scale_down_threshold must be in [0,1]".into());
+        }
+        if !self.backlog_retry_cooldown_s.is_finite() || self.backlog_retry_cooldown_s < 0.0 {
+            return Err("backlog_retry_cooldown_s must be a finite non-negative number".into());
         }
         if self.max_events == 0 {
             return Err("max_events must be positive".into());
@@ -239,6 +251,22 @@ mod tests {
         assert_eq!(cfg.max_events, 1234);
         let mut bad = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
         bad.max_events = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn backlog_cooldown_parsed_and_validated() {
+        let doc = Doc::parse(
+            r#"
+            [scheduler]
+            backlog_retry_cooldown_s = 0.25
+            "#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_doc(&doc).unwrap();
+        assert!((cfg.backlog_retry_cooldown_s - 0.25).abs() < 1e-12);
+        let mut bad = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        bad.backlog_retry_cooldown_s = -1.0;
         assert!(bad.validate().is_err());
     }
 

@@ -386,7 +386,10 @@ mod tests {
     fn moe_models_scale_with_experts() {
         let big = ModelConfig::gpt_oss_120b();
         let small = ModelConfig::gpt_oss_20b();
-        assert_eq!(big.mlp_layer_bytes() / big.num_experts, small.mlp_layer_bytes() / small.num_experts);
+        assert_eq!(
+            big.mlp_layer_bytes() / big.num_experts,
+            small.mlp_layer_bytes() / small.num_experts
+        );
         assert!(big.mlp_layer_bytes() > small.mlp_layer_bytes());
     }
 }

@@ -7,18 +7,25 @@
 //! /split live with their visible overhead charged to serving steps.
 //!
 //! Hot-path contract (see PERF.md): per-event work is O(1)/O(batch) — the
-//! merge-candidate [`HostIndex`] is maintained incrementally at every
-//! topology mutation (merge, split, retire, transform start/finish)
-//! instead of being rebuilt per routed request, decode completions use the
-//! O(batch) rotation in [`Instance::decode_advance`], and the recorder
-//! calls are O(1) slab updates. The event loop is bounded by
-//! `ClusterConfig::max_events`; hitting the cap surfaces as
+//! merge-candidate [`HostIndex`] and the least-load/live-ring
+//! [`LoadIndex`] are maintained incrementally at every mutation that
+//! changes topology or an instance's `load()` inputs (admit, prefill
+//! completion, decode finishes, merge, split, retire, transform
+//! start/finish) instead of being rebuilt or rescanned per routed
+//! request, decode completions use the O(batch) rotation in
+//! [`Instance::decode_advance`], and the recorder calls are O(1) slab
+//! updates. Deferred-request retries are bounded by a cooldown +
+//! [`Event::BacklogWakeup`] deadline instead of re-routing the whole
+//! backlog on every finish under sustained overload. The event loop is
+//! bounded by `ClusterConfig::max_events`; hitting the cap surfaces as
 //! [`SimError::EventCapExceeded`] in the [`SimOutcome`] instead of
-//! aborting the process.
+//! aborting the process. Per-event-type wall-time attribution
+//! ([`SimProfile`]) is opt-in via [`ClusterSim::enable_profiling`] so the
+//! default loop pays no `Instant::now` calls.
 
 use super::instance::{Instance, ParallelKind, StepKind, TransformState};
 use super::request::ActiveRequest;
-use super::scheduler::{make_policy, ClusterView, HostIndex, Route, RoutePolicy};
+use super::scheduler::{make_policy, ClusterView, HostIndex, LoadIndex, Route, RoutePolicy};
 use crate::config::{ClusterConfig, Policy};
 use crate::metrics::{Recorder, RunReport};
 use crate::sim::clock::{SimDuration, SimTime};
@@ -27,6 +34,7 @@ use crate::transform::{estimate, Mechanism, TransformExec, TransformPlan};
 use crate::workload::Trace;
 use std::collections::VecDeque;
 use std::fmt;
+use std::time::Instant;
 
 /// Which end-to-end system is being simulated (Figure 14 series).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +91,9 @@ enum Event {
     /// (instance id, epoch) — stale epochs are dropped.
     Step(usize, u64),
     TransformDone(usize, u64),
+    /// Deferred-queue retry deadline: re-route the backlog once the
+    /// cooldown after a no-progress drain pass has elapsed.
+    BacklogWakeup,
 }
 
 /// What the in-flight step of an instance will do when it completes.
@@ -94,15 +105,61 @@ enum Pending {
     Maintenance,
 }
 
-/// Counters describing cluster-level behaviour.
+/// Counters describing cluster-level behaviour. Everything here is a
+/// deterministic function of the trace + config (no wall-clock), so the
+/// determinism tests compare whole counter sets across runs; wall-time
+/// attribution lives in the opt-in [`SimProfile`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SimCounters {
     pub scale_ups: u64,
     pub scale_downs: u64,
+    /// Requests deferred at arrival time (first deferral only).
     pub deferred: u64,
     pub steps: u64,
-    /// Total events processed by the loop (arrivals + steps + transforms).
+    /// Total events processed by the loop (sum of the per-type counts).
     pub events: u64,
+    /// Per-event-type breakdown of `events`.
+    pub arrival_events: u64,
+    pub step_events: u64,
+    pub transform_done_events: u64,
+    /// Step/TransformDone events dropped because their instance epoch was
+    /// invalidated (merge/split) or the instance retired.
+    pub stale_events: u64,
+    /// BacklogWakeup events processed (deferred-queue retry deadlines).
+    pub backlog_wakeup_events: u64,
+    /// Routing sub-phase: `RoutePolicy::route` invocations (arrivals +
+    /// backlog retries).
+    pub routes: u64,
+    /// Stepping sub-phase: `kick` invocations.
+    pub kicks: u64,
+    /// Backlog sub-phase: route attempts for previously-deferred requests.
+    pub backlog_retries: u64,
+    /// Backlog retries that deferred again (re-queued).
+    pub backlog_requeues: u64,
+    /// Whole drain passes skipped because the retry cooldown was active.
+    pub backlog_suppressed: u64,
+    /// Total simulated time deferred requests waited between their first
+    /// deferral and their eventual assignment (deferral latency).
+    pub backlog_wait: SimDuration,
+}
+
+/// Wall-clock attribution of the event loop, accumulated only when
+/// [`ClusterSim::enable_profiling`] was called (the bench harness does;
+/// the default loop pays nothing). Event-handler buckets partition the
+/// loop body by event type; the sub-phase buckets (`route_s`, `kick_s`,
+/// `drain_backlog_s`) are measured *inside* the handlers and therefore
+/// overlap them (and each other: a drain pass contains route and kick
+/// calls). Matching call counts live in [`SimCounters`], which stays
+/// deterministic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimProfile {
+    pub arrival_s: f64,
+    pub step_s: f64,
+    pub transform_done_s: f64,
+    pub backlog_wakeup_s: f64,
+    pub route_s: f64,
+    pub kick_s: f64,
+    pub drain_backlog_s: f64,
 }
 
 /// A structured simulation failure (the run still yields its partial
@@ -130,9 +187,19 @@ pub struct SimOutcome {
     pub report: RunReport,
     pub recorder: Recorder,
     pub counters: SimCounters,
+    /// Wall-time attribution; `Some` only when profiling was enabled.
+    pub profile: Option<SimProfile>,
     /// Set when the run terminated abnormally (e.g. event-cap overflow);
     /// the report then covers only the work completed before the cut.
     pub error: Option<SimError>,
+}
+
+/// A deferred request parked in the backlog, stamped with its *first*
+/// deferral time so `SimCounters::backlog_wait` measures true deferral
+/// latency across re-queues.
+struct Deferred {
+    req: ActiveRequest,
+    since: SimTime,
 }
 
 /// The cluster simulator.
@@ -146,7 +213,7 @@ pub struct ClusterSim {
     queue: EventQueue<Event>,
     trace: Trace,
     policy: Box<dyn RoutePolicy>,
-    backlog: VecDeque<ActiveRequest>,
+    backlog: VecDeque<Deferred>,
     pub recorder: Recorder,
     pub counters: SimCounters,
     /// When set, ScaleUp routes become Defer and scale-down never fires
@@ -157,6 +224,21 @@ pub struct ClusterSim {
     /// Incremental merge-candidate index (kept in lockstep with every
     /// topology mutation; see module docs).
     tp1_index: HostIndex,
+    /// Incremental load index (least-load picks + RR live ring), kept in
+    /// lockstep with every load-affecting mutation via `reindex`.
+    load_index: LoadIndex,
+    /// When false, routing views carry no indices and the policies fall
+    /// back to full scans — the measured baseline for the routing
+    /// microbench and the decision-equivalence tests.
+    use_routing_index: bool,
+    /// Accumulate wall-time attribution into `profile`.
+    profiling: bool,
+    profile: SimProfile,
+    /// No backlog drain pass runs before this time (armed after a pass
+    /// that made no progress; a BacklogWakeup retries at the deadline).
+    backlog_cooldown_until: SimTime,
+    /// A BacklogWakeup event is outstanding in the queue.
+    backlog_wakeup_scheduled: bool,
     /// Reused per-decode-step id buffers (allocation-free event loop).
     scratch_stepped: Vec<u64>,
     scratch_finished: Vec<u64>,
@@ -183,6 +265,7 @@ impl ClusterSim {
         };
         let n = instances.len();
         let tp1_index = HostIndex::build(&instances, cfg.hosts);
+        let load_index = LoadIndex::build(&instances, &engine);
         ClusterSim {
             cfg,
             engine,
@@ -199,6 +282,12 @@ impl ClusterSim {
             transformation_disabled: false,
             dwell_check_scheduled: vec![false; n],
             tp1_index,
+            load_index,
+            use_routing_index: true,
+            profiling: false,
+            profile: SimProfile::default(),
+            backlog_cooldown_until: SimTime::ZERO,
+            backlog_wakeup_scheduled: false,
             scratch_stepped: Vec::new(),
             scratch_finished: Vec::new(),
         }
@@ -222,11 +311,56 @@ impl ClusterSim {
         self.pending = vec![None; self.instances.len()];
         self.dwell_check_scheduled = vec![false; self.instances.len()];
         self.tp1_index = HostIndex::build(&self.instances, self.cfg.hosts);
+        self.load_index = LoadIndex::build(&self.instances, &self.engine);
     }
 
     /// Disable runtime transformation (static deployments).
     pub fn disable_transformation(&mut self) {
         self.transformation_disabled = true;
+    }
+
+    /// Route through full instance-table scans instead of the incremental
+    /// indices — the measured baseline for the routing microbench and the
+    /// decision-equivalence (byte-identical figures) tests. Index
+    /// maintenance is skipped too, so the baseline pays neither the index
+    /// upkeep nor its query costs.
+    pub fn disable_routing_index(&mut self) {
+        self.use_routing_index = false;
+    }
+
+    /// Accumulate per-event-type wall-time attribution into
+    /// `SimOutcome::profile`. Off by default: the loop then performs no
+    /// `Instant::now` calls.
+    pub fn enable_profiling(&mut self) {
+        self.profiling = true;
+    }
+
+    /// Reconcile both incremental indices with instance `iid`'s current
+    /// state. Must be called after every mutation that changes the
+    /// instance's `retired`/`degree`/`transforming` state or its `load()`
+    /// inputs (committed tokens); see PERF.md for the audit of call sites.
+    fn reindex(&mut self, iid: usize) {
+        if !self.use_routing_index {
+            return;
+        }
+        self.tp1_index.note(&self.instances[iid]);
+        self.load_index.note(&self.instances[iid], &self.engine);
+    }
+
+    #[inline]
+    fn prof_start(&self) -> Option<Instant> {
+        if self.profiling {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn prof_add(t0: Option<Instant>, slot: &mut f64) {
+        if let Some(t) = t0 {
+            *slot += t.elapsed().as_secs_f64();
+        }
     }
 
     /// Tune the Gyges policy's anti-oscillation hold (ablation A3).
@@ -262,25 +396,55 @@ impl ClusterSim {
                 break;
             }
             self.counters.events += 1;
+            let t0 = self.prof_start();
             match ev {
-                Event::Arrival(idx) => self.on_arrival(now, idx),
+                Event::Arrival(idx) => {
+                    self.counters.arrival_events += 1;
+                    self.on_arrival(now, idx);
+                    Self::prof_add(t0, &mut self.profile.arrival_s);
+                }
                 Event::Step(iid, epoch) => {
                     if self.epochs[iid] == epoch && !self.instances[iid].retired {
+                        self.counters.step_events += 1;
                         self.on_step(now, iid);
+                    } else {
+                        self.counters.stale_events += 1;
                     }
+                    Self::prof_add(t0, &mut self.profile.step_s);
                 }
                 Event::TransformDone(iid, epoch) => {
                     if self.epochs[iid] == epoch && !self.instances[iid].retired {
+                        self.counters.transform_done_events += 1;
                         self.on_transform_done(now, iid);
+                    } else {
+                        self.counters.stale_events += 1;
                     }
+                    Self::prof_add(t0, &mut self.profile.transform_done_s);
+                }
+                Event::BacklogWakeup => {
+                    self.backlog_wakeup_scheduled = false;
+                    self.counters.backlog_wakeup_events += 1;
+                    self.drain_backlog(now);
+                    Self::prof_add(t0, &mut self.profile.backlog_wakeup_s);
                 }
             }
         }
-        #[cfg(debug_assertions)]
-        self.tp1_index.debug_verify(&self.instances);
+        if self.use_routing_index {
+            #[cfg(debug_assertions)]
+            {
+                self.tp1_index.debug_verify(&self.instances);
+                self.load_index.debug_verify(&self.instances, &self.engine);
+            }
+        }
         let label = format!("{}/{}", self.system.name(), self.policy.name());
         let report = RunReport::from_recorder(&label, &self.recorder);
-        SimOutcome { report, recorder: self.recorder, counters: self.counters, error }
+        SimOutcome {
+            report,
+            recorder: self.recorder,
+            counters: self.counters,
+            profile: if self.profiling { Some(self.profile) } else { None },
+            error,
+        }
     }
 
     // -----------------------------------------------------------------
@@ -291,35 +455,66 @@ impl ClusterSim {
         let tr = &self.trace.requests[idx];
         self.recorder.on_arrival(tr.id, now, tr.input_len, tr.output_len);
         let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len);
-        self.route(now, req);
+        self.route_one(now, req, None);
     }
 
-    fn route(&mut self, now: SimTime, req: ActiveRequest) {
+    /// Route one request — a fresh arrival (`deferred_since: None`) or a
+    /// backlog retry (stamped with its first deferral time). Returns true
+    /// when the request was placed (assign or scale-up), false when it
+    /// (re-)joined the backlog.
+    fn route_one(
+        &mut self,
+        now: SimTime,
+        req: ActiveRequest,
+        deferred_since: Option<SimTime>,
+    ) -> bool {
+        let (tp1, load) = if self.use_routing_index {
+            (Some(&self.tp1_index), Some(&self.load_index))
+        } else {
+            (None, None)
+        };
         let view = ClusterView {
             instances: &self.instances,
             engine: &self.engine,
             cfg: &self.cfg,
             now,
-            tp1: Some(&self.tp1_index),
+            tp1,
+            load,
         };
-        match self.policy.route(&req, &view) {
+        self.counters.routes += 1;
+        if deferred_since.is_some() {
+            self.counters.backlog_retries += 1;
+        }
+        let t0 = self.prof_start();
+        let route = self.policy.route(&req, &view);
+        Self::prof_add(t0, &mut self.profile.route_s);
+        let placed = |sim: &mut ClusterSim, iid: usize, req: ActiveRequest| {
+            if let Some(since) = deferred_since {
+                sim.counters.backlog_wait += now.since(since);
+            }
+            sim.instances[iid].admit(req);
+            sim.reindex(iid);
+            sim.kick(now, iid);
+        };
+        match route {
             Route::Assign(iid) => {
-                self.instances[iid].admit(req);
-                self.kick(now, iid);
+                placed(self, iid, req);
+                true
             }
-            Route::ScaleUp { members, to_tp } => {
-                if self.transformation_disabled {
-                    self.counters.deferred += 1;
-                    self.backlog.push_back(req);
-                } else {
-                    let iid = self.scale_up(now, members, to_tp);
-                    self.instances[iid].admit(req);
-                    self.kick(now, iid);
+            Route::ScaleUp { members, to_tp } if !self.transformation_disabled => {
+                let iid = self.scale_up(now, members, to_tp);
+                placed(self, iid, req);
+                true
+            }
+            // ScaleUp with transformation disabled degrades to Defer.
+            Route::ScaleUp { .. } | Route::Defer => {
+                match deferred_since {
+                    None => self.counters.deferred += 1,
+                    Some(_) => self.counters.backlog_requeues += 1,
                 }
-            }
-            Route::Defer => {
-                self.counters.deferred += 1;
-                self.backlog.push_back(req);
+                let since = deferred_since.unwrap_or(now);
+                self.backlog.push_back(Deferred { req, since });
+                false
             }
         }
     }
@@ -379,6 +574,8 @@ impl ClusterSim {
             // Exact-bookkeeping invariant: a drained instance holds no KV.
             self.instances[iid].debug_assert_consistent();
         }
+        // Prefill completions and decode finishes change committed tokens.
+        self.reindex(iid);
         self.clear_transform_if_done(now, iid);
         self.maybe_scale_down(now, iid);
         if !self.instances[iid].retired {
@@ -402,7 +599,7 @@ impl ClusterSim {
             }
         }
         if cleared {
-            self.tp1_index.note(&self.instances[iid]);
+            self.reindex(iid);
         }
         self.kick(now, iid);
         self.drain_backlog(now);
@@ -414,6 +611,13 @@ impl ClusterSim {
 
     /// Schedule the next step of `iid` if it has work and none scheduled.
     fn kick(&mut self, now: SimTime, iid: usize) {
+        self.counters.kicks += 1;
+        let t0 = self.prof_start();
+        self.kick_inner(now, iid);
+        Self::prof_add(t0, &mut self.profile.kick_s);
+    }
+
+    fn kick_inner(&mut self, now: SimTime, iid: usize) {
         let max_batch = self.cfg.max_batch_size;
         let inst = &self.instances[iid];
         if inst.retired || inst.stepping {
@@ -484,41 +688,62 @@ impl ClusterSim {
             }
         }
         if cleared {
-            self.tp1_index.note(&self.instances[iid]);
+            self.reindex(iid);
         }
     }
 
+    /// Retry the deferred queue. A pass routes every parked request once;
+    /// a pass that places nothing arms a cooldown (no further passes until
+    /// it elapses — calls in between are O(1) suppressions that guarantee
+    /// a [`Event::BacklogWakeup`] retries at the deadline), so retries
+    /// keep happening under sustained overload without re-routing the
+    /// whole backlog on every finish/transform event. A no-progress pass
+    /// only re-arms while *other* events are pending: with nothing left
+    /// that could change cluster state, an unserveable backlog stops
+    /// generating wakeups and the run terminates. A suppressed call, by
+    /// contrast, always schedules the wakeup — state may have changed
+    /// since the pass that armed the cooldown (a finish freed capacity),
+    /// and the wakeup's own pass is never suppressed, so no request is
+    /// stranded by the cooldown.
     fn drain_backlog(&mut self, now: SimTime) {
+        let t0 = self.prof_start();
+        self.drain_backlog_inner(now);
+        Self::prof_add(t0, &mut self.profile.drain_backlog_s);
+    }
+
+    fn drain_backlog_inner(&mut self, now: SimTime) {
+        if self.backlog.is_empty() {
+            return;
+        }
+        if now < self.backlog_cooldown_until {
+            self.counters.backlog_suppressed += 1;
+            self.schedule_backlog_wakeup();
+            return;
+        }
+        let mut progress = false;
         let mut tries = self.backlog.len();
         while tries > 0 {
             tries -= 1;
-            let Some(req) = self.backlog.pop_front() else { break };
-            let view = ClusterView {
-                instances: &self.instances,
-                engine: &self.engine,
-                cfg: &self.cfg,
-                now,
-                tp1: Some(&self.tp1_index),
-            };
-            let route = self.policy.route(&req, &view);
-            match route {
-                Route::Assign(iid) => {
-                    self.instances[iid].admit(req);
-                    self.kick(now, iid);
-                }
-                Route::ScaleUp { members, to_tp } => {
-                    if self.transformation_disabled {
-                        self.backlog.push_back(req);
-                    } else {
-                        let iid = self.scale_up(now, members, to_tp);
-                        self.instances[iid].admit(req);
-                        self.kick(now, iid);
-                    }
-                }
-                Route::Defer => {
-                    self.backlog.push_back(req);
-                }
+            let Some(d) = self.backlog.pop_front() else { break };
+            if self.route_one(now, d.req, Some(d.since)) {
+                progress = true;
             }
+        }
+        if progress {
+            self.backlog_cooldown_until = SimTime::ZERO;
+        } else if !self.backlog.is_empty() {
+            let cooldown = SimDuration::from_secs_f64(self.cfg.backlog_retry_cooldown_s);
+            if cooldown > SimDuration::ZERO && !self.queue.is_empty() {
+                self.backlog_cooldown_until = now + cooldown;
+                self.schedule_backlog_wakeup();
+            }
+        }
+    }
+
+    fn schedule_backlog_wakeup(&mut self) {
+        if !self.backlog_wakeup_scheduled {
+            self.queue.push(self.backlog_cooldown_until, Event::BacklogWakeup);
+            self.backlog_wakeup_scheduled = true;
         }
     }
 
@@ -539,6 +764,11 @@ impl ClusterSim {
         for &m in &members {
             assert_eq!(self.instances[m].host, host, "cross-host merge");
             assert_eq!(self.instances[m].degree, 1, "only TP1 members merge");
+            // Sample utilization BEFORE take_work() drains the member (as
+            // scale_down already does): the merge's transformation cost is
+            // charged at the members' real KV occupancy, not the 0.05
+            // clamp floor the drained-then-sampled seed ordering produced.
+            avg_util += self.instances[m].load(&self.engine) / members.len() as f64;
             let inst = &mut self.instances[m];
             inst.retired = true;
             merged.workers.extend(inst.workers.drain(..));
@@ -550,15 +780,8 @@ impl ClusterSim {
             for r in prefill {
                 merged.enqueue_prefill(r);
             }
-            // NOTE: sampled after take_work() drained the member, so this
-            // is always 0.0 (clamped to 0.05 in attach_transform) — the
-            // behaviour the seed's experiments were calibrated against.
-            // Sampling before the drain (as scale_down does) is a modeled-
-            // cost change that must ship with re-validated figure numbers;
-            // tracked in ROADMAP "Open items".
-            avg_util += self.instances[m].load(&self.engine) / members.len() as f64;
             self.epochs[m] += 1; // invalidate in-flight events
-            self.tp1_index.note(&self.instances[m]);
+            self.reindex(m);
         }
         merged.last_transform = now;
         self.instances.push(merged);
@@ -583,7 +806,7 @@ impl ClusterSim {
             let (running, prefill, _stale_kv) = inst.take_work();
             (workers, running, prefill)
         };
-        self.tp1_index.note(&self.instances[iid]);
+        self.reindex(iid);
         let n = from_tp as usize;
         let mut new_ids = Vec::with_capacity(n);
         for k in 0..n {
@@ -612,7 +835,14 @@ impl ClusterSim {
     }
 
     /// Attach the transformation cost machinery to an instance.
-    fn attach_transform(&mut self, now: SimTime, iid: usize, from_tp: u64, to_tp: u64, kv_util: f64) {
+    fn attach_transform(
+        &mut self,
+        now: SimTime,
+        iid: usize,
+        from_tp: u64,
+        to_tp: u64,
+        kv_util: f64,
+    ) {
         let kv_util = kv_util.clamp(0.05, 0.95);
         match self.system.mechanism() {
             Some(mech) => {
@@ -634,7 +864,12 @@ impl ClusterSim {
                     exec: TransformExec::new(
                         &self.cfg.model,
                         &self.cfg.gpu,
-                        TransformPlan::build(&self.cfg.model, from_tp, to_tp, self.cfg.model.num_layers as usize),
+                        TransformPlan::build(
+                            &self.cfg.model,
+                            from_tp,
+                            to_tp,
+                            self.cfg.model.num_layers as usize,
+                        ),
                         kv_util,
                         Mechanism::Gyges,
                     ),
@@ -643,19 +878,25 @@ impl ClusterSim {
                 self.queue.push(until, Event::TransformDone(iid, self.epochs[iid]));
             }
         }
-        self.tp1_index.note(&self.instances[iid]);
+        self.reindex(iid);
     }
 
     fn maybe_scale_down(&mut self, now: SimTime, iid: usize) {
         if self.transformation_disabled {
             return;
         }
+        let (tp1, load) = if self.use_routing_index {
+            (Some(&self.tp1_index), Some(&self.load_index))
+        } else {
+            (None, None)
+        };
         let view = ClusterView {
             instances: &self.instances,
             engine: &self.engine,
             cfg: &self.cfg,
             now,
-            tp1: Some(&self.tp1_index),
+            tp1,
+            load,
         };
         let inst = &self.instances[iid];
         if self.policy.should_scale_down(inst, &view) {

@@ -7,6 +7,12 @@
 //! below. Mutate `running`/`prefill_queue` only through those methods;
 //! direct pushes desynchronise the aggregates (debug builds catch this
 //! via [`Instance::debug_assert_consistent`]).
+//!
+//! The committed-token aggregate is also the input to the scheduler's
+//! incremental `LoadIndex` bucketing: inside the simulator, any mutation
+//! that changes `committed_tokens` (or `retired`/`degree`) must be
+//! followed by `ClusterSim::reindex` so the instance's load bucket stays
+//! current — the end-of-run debug rebuild check catches missed sites.
 
 use super::request::{ActiveRequest, Phase};
 use crate::config::calib::baselines;

@@ -7,10 +7,13 @@ pub mod instance;
 pub mod request;
 pub mod scheduler;
 
-pub use cluster::{run_system, ClusterSim, SimCounters, SimError, SimOutcome, SystemKind};
+pub use cluster::{
+    run_system, ClusterSim, SimCounters, SimError, SimOutcome, SimProfile, SystemKind,
+};
 pub use instance::{Instance, ParallelKind, StepKind, TransformState};
 pub use request::{ActiveRequest, Phase};
 pub use scheduler::{
     default_scale_down, make_policy, needed_tp, pick_merge_group, pick_merge_group_into,
-    ClusterView, GygesPolicy, HostIndex, LeastLoadPolicy, Route, RoundRobinPolicy, RoutePolicy,
+    ClusterView, GygesPolicy, HIGH_TP_SHORT_PENALTY, HostIndex, LeastLoadPolicy, LoadIndex, Route,
+    RoundRobinPolicy, RoutePolicy,
 };

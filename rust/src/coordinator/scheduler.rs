@@ -3,12 +3,16 @@
 //! §6.2.4.
 //!
 //! Hot-path contract (see PERF.md): routing a request must not allocate on
-//! the `Route::Assign` path of a warm cluster. The per-host candidate sets
-//! the policies consult come from [`HostIndex`], which [`crate::
-//! coordinator::ClusterSim`] maintains incrementally as instances merge,
-//! split, retire, and finish transforming — no per-request rescan of the
-//! instance table, and the policies reuse internal scratch buffers instead
-//! of collecting fresh `Vec`s per request.
+//! the `Route::Assign` path of a warm cluster, and must not scan the live
+//! instance table. The per-host candidate sets the policies consult come
+//! from [`HostIndex`], and the least-load picks plus the RR rotation ring
+//! come from [`LoadIndex`] — both maintained incrementally by
+//! [`crate::coordinator::ClusterSim`] at every mutation that changes an
+//! instance's topology or `load()` inputs. The policies reuse internal
+//! scratch buffers instead of collecting fresh `Vec`s per request, and
+//! every indexed decision is byte-identical to the scanning fallback
+//! (`tp1: None, load: None` views), which stays available for tests and
+//! the scan-baseline bench.
 
 use super::instance::Instance;
 use super::request::ActiveRequest;
@@ -131,6 +135,326 @@ impl HostIndex {
     }
 }
 
+/// Penalty [`GygesPolicy`] adds to a TP>1 instance's load when scoring it
+/// for a *short* request (Algorithm 2 "reduces the request rate to these
+/// instances to facilitate scaling down"). Shared by the scanning scorer
+/// and the [`LoadIndex`] fast path so both produce identical decisions.
+/// Chosen so `HIGH_TP_SHORT_PENALTY * LOAD_QUANT` is an exact integer in
+/// f64 (`0.75 * 64 = 48`): a high-TP instance's score level is then its
+/// load level shifted by a whole number of buckets.
+pub const HIGH_TP_SHORT_PENALTY: f64 = 0.75;
+
+/// Load-bucket quantum: loads are bucketed at `floor(load * LOAD_QUANT)`.
+/// A power of two, so `load * LOAD_QUANT` is computed exactly in f64.
+const LOAD_QUANT: f64 = 64.0;
+
+/// `HIGH_TP_SHORT_PENALTY * LOAD_QUANT`, exact.
+const PENALTY_LEVELS: usize = 48;
+
+/// Loads at or above `MAX_LOAD_BUCKET / LOAD_QUANT` (4.0 — only reachable
+/// through over-committed hand-built test states) collapse into one
+/// overflow bucket; members there are compared exactly like any others.
+const MAX_LOAD_BUCKET: usize = 256;
+const NUM_LOAD_BUCKETS: usize = MAX_LOAD_BUCKET + 1;
+
+/// Membership record of one instance inside the [`LoadIndex`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct LoadSlot {
+    /// Index into `LoadIndex::classes`, or `u32::MAX` when absent
+    /// (retired / never seen).
+    class: u32,
+    bucket: u32,
+}
+
+const NO_SLOT: LoadSlot = LoadSlot { class: u32::MAX, bucket: 0 };
+
+/// All live instances of one TP degree, bucketed by quantized load.
+#[derive(Clone, Debug)]
+struct LoadClass {
+    degree: u64,
+    /// `NUM_LOAD_BUCKETS` id lists, each ascending.
+    buckets: Vec<Vec<usize>>,
+    /// Total members across all buckets.
+    len: usize,
+    /// Highest occupied bucket index (0 when empty): the query loops stop
+    /// here instead of probing every quantization level, so a request
+    /// that fits nothing costs O(occupied levels), not O(all levels).
+    top: usize,
+}
+
+/// Incrementally-maintained load index: every live instance, grouped by TP
+/// degree and bucketed by quantized `load()`, plus the ascending live-id
+/// ring Round-Robin rotates over. [`LoadIndex::note`] is the single update
+/// entry point — [`crate::coordinator::ClusterSim`] calls it after every
+/// mutation that changes an instance's `retired`/`degree` state or its
+/// `load()` inputs (admit, prefill completion, decode finishes, merge,
+/// split, retirement), so the least-load queries below run in
+/// O(buckets + candidates examined) instead of O(live instances).
+///
+/// Decision equivalence with a full scan is exact, not approximate: a
+/// candidate's bucket level never exceeds `floor(score * LOAD_QUANT)`
+/// (levels are derived from the same f64 `load()` the scan compares, and
+/// the high-TP penalty shifts levels by the integer `PENALTY_LEVELS`), so
+/// scanning levels until the level passes the current best score's bucket
+/// examines every candidate that could beat *or tie* the best, and the
+/// exact `(score, id)` comparison below resolves ties the way a first-win
+/// ascending-id scan does. `prop_routing_decisions_are_sound` and the
+/// mutation-sequence property test enforce this, and `ClusterSim::run`
+/// re-verifies the index against a from-scratch rebuild in debug builds.
+#[derive(Clone, Debug, Default)]
+pub struct LoadIndex {
+    classes: Vec<LoadClass>,
+    /// Per degree: index into `classes`, `u32::MAX` when unseen.
+    class_by_degree: Vec<u32>,
+    /// Per instance id: current membership.
+    slots: Vec<LoadSlot>,
+    /// Ascending ids of live (non-retired) instances — the RR ring.
+    live: Vec<usize>,
+}
+
+impl LoadIndex {
+    /// Index an existing instance table from scratch.
+    pub fn build(instances: &[Instance], engine: &EngineModel) -> LoadIndex {
+        let mut idx = LoadIndex::default();
+        for inst in instances {
+            idx.note(inst, engine);
+        }
+        idx
+    }
+
+    fn bucket_for(load: f64) -> usize {
+        // f64→usize casts saturate, so degenerate loads stay in range.
+        ((load * LOAD_QUANT).floor() as usize).min(MAX_LOAD_BUCKET)
+    }
+
+    fn class_for(&mut self, degree: u64) -> u32 {
+        let d = degree as usize;
+        if d >= self.class_by_degree.len() {
+            self.class_by_degree.resize(d + 1, u32::MAX);
+        }
+        if self.class_by_degree[d] == u32::MAX {
+            self.class_by_degree[d] = self.classes.len() as u32;
+            self.classes.push(LoadClass {
+                degree,
+                buckets: vec![Vec::new(); NUM_LOAD_BUCKETS],
+                len: 0,
+                top: 0,
+            });
+        }
+        self.class_by_degree[d]
+    }
+
+    /// Reconcile the index with `inst`'s current state. O(log candidates)
+    /// plus an O(candidates) shift when the bucket membership changes; a
+    /// no-op when neither the degree class, the load bucket, nor liveness
+    /// changed (e.g. a `transforming` toggle — queries read that flag off
+    /// the instance directly).
+    pub fn note(&mut self, inst: &Instance, engine: &EngineModel) {
+        if inst.id >= self.slots.len() {
+            self.slots.resize(inst.id + 1, NO_SLOT);
+        }
+        let new = if inst.retired {
+            NO_SLOT
+        } else {
+            LoadSlot {
+                class: self.class_for(inst.degree),
+                bucket: Self::bucket_for(inst.load(engine)) as u32,
+            }
+        };
+        let old = self.slots[inst.id];
+        if old == new {
+            return;
+        }
+        if old != NO_SLOT {
+            let class = &mut self.classes[old.class as usize];
+            let list = &mut class.buckets[old.bucket as usize];
+            if let Ok(pos) = list.binary_search(&inst.id) {
+                list.remove(pos);
+                class.len -= 1;
+                // Walk the high-water mark down past drained buckets
+                // (amortised: paid for by the insertions that raised it).
+                while class.top > 0 && class.buckets[class.top].is_empty() {
+                    class.top -= 1;
+                }
+            }
+        }
+        if new != NO_SLOT {
+            let class = &mut self.classes[new.class as usize];
+            let b = new.bucket as usize;
+            let list = &mut class.buckets[b];
+            let pos = list.partition_point(|&x| x < inst.id);
+            list.insert(pos, inst.id);
+            class.len += 1;
+            if b > class.top {
+                class.top = b;
+            }
+        }
+        if (old == NO_SLOT) != (new == NO_SLOT) {
+            if new != NO_SLOT {
+                let pos = self.live.partition_point(|&x| x < inst.id);
+                self.live.insert(pos, inst.id);
+            } else if let Ok(pos) = self.live.binary_search(&inst.id) {
+                self.live.remove(pos);
+            }
+        }
+        self.slots[inst.id] = new;
+    }
+
+    /// Ascending ids of live instances — exactly what a
+    /// `view.live().map(|i| i.id)` scan would collect.
+    pub fn live_ids(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Short-request pick: the `(score, id)`-minimal live instance that
+    /// fits `req`, where `score = load + HIGH_TP_SHORT_PENALTY·[degree>1]`,
+    /// skipping transforming TP1 instances and over-cap reserved ones —
+    /// byte-identical to [`GygesPolicy::route_short`]'s scan.
+    pub fn pick_short(
+        &self,
+        instances: &[Instance],
+        engine: &EngineModel,
+        req: &ActiveRequest,
+        reserved: &[usize],
+        reserve_cap: f64,
+    ) -> Option<usize> {
+        // Only levels up to the highest occupied bucket (plus the high-TP
+        // penalty shift) can hold candidates; a request that fits nothing
+        // therefore stops at the occupancy high-water mark instead of
+        // probing every quantization level.
+        let Some(max_level) = self
+            .classes
+            .iter()
+            .filter(|c| c.len > 0)
+            .map(|c| c.top + if c.degree > 1 { PENALTY_LEVELS } else { 0 })
+            .max()
+        else {
+            return None;
+        };
+        let mut best: Option<(f64, usize)> = None;
+        for level in 0..=max_level {
+            if let Some((score, _)) = best {
+                if level > (score * LOAD_QUANT).floor() as usize {
+                    break;
+                }
+            }
+            for class in &self.classes {
+                if class.len == 0 {
+                    continue;
+                }
+                let pen = if class.degree > 1 { PENALTY_LEVELS } else { 0 };
+                let Some(b) = level.checked_sub(pen) else { continue };
+                if b > class.top {
+                    continue;
+                }
+                for &id in &class.buckets[b] {
+                    let inst = &instances[id];
+                    if inst.transforming.is_some() && inst.degree == 1 {
+                        continue;
+                    }
+                    if !inst.fits(engine, req) {
+                        continue;
+                    }
+                    let l = inst.load(engine);
+                    if l > reserve_cap && reserved.contains(&id) {
+                        continue;
+                    }
+                    let score = l + if inst.degree > 1 { HIGH_TP_SHORT_PENALTY } else { 0.0 };
+                    let better = match best {
+                        None => true,
+                        Some((bs, bid)) => score < bs || (score == bs && id < bid),
+                    };
+                    if better {
+                        best = Some((score, id));
+                    }
+                }
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Long-request pick: the `(load, id)`-minimal live TP>1 instance that
+    /// fits `req` and is not transforming — byte-identical to the
+    /// higher-TP preference scan in [`GygesPolicy::route`].
+    pub fn pick_long(
+        &self,
+        instances: &[Instance],
+        engine: &EngineModel,
+        req: &ActiveRequest,
+    ) -> Option<usize> {
+        let Some(max_level) = self
+            .classes
+            .iter()
+            .filter(|c| c.degree > 1 && c.len > 0)
+            .map(|c| c.top)
+            .max()
+        else {
+            return None;
+        };
+        let mut best: Option<(f64, usize)> = None;
+        for level in 0..=max_level {
+            if let Some((load, _)) = best {
+                if level > (load * LOAD_QUANT).floor() as usize {
+                    break;
+                }
+            }
+            for class in &self.classes {
+                if class.degree <= 1 || class.len == 0 || level > class.top {
+                    continue;
+                }
+                for &id in &class.buckets[level] {
+                    let inst = &instances[id];
+                    if inst.transforming.is_some() || !inst.fits(engine, req) {
+                        continue;
+                    }
+                    let l = inst.load(engine);
+                    let better = match best {
+                        None => true,
+                        Some((bl, bid)) => l < bl || (l == bl && id < bid),
+                    };
+                    if better {
+                        best = Some((l, id));
+                    }
+                }
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Recompute from scratch and compare (debug builds; test hook).
+    pub fn debug_verify(&self, instances: &[Instance], engine: &EngineModel) {
+        #[cfg(debug_assertions)]
+        {
+            let rebuilt = LoadIndex::build(instances, engine);
+            assert_eq!(rebuilt.live, self.live, "load-index live ring diverged");
+            let flatten = |idx: &LoadIndex| {
+                let mut m = std::collections::BTreeMap::new();
+                for class in &idx.classes {
+                    for (b, list) in class.buckets.iter().enumerate() {
+                        if !list.is_empty() {
+                            m.insert((class.degree, b), list.clone());
+                        }
+                    }
+                }
+                m
+            };
+            assert_eq!(
+                flatten(&rebuilt),
+                flatten(self),
+                "load-index buckets diverged from the instance table"
+            );
+            for class in &self.classes {
+                let total: usize = class.buckets.iter().map(Vec::len).sum();
+                assert_eq!(total, class.len, "load-index class len drifted");
+                let highest = class.buckets.iter().rposition(|b| !b.is_empty()).unwrap_or(0);
+                assert_eq!(highest, class.top, "load-index class top drifted");
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = (instances, engine);
+    }
+}
+
 /// Immutable view of the cluster a policy routes against.
 pub struct ClusterView<'a> {
     pub instances: &'a [Instance],
@@ -141,6 +465,11 @@ pub struct ClusterView<'a> {
     /// `instances` (tests and ad-hoc views); the simulator always supplies
     /// it, keeping routing allocation-free.
     pub tp1: Option<&'a HostIndex>,
+    /// Incremental load index (least-load picks + RR live ring). `None`
+    /// falls back to scanning `instances`; the simulator supplies it
+    /// unless `ClusterSim::disable_routing_index` was called (scan
+    /// baseline for benches and the equivalence tests).
+    pub load: Option<&'a LoadIndex>,
 }
 
 impl<'a> ClusterView<'a> {
@@ -374,17 +703,25 @@ impl RoutePolicy for GygesPolicy {
 
         if long {
             // Prefer instances already operating at higher TP (minimises
-            // transformations; Figure 13's key behaviour).
-            let mut best: Option<(usize, f64)> = None;
-            for i in view.live().filter(|i| i.degree > 1) {
-                if i.fits(view.engine, req) && i.transforming.is_none() {
-                    let l = i.load(view.engine);
-                    if best.map(|(_, bl)| l < bl).unwrap_or(true) {
-                        best = Some((i.id, l));
+            // transformations; Figure 13's key behaviour). Indexed picks
+            // examine only the lowest occupied load buckets; the scan
+            // fallback walks every live instance.
+            let picked = match view.load {
+                Some(idx) => idx.pick_long(view.instances, view.engine, req),
+                None => {
+                    let mut best: Option<(usize, f64)> = None;
+                    for i in view.live().filter(|i| i.degree > 1) {
+                        if i.fits(view.engine, req) && i.transforming.is_none() {
+                            let l = i.load(view.engine);
+                            if best.map(|(_, bl)| l < bl).unwrap_or(true) {
+                                best = Some((i.id, l));
+                            }
+                        }
                     }
+                    best.map(|(id, _)| id)
                 }
-            }
-            if let Some((id, _)) = best {
+            };
+            if let Some(id) = picked {
                 return Route::Assign(id);
             }
             // Scale up: need a degree that can hold the request.
@@ -424,8 +761,22 @@ impl GygesPolicy {
     /// Short-request routing: least expected load among fitting instances,
     /// skipping reserved instances above the reserve cap and de-preferring
     /// TP>1 instances (Algorithm 2 "reduces the request rate to these
-    /// instances to facilitate scaling down").
+    /// instances to facilitate scaling down"). With a [`LoadIndex`] the
+    /// pick is O(buckets + candidates); the scan fallback walks every
+    /// live instance and must stay decision-identical (property-tested).
     fn route_short(&self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        if let Some(idx) = view.load {
+            return match idx.pick_short(
+                view.instances,
+                view.engine,
+                req,
+                &self.reserved,
+                self.reserve_cap,
+            ) {
+                Some(id) => Route::Assign(id),
+                None => Route::Defer,
+            };
+        }
         let mut best: Option<(usize, f64)> = None;
         for i in view.live() {
             if i.transforming.is_some() && i.degree == 1 {
@@ -439,7 +790,7 @@ impl GygesPolicy {
                 continue; // keep scale-up headroom (check_reserve)
             }
             // Penalise high-TP instances so they drain and scale down.
-            let score = l + if i.degree > 1 { 0.75 } else { 0.0 };
+            let score = l + if i.degree > 1 { HIGH_TP_SHORT_PENALTY } else { 0.0 };
             if best.map(|(_, bs)| score < bs).unwrap_or(true) {
                 best = Some((i.id, score));
             }
@@ -470,8 +821,14 @@ impl RoutePolicy for RoundRobinPolicy {
     }
 
     fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
-        // Reuse the live-id buffer across calls (allocation-free once
-        // warm); take it out of `self` so the cursor stays mutable.
+        // The maintained live-id ring makes RR O(candidates visited) with
+        // no per-request rebuild; its content and order match the scan.
+        if let Some(idx) = view.load {
+            return self.route_over(req, view, idx.live_ids());
+        }
+        // Scan fallback: reuse the live-id buffer across calls
+        // (allocation-free once warm); take it out of `self` so the
+        // cursor stays mutable.
         let mut live = std::mem::take(&mut self.scratch);
         live.clear();
         live.extend(view.live().map(|i| i.id));
@@ -514,6 +871,10 @@ impl RoundRobinPolicy {
 }
 
 /// Least-Load-First: route to the least-loaded fitting instance.
+///
+/// Deliberately unindexed: LLF compares *absolute* committed tokens, which
+/// the load-quantized [`LoadIndex`] does not order across degree classes
+/// (capacity differs per degree). It is a baseline policy, not a hot path.
 pub struct LeastLoadPolicy;
 
 impl RoutePolicy for LeastLoadPolicy {
@@ -601,7 +962,14 @@ mod tests {
         engine: &'a EngineModel,
         instances: &'a [Instance],
     ) -> ClusterView<'a> {
-        ClusterView { instances, engine, cfg, now: SimTime::from_secs_f64(100.0), tp1: None }
+        ClusterView {
+            instances,
+            engine,
+            cfg,
+            now: SimTime::from_secs_f64(100.0),
+            tp1: None,
+            load: None,
+        }
     }
 
     fn long_req() -> ActiveRequest {
@@ -710,6 +1078,7 @@ mod tests {
             cfg: &cfg,
             now: SimTime::from_secs_f64(100.0),
             tp1: None,
+            load: None,
         };
         assert!(default_scale_down(&inst, &v), "idle TP4 should scale down");
         // long request blocks it
@@ -758,6 +1127,7 @@ mod tests {
             cfg: &cfg,
             now: SimTime::ZERO,
             tp1: Some(&idx),
+            load: None,
         };
         let scanned = view(&cfg, &engine, &instances);
         assert_eq!(with_idx.tp1_on_host(0), scanned.tp1_on_host(0));
@@ -779,6 +1149,7 @@ mod tests {
             cfg: &cfg,
             now: SimTime::ZERO,
             tp1: Some(&idx),
+            load: None,
         };
         let mut buf = Vec::new();
         assert!(pick_merge_group_into(&v, 4, &mut buf));
@@ -789,5 +1160,74 @@ mod tests {
         // Asking for more candidates than exist fails cleanly.
         assert!(!pick_merge_group_into(&v, 9, &mut buf));
         assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn load_index_tracks_admits_retires_and_degrees() {
+        let (_, engine, mut instances) = setup();
+        let mut idx = LoadIndex::build(&instances, &engine);
+        assert_eq!(idx.live_ids(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+        // Load one instance, retire one, raise one to TP2.
+        for k in 0..3 {
+            instances[1].admit(ActiveRequest::new(100 + k, SimTime::ZERO, 3000, 200));
+        }
+        idx.note(&instances[1], &engine);
+        instances[4].retired = true;
+        idx.note(&instances[4], &engine);
+        instances[6].degree = 2;
+        idx.note(&instances[6], &engine);
+        idx.debug_verify(&instances, &engine);
+        assert_eq!(idx.live_ids(), &[0, 1, 2, 3, 5, 6, 7]);
+        // Un-retire and re-note: the index reconciles incrementally.
+        instances[4].retired = false;
+        idx.note(&instances[4], &engine);
+        idx.debug_verify(&instances, &engine);
+        assert_eq!(idx.live_ids(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn indexed_routes_match_scanning_routes() {
+        let (cfg, engine, mut instances) = setup();
+        // A mixed state: loads, a TP4, a transforming TP1, a retired TP1.
+        for k in 0..4 {
+            instances[0].admit(ActiveRequest::new(200 + k, SimTime::ZERO, 2500, 150));
+        }
+        instances[1].admit(ActiveRequest::new(300, SimTime::ZERO, 1200, 80));
+        for i in 4..8 {
+            instances[i].retired = true;
+        }
+        let mut tp4 = Instance::new(8, 0, vec![4, 5, 6, 7], 4);
+        tp4.enqueue_running(decoding(ActiveRequest::new(400, SimTime::ZERO, 20_000, 256)));
+        instances.push(tp4);
+        let hidx = HostIndex::build(&instances, 1);
+        let lidx = LoadIndex::build(&instances, &engine);
+        let indexed = ClusterView {
+            instances: &instances,
+            engine: &engine,
+            cfg: &cfg,
+            now: SimTime::from_secs_f64(100.0),
+            tp1: Some(&hidx),
+            load: Some(&lidx),
+        };
+        let scanning = view(&cfg, &engine, &instances);
+        for req in [short_req(1), long_req(), ActiveRequest::new(3, SimTime::ZERO, 20_000, 64)] {
+            let mut pi = GygesPolicy::default();
+            let mut ps = GygesPolicy::default();
+            assert_eq!(
+                pi.route(&req, &indexed),
+                ps.route(&req, &scanning),
+                "gyges diverged on {} tokens",
+                req.final_len()
+            );
+        }
+        let mut rr_i = RoundRobinPolicy::default();
+        let mut rr_s = RoundRobinPolicy::default();
+        for k in 0..6 {
+            assert_eq!(
+                rr_i.route(&short_req(k), &indexed),
+                rr_s.route(&short_req(k), &scanning),
+                "rr diverged at step {k}"
+            );
+        }
     }
 }

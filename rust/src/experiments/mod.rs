@@ -40,7 +40,13 @@ fn row_json(pairs: &[(&str, Json)]) -> Json {
 pub fn table1() -> Vec<Json> {
     let e = EngineModel::new(ModelConfig::qwen2_5_32b(), GpuSpec::h20());
     let paper = [
-        (1u64, 4u64, calib::table1::MAX_SEQ_TP1, calib::table1::TPS_TP1, calib::table1::TOTAL_TPS_4X_TP1),
+        (
+            1u64,
+            4u64,
+            calib::table1::MAX_SEQ_TP1,
+            calib::table1::TPS_TP1,
+            calib::table1::TOTAL_TPS_4X_TP1,
+        ),
         (2, 2, calib::table1::MAX_SEQ_TP2, calib::table1::TPS_TP2, calib::table1::TOTAL_TPS_2X_TP2),
         (4, 1, calib::table1::MAX_SEQ_TP4, calib::table1::TPS_TP4, calib::table1::TOTAL_TPS_TP4),
     ];
@@ -85,7 +91,8 @@ pub fn table1() -> Vec<Json> {
 pub fn table2() -> Vec<Json> {
     use crate::kvcache::{KvLayout, KvManager};
     let model = ModelConfig::qwen2_5_32b();
-    let mut t = Table::new(["layout", "hierarchy", "shift ops on 1000 appends", "trim copies/block"]);
+    let mut t =
+        Table::new(["layout", "hierarchy", "shift ops on 1000 appends", "trim copies/block"]);
     let mut rows = Vec::new();
     for layout in [KvLayout::Raw, KvLayout::PageFriendly, KvLayout::HeaderCentric] {
         let mut mgr = KvManager::new(&model, 1, layout, 3 * crate::util::GIB);
@@ -115,7 +122,10 @@ pub fn table2() -> Vec<Json> {
 
 /// Table 3: MLP weight pages per tensor (exact shape math).
 pub fn table3() -> Vec<Json> {
-    let mut t = Table::new(["model", "structure", "pages TP1 (paper)", "pages TP1 (ours)", "pages TP4 (paper)", "pages TP4 (ours)"]);
+    let mut t = Table::new([
+        "model", "structure", "pages TP1 (paper)", "pages TP1 (ours)", "pages TP4 (paper)",
+        "pages TP4 (ours)",
+    ]);
     let mut rows = Vec::new();
     for (m, (p1, _), (p4, _)) in crate::weights::pages::table3_rows() {
         let c1 = page_counts(&m, 1);
@@ -190,7 +200,8 @@ pub fn fig2() -> Vec<Json> {
 
 /// Figure 9: KV-cache transformation time (a) and memory (b).
 pub fn fig9() -> Vec<Json> {
-    let mut t = Table::new(["model", "strategy", "extra time/layer", "peak extra mem/layer", "stages"]);
+    let mut t =
+        Table::new(["model", "strategy", "extra time/layer", "peak extra mem/layer", "stages"]);
     let mut rows = Vec::new();
     for m in ModelConfig::eval_set() {
         for r in fig9_series(m.clone()) {
@@ -217,7 +228,8 @@ pub fn fig9() -> Vec<Json> {
 
 /// Figure 10: weight transformation time (a) and padding overhead (b).
 pub fn fig10() -> Vec<Json> {
-    let mut t = Table::new(["model", "strategy", "wall time/layer", "copied/layer", "padding overhead"]);
+    let mut t =
+        Table::new(["model", "strategy", "wall time/layer", "copied/layer", "padding overhead"]);
     let mut rows = Vec::new();
     for m in ModelConfig::eval_set() {
         let plan = LayerPadPlan::plan(&m, 4);
@@ -248,7 +260,8 @@ pub fn fig10() -> Vec<Json> {
 pub fn fig11() -> Vec<Json> {
     let m = ModelConfig::qwen2_5_32b();
     let g = GpuSpec::h20();
-    let mut t = Table::new(["layers/step", "raw", "seesaw", "basic", "gyges-", "gyges", "gyges overhead"]);
+    let mut t =
+        Table::new(["layers/step", "raw", "seesaw", "basic", "gyges-", "gyges", "gyges overhead"]);
     let mut rows = Vec::new();
     for r in fig11_sweep(&m, &g, 8) {
         let overhead = r.gyges.as_secs_f64() / r.raw_step.as_secs_f64() - 1.0;
@@ -356,7 +369,9 @@ pub fn fig12_jobs(horizon_s: f64, models: &[ModelConfig]) -> Vec<SweepJob> {
 pub fn fig12(horizon_s: f64, models: &[ModelConfig]) -> Vec<Json> {
     let results = run_sweep(&fig12_jobs(horizon_s, models));
     sweep::warn_on_errors(&results);
-    let mut t = Table::new(["model", "policy", "tput (tps)", "ttft p50", "scale-ups", "gain vs best baseline"]);
+    let mut t = Table::new([
+        "model", "policy", "tput (tps)", "ttft p50", "scale-ups", "gain vs best baseline",
+    ]);
     let mut rows = Vec::new();
     for (m, by_policy) in models.iter().zip(results.chunks(FIG12_POLICIES.len())) {
         let best_baseline = by_policy[..2]
@@ -371,7 +386,11 @@ pub fn fig12(horizon_s: f64, models: &[ModelConfig]) -> Vec<Json> {
                 format!("{:.1}", out.report.throughput_tps),
                 format!("{:.2}s", out.report.ttft_p50_s),
                 format!("{}", out.counters.scale_ups),
-                if *policy == Policy::Gyges { format!("{:+.1}%", gain * 100.0) } else { "-".into() },
+                if *policy == Policy::Gyges {
+                    format!("{:+.1}%", gain * 100.0)
+                } else {
+                    "-".into()
+                },
             ]);
             let mut row = row_json(&[
                 ("model", Json::from(m.name)),
@@ -442,7 +461,9 @@ pub fn fig13() -> Vec<Json> {
     let results = run_sweep(&fig13_jobs());
     sweep::warn_on_errors(&results);
     let mut rows = Vec::new();
-    let mut t = Table::new(["policy", "scale-ups", "tput (tps)", "tps@110-120s", "tps@120-130s", "tps@130-140s"]);
+    let mut t = Table::new([
+        "policy", "scale-ups", "tput (tps)", "tps@110-120s", "tps@120-130s", "tps@130-140s",
+    ]);
     for (policy, out) in FIG12_POLICIES.iter().zip(&results) {
         let series = &out.tps_series;
         let bucket = |lo: u64, hi: u64| -> f64 {
@@ -498,7 +519,9 @@ pub fn fig14(horizon_s: f64, qps_list: &[f64]) -> Vec<Json> {
     let n_systems = fig14_systems().len();
     let results = run_sweep(&fig14_jobs(horizon_s, qps_list));
     sweep::warn_on_errors(&results);
-    let mut t = Table::new(["qps", "system", "tput (tps)", "ttft p50", "ttft p99", "tpot p50", "gain vs best alt"]);
+    let mut t = Table::new([
+        "qps", "system", "tput (tps)", "ttft p50", "ttft p99", "tpot p50", "gain vs best alt",
+    ]);
     let mut rows = Vec::new();
     for (&qps, outs) in qps_list.iter().zip(results.chunks(n_systems)) {
         let reports: Vec<&crate::metrics::RunReport> = outs.iter().map(|o| &o.report).collect();
@@ -515,7 +538,11 @@ pub fn fig14(horizon_s: f64, qps_list: &[f64]) -> Vec<Json> {
                 format!("{:.2}s", r.ttft_p50_s),
                 format!("{:.2}s", r.ttft_p99_s),
                 format!("{:.1}ms", r.tpot_p50_s * 1e3),
-                if is_gyges { format!("{:.2}x", r.throughput_tps / best_alt.max(1e-9)) } else { "-".into() },
+                if is_gyges {
+                    format!("{:.2}x", r.throughput_tps / best_alt.max(1e-9))
+                } else {
+                    "-".into()
+                },
             ]);
             let mut row = row_json(&[
                 ("qps", Json::from(qps)),

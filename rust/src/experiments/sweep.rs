@@ -69,7 +69,18 @@ impl SweepResult {
             .set("scale_downs", self.counters.scale_downs)
             .set("deferred", self.counters.deferred)
             .set("steps", self.counters.steps)
-            .set("events", self.counters.events);
+            .set("events", self.counters.events)
+            .set("arrival_events", self.counters.arrival_events)
+            .set("step_events", self.counters.step_events)
+            .set("transform_done_events", self.counters.transform_done_events)
+            .set("stale_events", self.counters.stale_events)
+            .set("backlog_wakeup_events", self.counters.backlog_wakeup_events)
+            .set("routes", self.counters.routes)
+            .set("kicks", self.counters.kicks)
+            .set("backlog_retries", self.counters.backlog_retries)
+            .set("backlog_requeues", self.counters.backlog_requeues)
+            .set("backlog_suppressed", self.counters.backlog_suppressed)
+            .set("backlog_wait_s", self.counters.backlog_wait.as_secs_f64());
         let series: Vec<Json> = self
             .tps_series
             .iter()

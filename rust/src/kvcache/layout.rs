@@ -78,7 +78,14 @@ impl KvLayout {
     /// Linear element offset of (block, kv, token, header) under this
     /// layout. `kv` is 0 for K, 1 for V. Offsets are in units of one
     /// head-element (multiply by `head_elem_bytes` for bytes).
-    pub fn linear_offset(&self, g: &KvGeometry, block: u64, kv: u64, token: u64, header: u64) -> u64 {
+    pub fn linear_offset(
+        &self,
+        g: &KvGeometry,
+        block: u64,
+        kv: u64,
+        token: u64,
+        header: u64,
+    ) -> u64 {
         debug_assert!(block < g.num_blocks && kv < 2);
         debug_assert!(token < g.tokens_per_block && header < g.num_heads);
         let (b, t, h) = (g.num_blocks, g.tokens_per_block, g.num_heads);

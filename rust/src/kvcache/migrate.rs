@@ -149,7 +149,10 @@ impl KvMigrationReport {
 }
 
 /// Simulate one KV transformation under `strategy`.
-pub fn run_kv_migration(spec: &KvMigrationSpec, strategy: KvMigrationStrategy) -> KvMigrationReport {
+pub fn run_kv_migration(
+    spec: &KvMigrationSpec,
+    strategy: KvMigrationStrategy,
+) -> KvMigrationReport {
     let comm = CommModel::for_gpu(&spec.gpu);
     let vmm = VmmCosts::default();
     let layers = spec.model.num_layers;

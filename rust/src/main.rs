@@ -32,7 +32,8 @@ fn main() {
 }
 
 fn cmd_info() -> i32 {
-    let mut t = gyges::util::Table::new(["model", "weights", "layers", "heads/kv", "MLP frac", "GPU"]);
+    let mut t =
+        gyges::util::Table::new(["model", "weights", "layers", "heads/kv", "MLP frac", "GPU"]);
     for m in ModelConfig::all() {
         let gpu = gyges::config::GpuSpec::for_model(&m);
         t.row([

@@ -140,7 +140,12 @@ impl RealServer {
 }
 
 /// Build a mixed short/long workload over the tiny model's vocab.
-pub fn synthetic_workload(seed: u64, shorts: usize, longs: usize, vocab: usize) -> Vec<ServeRequest> {
+pub fn synthetic_workload(
+    seed: u64,
+    shorts: usize,
+    longs: usize,
+    vocab: usize,
+) -> Vec<ServeRequest> {
     let mut rng = crate::util::Prng::new(seed);
     let mut reqs = Vec::new();
     for i in 0..shorts {

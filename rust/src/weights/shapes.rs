@@ -39,11 +39,26 @@ pub fn mlp_shards(model: &ModelConfig, tp: u64) -> Vec<TensorShard> {
     assert!(tp >= 1 && model.inter_size % tp == 0, "tp must divide inter_size");
     let shard_inter = model.inter_size / tp;
     let d = model.dtype_bytes;
-    let mut v = vec![TensorShard { proj: Proj::Up, rows: model.hidden_size, cols: shard_inter, dtype_bytes: d }];
+    let mut v = vec![TensorShard {
+        proj: Proj::Up,
+        rows: model.hidden_size,
+        cols: shard_inter,
+        dtype_bytes: d,
+    }];
     if model.mlp == MlpKind::SwiGlu {
-        v.push(TensorShard { proj: Proj::Gate, rows: model.hidden_size, cols: shard_inter, dtype_bytes: d });
+        v.push(TensorShard {
+            proj: Proj::Gate,
+            rows: model.hidden_size,
+            cols: shard_inter,
+            dtype_bytes: d,
+        });
     }
-    v.push(TensorShard { proj: Proj::Down, rows: shard_inter, cols: model.hidden_size, dtype_bytes: d });
+    v.push(TensorShard {
+        proj: Proj::Down,
+        rows: shard_inter,
+        cols: model.hidden_size,
+        dtype_bytes: d,
+    });
     v
 }
 

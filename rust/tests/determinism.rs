@@ -6,9 +6,9 @@
 //!    serial driver's, for the Figure 12/13 experiment sets.
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
-use gyges::coordinator::{run_system, SystemKind};
+use gyges::coordinator::{run_system, ClusterSim, SystemKind};
 use gyges::experiments::sweep::{
-    results_to_jsonl, run_sweep_parallel, run_sweep_serial, SweepJob,
+    results_to_jsonl, run_sweep_parallel, run_sweep_serial, SweepJob, SweepResult,
 };
 use gyges::experiments::{fig12_jobs, fig13_jobs};
 use gyges::metrics::RequestRecord;
@@ -71,6 +71,39 @@ fn parallel_sweep_matches_serial_fig13_set() {
     let serial = results_to_jsonl(&run_sweep_serial(&jobs));
     let parallel = results_to_jsonl(&run_sweep_parallel(&jobs, 8));
     assert_eq!(serial, parallel, "fig13 sweep: parallel must merge byte-identically");
+}
+
+/// The incremental HostIndex/LoadIndex routing fast path must be a pure
+/// optimisation: the full Figure-13 output (reports, per-second TPS
+/// series, every counter) is byte-identical to the same simulator routing
+/// through full instance-table scans.
+#[test]
+fn fig13_output_identical_with_and_without_routing_index() {
+    let jobs = fig13_jobs();
+    let indexed = results_to_jsonl(&run_sweep_serial(&jobs));
+    let scanned: Vec<SweepResult> = jobs
+        .iter()
+        .map(|job| {
+            let mut sim = ClusterSim::new(job.cfg.clone(), job.system, (*job.trace).clone());
+            if let Some(p) = job.policy {
+                sim = sim.with_policy(p);
+            }
+            sim.disable_routing_index();
+            let out = sim.run();
+            SweepResult {
+                key: job.key.clone(),
+                tps_series: out.recorder.tps_series(),
+                report: out.report,
+                counters: out.counters,
+                error: out.error.map(|e| e.to_string()),
+            }
+        })
+        .collect();
+    assert_eq!(
+        indexed,
+        results_to_jsonl(&scanned),
+        "indexed routing must be decision-identical to the scan baseline on fig13"
+    );
 }
 
 #[test]

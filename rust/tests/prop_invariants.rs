@@ -6,11 +6,12 @@
 
 use gyges::config::{ClusterConfig, ModelConfig};
 use gyges::coordinator::{
-    make_policy, ActiveRequest, ClusterView, Instance, Route,
+    make_policy, ActiveRequest, ClusterView, HostIndex, Instance, LoadIndex, Route,
+    TransformState,
 };
 use gyges::kvcache::{KvLayout, KvManager};
 use gyges::sim::{EngineModel, SimTime};
-use gyges::transform::TransformPlan;
+use gyges::transform::{Mechanism, TransformExec, TransformPlan};
 use gyges::util::proptest::{forall, Config};
 use gyges::util::Prng;
 use gyges::weights::ffn::{ffn, gelu, pad_columns, pad_rows, Mat};
@@ -82,16 +83,20 @@ fn prop_routing_decisions_are_sound() {
                 let mut policy = make_policy(policy_kind);
                 let req = ActiveRequest::new(9999, SimTime::ZERO, *input, 256);
                 // The simulator always routes through the incremental
-                // HostIndex; a fresh policy over a scanning view must make
-                // the same decision (index/scan equivalence).
-                let index = gyges::coordinator::HostIndex::build(instances, 1);
+                // HostIndex + LoadIndex; a fresh policy over a scanning
+                // view must make the same decision (index/scan
+                // equivalence).
+                let index = HostIndex::build(instances, 1);
                 index.debug_verify(instances);
+                let load = LoadIndex::build(instances, &e);
+                load.debug_verify(instances, &e);
                 let view = ClusterView {
                     instances,
                     engine: &e,
                     cfg: &c,
                     now: SimTime::from_secs_f64(1000.0),
                     tp1: Some(&index),
+                    load: Some(&load),
                 };
                 let scan_view = ClusterView {
                     instances,
@@ -99,6 +104,7 @@ fn prop_routing_decisions_are_sound() {
                     cfg: &c,
                     now: SimTime::from_secs_f64(1000.0),
                     tp1: None,
+                    load: None,
                 };
                 let mut scan_policy = make_policy(policy_kind);
                 let indexed_route = policy.route(&req, &view);
@@ -152,6 +158,130 @@ fn prop_routing_decisions_are_sound() {
             },
         );
     }
+}
+
+/// INVARIANT: a `LoadIndex` maintained incrementally through a long
+/// random mutation sequence (admits, prefill completions, decode steps,
+/// retirements, fresh spawns, transform toggles) always matches a
+/// from-scratch rebuild, and indexed routing decisions stay identical to
+/// the scanning fallback after every mutation.
+#[test]
+fn prop_load_index_survives_mutation_sequences() {
+    let c = cfg();
+    let e = engine(&c);
+    let transform_state = || {
+        let plan = TransformPlan::build(&c.model, 1, 2, 1);
+        let exec = TransformExec::new(&c.model, &c.gpu, plan, 0.2, Mechanism::Gyges);
+        TransformState { exec, blocked_until: None }
+    };
+    forall(
+        "load-index-mutations",
+        Config { cases: 40, seed: 0x10AD },
+        |rng| {
+            let ops: Vec<u64> = (0..60).map(|_| rng.next()).collect();
+            ops
+        },
+        |ops| {
+            let mut instances: Vec<Instance> =
+                (0..8).map(|i| Instance::new(i, i / 4, vec![i], 1)).collect();
+            let mut idx = LoadIndex::build(&instances, &e);
+            let mut next_req = 1000u64;
+            for &op in ops {
+                let iid = (op % instances.len() as u64) as usize;
+                let touched = match (op >> 8) % 6 {
+                    0 => {
+                        // admit a request (load grows)
+                        if !instances[iid].retired {
+                            let len = 500 + (op >> 16) % 2000;
+                            let req = ActiveRequest::new(next_req, SimTime::ZERO, len, 50);
+                            instances[iid].admit(req);
+                            next_req += 1;
+                        }
+                        iid
+                    }
+                    1 => {
+                        // prefill completion → decode or instant finish
+                        let front = instances[iid].prefill_queue.front().map(|r| r.id);
+                        if let Some(id) = front {
+                            if let Some(r) = instances[iid].complete_prefill(id) {
+                                if r.done() {
+                                    let ctx = r.context_len();
+                                    instances[iid].release_kv(ctx);
+                                } else {
+                                    instances[iid].enqueue_running(r);
+                                }
+                            }
+                        }
+                        iid
+                    }
+                    2 => {
+                        // decode step (finishes shrink the load)
+                        let (mut stepped, mut finished) = (Vec::new(), Vec::new());
+                        instances[iid].decode_advance(4, &mut stepped, &mut finished);
+                        iid
+                    }
+                    3 => {
+                        // retire + drain, as a merge would
+                        instances[iid].retired = true;
+                        let _ = instances[iid].take_work();
+                        iid
+                    }
+                    4 => {
+                        // spawn fresh capacity, as a split would
+                        let id = instances.len();
+                        let degree = if (op >> 16) & 1 == 0 { 1 } else { 2 };
+                        let host = (op >> 20) as usize % 2;
+                        instances.push(Instance::new(id, host, vec![id], degree));
+                        id
+                    }
+                    _ => {
+                        // toggle transforming (bucket-neutral; filters only)
+                        if instances[iid].transforming.is_some() {
+                            instances[iid].transforming = None;
+                        } else if !instances[iid].retired {
+                            instances[iid].transforming = Some(transform_state());
+                        }
+                        iid
+                    }
+                };
+                idx.note(&instances[touched], &e);
+                idx.debug_verify(&instances, &e);
+
+                let input = 100 + (op >> 24) % 60_000;
+                let req = ActiveRequest::new(9_999_999, SimTime::ZERO, input, 128);
+                let hidx = HostIndex::build(&instances, 2);
+                let indexed = ClusterView {
+                    instances: &instances,
+                    engine: &e,
+                    cfg: &c,
+                    now: SimTime::from_secs_f64(50.0),
+                    tp1: Some(&hidx),
+                    load: Some(&idx),
+                };
+                let scanning = ClusterView {
+                    instances: &instances,
+                    engine: &e,
+                    cfg: &c,
+                    now: SimTime::from_secs_f64(50.0),
+                    tp1: None,
+                    load: None,
+                };
+                for pk in [gyges::config::Policy::Gyges, gyges::config::Policy::RoundRobin] {
+                    let mut pi = make_policy(pk);
+                    let mut ps = make_policy(pk);
+                    let ri = pi.route(&req, &indexed);
+                    let rs = ps.route(&req, &scanning);
+                    if ri != rs {
+                        return Err(format!(
+                            "index/scan divergence after mutation {op:#x} ({pk:?}, {} tokens): {ri:?} vs {rs:?}",
+                            req.final_len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 /// INVARIANT: KV page accounting never leaks — allocated pages equal the
