@@ -9,14 +9,19 @@
 //!  A4. Layer stagger width: per-step overhead vs. transformation
 //!      completion latency (§4.3).
 
-use gyges::config::{ClusterConfig, GpuSpec, ModelConfig, Policy};
-use gyges::coordinator::cluster::{ClusterSim, SystemKind};
+use gyges::config::{GpuSpec, ModelConfig};
+use gyges::experiments::{ablation_hold_jobs, named_sweep_default_horizon, ABLATION_HOLDS};
 use gyges::kvcache::{run_kv_migration, KvMigrationSpec, KvMigrationStrategy};
 use gyges::transform::{estimate, Mechanism};
 use gyges::util::{fmt_bytes, Args, Table};
 
 fn main() {
     let args = Args::from_env();
+    if args.get("shard").is_some() {
+        // A3 as a named sweep stripe (`--shard K/N`): JSONL + manifest
+        // out, merged via `gyges sweep-merge ablation-hold`.
+        std::process::exit(gyges::experiments::shard::shard_cli_named(&args, "ablation-hold"));
+    }
     let model = ModelConfig::qwen2_5_32b();
 
     // ---------------- A1: stage size ----------------
@@ -59,16 +64,14 @@ fn main() {
     println!("  -> matches the paper's 522 ms @78SM vs 2240 ms @1SM anchors (4.3x).\n");
 
     // ---------------- A3: scheduler hysteresis ----------------
-    let horizon = args.parsed_or("horizon", 240.0);
+    let horizon = args.parsed_or("horizon", named_sweep_default_horizon("ablation-hold"));
     println!("A3 — gyges long-request hold (anti-oscillation), horizon {horizon}s:");
     let mut t = Table::new(["long_hold_s", "tput (tps)", "scale-ups", "scale-downs"]);
-    for hold in [0.0f64, 15.0, 45.0, 120.0] {
-        let cfg = ClusterConfig::paper_default(model.clone());
-        let trace = gyges::experiments::fig12_trace(&cfg, 7, horizon);
-        let mut sim =
-            ClusterSim::new(cfg, SystemKind::Gyges, trace).with_policy(Policy::Gyges);
-        sim.set_gyges_hold(hold);
-        let out = sim.run();
+    // The hold values ride the sharded sweep driver (job keys hold0,
+    // hold15, ... — the same list `--shard` stripes across processes).
+    let results = gyges::experiments::sweep::run_sweep(&ablation_hold_jobs(horizon));
+    gyges::experiments::sweep::warn_on_errors(&results);
+    for (&hold, out) in ABLATION_HOLDS.iter().zip(&results) {
         t.row([
             format!("{hold}"),
             format!("{:.1}", out.report.throughput_tps),

@@ -247,6 +247,7 @@ fn main() {
     let mut single = Json::obj();
     single
         .set("trace_requests", trace.len())
+        .set("samples", samples)
         .set("trace_tokens", trace.total_tokens())
         .set("events", events)
         .set("wall_s", best_wall)
@@ -270,7 +271,7 @@ fn main() {
         .set("single_thread", single)
         .set("routing_microbench", micro)
         .set("sweep", sweep);
-    std::fs::write(&out_path, format!("{}\n", root.to_string()))
+    std::fs::write(&out_path, format!("{root}\n"))
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
     println!("\nwrote {out_path}");
 }

@@ -1,17 +1,28 @@
 //! Bench: regenerate paper Figure 12 (RR vs LLF vs Gyges scheduling,
 //! four models) and micro-time a routing decision.
+//!
+//! `--shard K/N [--out-dir DIR]` runs one stripe of the fig12 job list
+//! and writes shard JSONL + manifest instead (merge the stripes with
+//! `gyges sweep-merge fig12`).
 
 use gyges::config::{ClusterConfig, ModelConfig};
 use gyges::coordinator::{
     ActiveRequest, ClusterView, GygesPolicy, HostIndex, Instance, LoadIndex, RoutePolicy,
 };
+use gyges::experiments as exp;
 use gyges::sim::{EngineModel, SimTime};
 use gyges::util::stats::Bench;
 use gyges::util::Args;
 
 fn main() {
     let args = Args::from_env();
-    let horizon = args.parsed_or("horizon", 240.0);
+    // Default horizon comes from the sweep registry so this bench, its
+    // --shard mode, and `gyges sweep-shard fig12` all describe the same
+    // canonical run by default.
+    let horizon = args.parsed_or("horizon", exp::named_sweep_default_horizon("fig12"));
+    if args.get("shard").is_some() {
+        std::process::exit(exp::shard::shard_cli_named(&args, "fig12"));
+    }
     let rows = gyges::experiments::fig12(horizon, &ModelConfig::eval_set());
     assert_eq!(rows.len(), 12); // 4 models × 3 policies
 

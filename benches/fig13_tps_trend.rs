@@ -1,7 +1,17 @@
 //! Bench: regenerate paper Figure 13 (TPS trend around the t=120 s long
 //! request; Gyges avoids the second scale-up that RR/LLF trigger).
+//!
+//! `--shard K/N [--out-dir DIR]` runs one stripe of the fig13 job list
+//! and writes shard JSONL + manifest instead (merge the stripes with
+//! `gyges sweep-merge fig13`).
+
+use gyges::util::Args;
 
 fn main() {
+    let args = Args::from_env();
+    if args.get("shard").is_some() {
+        std::process::exit(gyges::experiments::shard::shard_cli_named(&args, "fig13"));
+    }
     let rows = gyges::experiments::fig13();
     assert_eq!(rows.len(), 3);
     // Assert the figure's qualitative claim as a regression check.

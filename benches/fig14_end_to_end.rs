@@ -1,12 +1,24 @@
 //! Bench: regenerate paper Figure 14 (end-to-end throughput/TTFT/TPOT:
 //! Gyges vs Gyges⁻ vs KunServe vs LoongServe across load levels,
 //! production-like trace).
+//!
+//! `--shard K/N [--out-dir DIR]` runs one stripe of the fig14 job list
+//! and writes shard JSONL + manifest instead (merge the stripes with
+//! `gyges sweep-merge fig14`).
 
+use gyges::experiments as exp;
 use gyges::util::Args;
 
 fn main() {
     let args = Args::from_env();
-    let horizon = args.parsed_or("horizon", 300.0);
+    // Default horizon comes from the sweep registry (300 s for fig14)
+    // so this bench, its --shard mode, and `gyges sweep-shard fig14`
+    // all describe the same canonical run by default — the job-list
+    // fingerprint rejects mixed horizons at merge time.
+    let horizon = args.parsed_or("horizon", exp::named_sweep_default_horizon("fig14"));
+    if args.get("shard").is_some() {
+        std::process::exit(exp::shard::shard_cli_named(&args, "fig14"));
+    }
     // QPS levels that sweep this trace from moderate to saturating load
     // (the paper highlights an SLO-critical level; for our trace mix that
     // knee sits near 10 qps).

@@ -366,10 +366,8 @@ impl ClusterSim {
     /// Tune the Gyges policy's anti-oscillation hold (ablation A3).
     /// No-op for other policies.
     pub fn set_gyges_hold(&mut self, hold_s: f64) {
-        let mut p = super::scheduler::GygesPolicy::default();
-        p.long_hold_s = hold_s;
         if self.policy.name() == "gyges" {
-            self.policy = Box::new(p);
+            self.policy = Box::new(super::scheduler::GygesPolicy::with_long_hold(hold_s));
         }
     }
 

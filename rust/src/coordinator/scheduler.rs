@@ -658,6 +658,12 @@ impl Default for GygesPolicy {
 }
 
 impl GygesPolicy {
+    /// Policy with a custom anti-oscillation hold (ablation A3, sweep
+    /// jobs with a `gyges_hold` override).
+    pub fn with_long_hold(hold_s: f64) -> GygesPolicy {
+        GygesPolicy { long_hold_s: hold_s, ..GygesPolicy::default() }
+    }
+
     /// Recompute the reserve (`update_reserve` in Algorithm 2): if no
     /// TP>1 instance exists, reserve the least-loaded mergeable TP1 group;
     /// otherwise no reserve is needed.

@@ -5,8 +5,13 @@
 //!
 //! Simulation sweeps (Figures 12–14) go through the [`sweep`] driver: jobs
 //! fan out across cores and merge in fixed order, so the printed tables
-//! and `target/repro/` rows are identical to a serial run.
+//! and `target/repro/` rows are identical to a serial run. The [`shard`]
+//! layer stretches the same guarantee across processes/hosts/CI matrix
+//! jobs: `gyges sweep-shard` runs one stripe of a named job list and
+//! `gyges sweep-merge` reassembles the stripes to the serial driver's
+//! exact bytes (manifest-verified).
 
+pub mod shard;
 pub mod sweep;
 
 use crate::baselines::{fig14_systems, run_static_hybrid, StaticHybridConfig};
@@ -564,6 +569,65 @@ pub fn fig14(horizon_s: f64, qps_list: &[f64]) -> Vec<Json> {
     rows
 }
 
+// ---------------------------------------------------------------------
+// Named sweeps (sharding + CLI entry points)
+// ---------------------------------------------------------------------
+
+/// Hold values the A3 hysteresis ablation sweeps (ablation_sweeps bench).
+pub const ABLATION_HOLDS: [f64; 4] = [0.0, 15.0, 45.0, 120.0];
+
+/// Build the A3 ablation job list: the Figure-12 workload under the
+/// Gyges policy with `long_hold_s` swept over [`ABLATION_HOLDS`].
+pub fn ablation_hold_jobs(horizon_s: f64) -> Vec<SweepJob> {
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let trace = Arc::new(fig12_trace(&cfg, 7, horizon_s));
+    ABLATION_HOLDS
+        .iter()
+        .map(|&hold| {
+            SweepJob::new(
+                format!("hold{hold}"),
+                cfg.clone(),
+                SystemKind::Gyges,
+                Some(Policy::Gyges),
+                Arc::clone(&trace),
+            )
+            .with_gyges_hold(hold)
+        })
+        .collect()
+}
+
+/// The canonical job list of a named sweep — the shared vocabulary of
+/// `gyges sweep-shard` / `sweep-merge`, the figure benches' `--shard`
+/// mode, and CI's shard matrix. Every process sharding one sweep MUST
+/// build its jobs through this function with the same `horizon_s`, or
+/// the manifests' key-list hashes will (correctly) refuse to merge.
+/// `fig13` ignores the horizon (its trace is fully scripted).
+pub fn named_sweep_jobs(name: &str, horizon_s: f64) -> Option<Vec<SweepJob>> {
+    Some(match name {
+        "fig12" => fig12_jobs(horizon_s, &ModelConfig::eval_set()),
+        "fig12-qwen" => fig12_jobs(horizon_s, &[ModelConfig::qwen2_5_32b()]),
+        "fig13" => fig13_jobs(),
+        "fig14" => fig14_jobs(horizon_s, &[2.0, 6.0, 10.0]),
+        "ablation-hold" => ablation_hold_jobs(horizon_s),
+        _ => return None,
+    })
+}
+
+/// Names [`named_sweep_jobs`] understands (usage strings, error text).
+pub const NAMED_SWEEPS: [&str; 5] = ["fig12", "fig12-qwen", "fig13", "fig14", "ablation-hold"];
+
+/// Default horizon (seconds) of a named sweep when the caller passes
+/// none — the same default its canonical figure bench uses, so a
+/// default-argument `sweep-shard` run produces the canonical figure
+/// (fig14's bench runs 300 s; fig12/ablation run 240 s; fig13 ignores
+/// the horizon entirely).
+pub fn named_sweep_default_horizon(name: &str) -> f64 {
+    match name {
+        "fig14" => 300.0,
+        _ => 240.0,
+    }
+}
+
 /// §3.3 companion: static hybrid vs Gyges (motivation experiment).
 pub fn static_hybrid_compare(horizon_s: f64) -> Vec<Json> {
     let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
@@ -608,6 +672,20 @@ mod tests {
     fn fig11_rows_cover_sweep() {
         let rows = fig11();
         assert!(rows.len() >= 6);
+    }
+
+    #[test]
+    fn named_sweeps_resolve_and_unknown_names_do_not() {
+        for name in NAMED_SWEEPS {
+            let jobs = named_sweep_jobs(name, 60.0).unwrap_or_else(|| panic!("{name} missing"));
+            assert!(!jobs.is_empty(), "{name} built an empty job list");
+        }
+        assert_eq!(named_sweep_jobs("fig12", 60.0).unwrap().len(), 12);
+        assert_eq!(named_sweep_jobs("ablation-hold", 60.0).unwrap().len(), ABLATION_HOLDS.len());
+        assert!(named_sweep_jobs("fig99", 60.0).is_none());
+        // Per-sweep defaults match each figure bench's canonical run.
+        assert_eq!(named_sweep_default_horizon("fig14"), 300.0);
+        assert_eq!(named_sweep_default_horizon("fig12"), 240.0);
     }
 
     #[test]

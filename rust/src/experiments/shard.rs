@@ -1,0 +1,759 @@
+//! Sharded sweep orchestration: fan a figure sweep out across processes
+//! (or CI matrix jobs) and merge the pieces back to the exact bytes the
+//! serial driver would have produced.
+//!
+//! A sweep is a canonical, deterministically ordered job list (see the
+//! `fig12_jobs`/`fig13_jobs`/`fig14_jobs` builders). Shard `k` of `N`
+//! runs the stripe `{k, k+N, k+2N, ...}` of that list through the
+//! in-process work-stealing driver and emits two files:
+//!
+//!   `<sweep>-shard-<k>of<N>.jsonl`          one result row per job
+//!   `<sweep>-shard-<k>of<N>.manifest.json`  completeness proof (v1)
+//!
+//! The manifest pins everything a merge needs to *prove* it reassembled
+//! the whole sweep: schema version, shard index/count, the canonical
+//! job-list length and a fingerprint over its keys + trace/config shape
+//! (so shards from different sweeps, horizons, or workloads can never
+//! be mixed), the global indices and keys this shard covered, and a
+//! hash of the payload bytes. The
+//! merge validates all of it, rejects missing / duplicated / foreign /
+//! tampered shards loudly, and reorders rows by global job index — the
+//! output is byte-identical to
+//! [`run_sweep_serial`](super::sweep::run_sweep_serial) +
+//! [`results_to_jsonl`](super::sweep::results_to_jsonl) on the same job
+//! list, which `rust/tests/sharding.rs` enforces for every shard count.
+
+use super::sweep::{results_to_jsonl, run_sweep, SweepJob};
+use crate::util::json::Json;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Manifest schema version this module reads and writes.
+pub const SHARD_SCHEMA_VERSION: u64 = 1;
+
+/// Upper bound on a manifest's claimed job count. Real sweeps are tens
+/// of jobs; the cap exists so a corrupted/hand-edited manifest claiming
+/// e.g. 1e15 jobs is rejected as a [`ShardError::BadManifest`] instead
+/// of driving an unbounded allocation (OOM with no diagnostic) in
+/// validation and merge.
+pub const MAX_TOTAL_JOBS: usize = 1_000_000;
+
+// ---------------------------------------------------------------------
+// Shard spec
+// ---------------------------------------------------------------------
+
+/// Which stripe of the canonical job list a process runs: shard `index`
+/// of `count` owns global job indices `index, index+count, ...`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    pub fn new(index: usize, count: usize) -> Result<ShardSpec, ShardError> {
+        if count == 0 {
+            return Err(ShardError::BadSpec("shard count must be >= 1".into()));
+        }
+        if index >= count {
+            return Err(ShardError::BadSpec(format!(
+                "shard index {index} out of range for {count} shards (want 0..{count})"
+            )));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Parse the CLI form `k/N` (e.g. `--shard 2/8`).
+    pub fn parse(s: &str) -> Result<ShardSpec, ShardError> {
+        let (k, n) = s
+            .split_once('/')
+            .ok_or_else(|| ShardError::BadSpec(format!("expected k/N, got {s:?}")))?;
+        let index = k
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| ShardError::BadSpec(format!("bad shard index {k:?} in {s:?}")))?;
+        let count = n
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| ShardError::BadSpec(format!("bad shard count {n:?} in {s:?}")))?;
+        ShardSpec::new(index, count)
+    }
+
+    /// The whole sweep as one shard (the unsharded reference run).
+    pub fn full() -> ShardSpec {
+        ShardSpec { index: 0, count: 1 }
+    }
+
+    /// Global job indices this shard owns, ascending.
+    pub fn job_indices(&self, total_jobs: usize) -> Vec<usize> {
+        (self.index..total_jobs).step_by(self.count).collect()
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Everything the shard/merge layer can reject. Merge failures are meant
+/// to be loud: a missing or doctored shard must fail the pipeline, never
+/// produce a silently partial figure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardError {
+    BadSpec(String),
+    Io(String),
+    BadManifest(String),
+    /// Two shards disagree on a field every shard of one sweep must share.
+    Mismatch { field: &'static str, detail: String },
+    MissingShard(usize),
+    DuplicateShard(usize),
+    /// Payload bytes do not hash to what the manifest promised.
+    PayloadHash { shard: usize, expected: String, actual: String },
+    /// Payload rows disagree with the manifest's job list.
+    RowMismatch { shard: usize, detail: String },
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::BadSpec(m) => write!(f, "bad shard spec: {m}"),
+            ShardError::Io(m) => write!(f, "shard I/O error: {m}"),
+            ShardError::BadManifest(m) => write!(f, "bad shard manifest: {m}"),
+            ShardError::Mismatch { field, detail } => {
+                write!(f, "shard manifests disagree on {field}: {detail}")
+            }
+            ShardError::MissingShard(k) => write!(f, "shard {k} is missing"),
+            ShardError::DuplicateShard(k) => write!(f, "shard {k} appears more than once"),
+            ShardError::PayloadHash { shard, expected, actual } => write!(
+                f,
+                "shard {shard} payload hash {actual} does not match manifest {expected} \
+                 (file corrupted or edited after the run)"
+            ),
+            ShardError::RowMismatch { shard, detail } => {
+                write!(f, "shard {shard} rows disagree with manifest: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+// ---------------------------------------------------------------------
+// Hashing (FNV-1a; no external crates offline)
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64-bit over raw bytes — stable across platforms and runs,
+/// which is all the manifest needs (integrity, not security).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn hex64(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Fingerprint of the canonical job list (all jobs of the sweep, in
+/// order): each job's key plus the trace/config facts that shape its
+/// rows — request count, total tokens, last arrival, system, policy,
+/// seed, fleet shape, event cap, hold override. Keys alone are not
+/// enough: fig12/fig14 keys do not encode the horizon, so two runs of
+/// "the same sweep" at different horizons would otherwise merge into a
+/// silently mixed figure. Strings are 0xFF-delimited (never valid
+/// UTF-8), so adjacent fields cannot alias.
+pub fn job_list_hash(jobs: &[SweepJob]) -> String {
+    let mut bytes = Vec::new();
+    for job in jobs {
+        bytes.extend_from_slice(job.key.as_bytes());
+        bytes.push(0xFF);
+        bytes.extend_from_slice(job.system.name().as_bytes());
+        bytes.push(0xFF);
+        if let Some(p) = job.policy {
+            bytes.extend_from_slice(p.name().as_bytes());
+        }
+        bytes.push(0xFF);
+        let last_arrival = job
+            .trace
+            .requests
+            .last()
+            .map(|r| r.arrival.as_secs_f64().to_bits())
+            .unwrap_or(0);
+        for v in [
+            job.trace.len() as u64,
+            job.trace.total_tokens(),
+            last_arrival,
+            job.cfg.seed,
+            job.cfg.hosts as u64,
+            job.cfg.gpus_per_host as u64,
+            job.cfg.max_events,
+        ] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        // Presence discriminant first: Some(0.0) must not collide with
+        // None (0.0f64.to_bits() == 0), and hold 0 vs the 45 s policy
+        // default is exactly the pair A3 compares.
+        match job.gyges_hold {
+            Some(h) => {
+                bytes.push(1);
+                bytes.extend_from_slice(&h.to_bits().to_le_bytes());
+            }
+            None => bytes.push(0),
+        }
+    }
+    hex64(fnv1a(&bytes))
+}
+
+// ---------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------
+
+/// The completeness proof written next to every shard's JSONL.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub schema_version: u64,
+    /// Sweep name (e.g. `fig12`) — informational plus a first-line guard.
+    pub sweep: String,
+    pub shard_index: usize,
+    pub shard_count: usize,
+    /// Length of the canonical job list (all shards combined).
+    pub total_jobs: usize,
+    /// [`job_list_hash`] fingerprint of the canonical job list. All
+    /// shards of one sweep share it; a shard built from a different job
+    /// list (other horizon, model set, workload, or sweep) cannot slip
+    /// into a merge.
+    pub jobs_hash: String,
+    /// Global job indices this shard ran, ascending (the `k, k+N, ...`
+    /// stripe — recorded explicitly so the merge can verify rather than
+    /// assume the striping rule).
+    pub job_indices: Vec<usize>,
+    /// Job keys aligned with `job_indices`.
+    pub job_keys: Vec<String>,
+    /// Row count of the payload JSONL (== `job_indices.len()`).
+    pub rows: usize,
+    /// Hex FNV-1a of the payload file's exact bytes.
+    pub payload_hash: String,
+}
+
+impl ShardManifest {
+    pub fn to_json(&self) -> Json {
+        let indices: Vec<Json> = self.job_indices.iter().map(|&i| Json::from(i)).collect();
+        let keys: Vec<Json> = self.job_keys.iter().map(|k| Json::from(k.as_str())).collect();
+        let mut o = Json::obj();
+        o.set("schema_version", self.schema_version)
+            .set("sweep", self.sweep.as_str())
+            .set("shard_index", self.shard_index)
+            .set("shard_count", self.shard_count)
+            .set("total_jobs", self.total_jobs)
+            .set("jobs_hash", self.jobs_hash.as_str())
+            .set("job_indices", Json::Arr(indices))
+            .set("job_keys", Json::Arr(keys))
+            .set("rows", self.rows)
+            .set("payload_hash", self.payload_hash.as_str());
+        o
+    }
+
+    /// Parse + structurally validate one manifest document.
+    pub fn from_json(j: &Json) -> Result<ShardManifest, ShardError> {
+        let bad = ShardError::BadManifest;
+        let str_field = |k: &str| -> Result<String, ShardError> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("missing or non-string field {k:?}")))
+        };
+        let num_field = |k: &str| -> Result<u64, ShardError> {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| bad(format!("missing or non-integer field {k:?}")))
+        };
+        let schema_version = num_field("schema_version")?;
+        if schema_version != SHARD_SCHEMA_VERSION {
+            return Err(bad(format!(
+                "schema_version {schema_version} unsupported (this reads v{SHARD_SCHEMA_VERSION})"
+            )));
+        }
+        let m = ShardManifest {
+            schema_version,
+            sweep: str_field("sweep")?,
+            shard_index: num_field("shard_index")? as usize,
+            shard_count: num_field("shard_count")? as usize,
+            total_jobs: num_field("total_jobs")? as usize,
+            jobs_hash: str_field("jobs_hash")?,
+            job_indices: j
+                .get("job_indices")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| bad("missing or non-array field \"job_indices\"".into()))?
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .map(|x| x as usize)
+                        .ok_or_else(|| bad("non-integer entry in job_indices".into()))
+                })
+                .collect::<Result<Vec<usize>, ShardError>>()?,
+            job_keys: j
+                .get("job_keys")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| bad("missing or non-array field \"job_keys\"".into()))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| bad("non-string entry in job_keys".into()))
+                })
+                .collect::<Result<Vec<String>, ShardError>>()?,
+            rows: num_field("rows")? as usize,
+            payload_hash: str_field("payload_hash")?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal consistency (one manifest in isolation).
+    pub fn validate(&self) -> Result<(), ShardError> {
+        let bad = ShardError::BadManifest;
+        // Bound-check BEFORE anything sized by total_jobs is allocated
+        // (the expected stripe below, merge_shards' line table).
+        if self.total_jobs > MAX_TOTAL_JOBS || self.shard_count > MAX_TOTAL_JOBS {
+            return Err(bad(format!(
+                "total_jobs {} / shard_count {} exceed the sanity cap {MAX_TOTAL_JOBS} \
+                 (corrupted manifest?)",
+                self.total_jobs, self.shard_count
+            )));
+        }
+        if self.shard_count == 0 || self.shard_index >= self.shard_count {
+            return Err(bad(format!(
+                "shard index {} out of range for {} shards",
+                self.shard_index, self.shard_count
+            )));
+        }
+        if self.rows != self.job_indices.len() || self.rows != self.job_keys.len() {
+            return Err(bad(format!(
+                "rows={} but {} job_indices / {} job_keys",
+                self.rows,
+                self.job_indices.len(),
+                self.job_keys.len()
+            )));
+        }
+        let expected = ShardSpec { index: self.shard_index, count: self.shard_count }
+            .job_indices(self.total_jobs);
+        if self.job_indices != expected {
+            return Err(bad(format!(
+                "job_indices {:?} are not the {}/{} stripe of {} jobs (expected {:?})",
+                self.job_indices, self.shard_index, self.shard_count, self.total_jobs, expected
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Running a shard
+// ---------------------------------------------------------------------
+
+/// Run shard `spec` of the canonical `jobs` list through the parallel
+/// driver and return `(payload, manifest)`: the shard's JSONL bytes (one
+/// row per owned job, in global-index order) plus its completeness proof.
+pub fn run_sweep_shard(sweep: &str, jobs: &[SweepJob], spec: ShardSpec) -> (String, ShardManifest) {
+    let indices = spec.job_indices(jobs.len());
+    let subset: Vec<SweepJob> = indices.iter().map(|&i| jobs[i].clone()).collect();
+    let results = run_sweep(&subset);
+    let payload = results_to_jsonl(&results);
+    let manifest = ShardManifest {
+        schema_version: SHARD_SCHEMA_VERSION,
+        sweep: sweep.to_string(),
+        shard_index: spec.index,
+        shard_count: spec.count,
+        total_jobs: jobs.len(),
+        jobs_hash: job_list_hash(jobs),
+        job_keys: indices.iter().map(|&i| jobs[i].key.clone()).collect(),
+        job_indices: indices,
+        rows: subset.len(),
+        payload_hash: hex64(fnv1a(payload.as_bytes())),
+    };
+    (payload, manifest)
+}
+
+/// File names a shard writes under its output directory.
+pub fn shard_file_names(sweep: &str, spec: ShardSpec) -> (String, String) {
+    let stem = format!("{sweep}-shard-{}of{}", spec.index, spec.count);
+    (format!("{stem}.jsonl"), format!("{stem}.manifest.json"))
+}
+
+/// Paths + row count reported by [`write_shard`].
+#[derive(Clone, Debug)]
+pub struct WrittenShard {
+    pub data_path: PathBuf,
+    pub manifest_path: PathBuf,
+    pub rows: usize,
+}
+
+/// Run shard `spec` of `jobs` and write its JSONL + manifest into `dir`
+/// (created if absent).
+pub fn write_shard(
+    dir: &Path,
+    sweep: &str,
+    jobs: &[SweepJob],
+    spec: ShardSpec,
+) -> Result<WrittenShard, ShardError> {
+    let io = |what: &str, e: std::io::Error| ShardError::Io(format!("{what}: {e}"));
+    let (payload, manifest) = run_sweep_shard(sweep, jobs, spec);
+    std::fs::create_dir_all(dir).map_err(|e| io(&format!("create {}", dir.display()), e))?;
+    let (data_name, manifest_name) = shard_file_names(sweep, spec);
+    let data_path = dir.join(data_name);
+    let manifest_path = dir.join(manifest_name);
+    std::fs::write(&data_path, &payload)
+        .map_err(|e| io(&format!("write {}", data_path.display()), e))?;
+    std::fs::write(&manifest_path, format!("{}\n", manifest.to_json()))
+        .map_err(|e| io(&format!("write {}", manifest_path.display()), e))?;
+    Ok(WrittenShard { data_path, manifest_path, rows: manifest.rows })
+}
+
+// ---------------------------------------------------------------------
+// Merging
+// ---------------------------------------------------------------------
+
+/// One shard handed to the merge: its parsed manifest + raw payload.
+#[derive(Clone, Debug)]
+pub struct ShardInput {
+    pub manifest: ShardManifest,
+    pub payload: String,
+}
+
+/// Load every `<sweep>-shard-*.manifest.json` (+ sibling `.jsonl`) under
+/// `dir`, in file-name order.
+pub fn read_shard_dir(dir: &Path, sweep: &str) -> Result<Vec<ShardInput>, ShardError> {
+    let io = |what: &str, e: std::io::Error| ShardError::Io(format!("{what}: {e}"));
+    let prefix = format!("{sweep}-shard-");
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .map_err(|e| io(&format!("read {}", dir.display()), e))?
+        .filter_map(|entry| entry.ok())
+        .filter_map(|entry| entry.file_name().into_string().ok())
+        .filter(|n| n.starts_with(&prefix) && n.ends_with(".manifest.json"))
+        .collect();
+    names.sort();
+    let mut inputs = Vec::with_capacity(names.len());
+    for name in names {
+        let manifest_path = dir.join(&name);
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| io(&format!("read {}", manifest_path.display()), e))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| ShardError::BadManifest(format!("{}: {e}", manifest_path.display())))?;
+        let manifest = ShardManifest::from_json(&doc)?;
+        // The filename prefix selected this file; the manifest's own
+        // sweep field must agree, or a renamed foreign shard could
+        // smuggle another sweep's rows into the merge.
+        if manifest.sweep != sweep {
+            return Err(ShardError::Mismatch {
+                field: "sweep",
+                detail: format!(
+                    "{} declares sweep {:?}, expected {sweep:?}",
+                    manifest_path.display(),
+                    manifest.sweep
+                ),
+            });
+        }
+        let data_name = name.replace(".manifest.json", ".jsonl");
+        let data_path = dir.join(&data_name);
+        let payload = std::fs::read_to_string(&data_path)
+            .map_err(|e| io(&format!("read {}", data_path.display()), e))?;
+        inputs.push(ShardInput { manifest, payload });
+    }
+    Ok(inputs)
+}
+
+/// Validate a complete shard set and reassemble the sweep's JSONL.
+///
+/// Guarantees on `Ok`: every shard 0..count was present exactly once, all
+/// manifests agreed on (sweep, count, total, keys hash), every payload
+/// hashed to its manifest's promise, every row's `key` matched the
+/// manifest's job key, and the returned string is the rows of all shards
+/// reordered by global job index — byte-identical to the serial driver's
+/// output for the same canonical job list.
+pub fn merge_shards(shards: &[ShardInput]) -> Result<String, ShardError> {
+    let first = shards
+        .first()
+        .ok_or_else(|| ShardError::BadManifest("no shards to merge".into()))?;
+    let count = first.manifest.shard_count;
+    let total = first.manifest.total_jobs;
+    for s in shards {
+        let m = &s.manifest;
+        m.validate()?;
+        if m.sweep != first.manifest.sweep {
+            return Err(ShardError::Mismatch {
+                field: "sweep",
+                detail: format!("{:?} vs {:?}", m.sweep, first.manifest.sweep),
+            });
+        }
+        if m.shard_count != count {
+            return Err(ShardError::Mismatch {
+                field: "shard_count",
+                detail: format!(
+                    "shard {} says {} shards, shard {} says {count}",
+                    m.shard_index, m.shard_count, first.manifest.shard_index
+                ),
+            });
+        }
+        if m.total_jobs != total {
+            return Err(ShardError::Mismatch {
+                field: "total_jobs",
+                detail: format!("{} vs {total}", m.total_jobs),
+            });
+        }
+        if m.jobs_hash != first.manifest.jobs_hash {
+            return Err(ShardError::Mismatch {
+                field: "jobs_hash",
+                detail: format!(
+                    "shard {} was built from a different job list ({} vs {})",
+                    m.shard_index, m.jobs_hash, first.manifest.jobs_hash
+                ),
+            });
+        }
+    }
+
+    let mut seen = vec![false; count];
+    let mut lines: Vec<Option<&str>> = vec![None; total];
+    for s in shards {
+        let m = &s.manifest;
+        if seen[m.shard_index] {
+            return Err(ShardError::DuplicateShard(m.shard_index));
+        }
+        seen[m.shard_index] = true;
+        let actual = hex64(fnv1a(s.payload.as_bytes()));
+        if actual != m.payload_hash {
+            return Err(ShardError::PayloadHash {
+                shard: m.shard_index,
+                expected: m.payload_hash.clone(),
+                actual,
+            });
+        }
+        let payload_lines: Vec<&str> = s.payload.lines().collect();
+        if payload_lines.len() != m.rows {
+            return Err(ShardError::RowMismatch {
+                shard: m.shard_index,
+                detail: format!("{} payload rows, manifest says {}", payload_lines.len(), m.rows),
+            });
+        }
+        for ((&global, key), &line) in
+            m.job_indices.iter().zip(&m.job_keys).zip(&payload_lines)
+        {
+            let row = Json::parse(line).map_err(|e| ShardError::RowMismatch {
+                shard: m.shard_index,
+                detail: format!("row for job {global} is not valid JSON: {e}"),
+            })?;
+            let row_key = row.get("key").and_then(|k| k.as_str()).unwrap_or("");
+            if row_key != key.as_str() {
+                return Err(ShardError::RowMismatch {
+                    shard: m.shard_index,
+                    detail: format!("row for job {global} has key {row_key:?}, expected {key:?}"),
+                });
+            }
+            lines[global] = Some(line);
+        }
+    }
+    if let Some(k) = seen.iter().position(|&s| !s) {
+        return Err(ShardError::MissingShard(k));
+    }
+
+    let mut out = String::new();
+    for (i, line) in lines.iter().enumerate() {
+        match line {
+            Some(l) => {
+                out.push_str(l);
+                out.push('\n');
+            }
+            // Unreachable once every stripe validated, but never emit a
+            // silently partial merge if the invariant is ever broken.
+            None => {
+                return Err(ShardError::RowMismatch {
+                    shard: i % count,
+                    detail: format!("no shard produced a row for job {i}"),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// CLI glue (shared by `gyges sweep-shard` and the figure benches)
+// ---------------------------------------------------------------------
+
+/// Dispatch one shard of a named sweep: resolve the registry's job
+/// list — with the sweep's own default horizon unless `--horizon` is
+/// given — and run [`shard_cli`]. The single entry point behind every
+/// figure bench's `--shard` mode and `gyges sweep-shard`, so job list
+/// and horizon defaults can never drift between them. Unknown sweep
+/// names exit 2.
+pub fn shard_cli_named(args: &crate::util::Args, sweep: &str) -> i32 {
+    // A typo'd horizon must not silently become the default: every
+    // shard of one sweep would "agree" on the wrong job list and merge
+    // cleanly into a figure the operator never asked for.
+    let horizon = match args.get("horizon") {
+        None => super::named_sweep_default_horizon(sweep),
+        Some(raw) => match raw.parse::<f64>() {
+            Ok(h) => h,
+            Err(_) => {
+                eprintln!("sweep-shard: --horizon {raw:?} is not a number");
+                return 2;
+            }
+        },
+    };
+    let Some(jobs) = super::named_sweep_jobs(sweep, horizon) else {
+        eprintln!("unknown sweep {sweep:?} (known: {})", super::NAMED_SWEEPS.join(", "));
+        return 2;
+    };
+    shard_cli(args, sweep, &jobs)
+}
+
+/// Drive one shard from parsed CLI args: `--shard k/N` (default `0/1`,
+/// i.e. the unsharded reference run) and `--out-dir DIR` (default
+/// `target/shards`). Returns a process exit code and prints what it
+/// wrote, so benches and the `gyges` binary share one behaviour.
+pub fn shard_cli(args: &crate::util::Args, sweep: &str, jobs: &[SweepJob]) -> i32 {
+    let spec = match ShardSpec::parse(&args.get_or("shard", "0/1")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let dir = args.get_or("out-dir", "target/shards");
+    match write_shard(Path::new(&dir), sweep, jobs, spec) {
+        Ok(w) => {
+            println!(
+                "{sweep} shard {spec}: {} of {} jobs → {} (+ manifest)",
+                w.rows,
+                jobs.len(),
+                w.data_path.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{sweep} shard {spec} failed: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_validates() {
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec::full());
+        assert_eq!(ShardSpec::parse("2/8").unwrap(), ShardSpec { index: 2, count: 8 });
+        assert!(matches!(ShardSpec::parse("3/3"), Err(ShardError::BadSpec(_))));
+        assert!(matches!(ShardSpec::parse("1/0"), Err(ShardError::BadSpec(_))));
+        assert!(matches!(ShardSpec::parse("x/4"), Err(ShardError::BadSpec(_))));
+        assert!(matches!(ShardSpec::parse("nonsense"), Err(ShardError::BadSpec(_))));
+    }
+
+    #[test]
+    fn striping_partitions_every_job_exactly_once() {
+        for total in [0usize, 1, 5, 12, 13] {
+            for count in 1..=total + 2 {
+                let mut owned = vec![0u32; total];
+                for index in 0..count {
+                    for i in ShardSpec::new(index, count).unwrap().job_indices(total) {
+                        owned[i] += 1;
+                    }
+                }
+                assert!(owned.iter().all(|&c| c == 1), "total={total} count={count}: {owned:?}");
+            }
+        }
+    }
+
+    fn manifest_fixture() -> ShardManifest {
+        ShardManifest {
+            schema_version: SHARD_SCHEMA_VERSION,
+            sweep: "figX".into(),
+            shard_index: 1,
+            shard_count: 2,
+            total_jobs: 5,
+            jobs_hash: "00000000deadbeef".into(),
+            job_indices: vec![1, 3],
+            job_keys: vec!["b".into(), "d".into()],
+            rows: 2,
+            payload_hash: hex64(fnv1a(b"")),
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json() {
+        let m = manifest_fixture();
+        let text = m.to_json().to_string();
+        let back = ShardManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn manifest_rejects_structural_lies() {
+        let mut m = manifest_fixture();
+        m.rows = 3; // rows != job_indices.len()
+        assert!(matches!(m.validate(), Err(ShardError::BadManifest(_))));
+
+        let mut m = manifest_fixture();
+        m.job_indices = vec![0, 3]; // not the 1/2 stripe
+        assert!(matches!(m.validate(), Err(ShardError::BadManifest(_))));
+
+        let mut m = manifest_fixture();
+        m.shard_index = 2; // out of range
+        assert!(matches!(m.validate(), Err(ShardError::BadManifest(_))));
+
+        let mut m = manifest_fixture();
+        m.total_jobs = MAX_TOTAL_JOBS + 1; // must reject, not allocate
+        assert!(matches!(m.validate(), Err(ShardError::BadManifest(_))));
+
+        let mut doc = manifest_fixture().to_json();
+        doc.set("schema_version", 99u64);
+        assert!(matches!(ShardManifest::from_json(&doc), Err(ShardError::BadManifest(_))));
+    }
+
+    #[test]
+    fn fnv1a_is_the_reference_function() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn jobs_hash_separates_keys_and_workloads() {
+        use crate::config::{ClusterConfig, ModelConfig};
+        use crate::coordinator::SystemKind;
+        use crate::workload::Trace;
+        use std::sync::Arc;
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let trace = Arc::new(Trace::default());
+        let job = |key: &str| {
+            SweepJob::new(key, cfg.clone(), SystemKind::Gyges, None, Arc::clone(&trace))
+        };
+        // Key lists are length-delimited: ["ab","c"] != ["a","bc"].
+        let ab_c = [job("ab"), job("c")];
+        let a_bc = [job("a"), job("bc")];
+        assert_ne!(job_list_hash(&ab_c), job_list_hash(&a_bc));
+        // Identical keys but a different trace (e.g. another horizon)
+        // must fingerprint differently too.
+        let longer = Arc::new(Trace::hybrid_paper(3, 60.0));
+        let same_key_other_trace =
+            [SweepJob::new("ab", cfg.clone(), SystemKind::Gyges, None, longer), job("c")];
+        assert_ne!(job_list_hash(&ab_c), job_list_hash(&same_key_other_trace));
+        // A hold override is part of the fingerprint as well — and a
+        // zero hold must not alias the no-override case.
+        let with_hold = [job("ab").with_gyges_hold(15.0), job("c")];
+        assert_ne!(job_list_hash(&ab_c), job_list_hash(&with_hold));
+        let with_zero_hold = [job("ab").with_gyges_hold(0.0), job("c")];
+        assert_ne!(job_list_hash(&ab_c), job_list_hash(&with_zero_hold));
+        assert_ne!(job_list_hash(&with_hold), job_list_hash(&with_zero_hold));
+    }
+}

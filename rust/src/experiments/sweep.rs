@@ -14,7 +14,7 @@
 //! available parallelism. Set it to 1 to force the serial path.
 
 use crate::config::{ClusterConfig, Policy};
-use crate::coordinator::{run_system, SimCounters, SystemKind};
+use crate::coordinator::{ClusterSim, SimCounters, SystemKind};
 use crate::metrics::RunReport;
 use crate::util::json::Json;
 use crate::workload::Trace;
@@ -32,6 +32,9 @@ pub struct SweepJob {
     pub system: SystemKind,
     pub policy: Option<Policy>,
     pub trace: Arc<Trace>,
+    /// Override for the Gyges policy's anti-oscillation hold (ablation
+    /// A3); `None` keeps the policy default.
+    pub gyges_hold: Option<f64>,
 }
 
 impl SweepJob {
@@ -42,7 +45,13 @@ impl SweepJob {
         policy: Option<Policy>,
         trace: Arc<Trace>,
     ) -> SweepJob {
-        SweepJob { key: key.into(), cfg, system, policy, trace }
+        SweepJob { key: key.into(), cfg, system, policy, trace, gyges_hold: None }
+    }
+
+    /// Run this job with a custom Gyges long-request hold.
+    pub fn with_gyges_hold(mut self, hold_s: f64) -> SweepJob {
+        self.gyges_hold = Some(hold_s);
+        self
     }
 }
 
@@ -100,7 +109,14 @@ impl SweepResult {
 }
 
 fn run_job(job: &SweepJob) -> SweepResult {
-    let out = run_system(job.cfg.clone(), job.system, job.policy, (*job.trace).clone());
+    let mut sim = ClusterSim::new(job.cfg.clone(), job.system, (*job.trace).clone());
+    if let Some(p) = job.policy {
+        sim = sim.with_policy(p);
+    }
+    if let Some(hold) = job.gyges_hold {
+        sim.set_gyges_hold(hold);
+    }
+    let out = sim.run();
     SweepResult {
         key: job.key.clone(),
         tps_series: out.recorder.tps_series(),

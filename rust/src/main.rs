@@ -9,6 +9,11 @@
 //!   gyges serve-real  [--artifacts DIR] [--shorts N] [--longs N]
 //!   gyges repro       <table1|table2|table3|fig2|fig9|fig10|fig11|fig12|
 //!                      fig13|fig14|static|all> [--horizon SECS]
+//!   gyges sweep-shard <fig12|fig12-qwen|fig13|fig14|ablation-hold>
+//!                     [--shard K/N] [--horizon SECS] [--out-dir DIR]
+//!   gyges sweep-merge <sweep> [--dir DIR] [--out FILE]
+//!                     [--expect-horizon SECS]
+//!   gyges bench-gate  [--baseline FILE] [--fresh FILE] [--max-regress F]
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
 use gyges::coordinator::{run_system, SystemKind};
@@ -23,8 +28,14 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("serve-real") => cmd_serve_real(&args),
         Some("repro") => cmd_repro(&args),
+        Some("sweep-shard") => cmd_sweep_shard(&args),
+        Some("sweep-merge") => cmd_sweep_merge(&args),
+        Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
-            eprintln!("usage: gyges <info|serve|serve-real|repro> [options]  (see rust/src/main.rs)");
+            eprintln!(
+                "usage: gyges <info|serve|serve-real|repro|sweep-shard|sweep-merge|bench-gate> \
+                 [options]  (see rust/src/main.rs)"
+            );
             2
         }
     };
@@ -163,6 +174,119 @@ fn cmd_serve_real(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Run one stripe of a named figure sweep and write its JSONL + manifest
+/// (the per-process / per-CI-matrix-job entry point; see PERF.md).
+fn cmd_sweep_shard(args: &Args) -> i32 {
+    use gyges::experiments::{shard, NAMED_SWEEPS};
+    let Some(sweep) = args.positional.get(1).map(|s| s.as_str()) else {
+        eprintln!("usage: gyges sweep-shard <{}> [--shard K/N] ...", NAMED_SWEEPS.join("|"));
+        return 2;
+    };
+    shard::shard_cli_named(args, sweep)
+}
+
+/// Merge the shard files of one sweep back into the serial driver's
+/// exact bytes, rejecting incomplete or inconsistent shard sets.
+/// `--expect-horizon S` additionally proves the shards were built from
+/// the CANONICAL registry job list at horizon S (the manifests'
+/// `jobs_hash` alone proves mutual consistency, not canonicality — a
+/// full shard set run at the wrong horizon merges cleanly otherwise).
+fn cmd_sweep_merge(args: &Args) -> i32 {
+    use gyges::experiments::shard::{job_list_hash, merge_shards, read_shard_dir};
+    let Some(sweep) = args.positional.get(1).map(|s| s.as_str()) else {
+        eprintln!(
+            "usage: gyges sweep-merge <sweep> [--dir DIR] [--out FILE] [--expect-horizon S]"
+        );
+        return 2;
+    };
+    let dir = args.get_or("dir", "target/shards");
+    let inputs = match read_shard_dir(std::path::Path::new(&dir), sweep) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("sweep-merge: {e}");
+            return 1;
+        }
+    };
+    let merged = match merge_shards(&inputs) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("sweep-merge REJECTED ({} shard files under {dir}): {e}", inputs.len());
+            return 1;
+        }
+    };
+    if let Some(raw) = args.get("expect-horizon") {
+        // A typo'd value must not silently skip the canonicality check.
+        let Ok(expect_h) = raw.parse::<f64>() else {
+            eprintln!("sweep-merge: --expect-horizon {raw:?} is not a number");
+            return 2;
+        };
+        let Some(canonical) = gyges::experiments::named_sweep_jobs(sweep, expect_h) else {
+            eprintln!("sweep-merge: --expect-horizon given but {sweep:?} is not a registry sweep");
+            return 1;
+        };
+        let want = job_list_hash(&canonical);
+        let got = &inputs[0].manifest.jobs_hash;
+        if *got != want {
+            eprintln!(
+                "sweep-merge REJECTED: shards are mutually consistent but do NOT match the \
+                 canonical {sweep} job list at horizon {expect_h} (jobs_hash {got} != {want})"
+            );
+            return 1;
+        }
+    }
+    let out = args.get_or("out", &format!("{dir}/{sweep}-merged.jsonl"));
+    if let Err(e) = std::fs::write(&out, &merged) {
+        eprintln!("sweep-merge: write {out}: {e}");
+        return 1;
+    }
+    println!(
+        "merged {} shards of {sweep}: {} rows, {} bytes → {out}",
+        inputs.len(),
+        merged.lines().count(),
+        merged.len()
+    );
+    0
+}
+
+/// Gate CI on the fresh bench snapshot vs the committed baseline.
+fn cmd_bench_gate(args: &Args) -> i32 {
+    use gyges::util::Json;
+    let baseline_path = args.get_or("baseline", "BENCH_sim.json");
+    let fresh_path = args.get_or("fresh", "target/BENCH_sim.json");
+    // No silent fallback: the gate guards CI, so a typo'd tolerance
+    // must be loud, not replaced by the default.
+    let max_regress = match args.get("max-regress") {
+        None => 0.25,
+        Some(v) => match v.parse::<f64>() {
+            Ok(x) => x,
+            Err(_) => {
+                eprintln!("bench-gate: --max-regress {v:?} is not a number (e.g. 0.25 = 25%)");
+                return 2;
+            }
+        },
+    };
+    let load = |path: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))
+    };
+    let (baseline, fresh) = match (load(&baseline_path), load(&fresh_path)) {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-gate: {e}");
+            return 1;
+        }
+    };
+    let report = gyges::metrics::gate::evaluate(&baseline, &fresh, max_regress);
+    println!(
+        "bench-gate: {baseline_path} (baseline) vs {fresh_path} (fresh), tolerance {:.0}%",
+        max_regress * 100.0
+    );
+    for line in &report.lines {
+        println!("  {line}");
+    }
+    report.exit_code()
 }
 
 fn cmd_repro(args: &Args) -> i32 {

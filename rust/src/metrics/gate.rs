@@ -1,0 +1,247 @@
+//! Bench regression gate: compare a fresh `BENCH_sim.json` against the
+//! committed baseline and fail on a large throughput regression.
+//!
+//! CI runs `gyges bench-gate` right after the bench-smoke step. The gate
+//! compares the headline rates (`single_thread.events_per_sec` and the
+//! ≥256-instance `routing_microbench.speedup`) — but ONLY between
+//! snapshots that measured the same workload shape: the request counts,
+//! fleet size, and sample count are checked first, and any mismatch
+//! skips the comparison loudly (commit CI's own `BENCH_sim` artifact as
+//! the baseline and the knobs match by construction). The default 25%
+//! tolerance absorbs runner noise.
+//!
+//! A baseline with `measured != true` is a hand-written complexity
+//! placeholder (PR 1/PR 2 shipped those because their build containers
+//! had no Rust toolchain); the gate SKIPS rather than compare against
+//! projections, and starts biting on the first commit of a harness-
+//! produced baseline. A *fresh* file that is not a measured harness
+//! output always fails — the gate must never pass vacuously because the
+//! bench step silently produced nothing.
+
+use crate::util::json::Json;
+
+/// Dotted paths of the gated headline metrics (bigger is better).
+pub const GATED_METRICS: [&str; 2] =
+    ["single_thread.events_per_sec", "routing_microbench.speedup"];
+
+/// Informational metrics printed but never gated (too machine-dependent).
+const INFO_METRICS: [&str; 1] = ["sweep.speedup"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateVerdict {
+    /// Every gated metric is within tolerance.
+    Pass,
+    /// Baseline is a placeholder — nothing real to compare against.
+    Skip,
+    /// A gated metric regressed beyond tolerance (or a snapshot is
+    /// malformed).
+    Fail,
+}
+
+/// Outcome plus human-readable per-metric lines for the CI log.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    pub verdict: GateVerdict,
+    pub lines: Vec<String>,
+}
+
+impl GateReport {
+    /// Process exit code for CLI use.
+    pub fn exit_code(&self) -> i32 {
+        match self.verdict {
+            GateVerdict::Pass | GateVerdict::Skip => 0,
+            GateVerdict::Fail => 1,
+        }
+    }
+}
+
+/// Walk a dotted path (`"single_thread.events_per_sec"`) into a doc.
+fn get_path<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = doc;
+    for seg in path.split('.') {
+        cur = cur.get(seg)?;
+    }
+    Some(cur)
+}
+
+fn is_measured(doc: &Json) -> bool {
+    doc.get("measured").and_then(Json::as_bool) == Some(true)
+}
+
+/// Compare `fresh` against `baseline`; a gated metric fails when
+/// `fresh < baseline * (1 - max_regress)`.
+pub fn evaluate(baseline: &Json, fresh: &Json, max_regress: f64) -> GateReport {
+    let mut lines = Vec::new();
+    if !(0.0..1.0).contains(&max_regress) {
+        // >= 1.0 would silently disarm the gate (no ratio can fail);
+        // < 0 would fail every run. Both are operator error — e.g.
+        // passing 25 for 25% — and must be loud.
+        let msg = format!(
+            "FAIL: max_regress {max_regress} out of range [0, 1) — pass a fraction \
+             (0.25 means a 25% drop fails)"
+        );
+        return GateReport { verdict: GateVerdict::Fail, lines: vec![msg] };
+    }
+    if !is_measured(fresh) {
+        let msg = "FAIL: fresh snapshot has measured != true — the bench harness did not \
+                   produce it (gate refuses to pass vacuously)";
+        return GateReport { verdict: GateVerdict::Fail, lines: vec![msg.into()] };
+    }
+    if !is_measured(baseline) {
+        let msg = "SKIP: committed baseline has measured != true (complexity-projection \
+                   placeholder); commit a harness-generated BENCH_sim.json to arm the gate";
+        return GateReport { verdict: GateVerdict::Skip, lines: vec![msg.into()] };
+    }
+    // Rates are only comparable when both snapshots measured the same
+    // workload shape (a 10k-request 3-sample baseline vs a 2k-request
+    // 1-sample smoke run diverges systematically, not from any code
+    // change). A knob mismatch is a setup problem, not a regression —
+    // skip loudly instead of failing or passing vacuously.
+    // `samples` matters because events_per_sec is the BEST wall time
+    // over the samples — best-of-3 is systematically faster than CI's
+    // single-sample smoke run.
+    const WORKLOAD_KNOBS: [&str; 4] = [
+        "single_thread.trace_requests",
+        "single_thread.samples",
+        "routing_microbench.requests",
+        "routing_microbench.instances",
+    ];
+    for knob in WORKLOAD_KNOBS {
+        let b = get_path(baseline, knob).and_then(Json::as_f64);
+        let n = get_path(fresh, knob).and_then(Json::as_f64);
+        if b != n {
+            let msg = format!(
+                "SKIP: {knob} differs (baseline {b:?}, fresh {n:?}) — the snapshots \
+                 measured different workloads; regenerate the baseline with the same \
+                 bench knobs (commit CI's own BENCH_sim artifact)"
+            );
+            return GateReport { verdict: GateVerdict::Skip, lines: vec![msg] };
+        }
+    }
+    let mut verdict = GateVerdict::Pass;
+    for path in GATED_METRICS {
+        let base = get_path(baseline, path).and_then(Json::as_f64);
+        let new = get_path(fresh, path).and_then(Json::as_f64);
+        match (base, new) {
+            (Some(b), Some(n)) if b > 0.0 => {
+                let ratio = n / b;
+                if ratio < 1.0 - max_regress {
+                    verdict = GateVerdict::Fail;
+                    let drop = (1.0 - ratio) * 100.0;
+                    let tol = max_regress * 100.0;
+                    lines.push(format!(
+                        "FAIL: {path} regressed {drop:.1}% (baseline {b:.1} → fresh {n:.1}, \
+                         tolerance {tol:.0}%)"
+                    ));
+                } else {
+                    let pct = (ratio - 1.0) * 100.0;
+                    lines.push(format!("ok:   {path} {b:.1} → {n:.1} ({pct:+.1}%)"));
+                }
+            }
+            _ => {
+                verdict = GateVerdict::Fail;
+                lines.push(format!(
+                    "FAIL: {path} missing or non-positive in a measured snapshot \
+                     (baseline {base:?}, fresh {new:?})"
+                ));
+            }
+        }
+    }
+    for path in INFO_METRICS {
+        if let (Some(b), Some(n)) = (
+            get_path(baseline, path).and_then(Json::as_f64),
+            get_path(fresh, path).and_then(Json::as_f64),
+        ) {
+            lines.push(format!("info: {path} {b:.2} → {n:.2} (not gated)"));
+        }
+    }
+    GateReport { verdict, lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot_with_requests(measured: bool, eps: f64, speedup: f64, requests: u64) -> Json {
+        Json::parse(&format!(
+            r#"{{"measured": {measured},
+                 "single_thread": {{"events_per_sec": {eps}, "trace_requests": {requests},
+                                    "samples": 1}},
+                 "routing_microbench":
+                   {{"speedup": {speedup}, "requests": 4000, "instances": 256}},
+                 "sweep": {{"speedup": 3.5}}}}"#
+        ))
+        .unwrap()
+    }
+
+    fn snapshot(measured: bool, eps: f64, speedup: f64) -> Json {
+        snapshot_with_requests(measured, eps, speedup, 2000)
+    }
+
+    #[test]
+    fn passes_within_tolerance() {
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &snapshot(true, 900.0, 4.5), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Pass);
+        assert_eq!(r.exit_code(), 0);
+        assert!(r.lines.iter().any(|l| l.contains("not gated")));
+    }
+
+    #[test]
+    fn fails_on_events_per_sec_regression() {
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &snapshot(true, 700.0, 5.0), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+        assert_eq!(r.exit_code(), 1);
+        assert!(r.lines.iter().any(|l| l.contains("events_per_sec")));
+    }
+
+    #[test]
+    fn fails_on_routing_speedup_regression() {
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &snapshot(true, 1000.0, 3.0), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+        assert!(r.lines.iter().any(|l| l.contains("routing_microbench.speedup")));
+    }
+
+    #[test]
+    fn improvement_passes() {
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &snapshot(true, 1500.0, 8.0), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Pass);
+    }
+
+    #[test]
+    fn out_of_range_tolerance_fails_instead_of_disarming() {
+        // 25 (meaning "25%") would otherwise make every ratio pass.
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &snapshot(true, 10.0, 0.1), 25.0);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &snapshot(true, 1000.0, 5.0), -0.1);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+    }
+
+    #[test]
+    fn mismatched_workload_knobs_skip_instead_of_comparing() {
+        let baseline = snapshot_with_requests(true, 1000.0, 5.0, 10_000);
+        let fresh = snapshot_with_requests(true, 100.0, 5.0, 2000);
+        let r = evaluate(&baseline, &fresh, 0.25);
+        assert_eq!(r.verdict, GateVerdict::Skip);
+        assert!(r.lines[0].contains("trace_requests"));
+    }
+
+    #[test]
+    fn placeholder_baseline_skips() {
+        let r = evaluate(&snapshot(false, 0.0, 0.0), &snapshot(true, 1000.0, 5.0), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Skip);
+        assert_eq!(r.exit_code(), 0);
+    }
+
+    #[test]
+    fn unmeasured_fresh_fails_even_with_placeholder_baseline() {
+        let r = evaluate(&snapshot(false, 0.0, 0.0), &snapshot(false, 1000.0, 5.0), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+    }
+
+    #[test]
+    fn measured_baseline_with_missing_metric_fails() {
+        let base = Json::parse(r#"{"measured": true, "single_thread": {}}"#).unwrap();
+        let r = evaluate(&base, &snapshot(true, 1000.0, 5.0), 0.25);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+    }
+}

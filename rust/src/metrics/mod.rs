@@ -1,8 +1,10 @@
 //! Metrics: per-request TTFT/TPOT/throughput recording and report
 //! rendering for the evaluation harness.
 
+pub mod gate;
 pub mod recorder;
 pub mod report;
 
+pub use gate::{GateReport, GateVerdict};
 pub use recorder::{Recorder, RequestRecord};
 pub use report::RunReport;

@@ -85,14 +85,7 @@ impl EngineModel {
     /// serving-engine overheads (scheduler, kernel launches, sampling)
     /// that first-principles terms miss.
     fn calibrate(&mut self) {
-        let anchor_model = ModelConfig::qwen2_5_32b();
-        let anchor_gpu = GpuSpec::h20();
-        let anchor = EngineModel {
-            model: anchor_model,
-            gpu: anchor_gpu,
-            comm: CommModel::for_gpu(&GpuSpec::h20()),
-            scale: [1.0; 4],
-        };
+        let anchor = Self::qwen_anchor();
         let anchors = [
             (1u64, table1::TPS_TP1),
             (2, table1::TPS_TP2),
@@ -184,15 +177,32 @@ impl EngineModel {
         ((a * cap + b).max(0.0)) as u64
     }
 
-    /// Solve (a, b) once from the Qwen-on-H20 anchors. b is returned in
-    /// bytes so it transfers across models with different KV-per-token.
-    fn max_seq_coeffs() -> (f64, f64) {
-        let anchor = EngineModel {
+    /// Uncalibrated Qwen-on-H20 anchor (unit scale) used by the
+    /// calibration fits.
+    fn qwen_anchor() -> EngineModel {
+        EngineModel {
             model: ModelConfig::qwen2_5_32b(),
             gpu: GpuSpec::h20(),
             comm: CommModel::for_gpu(&GpuSpec::h20()),
             scale: [1.0; 4],
-        };
+        }
+    }
+
+    /// Memoised `max_seq` anchor coefficients. The pair is a process-
+    /// wide constant (it depends only on the fixed Qwen-on-H20 anchor),
+    /// but the pre-memo code re-derived it — anchor model and all — on
+    /// every `max_seq` call, and `fits()` probes `max_seq` per routing
+    /// candidate (ROADMAP hot spot). One derivation per process; a test
+    /// pins memoised == re-derived.
+    fn max_seq_coeffs() -> (f64, f64) {
+        static COEFFS: std::sync::OnceLock<(f64, f64)> = std::sync::OnceLock::new();
+        *COEFFS.get_or_init(Self::derive_max_seq_coeffs)
+    }
+
+    /// Solve (a, b) from the Qwen-on-H20 anchors. b is returned in bytes
+    /// so it transfers across models with different KV-per-token.
+    fn derive_max_seq_coeffs() -> (f64, f64) {
+        let anchor = Self::qwen_anchor();
         let c1 = anchor.kv_capacity_tokens(1) as f64;
         let c4 = anchor.kv_capacity_tokens(4) as f64;
         let s1 = table1::MAX_SEQ_TP1 as f64;
@@ -278,6 +288,26 @@ mod tests {
         let small = EngineModel::new(ModelConfig::llama2_7b(), GpuSpec::a100_40g());
         let big = qwen_h20();
         assert!(small.saturated_tps(1) > big.saturated_tps(1));
+    }
+
+    #[test]
+    fn memoised_max_seq_coeffs_match_rederived() {
+        // The process-wide memo must be bit-identical to a fresh
+        // derivation...
+        let (a, b_bytes) = EngineModel::derive_max_seq_coeffs();
+        assert_eq!(EngineModel::max_seq_coeffs(), (a, b_bytes));
+        // ...and max_seq must equal the formula applied to re-derived
+        // coefficients, for every model and TP degree.
+        for m in ModelConfig::all() {
+            let gpu = GpuSpec::for_model(&m);
+            let e = EngineModel::new(m, gpu);
+            for tp in [1u64, 2, 4, 8] {
+                let cap = e.kv_capacity_tokens(tp) as f64;
+                let b = b_bytes / e.model.kv_bytes_per_token() as f64;
+                let expect = ((a * cap + b).max(0.0)) as u64;
+                assert_eq!(e.max_seq(tp), expect, "{} tp{tp}", e.model.name);
+            }
+        }
     }
 
     #[test]

@@ -49,6 +49,22 @@ impl Json {
         }
     }
 
+    /// Non-negative integer view of a number (fails on fractions — the
+    /// shard manifests and bench gate read counts/indices with this).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -61,13 +77,6 @@ impl Json {
             Json::Arr(v) => Some(v),
             _ => None,
         }
-    }
-
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
     }
 
     fn write(&self, out: &mut String) {
@@ -117,6 +126,17 @@ impl Json {
             return Err(format!("trailing garbage at byte {i}"));
         }
         Ok(v)
+    }
+}
+
+/// Compact serialization (`.to_string()` comes via the blanket
+/// `ToString`; an inherent `to_string` would shadow it and trip clippy's
+/// `inherent_to_string`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -378,6 +398,16 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(0.5).as_u64(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Null.as_bool(), None);
+        assert_eq!(Json::Str("1".into()).as_u64(), None);
     }
 
     #[test]

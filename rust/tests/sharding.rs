@@ -1,0 +1,216 @@
+//! The shard layer's contract (ISSUE 3 acceptance criteria):
+//!
+//! 1. For ANY shard count N (including N > job count, so some shards are
+//!    empty, and job lists containing error-carrying runs), running every
+//!    shard and merging reproduces `run_sweep_serial`'s JSONL bytes
+//!    exactly, regardless of the order shards are handed to the merge.
+//! 2. The merge fails loudly on a missing, duplicated, foreign (different
+//!    job list), or tampered shard — never a silently partial figure.
+//! 3. The on-disk form (`write_shard` / `read_shard_dir` / the
+//!    `sweep-shard`+`sweep-merge` CLI path) round-trips the same bytes.
+
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::coordinator::SystemKind;
+use gyges::experiments::shard::{
+    merge_shards, read_shard_dir, run_sweep_shard, write_shard, ShardError, ShardInput, ShardSpec,
+};
+use gyges::experiments::sweep::{results_to_jsonl, run_sweep_serial, SweepJob};
+use gyges::workload::Trace;
+use std::sync::Arc;
+
+/// Three policies on a hybrid trace plus one event-capped job, so every
+/// shard count exercises both healthy and error-carrying rows.
+fn mixed_jobs() -> Vec<SweepJob> {
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let trace = Arc::new(Trace::hybrid_paper(3, 45.0));
+    let mut jobs: Vec<SweepJob> = [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges]
+        .into_iter()
+        .map(|p| {
+            SweepJob::new(
+                format!("hybrid/{}", p.name()),
+                cfg.clone(),
+                SystemKind::Gyges,
+                Some(p),
+                Arc::clone(&trace),
+            )
+        })
+        .collect();
+    let mut capped = cfg.clone();
+    capped.max_events = 10;
+    jobs.push(SweepJob::new(
+        "capped",
+        capped,
+        SystemKind::Gyges,
+        Some(Policy::Gyges),
+        Arc::clone(&trace),
+    ));
+    jobs
+}
+
+/// Cheap job list (every run cut by a tiny event cap) for the negative
+/// tests, where sim cost is irrelevant.
+fn tiny_jobs(key_prefix: &str) -> Vec<SweepJob> {
+    tiny_jobs_at(key_prefix, 30.0)
+}
+
+fn tiny_jobs_at(key_prefix: &str, horizon_s: f64) -> Vec<SweepJob> {
+    let mut cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    cfg.max_events = 10;
+    let trace = Arc::new(Trace::hybrid_paper(5, horizon_s));
+    (0..3)
+        .map(|i| {
+            SweepJob::new(
+                format!("{key_prefix}{i}"),
+                cfg.clone(),
+                SystemKind::Gyges,
+                Some(Policy::Gyges),
+                Arc::clone(&trace),
+            )
+        })
+        .collect()
+}
+
+fn all_shards(sweep: &str, jobs: &[SweepJob], n: usize) -> Vec<ShardInput> {
+    (0..n)
+        .map(|k| {
+            let (payload, manifest) = run_sweep_shard(sweep, jobs, ShardSpec::new(k, n).unwrap());
+            ShardInput { manifest, payload }
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_merge_is_byte_identical_for_every_shard_count() {
+    let jobs = mixed_jobs();
+    let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+    assert!(!serial.is_empty());
+    for n in 1..=jobs.len() + 2 {
+        let mut inputs = all_shards("mixed", &jobs, n);
+        // Arrival order must not matter (CI artifact downloads are not
+        // ordered); N > jobs.len() makes the tail shards empty.
+        inputs.reverse();
+        let merged = merge_shards(&inputs).unwrap_or_else(|e| panic!("N={n}: {e}"));
+        assert_eq!(merged, serial, "N={n}: sharded+merged != serial bytes");
+    }
+}
+
+#[test]
+fn error_rows_survive_the_merge() {
+    let jobs = mixed_jobs();
+    let merged = merge_shards(&all_shards("mixed", &jobs, 3)).unwrap();
+    let capped_row = merged
+        .lines()
+        .find(|l| l.contains("\"key\":\"capped\""))
+        .expect("capped job row present");
+    assert!(
+        capped_row.contains("event cap"),
+        "the event-capped job's error must ride through sharding: {capped_row}"
+    );
+}
+
+#[test]
+fn empty_job_list_merges_to_empty_output() {
+    let serial = results_to_jsonl(&run_sweep_serial(&[]));
+    for n in 1..=3 {
+        let merged = merge_shards(&all_shards("empty", &[], n)).unwrap();
+        assert_eq!(merged, serial);
+        assert!(merged.is_empty());
+    }
+}
+
+#[test]
+fn merge_rejects_missing_shard() {
+    let jobs = tiny_jobs("t");
+    let mut inputs = all_shards("tiny", &jobs, 3);
+    inputs.remove(1);
+    assert_eq!(merge_shards(&inputs), Err(ShardError::MissingShard(1)));
+}
+
+#[test]
+fn merge_rejects_duplicated_shard() {
+    let jobs = tiny_jobs("t");
+    let mut inputs = all_shards("tiny", &jobs, 3);
+    inputs[2] = inputs[0].clone();
+    assert_eq!(merge_shards(&inputs), Err(ShardError::DuplicateShard(0)));
+}
+
+#[test]
+fn merge_rejects_shard_from_a_different_job_list() {
+    let mut inputs = all_shards("tiny", &tiny_jobs("t"), 2);
+    // Same sweep name, same shape — but a different canonical key list.
+    let foreign = all_shards("tiny", &tiny_jobs("other"), 2);
+    inputs[1] = foreign[1].clone();
+    match merge_shards(&inputs) {
+        Err(ShardError::Mismatch { field: "jobs_hash", .. }) => {}
+        other => panic!("expected jobs_hash mismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn merge_rejects_same_keys_at_a_different_horizon() {
+    // Identical job keys, different trace horizon: without the job-list
+    // fingerprint these would merge into a silently mixed figure.
+    let mut inputs = all_shards("tiny", &tiny_jobs_at("t", 30.0), 2);
+    let foreign = all_shards("tiny", &tiny_jobs_at("t", 45.0), 2);
+    inputs[1] = foreign[1].clone();
+    match merge_shards(&inputs) {
+        Err(ShardError::Mismatch { field: "jobs_hash", .. }) => {}
+        res => panic!("expected jobs_hash mismatch, got {res:?}"),
+    }
+}
+
+#[test]
+fn merge_rejects_tampered_payload() {
+    let jobs = tiny_jobs("t");
+    let mut inputs = all_shards("tiny", &jobs, 2);
+    // Simulate a corrupted / hand-edited artifact download.
+    inputs[0].payload.push(' ');
+    match merge_shards(&inputs) {
+        Err(ShardError::PayloadHash { shard: 0, .. }) => {}
+        other => panic!("expected payload-hash rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn merge_rejects_mismatched_shard_counts() {
+    let jobs = tiny_jobs("t");
+    let a = all_shards("tiny", &jobs, 2);
+    let b = all_shards("tiny", &jobs, 3);
+    let inputs = vec![a[0].clone(), b[1].clone()];
+    match merge_shards(&inputs) {
+        Err(ShardError::Mismatch { field: "shard_count", .. }) => {}
+        other => panic!("expected shard_count mismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn shard_files_roundtrip_through_a_directory() {
+    let jobs = tiny_jobs("t");
+    let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+    let dir = std::env::temp_dir().join(format!("gyges-sharding-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for k in 0..2 {
+        let w = write_shard(&dir, "tiny", &jobs, ShardSpec::new(k, 2).unwrap()).unwrap();
+        assert!(w.data_path.exists() && w.manifest_path.exists());
+    }
+    let inputs = read_shard_dir(&dir, "tiny").unwrap();
+    assert_eq!(inputs.len(), 2);
+    assert_eq!(merge_shards(&inputs).unwrap(), serial);
+    // A second sweep's files in the same directory are not picked up.
+    write_shard(&dir, "tiny2", &jobs, ShardSpec::full()).unwrap();
+    assert_eq!(read_shard_dir(&dir, "tiny").unwrap().len(), 2);
+    // Renaming a foreign shard to match the requested prefix cannot
+    // smuggle it in: the manifest's own sweep field is checked too.
+    for ext in ["jsonl", "manifest.json"] {
+        std::fs::rename(
+            dir.join(format!("tiny2-shard-0of1.{ext}")),
+            dir.join(format!("evil-shard-0of1.{ext}")),
+        )
+        .unwrap();
+    }
+    match read_shard_dir(&dir, "evil") {
+        Err(ShardError::Mismatch { field: "sweep", .. }) => {}
+        res => panic!("expected sweep mismatch on renamed shard, got {res:?}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
