@@ -22,6 +22,13 @@
 //! aborting the process. Per-event-type wall-time attribution
 //! ([`SimProfile`]) is opt-in via [`ClusterSim::enable_profiling`] so the
 //! default loop pays no `Instant::now` calls.
+//!
+//! Arrivals stream in from an [`ArrivalFeed`] rather than being
+//! pre-pushed into the event queue: the loop merges the two streams
+//! (arrivals win timestamp ties, matching the seed's sequence-number
+//! ordering), so a multi-hour trace replays with O(segment) peak trace
+//! memory and output byte-identical to whole-trace replay — see
+//! `rust/src/workload/source.rs` and PERF.md.
 
 use super::instance::{Instance, ParallelKind, StepKind, TransformState};
 use super::request::ActiveRequest;
@@ -31,7 +38,7 @@ use crate::metrics::{Recorder, RunReport};
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::sim::{EngineModel, EventQueue};
 use crate::transform::{estimate, Mechanism, TransformExec, TransformPlan};
-use crate::workload::Trace;
+use crate::workload::{ArrivalFeed, Trace, TraceRequest, TraceSource};
 use std::collections::VecDeque;
 use std::fmt;
 use std::time::Instant;
@@ -86,8 +93,12 @@ impl SystemKind {
     }
 }
 
+/// Runtime events. Arrivals are NOT queue events: the loop merges the
+/// queue with the [`ArrivalFeed`] stream directly (arrivals win
+/// timestamp ties, reproducing the seed ordering where pre-pushed
+/// arrivals always carried the lowest sequence numbers) — which is what
+/// makes streamed-segment replay byte-identical to whole-trace replay.
 enum Event {
-    Arrival(usize),
     /// (instance id, epoch) — stale epochs are dropped.
     Step(usize, u64),
     TransformDone(usize, u64),
@@ -168,7 +179,14 @@ pub struct SimProfile {
 pub enum SimError {
     /// The event loop hit `ClusterConfig::max_events` before draining —
     /// a runaway schedule or a cap set too low for the trace.
+    /// `pending_events` counts queued runtime events plus the immediate
+    /// next arrival (never arrivals further up the stream, so the value
+    /// is identical however the trace is segmented).
     EventCapExceeded { cap: u64, pending_events: u64 },
+    /// The streamed trace source failed (I/O error, tampered segment,
+    /// violated segment invariants); arrivals stopped at the failure
+    /// point and the report covers only the requests fed before it.
+    TraceSource { detail: String },
 }
 
 impl fmt::Display for SimError {
@@ -178,6 +196,7 @@ impl fmt::Display for SimError {
                 f,
                 "event cap exceeded: processed {cap} events with {pending_events} still queued"
             ),
+            SimError::TraceSource { detail } => write!(f, "trace source failed: {detail}"),
         }
     }
 }
@@ -192,6 +211,12 @@ pub struct SimOutcome {
     /// Set when the run terminated abnormally (e.g. event-cap overflow);
     /// the report then covers only the work completed before the cut.
     pub error: Option<SimError>,
+    /// High-water mark of trace requests buffered by the arrival feed:
+    /// the whole trace for classic replay, at most one segment for
+    /// streamed replay (the O(segment) memory-bound witness; not part of
+    /// any serialized row, so streamed and whole-trace outputs stay
+    /// byte-identical).
+    pub trace_peak_buffered: usize,
 }
 
 /// A deferred request parked in the backlog, stamped with its *first*
@@ -211,7 +236,7 @@ pub struct ClusterSim {
     epochs: Vec<u64>,
     pending: Vec<Option<Pending>>,
     queue: EventQueue<Event>,
-    trace: Trace,
+    feed: ArrivalFeed,
     policy: Box<dyn RoutePolicy>,
     backlog: VecDeque<Deferred>,
     pub recorder: Recorder,
@@ -245,8 +270,25 @@ pub struct ClusterSim {
 }
 
 impl ClusterSim {
-    /// Build a simulator with `cfg.total_gpus()` initial TP1 instances.
+    /// Build a simulator with `cfg.total_gpus()` initial TP1 instances,
+    /// replaying a fully materialized trace (one-segment feed).
     pub fn new(cfg: ClusterConfig, system: SystemKind, trace: Trace) -> ClusterSim {
+        Self::with_feed(cfg, system, ArrivalFeed::from_trace(trace))
+    }
+
+    /// Build a simulator fed by a streaming [`TraceSource`] — arrivals
+    /// are pulled segment by segment, so peak trace memory is bounded by
+    /// one segment while results stay byte-identical to whole-trace
+    /// replay of the same request stream.
+    pub fn with_source(
+        cfg: ClusterConfig,
+        system: SystemKind,
+        source: Box<dyn TraceSource>,
+    ) -> ClusterSim {
+        Self::with_feed(cfg, system, ArrivalFeed::new(source))
+    }
+
+    fn with_feed(cfg: ClusterConfig, system: SystemKind, feed: ArrivalFeed) -> ClusterSim {
         let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
         let mut instances = Vec::new();
         for host in 0..cfg.hosts {
@@ -274,7 +316,7 @@ impl ClusterSim {
             epochs: vec![0; n],
             pending: vec![None; n],
             queue: EventQueue::new(),
-            trace,
+            feed,
             policy,
             backlog: VecDeque::new(),
             recorder: Recorder::new(),
@@ -379,28 +421,43 @@ impl ClusterSim {
     }
 
     /// Run to completion (or the event cap) and summarize.
+    ///
+    /// The loop merges two streams: queued runtime events and the
+    /// arrival feed. Whichever is earlier is processed next; at equal
+    /// timestamps the arrival wins — exactly the seed ordering, where
+    /// arrivals were pre-pushed and therefore always held the lowest
+    /// queue sequence numbers at their timestamp. Because the merge
+    /// never looks past the *next* arrival, the outcome is independent
+    /// of how the feed segments the trace — streamed replay is
+    /// byte-identical to whole-trace replay by construction.
     pub fn run(mut self) -> SimOutcome {
-        for i in 0..self.trace.len() {
-            self.queue.push(self.trace.requests[i].arrival, Event::Arrival(i));
-        }
         let cap = self.cfg.max_events.max(1);
         let mut error = None;
-        while let Some((now, ev)) = self.queue.pop() {
+        loop {
+            let take_arrival = match (self.feed.peek_time(), self.queue.peek_time()) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some(e)) => a <= e,
+            };
             if self.counters.events >= cap {
-                error = Some(SimError::EventCapExceeded {
-                    cap,
-                    pending_events: self.queue.len() as u64 + 1,
-                });
+                let pending = self.queue.len() as u64 + u64::from(take_arrival);
+                error = Some(SimError::EventCapExceeded { cap, pending_events: pending });
                 break;
             }
             self.counters.events += 1;
+            if take_arrival {
+                let req = self.feed.pop().expect("peeked arrival must pop");
+                self.queue.advance_to(req.arrival);
+                let t0 = self.prof_start();
+                self.counters.arrival_events += 1;
+                self.on_arrival(req);
+                Self::prof_add(t0, &mut self.profile.arrival_s);
+                continue;
+            }
+            let (now, ev) = self.queue.pop().expect("peeked event must pop");
             let t0 = self.prof_start();
             match ev {
-                Event::Arrival(idx) => {
-                    self.counters.arrival_events += 1;
-                    self.on_arrival(now, idx);
-                    Self::prof_add(t0, &mut self.profile.arrival_s);
-                }
                 Event::Step(iid, epoch) => {
                     if self.epochs[iid] == epoch && !self.instances[iid].retired {
                         self.counters.step_events += 1;
@@ -427,6 +484,12 @@ impl ClusterSim {
                 }
             }
         }
+        // A trace-source failure outranks an event-cap cut: the cap may
+        // itself be downstream of the truncated/corrupt workload, and
+        // the tamper/IO diagnosis must never be masked by it.
+        if let Some(detail) = self.feed.error() {
+            error = Some(SimError::TraceSource { detail: detail.to_string() });
+        }
         if self.use_routing_index {
             #[cfg(debug_assertions)]
             {
@@ -442,6 +505,7 @@ impl ClusterSim {
             counters: self.counters,
             profile: if self.profiling { Some(self.profile) } else { None },
             error,
+            trace_peak_buffered: self.feed.peak_buffered(),
         }
     }
 
@@ -449,8 +513,8 @@ impl ClusterSim {
     // Event handlers
     // -----------------------------------------------------------------
 
-    fn on_arrival(&mut self, now: SimTime, idx: usize) {
-        let tr = &self.trace.requests[idx];
+    fn on_arrival(&mut self, tr: TraceRequest) {
+        let now = tr.arrival;
         self.recorder.on_arrival(tr.id, now, tr.input_len, tr.output_len);
         let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len);
         self.route_one(now, req, None);
@@ -731,7 +795,11 @@ impl ClusterSim {
             self.backlog_cooldown_until = SimTime::ZERO;
         } else if !self.backlog.is_empty() {
             let cooldown = SimDuration::from_secs_f64(self.cfg.backlog_retry_cooldown_s);
-            if cooldown > SimDuration::ZERO && !self.queue.is_empty() {
+            // Pending future arrivals count as "other events" here: in
+            // the pre-streaming loop they sat in the event queue, and a
+            // wakeup must keep retrying while anything can still change
+            // cluster state.
+            if cooldown > SimDuration::ZERO && (!self.queue.is_empty() || self.feed.pending()) {
                 self.backlog_cooldown_until = now + cooldown;
                 self.schedule_backlog_wakeup();
             }
@@ -1046,6 +1114,66 @@ mod tests {
             ks.report.tpot_p50_s,
             gy.report.tpot_p50_s
         );
+    }
+
+    #[test]
+    fn streamed_replay_matches_whole_trace_replay() {
+        let trace = Trace::hybrid_paper(0xAB, 90.0);
+        let whole = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
+        let chunked = crate::workload::ChunkedTrace::with_horizon(trace, 7.5, 90.0);
+        let streamed =
+            ClusterSim::with_source(small_cfg(), SystemKind::Gyges, Box::new(chunked)).run();
+        assert_eq!(
+            whole.report.to_json().to_string(),
+            streamed.report.to_json().to_string(),
+            "streamed replay must be byte-identical to whole-trace replay"
+        );
+        assert_eq!(whole.counters, streamed.counters);
+        assert!(whole.error.is_none() && streamed.error.is_none());
+        assert!(
+            streamed.trace_peak_buffered < whole.trace_peak_buffered,
+            "streamed feed must hold less than the whole trace ({} vs {})",
+            streamed.trace_peak_buffered,
+            whole.trace_peak_buffered
+        );
+    }
+
+    #[test]
+    fn trace_source_failure_surfaces_as_structured_error() {
+        use crate::workload::{TraceSegment, TraceSource};
+        struct Failing(usize);
+        impl TraceSource for Failing {
+            fn next_segment(&mut self) -> Option<Result<TraceSegment, String>> {
+                let k = self.0;
+                self.0 += 1;
+                match k {
+                    0 => Some(Ok(TraceSegment {
+                        index: 0,
+                        start: SimTime::ZERO,
+                        end: SimTime::from_secs_f64(5.0),
+                        requests: vec![crate::workload::TraceRequest {
+                            id: 0,
+                            arrival: SimTime::from_secs_f64(1.0),
+                            input_len: 1000,
+                            output_len: 20,
+                        }],
+                    })),
+                    1 => Some(Err("disk on fire".into())),
+                    _ => None,
+                }
+            }
+        }
+        let out =
+            ClusterSim::with_source(small_cfg(), SystemKind::Gyges, Box::new(Failing(0))).run();
+        // The request fed before the failure still completes; the run is
+        // flagged with the source failure.
+        assert_eq!(out.report.completed, 1);
+        match out.error {
+            Some(SimError::TraceSource { ref detail }) => {
+                assert!(detail.contains("disk on fire"), "{detail}")
+            }
+            ref other => panic!("expected TraceSource error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,560 @@
+//! Multi-hour sweep launcher: `gyges trace-gen` + `gyges sweep-launch`.
+//!
+//! `trace-gen` writes a named sweep's traces as JSONL segment files (one
+//! directory per trace group, one file per `segment_s` window, manifest
+//! with per-file integrity hashes — see `workload/source.rs`), generated
+//! deterministically and resumable at any segment index. `sweep-launch`
+//! then fans `sweep-shard` jobs over those files — as child `gyges`
+//! processes (one per shard, bounded concurrency) or in-process — and
+//! reuses [`merge_shards`] to reassemble the stripes into the exact
+//! bytes the serial whole-trace driver would produce. Streamed shards
+//! replay via [`JobTrace::Dir`], so a worker's peak trace memory is one
+//! segment regardless of the horizon; CI `cmp`s the merged output
+//! against an unsharded whole-trace run to prove byte-identity across
+//! the whole pipeline.
+
+use super::shard::{merge_shards, read_shard_dir, write_shard, ShardSpec};
+use super::sweep::{JobTrace, SweepJob};
+use super::{named_sweep_default_horizon, named_sweep_shape, NAMED_SWEEPS};
+use crate::sim::SimTime;
+use crate::util::Args;
+use crate::workload::source::{segment_ticks, write_segments};
+use crate::workload::{ChunkedTrace, ProductionStream, SegmentDir, StreamSource};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Directory name of trace group `g` under a trace root.
+pub fn group_dir_name(g: usize) -> String {
+    format!("trace-{g:04}")
+}
+
+/// Does an on-disk segment directory describe exactly this sweep group
+/// at these generation parameters? The manifest records the REQUESTED
+/// window length verbatim (see `SegmentDirWriter`), so this compares
+/// requested-vs-requested through the one shared [`segment_ticks`]
+/// derivation.
+fn dir_matches(sd: &SegmentDir, sweep: &str, g: usize, horizon: SimTime, segment_s: f64) -> bool {
+    sd.label == sweep
+        && sd.group == g
+        && sd.horizon == horizon
+        && sd.segment == segment_ticks(segment_s)
+}
+
+/// Count of contiguous `segment-XXXXX.jsonl` files present from index 0
+/// (how far an interrupted generation got in this group).
+fn contiguous_existing_segments(dir: &Path) -> usize {
+    let mut k = 0;
+    while dir.join(SegmentDir::segment_file_name(k)).exists() {
+        k += 1;
+    }
+    k
+}
+
+/// Generate a named sweep's traces and write them as segment files:
+/// one [`SegmentDir`] per trace group under `out_root`. Groups are
+/// materialized ONE at a time (the writer itself holds one segment of
+/// output). `resume_from` is applied PER GROUP: groups whose sealed
+/// manifest already matches these parameters are left untouched, and an
+/// unfinished group skips at most the files intact on disk minus one —
+/// the last contiguous file is always rewritten (an interruption may
+/// have truncated it) and the skipped prefix is byte-verified in place.
+/// Resuming a run interrupted partway through a multi-group sweep
+/// (fig12's four models, fig14's QPS grid) therefore repairs exactly
+/// the missing tail instead of aborting on groups that never started.
+pub fn trace_gen_named(
+    sweep: &str,
+    horizon_s: f64,
+    segment_s: f64,
+    out_root: &Path,
+    resume_from: usize,
+) -> Result<Vec<SegmentDir>, String> {
+    let shape = named_sweep_shape(sweep, horizon_s)
+        .ok_or_else(|| format!("unknown sweep {sweep:?} (known: {})", NAMED_SWEEPS.join(", ")))?;
+    let horizon = SimTime::from_secs_f64(shape.horizon_s);
+    let mut dirs = Vec::with_capacity(shape.traces.len());
+    for (g, spec) in shape.traces.iter().enumerate() {
+        let dir = out_root.join(group_dir_name(g));
+        if resume_from > 0 {
+            if let Ok(sd) = SegmentDir::open(&dir) {
+                if dir_matches(&sd, sweep, g, horizon, segment_s) {
+                    // Sealed and parameter-identical: the group finished.
+                    dirs.push(sd);
+                    continue;
+                }
+            }
+        }
+        // An interruption can only have truncated the LAST contiguous
+        // file (each file is complete before the next begins), so the
+        // repair always rewrites that one instead of trusting it to a
+        // byte-compare that would abort on a half-written tail.
+        let on_disk = contiguous_existing_segments(&dir);
+        let effective = resume_from.min(on_disk.saturating_sub(1));
+        let trace = spec.build(shape.horizon_s);
+        let mut source = ChunkedTrace::with_horizon(trace, segment_s, shape.horizon_s);
+        dirs.push(write_segments(&dir, sweep, g, segment_s, &mut source, effective)?);
+    }
+    Ok(dirs)
+}
+
+/// Build a named sweep's job list with every trace group replayed from
+/// its `trace-gen` segment directory under `root` — no trace is ever
+/// materialized; jobs stream one segment at a time and produce rows
+/// byte-identical to the whole-trace job list.
+pub fn streamed_named_jobs(
+    sweep: &str,
+    horizon_s: f64,
+    root: &Path,
+) -> Result<Vec<SweepJob>, String> {
+    let shape = named_sweep_shape(sweep, horizon_s)
+        .ok_or_else(|| format!("unknown sweep {sweep:?} (known: {})", NAMED_SWEEPS.join(", ")))?;
+    let mut dirs = Vec::with_capacity(shape.traces.len());
+    for g in 0..shape.traces.len() {
+        let dir = root.join(group_dir_name(g));
+        let sd = SegmentDir::open(&dir)?;
+        if sd.label != sweep {
+            return Err(format!(
+                "{}: segment directory is labeled {:?}, expected sweep {sweep:?}",
+                dir.display(),
+                sd.label
+            ));
+        }
+        if sd.group != g {
+            return Err(format!(
+                "{}: segment directory declares group {}, expected {g}",
+                dir.display(),
+                sd.group
+            ));
+        }
+        // A stale directory from an earlier run at another horizon would
+        // replay the wrong sweep under the requested label — refuse it
+        // instead of silently merging wrong-horizon rows.
+        let want = SimTime::from_secs_f64(shape.horizon_s);
+        if sd.horizon != want {
+            return Err(format!(
+                "{}: segment directory was generated at horizon {} s, expected {} s — \
+                 re-run trace-gen (or delete the directory / pass the matching --horizon)",
+                dir.display(),
+                sd.horizon.as_secs_f64(),
+                shape.horizon_s
+            ));
+        }
+        dirs.push(Arc::new(sd));
+    }
+    Ok(shape.jobs_with(|g| JobTrace::Dir(Arc::clone(&dirs[g]))))
+}
+
+/// Everything `sweep-launch` needs to drive one segmented sweep.
+#[derive(Clone, Debug)]
+pub struct LaunchPlan {
+    pub sweep: String,
+    pub horizon_s: f64,
+    pub segment_s: f64,
+    pub shards: usize,
+    /// Root of the per-group segment directories (generated here if its
+    /// group-0 manifest is absent).
+    pub trace_root: PathBuf,
+    /// Where shard JSONL + manifests land.
+    pub shard_dir: PathBuf,
+    /// Merged output path.
+    pub out: PathBuf,
+    /// Max concurrent shard child processes.
+    pub max_procs: usize,
+    /// Run shards in this process instead of spawning `gyges` children.
+    pub in_process: bool,
+}
+
+/// What a launch did, for logging and tests.
+#[derive(Clone, Debug)]
+pub struct LaunchReport {
+    pub shards: usize,
+    pub rows: usize,
+    pub bytes: usize,
+    pub generated_traces: bool,
+}
+
+fn clear_stale_shards(dir: &Path, sweep: &str) -> Result<(), String> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Ok(()) };
+    let prefix = format!("{sweep}-shard-");
+    for entry in entries.filter_map(|e| e.ok()) {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with(&prefix) {
+            std::fs::remove_file(entry.path())
+                .map_err(|e| format!("remove stale {}: {e}", entry.path().display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Run one shard as a child `gyges sweep-shard --stream-dir` process.
+fn spawn_shard(plan: &LaunchPlan, k: usize) -> Result<std::process::Child, String> {
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    std::process::Command::new(exe)
+        .arg("sweep-shard")
+        .arg(&plan.sweep)
+        .arg("--stream-dir")
+        .arg(&plan.trace_root)
+        .arg("--shard")
+        .arg(format!("{k}/{}", plan.shards))
+        .arg("--horizon")
+        .arg(format!("{}", plan.horizon_s))
+        .arg("--out-dir")
+        .arg(&plan.shard_dir)
+        .spawn()
+        .map_err(|e| format!("spawn shard {k}: {e}"))
+}
+
+/// Drive the whole pipeline: ensure segment files exist, run every
+/// shard over them (children or in-process), then merge the stripes —
+/// rejecting incomplete or inconsistent shard sets — and write the
+/// reassembled JSONL to `plan.out`.
+pub fn run_launch(plan: &LaunchPlan) -> Result<LaunchReport, String> {
+    if plan.shards == 0 {
+        return Err("sweep-launch: --shards must be >= 1".into());
+    }
+    if !plan.segment_s.is_finite() || plan.segment_s <= 0.0 {
+        return Err("sweep-launch: --segment-s must be a positive number".into());
+    }
+    let shape = named_sweep_shape(&plan.sweep, plan.horizon_s).ok_or_else(|| {
+        format!("unknown sweep {:?} (known: {})", plan.sweep, NAMED_SWEEPS.join(", "))
+    })?;
+    // Missing/partial generation is repaired; a SEALED directory whose
+    // parameters differ from the request is REFUSED, never overwritten —
+    // reusing it would produce wrong rows (horizon) or void the
+    // one-segment memory bound (segment size), and clobbering it would
+    // destroy minutes-to-hours of generation the operator pointed at
+    // explicitly.
+    let horizon = SimTime::from_secs_f64(shape.horizon_s);
+    let mut generated_traces = false;
+    for g in 0..shape.traces.len() {
+        let dir = plan.trace_root.join(group_dir_name(g));
+        match SegmentDir::open(&dir) {
+            Ok(sd) if dir_matches(&sd, &plan.sweep, g, horizon, plan.segment_s) => {}
+            Ok(sd) => {
+                return Err(format!(
+                    "{}: existing segment directory was generated at horizon {} s / segment \
+                     {} s, but this launch asked for {} s / {} s — delete the directory or \
+                     pass the matching --horizon/--segment-s",
+                    dir.display(),
+                    sd.horizon.as_secs_f64(),
+                    sd.segment.as_secs_f64(),
+                    shape.horizon_s,
+                    plan.segment_s
+                ));
+            }
+            Err(_) => generated_traces = true,
+        }
+    }
+    if generated_traces {
+        // usize::MAX resume = "repair": sealed parameter-matching groups
+        // are skipped wholesale, partial groups keep (and byte-verify)
+        // every file already on disk and write only the missing tail —
+        // an interrupted hour-scale generation never starts over.
+        let repair = usize::MAX;
+        trace_gen_named(&plan.sweep, plan.horizon_s, plan.segment_s, &plan.trace_root, repair)?;
+    }
+    clear_stale_shards(&plan.shard_dir, &plan.sweep)?;
+    if plan.in_process {
+        let jobs = streamed_named_jobs(&plan.sweep, plan.horizon_s, &plan.trace_root)?;
+        for k in 0..plan.shards {
+            let spec = ShardSpec::new(k, plan.shards).map_err(|e| e.to_string())?;
+            write_shard(&plan.shard_dir, &plan.sweep, &jobs, spec).map_err(|e| e.to_string())?;
+        }
+    } else {
+        let mut pending: Vec<usize> = (0..plan.shards).collect();
+        let mut running: Vec<(usize, std::process::Child)> = Vec::new();
+        let cap = plan.max_procs.max(1);
+        let mut failure: Option<String> = None;
+        while failure.is_none() && (!pending.is_empty() || !running.is_empty()) {
+            while failure.is_none() && running.len() < cap && !pending.is_empty() {
+                let k = pending.remove(0);
+                match spawn_shard(plan, k) {
+                    Ok(child) => running.push((k, child)),
+                    Err(e) => failure = Some(e),
+                }
+            }
+            // Reap ANY finished child (poll, don't block on the oldest):
+            // one slow shard must not keep finished slots from refilling.
+            let mut reaped = false;
+            let mut i = 0;
+            while failure.is_none() && i < running.len() {
+                match running[i].1.try_wait() {
+                    Ok(Some(status)) => {
+                        let (k, _) = running.remove(i);
+                        reaped = true;
+                        if !status.success() {
+                            failure =
+                                Some(format!("shard {k}/{} exited with {status}", plan.shards));
+                        }
+                    }
+                    Ok(None) => i += 1,
+                    Err(e) => failure = Some(format!("wait shard {}: {e}", running[i].0)),
+                }
+            }
+            if failure.is_none() && !reaped && !running.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+        }
+        if let Some(e) = failure {
+            // Never orphan children: a failed launch kills and reaps the
+            // rest so a re-run cannot race their half-written shard files.
+            for (_, child) in &mut running {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            return Err(e);
+        }
+    }
+    let inputs =
+        read_shard_dir(&plan.shard_dir, &plan.sweep).map_err(|e| format!("sweep-launch: {e}"))?;
+    if inputs.len() != plan.shards {
+        return Err(format!(
+            "sweep-launch: expected {} shard files under {}, found {}",
+            plan.shards,
+            plan.shard_dir.display(),
+            inputs.len()
+        ));
+    }
+    let merged = merge_shards(&inputs).map_err(|e| format!("sweep-launch merge: {e}"))?;
+    if let Some(parent) = plan.out.parent() {
+        std::fs::create_dir_all(parent)
+            .map_err(|e| format!("create {}: {e}", parent.display()))?;
+    }
+    std::fs::write(&plan.out, &merged)
+        .map_err(|e| format!("write {}: {e}", plan.out.display()))?;
+    Ok(LaunchReport {
+        shards: plan.shards,
+        rows: merged.lines().count(),
+        bytes: merged.len(),
+        generated_traces,
+    })
+}
+
+// ---------------------------------------------------------------------
+// CLI glue
+// ---------------------------------------------------------------------
+
+/// `gyges trace-gen <sweep|production> ...` — write deterministic
+/// segment files. Named sweeps chunk their canonical traces (exactly
+/// the requests whole-trace replay serves); `production` streams a
+/// seeded [`ProductionStream`] one segment at a time (O(segment)
+/// generator memory, any-index resume by construction).
+pub fn trace_gen_cli(args: &Args) -> i32 {
+    let Some(what) = args.positional.get(1).map(|s| s.as_str()) else {
+        eprintln!(
+            "usage: gyges trace-gen <{}|production> [--horizon S] [--segment-s S] \
+             [--out-dir DIR] [--resume-from K] [--qps Q --seed N]",
+            NAMED_SWEEPS.join("|")
+        );
+        return 2;
+    };
+    let default_horizon =
+        if what == "production" { 3600.0 } else { named_sweep_default_horizon(what) };
+    let parsed = (|| -> Result<(f64, usize, f64, u64, f64), String> {
+        Ok((
+            args.parsed_strict("segment-s", 60.0f64)?,
+            args.parsed_strict("resume-from", 0usize)?,
+            args.parsed_strict("qps", 2.0f64)?,
+            args.parsed_strict("seed", 0x57AEA_u64)?,
+            args.parsed_strict("horizon", default_horizon)?,
+        ))
+    })();
+    let (segment_s, resume_from, qps, seed, horizon) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("trace-gen: {e}");
+            return 2;
+        }
+    };
+    // The finiteness check also rejects NaN, which `<= 0` alone would
+    // wave through into a 1-ns-window generation spin.
+    if !segment_s.is_finite() || segment_s <= 0.0 {
+        eprintln!("trace-gen: --segment-s must be a positive number");
+        return 2;
+    }
+    if what == "production" {
+        let spec = ProductionStream { seed, qps, segment_s, horizon_s: horizon };
+        if !spec.qps.is_finite() || spec.qps <= 0.0 {
+            // A zero rate would trip Prng::exp's assert deep in
+            // generation; an infinite one would spin forever.
+            eprintln!("trace-gen: --qps must be a positive finite number");
+            return 2;
+        }
+        let dir = PathBuf::from(args.get_or("out-dir", "target/segments/production"))
+            .join(group_dir_name(0));
+        // The manifest needs every segment's metadata, so the stream is
+        // walked from 0 either way; `resume_from` only skips rewriting
+        // the earlier files (their bytes are already on disk).
+        let mut source = StreamSource::new(spec);
+        match write_segments(&dir, "production", 0, segment_s, &mut source, resume_from) {
+            Ok(sd) => {
+                println!(
+                    "production stream: {} requests in {} segments → {}",
+                    sd.requests,
+                    sd.files.len(),
+                    dir.display()
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("trace-gen: {e}");
+                1
+            }
+        }
+    } else {
+        let out_root = PathBuf::from(args.get_or("out-dir", &format!("target/segments/{what}")));
+        match trace_gen_named(what, horizon, segment_s, &out_root, resume_from) {
+            Ok(dirs) => {
+                for sd in &dirs {
+                    println!(
+                        "{what} group {}: {} requests in {} segments → {}",
+                        sd.group,
+                        sd.requests,
+                        sd.files.len(),
+                        sd.dir.display()
+                    );
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("trace-gen: {e}");
+                1
+            }
+        }
+    }
+}
+
+/// `gyges sweep-launch <sweep> ...` — the multi-hour pipeline in one
+/// command: trace-gen (if needed) → N streamed `sweep-shard` jobs →
+/// manifest-verified merge.
+pub fn sweep_launch_cli(args: &Args) -> i32 {
+    let Some(sweep) = args.positional.get(1).map(|s| s.as_str()) else {
+        eprintln!(
+            "usage: gyges sweep-launch <{}> [--horizon S] [--segment-s S] [--shards N] \
+             [--trace-dir DIR] [--out-dir DIR] [--out FILE] [--procs J] [--in-process]",
+            NAMED_SWEEPS.join("|")
+        );
+        return 2;
+    };
+    let default_procs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let parsed = (|| -> Result<(f64, f64, usize, usize), String> {
+        Ok((
+            args.parsed_strict("horizon", named_sweep_default_horizon(sweep))?,
+            args.parsed_strict("segment-s", 60.0f64)?,
+            args.parsed_strict("shards", 1usize)?,
+            args.parsed_strict("procs", default_procs)?,
+        ))
+    })();
+    let (horizon_s, segment_s, shards, max_procs) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("sweep-launch: {e}");
+            return 2;
+        }
+    };
+    let plan = LaunchPlan {
+        sweep: sweep.to_string(),
+        horizon_s,
+        segment_s,
+        shards,
+        trace_root: PathBuf::from(args.get_or("trace-dir", &format!("target/segments/{sweep}"))),
+        shard_dir: PathBuf::from(args.get_or("out-dir", "target/launch-shards")),
+        out: PathBuf::from(args.get_or("out", &format!("target/{sweep}-launched.jsonl"))),
+        max_procs,
+        in_process: args.flag("in-process"),
+    };
+    match run_launch(&plan) {
+        Ok(rep) => {
+            println!(
+                "{sweep}: launched {} streamed shard(s){} → merged {} rows ({} bytes) → {}",
+                rep.shards,
+                if rep.generated_traces { " (traces generated)" } else { "" },
+                rep.rows,
+                rep.bytes,
+                plan.out.display()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("sweep-launch: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sweep::{results_to_jsonl, run_sweep_serial};
+    use crate::experiments::{named_sweep_jobs, shard::job_list_hash};
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("gyges-launch-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn streamed_jobs_hash_identically_to_materialized_jobs() {
+        let root = tmp("hash");
+        let _ = std::fs::remove_dir_all(&root);
+        trace_gen_named("fig13", 240.0, 30.0, &root, 0).unwrap();
+        let streamed = streamed_named_jobs("fig13", 240.0, &root).unwrap();
+        let canonical = named_sweep_jobs("fig13", 240.0).unwrap();
+        assert_eq!(
+            job_list_hash(&streamed),
+            job_list_hash(&canonical),
+            "segment-dir jobs must fingerprint as the same sweep"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn trace_gen_resume_repairs_partial_multi_group_generation() {
+        let root = tmp("resume-groups");
+        let _ = std::fs::remove_dir_all(&root);
+        let full = trace_gen_named("fig14", 60.0, 10.0, &root, 0).unwrap();
+        assert_eq!(full.len(), 3, "fig14 has one trace group per QPS");
+        // Simulate an interrupted run: group 0 finished, group 1 lost its
+        // tail and manifest, group 2 never started.
+        let g1 = root.join(group_dir_name(1));
+        for k in 2..full[1].files.len() {
+            std::fs::remove_file(g1.join(SegmentDir::segment_file_name(k))).unwrap();
+        }
+        std::fs::remove_file(SegmentDir::manifest_path(&g1)).unwrap();
+        std::fs::remove_dir_all(root.join(group_dir_name(2))).unwrap();
+        // Resume must adapt per group: skip the sealed group, verify and
+        // extend the partial one, regenerate the missing one — even with
+        // a resume index beyond what some groups have on disk.
+        let repaired = trace_gen_named("fig14", 60.0, 10.0, &root, 4).unwrap();
+        for (a, b) in full.iter().zip(&repaired) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn in_process_launch_matches_whole_trace_serial_bytes() {
+        let root = tmp("pipe");
+        let _ = std::fs::remove_dir_all(&root);
+        let plan = LaunchPlan {
+            sweep: "fig13".into(),
+            horizon_s: 240.0,
+            segment_s: 45.0,
+            shards: 2,
+            trace_root: root.join("segments"),
+            shard_dir: root.join("shards"),
+            out: root.join("merged.jsonl"),
+            max_procs: 1,
+            in_process: true,
+        };
+        let rep = run_launch(&plan).unwrap();
+        assert!(rep.generated_traces);
+        assert_eq!(rep.shards, 2);
+        let merged = std::fs::read_to_string(&plan.out).unwrap();
+        let canonical = named_sweep_jobs("fig13", 240.0).unwrap();
+        let serial = results_to_jsonl(&run_sweep_serial(&canonical));
+        assert_eq!(merged, serial, "streamed launch must reproduce the serial whole-trace bytes");
+        // Re-launching over the existing segment files skips generation.
+        let rep2 = run_launch(&plan).unwrap();
+        assert!(!rep2.generated_traces);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

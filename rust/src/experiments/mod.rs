@@ -9,8 +9,12 @@
 //! layer stretches the same guarantee across processes/hosts/CI matrix
 //! jobs: `gyges sweep-shard` runs one stripe of a named job list and
 //! `gyges sweep-merge` reassembles the stripes to the serial driver's
-//! exact bytes (manifest-verified).
+//! exact bytes (manifest-verified). The [`launch`] layer stretches it to
+//! multi-hour traces: `gyges trace-gen` writes segment files and `gyges
+//! sweep-launch` fans streamed shard jobs over them (O(segment) trace
+//! memory per worker) before merging with the same machinery.
 
+pub mod launch;
 pub mod shard;
 pub mod sweep;
 
@@ -26,7 +30,7 @@ use crate::util::table::Table;
 use crate::weights::{fig10_series, page_counts, LayerPadPlan};
 use crate::workload::{LengthModel, Trace};
 use std::sync::Arc;
-use sweep::{run_sweep, SweepJob};
+use sweep::{run_sweep, JobTrace, SweepJob};
 
 fn row_json(pairs: &[(&str, Json)]) -> Json {
     let mut o = Json::obj();
@@ -344,30 +348,120 @@ pub fn fig12_trace(cfg: &ClusterConfig, seed: u64, horizon_s: f64) -> Trace {
         t_burst += 150.0;
     }
     let mut trace = Trace { requests };
-    trace.sort();
+    trace.sort_and_renumber();
     trace
 }
 
 /// The Figure-12 policy set, in table order (baselines first).
 pub const FIG12_POLICIES: [Policy; 3] = [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges];
 
-/// Build the Figure-12 job list (model × policy) for the sweep driver.
-pub fn fig12_jobs(horizon_s: f64, models: &[ModelConfig]) -> Vec<SweepJob> {
-    let mut jobs = Vec::new();
-    for m in models {
-        let cfg = ClusterConfig::paper_default(m.clone());
-        let trace = Arc::new(fig12_trace(&cfg, 0xF16_12, horizon_s));
-        for policy in FIG12_POLICIES {
-            jobs.push(SweepJob::new(
-                format!("{}/{}", m.name, policy.name()),
-                cfg.clone(),
-                SystemKind::Gyges,
-                Some(policy),
-                Arc::clone(&trace),
-            ));
+// ---------------------------------------------------------------------
+// Sweep shapes (job structure without materialized traces)
+// ---------------------------------------------------------------------
+
+/// One job's metadata in a [`SweepShape`]; `trace_group` points into
+/// [`SweepShape::traces`].
+#[derive(Clone)]
+pub struct ShapeEntry {
+    pub key: String,
+    pub cfg: ClusterConfig,
+    pub system: SystemKind,
+    pub policy: Option<Policy>,
+    pub gyges_hold: Option<f64>,
+    pub trace_group: usize,
+}
+
+/// How one trace group of a named sweep is generated.
+#[derive(Clone)]
+pub enum TraceSpec {
+    /// The Figure-12 saturating workload for `cfg` (qps and long length
+    /// derived from the model), seeded.
+    Fig12 { cfg: ClusterConfig, seed: u64 },
+    /// The fully scripted Figure-13 trace (ignores the horizon).
+    Fig13,
+    /// §6.3 production trace at `qps`.
+    Production { seed: u64, qps: f64 },
+}
+
+impl TraceSpec {
+    pub fn build(&self, horizon_s: f64) -> Trace {
+        match self {
+            TraceSpec::Fig12 { cfg, seed } => fig12_trace(cfg, *seed, horizon_s),
+            TraceSpec::Fig13 => fig13_trace(),
+            TraceSpec::Production { seed, qps } => Trace::production(*seed, *qps, horizon_s),
         }
     }
-    jobs
+}
+
+/// The structure of a named sweep without its traces materialized: job
+/// metadata plus one [`TraceSpec`] per trace group (fig12 has one group
+/// per model, fig14 one per QPS). `gyges trace-gen` materializes one
+/// group at a time to write segment files, and streamed replay
+/// (`launch::streamed_named_jobs`) builds jobs over those files so the
+/// serving process never holds more than one segment of any trace.
+#[derive(Clone)]
+pub struct SweepShape {
+    pub name: String,
+    pub horizon_s: f64,
+    pub entries: Vec<ShapeEntry>,
+    pub traces: Vec<TraceSpec>,
+}
+
+impl SweepShape {
+    /// Materialize each trace group once (`Arc`-shared across its jobs)
+    /// — the canonical job list every shard of this sweep agrees on.
+    pub fn materialized_jobs(&self) -> Vec<SweepJob> {
+        let traces: Vec<Arc<Trace>> =
+            self.traces.iter().map(|s| Arc::new(s.build(self.horizon_s))).collect();
+        self.jobs_with(|g| JobTrace::Full(Arc::clone(&traces[g])))
+    }
+
+    /// Build the job list with a caller-chosen trace delivery per group.
+    pub fn jobs_with(&self, mut trace_for: impl FnMut(usize) -> JobTrace) -> Vec<SweepJob> {
+        self.entries
+            .iter()
+            .map(|e| {
+                let mut job = SweepJob::with_job_trace(
+                    e.key.clone(),
+                    e.cfg.clone(),
+                    e.system,
+                    e.policy,
+                    trace_for(e.trace_group),
+                );
+                if let Some(h) = e.gyges_hold {
+                    job = job.with_gyges_hold(h);
+                }
+                job
+            })
+            .collect()
+    }
+}
+
+/// The Figure-12 sweep shape (model × policy; one trace group per
+/// model).
+pub fn fig12_shape(horizon_s: f64, models: &[ModelConfig]) -> SweepShape {
+    let mut entries = Vec::new();
+    let mut traces = Vec::new();
+    for (g, m) in models.iter().enumerate() {
+        let cfg = ClusterConfig::paper_default(m.clone());
+        traces.push(TraceSpec::Fig12 { cfg: cfg.clone(), seed: 0xF16_12 });
+        for policy in FIG12_POLICIES {
+            entries.push(ShapeEntry {
+                key: format!("{}/{}", m.name, policy.name()),
+                cfg: cfg.clone(),
+                system: SystemKind::Gyges,
+                policy: Some(policy),
+                gyges_hold: None,
+                trace_group: g,
+            });
+        }
+    }
+    SweepShape { name: "fig12".into(), horizon_s, entries, traces }
+}
+
+/// Build the Figure-12 job list (model × policy) for the sweep driver.
+pub fn fig12_jobs(horizon_s: f64, models: &[ModelConfig]) -> Vec<SweepJob> {
+    fig12_shape(horizon_s, models).materialized_jobs()
 }
 
 /// Figure 12: scheduler comparison (RR / LLF / Gyges) per model.
@@ -439,26 +533,37 @@ pub fn fig13_trace() -> Trace {
         });
         id += 1;
     }
-    trace.sort();
+    // Renumber so ids are dense in arrival order (the longs are pushed
+    // last but arrive mid-trace) — segment files require it.
+    trace.sort_and_renumber();
     trace
+}
+
+/// The Figure-13 sweep shape (one scripted trace, three policies).
+pub fn fig13_shape() -> SweepShape {
+    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    let entries = FIG12_POLICIES
+        .iter()
+        .map(|&policy| ShapeEntry {
+            key: format!("fig13/{}", policy.name()),
+            cfg: cfg.clone(),
+            system: SystemKind::Gyges,
+            policy: Some(policy),
+            gyges_hold: None,
+            trace_group: 0,
+        })
+        .collect();
+    SweepShape {
+        name: "fig13".into(),
+        horizon_s: 240.0,
+        entries,
+        traces: vec![TraceSpec::Fig13],
+    }
 }
 
 /// Build the Figure-13 job list (one trace, three policies).
 pub fn fig13_jobs() -> Vec<SweepJob> {
-    let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
-    let trace = Arc::new(fig13_trace());
-    FIG12_POLICIES
-        .iter()
-        .map(|&policy| {
-            SweepJob::new(
-                format!("fig13/{}", policy.name()),
-                cfg.clone(),
-                SystemKind::Gyges,
-                Some(policy),
-                Arc::clone(&trace),
-            )
-        })
-        .collect()
+    fig13_shape().materialized_jobs()
 }
 
 /// Figure 13: TPS trend around a long-request arrival at t=120 s.
@@ -500,23 +605,30 @@ pub fn fig13() -> Vec<Json> {
     rows
 }
 
-/// Build the Figure-14 job list (QPS × system) for the sweep driver.
-pub fn fig14_jobs(horizon_s: f64, qps_list: &[f64]) -> Vec<SweepJob> {
+/// The Figure-14 sweep shape (QPS × system; one trace group per QPS).
+pub fn fig14_shape(horizon_s: f64, qps_list: &[f64]) -> SweepShape {
     let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
-    let mut jobs = Vec::new();
-    for &qps in qps_list {
-        let trace = Arc::new(Trace::production(0xF16_14, qps, horizon_s));
+    let mut entries = Vec::new();
+    let mut traces = Vec::new();
+    for (g, &qps) in qps_list.iter().enumerate() {
+        traces.push(TraceSpec::Production { seed: 0xF16_14, qps });
         for sys in fig14_systems() {
-            jobs.push(SweepJob::new(
-                format!("qps{qps}/{}", sys.name()),
-                cfg.clone(),
-                sys,
-                None,
-                Arc::clone(&trace),
-            ));
+            entries.push(ShapeEntry {
+                key: format!("qps{qps}/{}", sys.name()),
+                cfg: cfg.clone(),
+                system: sys,
+                policy: None,
+                gyges_hold: None,
+                trace_group: g,
+            });
         }
     }
-    jobs
+    SweepShape { name: "fig14".into(), horizon_s, entries, traces }
+}
+
+/// Build the Figure-14 job list (QPS × system) for the sweep driver.
+pub fn fig14_jobs(horizon_s: f64, qps_list: &[f64]) -> Vec<SweepJob> {
+    fig14_shape(horizon_s, qps_list).materialized_jobs()
 }
 
 /// Figure 14: end-to-end throughput / TTFT / TPOT vs KunServe/LoongServe.
@@ -576,24 +688,32 @@ pub fn fig14(horizon_s: f64, qps_list: &[f64]) -> Vec<Json> {
 /// Hold values the A3 hysteresis ablation sweeps (ablation_sweeps bench).
 pub const ABLATION_HOLDS: [f64; 4] = [0.0, 15.0, 45.0, 120.0];
 
-/// Build the A3 ablation job list: the Figure-12 workload under the
-/// Gyges policy with `long_hold_s` swept over [`ABLATION_HOLDS`].
-pub fn ablation_hold_jobs(horizon_s: f64) -> Vec<SweepJob> {
+/// The A3 hysteresis-ablation sweep shape: the Figure-12 workload under
+/// the Gyges policy with `long_hold_s` swept over [`ABLATION_HOLDS`].
+pub fn ablation_hold_shape(horizon_s: f64) -> SweepShape {
     let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
-    let trace = Arc::new(fig12_trace(&cfg, 7, horizon_s));
-    ABLATION_HOLDS
+    let entries = ABLATION_HOLDS
         .iter()
-        .map(|&hold| {
-            SweepJob::new(
-                format!("hold{hold}"),
-                cfg.clone(),
-                SystemKind::Gyges,
-                Some(Policy::Gyges),
-                Arc::clone(&trace),
-            )
-            .with_gyges_hold(hold)
+        .map(|&hold| ShapeEntry {
+            key: format!("hold{hold}"),
+            cfg: cfg.clone(),
+            system: SystemKind::Gyges,
+            policy: Some(Policy::Gyges),
+            gyges_hold: Some(hold),
+            trace_group: 0,
         })
-        .collect()
+        .collect();
+    SweepShape {
+        name: "ablation-hold".into(),
+        horizon_s,
+        entries,
+        traces: vec![TraceSpec::Fig12 { cfg, seed: 7 }],
+    }
+}
+
+/// Build the A3 ablation job list.
+pub fn ablation_hold_jobs(horizon_s: f64) -> Vec<SweepJob> {
+    ablation_hold_shape(horizon_s).materialized_jobs()
 }
 
 /// The canonical job list of a named sweep — the shared vocabulary of
@@ -603,14 +723,26 @@ pub fn ablation_hold_jobs(horizon_s: f64) -> Vec<SweepJob> {
 /// the manifests' key-list hashes will (correctly) refuse to merge.
 /// `fig13` ignores the horizon (its trace is fully scripted).
 pub fn named_sweep_jobs(name: &str, horizon_s: f64) -> Option<Vec<SweepJob>> {
-    Some(match name {
-        "fig12" => fig12_jobs(horizon_s, &ModelConfig::eval_set()),
-        "fig12-qwen" => fig12_jobs(horizon_s, &[ModelConfig::qwen2_5_32b()]),
-        "fig13" => fig13_jobs(),
-        "fig14" => fig14_jobs(horizon_s, &[2.0, 6.0, 10.0]),
-        "ablation-hold" => ablation_hold_jobs(horizon_s),
+    named_sweep_shape(name, horizon_s).map(|s| s.materialized_jobs())
+}
+
+/// The structure of a named sweep (see [`named_sweep_jobs`]) WITHOUT
+/// materializing its traces — what `gyges trace-gen` and the streamed
+/// launcher build from. The `fig13` shape ignores the horizon (its
+/// trace is fully scripted), matching `named_sweep_jobs`.
+pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
+    let mut shape = match name {
+        "fig12" => fig12_shape(horizon_s, &ModelConfig::eval_set()),
+        "fig12-qwen" => fig12_shape(horizon_s, &[ModelConfig::qwen2_5_32b()]),
+        "fig13" => fig13_shape(),
+        "fig14" => fig14_shape(horizon_s, &[2.0, 6.0, 10.0]),
+        "ablation-hold" => ablation_hold_shape(horizon_s),
         _ => return None,
-    })
+    };
+    // Registry aliases (fig12-qwen) keep their registry name so segment
+    // directories and manifests label themselves consistently.
+    shape.name = name.to_string();
+    Some(shape)
 }
 
 /// Names [`named_sweep_jobs`] understands (usage strings, error text).

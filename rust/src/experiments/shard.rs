@@ -147,28 +147,22 @@ impl std::error::Error for ShardError {}
 // Hashing (FNV-1a; no external crates offline)
 // ---------------------------------------------------------------------
 
-/// FNV-1a 64-bit over raw bytes — stable across platforms and runs,
-/// which is all the manifest needs (integrity, not security).
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
-fn hex64(h: u64) -> String {
-    format!("{h:016x}")
-}
+// Shared with the trace-segment files since PR 4; re-exported so shard
+// tooling keeps its historical import path.
+pub use crate::util::hash::fnv1a;
+use crate::util::hash::hex64;
 
 /// Fingerprint of the canonical job list (all jobs of the sweep, in
 /// order): each job's key plus the trace/config facts that shape its
-/// rows — request count, total tokens, last arrival, system, policy,
-/// seed, fleet shape, event cap, hold override. Keys alone are not
-/// enough: fig12/fig14 keys do not encode the horizon, so two runs of
-/// "the same sweep" at different horizons would otherwise merge into a
-/// silently mixed figure. Strings are 0xFF-delimited (never valid
+/// rows — workload shape (request count, total tokens, last arrival for
+/// materialized/segment-dir traces; the generating spec for seeded
+/// streams — see `JobTrace::fingerprint_into`), system, policy, seed,
+/// fleet shape, event cap, hold override. Keys alone are not enough:
+/// fig12/fig14 keys do not encode the horizon, so two runs of "the same
+/// sweep" at different horizons would otherwise merge into a silently
+/// mixed figure. The same-trace delivery modes (whole, chunked, segment
+/// files) hash identically — streamed shards are provably the same
+/// sweep as whole-trace shards. Strings are 0xFF-delimited (never valid
 /// UTF-8), so adjacent fields cannot alias.
 pub fn job_list_hash(jobs: &[SweepJob]) -> String {
     let mut bytes = Vec::new();
@@ -181,16 +175,8 @@ pub fn job_list_hash(jobs: &[SweepJob]) -> String {
             bytes.extend_from_slice(p.name().as_bytes());
         }
         bytes.push(0xFF);
-        let last_arrival = job
-            .trace
-            .requests
-            .last()
-            .map(|r| r.arrival.as_secs_f64().to_bits())
-            .unwrap_or(0);
+        job.trace.fingerprint_into(&mut bytes);
         for v in [
-            job.trace.len() as u64,
-            job.trace.total_tokens(),
-            last_arrival,
             job.cfg.seed,
             job.cfg.hosts as u64,
             job.cfg.gpus_per_host as u64,
@@ -591,25 +577,40 @@ pub fn merge_shards(shards: &[ShardInput]) -> Result<String, ShardError> {
 /// list — with the sweep's own default horizon unless `--horizon` is
 /// given — and run [`shard_cli`]. The single entry point behind every
 /// figure bench's `--shard` mode and `gyges sweep-shard`, so job list
-/// and horizon defaults can never drift between them. Unknown sweep
-/// names exit 2.
+/// and horizon defaults can never drift between them. `--stream-dir D`
+/// replays the sweep's traces from `gyges trace-gen` segment files
+/// under `D` instead of materializing them (O(segment) trace memory;
+/// rows stay byte-identical). Unknown sweep names exit 2.
 pub fn shard_cli_named(args: &crate::util::Args, sweep: &str) -> i32 {
     // A typo'd horizon must not silently become the default: every
     // shard of one sweep would "agree" on the wrong job list and merge
     // cleanly into a figure the operator never asked for.
-    let horizon = match args.get("horizon") {
-        None => super::named_sweep_default_horizon(sweep),
-        Some(raw) => match raw.parse::<f64>() {
+    let horizon =
+        match args.parsed_strict::<f64>("horizon", super::named_sweep_default_horizon(sweep)) {
             Ok(h) => h,
-            Err(_) => {
-                eprintln!("sweep-shard: --horizon {raw:?} is not a number");
+            Err(e) => {
+                eprintln!("sweep-shard: {e}");
+                return 2;
+            }
+        };
+    let jobs = match args.get("stream-dir") {
+        Some(dir) => match super::launch::streamed_named_jobs(sweep, horizon, Path::new(dir)) {
+            Ok(jobs) => jobs,
+            Err(e) => {
+                eprintln!("sweep-shard: {e}");
                 return 2;
             }
         },
-    };
-    let Some(jobs) = super::named_sweep_jobs(sweep, horizon) else {
-        eprintln!("unknown sweep {sweep:?} (known: {})", super::NAMED_SWEEPS.join(", "));
-        return 2;
+        None => match super::named_sweep_jobs(sweep, horizon) {
+            Some(jobs) => jobs,
+            None => {
+                eprintln!(
+                    "unknown sweep {sweep:?} (known: {})",
+                    super::NAMED_SWEEPS.join(", ")
+                );
+                return 2;
+            }
+        },
     };
     shard_cli(args, sweep, &jobs)
 }
@@ -719,13 +720,8 @@ mod tests {
         assert!(matches!(ShardManifest::from_json(&doc), Err(ShardError::BadManifest(_))));
     }
 
-    #[test]
-    fn fnv1a_is_the_reference_function() {
-        // Published FNV-1a test vectors.
-        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
-        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
-        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
-    }
+    // (The FNV-1a reference-vector test lives with the implementation
+    // in util::hash since the PR 4 move.)
 
     #[test]
     fn jobs_hash_separates_keys_and_workloads() {

@@ -17,9 +17,69 @@ use crate::config::{ClusterConfig, Policy};
 use crate::coordinator::{ClusterSim, SimCounters, SystemKind};
 use crate::metrics::RunReport;
 use crate::util::json::Json;
-use crate::workload::Trace;
+use crate::workload::{ChunkedTrace, ProductionStream, SegmentDir, SegmentFileSource};
+use crate::workload::{StreamSource, Trace};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// How a job's request stream reaches the simulator. The first three
+/// variants replay the *same* trace (and therefore produce byte-identical
+/// rows — the streamed-replay guarantee `rust/tests/streaming.rs`
+/// enforces); [`JobTrace::Stream`] is its own seeded workload whose
+/// segmentation is part of its identity.
+#[derive(Clone)]
+pub enum JobTrace {
+    /// Materialized trace fed as one segment (the classic path).
+    Full(Arc<Trace>),
+    /// Materialized trace fed in `segment_s` windows — same rows, feed
+    /// buffer bounded by one window (the generator still materializes).
+    Chunked { trace: Arc<Trace>, segment_s: f64 },
+    /// JSONL segment files streamed lazily from a `gyges trace-gen`
+    /// directory: O(segment) trace memory end to end.
+    Dir(Arc<SegmentDir>),
+    /// Per-segment seeded generation (multi-hour production stream):
+    /// O(segment) memory with no files at all.
+    Stream(ProductionStream),
+}
+
+impl JobTrace {
+    /// Append this workload's identity to a manifest fingerprint. The
+    /// three same-trace variants hash identically (request count, total
+    /// tokens, last arrival) — a streamed shard set is provably the same
+    /// sweep as a whole-trace one; a [`JobTrace::Stream`] hashes its
+    /// generating spec instead (including `segment_s`, which shapes its
+    /// draws).
+    pub fn fingerprint_into(&self, bytes: &mut Vec<u8>) {
+        let shape = |bytes: &mut Vec<u8>, len: u64, tokens: u64, last_bits: u64| {
+            bytes.push(0x01);
+            for v in [len, tokens, last_bits] {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        match self {
+            JobTrace::Full(t) | JobTrace::Chunked { trace: t, .. } => {
+                let last = t.requests.last().map(|r| r.arrival.as_secs_f64().to_bits());
+                shape(bytes, t.len() as u64, t.total_tokens(), last.unwrap_or(0));
+            }
+            JobTrace::Dir(d) => {
+                let last = if d.requests == 0 {
+                    0
+                } else {
+                    d.last_arrival.as_secs_f64().to_bits()
+                };
+                shape(bytes, d.requests, d.total_tokens, last);
+            }
+            JobTrace::Stream(s) => {
+                bytes.push(0x02);
+                for v in
+                    [s.seed, s.qps.to_bits(), s.segment_s.to_bits(), s.horizon_s.to_bits()]
+                {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+}
 
 /// One independent simulation in a sweep. Traces are shared via `Arc` so
 /// a policy sweep over one workload does not deep-copy it per job at
@@ -31,7 +91,7 @@ pub struct SweepJob {
     pub cfg: ClusterConfig,
     pub system: SystemKind,
     pub policy: Option<Policy>,
-    pub trace: Arc<Trace>,
+    pub trace: JobTrace,
     /// Override for the Gyges policy's anti-oscillation hold (ablation
     /// A3); `None` keeps the policy default.
     pub gyges_hold: Option<f64>,
@@ -45,12 +105,36 @@ impl SweepJob {
         policy: Option<Policy>,
         trace: Arc<Trace>,
     ) -> SweepJob {
+        Self::with_job_trace(key, cfg, system, policy, JobTrace::Full(trace))
+    }
+
+    /// Build a job over any [`JobTrace`] delivery mode.
+    pub fn with_job_trace(
+        key: impl Into<String>,
+        cfg: ClusterConfig,
+        system: SystemKind,
+        policy: Option<Policy>,
+        trace: JobTrace,
+    ) -> SweepJob {
         SweepJob { key: key.into(), cfg, system, policy, trace, gyges_hold: None }
     }
 
     /// Run this job with a custom Gyges long-request hold.
     pub fn with_gyges_hold(mut self, hold_s: f64) -> SweepJob {
         self.gyges_hold = Some(hold_s);
+        self
+    }
+
+    /// Switch a materialized job to chunked (streamed) replay of the
+    /// same trace — rows stay byte-identical; no-op for jobs already
+    /// streaming from files or a generator.
+    pub fn replay_chunked(mut self, segment_s: f64) -> SweepJob {
+        self.trace = match self.trace {
+            JobTrace::Full(t) | JobTrace::Chunked { trace: t, .. } => {
+                JobTrace::Chunked { trace: t, segment_s }
+            }
+            other => other,
+        };
         self
     }
 }
@@ -109,7 +193,24 @@ impl SweepResult {
 }
 
 fn run_job(job: &SweepJob) -> SweepResult {
-    let mut sim = ClusterSim::new(job.cfg.clone(), job.system, (*job.trace).clone());
+    let mut sim = match &job.trace {
+        JobTrace::Full(t) => ClusterSim::new(job.cfg.clone(), job.system, (**t).clone()),
+        JobTrace::Chunked { trace, segment_s } => ClusterSim::with_source(
+            job.cfg.clone(),
+            job.system,
+            Box::new(ChunkedTrace::new((**trace).clone(), *segment_s)),
+        ),
+        JobTrace::Dir(d) => ClusterSim::with_source(
+            job.cfg.clone(),
+            job.system,
+            Box::new(SegmentFileSource::new((**d).clone())),
+        ),
+        JobTrace::Stream(spec) => ClusterSim::with_source(
+            job.cfg.clone(),
+            job.system,
+            Box::new(StreamSource::new(spec.clone())),
+        ),
+    };
     if let Some(p) = job.policy {
         sim = sim.with_policy(p);
     }
@@ -248,6 +349,18 @@ mod tests {
             assert!(res.report.completed > 0);
             assert!(res.error.is_none());
         }
+    }
+
+    #[test]
+    fn chunked_replay_jobs_match_full_replay_bytes() {
+        let jobs = small_jobs();
+        let chunked: Vec<SweepJob> =
+            jobs.iter().cloned().map(|j| j.replay_chunked(9.0)).collect();
+        assert_eq!(
+            results_to_jsonl(&run_sweep_serial(&jobs)),
+            results_to_jsonl(&run_sweep_serial(&chunked)),
+            "streamed (chunked) replay must produce byte-identical sweep rows"
+        );
     }
 
     #[test]

@@ -4,15 +4,21 @@
 //! Usage:
 //!   gyges info
 //!   gyges serve       [--model M] [--policy gyges|rr|llf] [--system S]
-//!                     [--qps Q | --hybrid] [--horizon SECS] [--seed N]
-//!                     [--config FILE]
+//!                     [--qps Q | --hybrid | --trace-dir DIR]
+//!                     [--horizon SECS] [--seed N] [--config FILE]
 //!   gyges serve-real  [--artifacts DIR] [--shorts N] [--longs N]
 //!   gyges repro       <table1|table2|table3|fig2|fig9|fig10|fig11|fig12|
 //!                      fig13|fig14|static|all> [--horizon SECS]
 //!   gyges sweep-shard <fig12|fig12-qwen|fig13|fig14|ablation-hold>
 //!                     [--shard K/N] [--horizon SECS] [--out-dir DIR]
+//!                     [--stream-dir DIR]
 //!   gyges sweep-merge <sweep> [--dir DIR] [--out FILE]
 //!                     [--expect-horizon SECS]
+//!   gyges trace-gen   <sweep|production> [--horizon SECS] [--segment-s S]
+//!                     [--out-dir DIR] [--resume-from K] [--qps Q] [--seed N]
+//!   gyges sweep-launch <sweep> [--horizon SECS] [--segment-s S]
+//!                     [--shards N] [--trace-dir DIR] [--out-dir DIR]
+//!                     [--out FILE] [--procs J] [--in-process]
 //!   gyges bench-gate  [--baseline FILE] [--fresh FILE] [--max-regress F]
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
@@ -30,11 +36,13 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("sweep-shard") => cmd_sweep_shard(&args),
         Some("sweep-merge") => cmd_sweep_merge(&args),
+        Some("trace-gen") => gyges::experiments::launch::trace_gen_cli(&args),
+        Some("sweep-launch") => gyges::experiments::launch::sweep_launch_cli(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             eprintln!(
-                "usage: gyges <info|serve|serve-real|repro|sweep-shard|sweep-merge|bench-gate> \
-                 [options]  (see rust/src/main.rs)"
+                "usage: gyges <info|serve|serve-real|repro|sweep-shard|sweep-merge|trace-gen|\
+                 sweep-launch|bench-gate> [options]  (see rust/src/main.rs)"
             );
             2
         }
@@ -97,6 +105,47 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    // --trace-dir replays a `gyges trace-gen` segment directory (any
+    // label, including `production` streams) one segment at a time —
+    // peak trace memory stays O(segment) however long the horizon is.
+    if let Some(dir) = args.get("trace-dir") {
+        let path = std::path::Path::new(dir);
+        let sd = match gyges::workload::SegmentDir::open(path) {
+            Ok(sd) => sd,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "serving {} streamed requests ({} segments) from {dir} on {} ({} GPUs, policy {}, \
+             system {})",
+            sd.requests,
+            sd.files.len(),
+            cfg.model.name,
+            cfg.total_gpus(),
+            cfg.policy.name(),
+            system.name()
+        );
+        let source = gyges::workload::SegmentFileSource::new(sd);
+        let out = gyges::coordinator::ClusterSim::with_source(cfg, system, Box::new(source)).run();
+        println!("{}", out.report.line());
+        println!(
+            "scale-ups {}  scale-downs {}  deferred {}  steps {}  peak buffered {}",
+            out.counters.scale_ups,
+            out.counters.scale_downs,
+            out.counters.deferred,
+            out.counters.steps,
+            out.trace_peak_buffered
+        );
+        return match out.error {
+            None => 0,
+            Some(e) => {
+                eprintln!("serve: run terminated early: {e}");
+                1
+            }
+        };
+    }
     let horizon = args.parsed_or("horizon", 600.0);
     let trace = if args.flag("hybrid") || args.get("qps").is_none() {
         Trace::hybrid_paper(cfg.seed, horizon)

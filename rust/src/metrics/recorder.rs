@@ -4,7 +4,8 @@
 //! Hot-path contract (see PERF.md): `on_arrival` / `on_first_token` /
 //! `on_token` / `on_finish` are O(1) — records live in a dense `Vec` slab
 //! keyed by request id (traces assign dense ids in [`crate::workload::
-//! Trace::sort`]), TPS buckets are a `Vec` indexed by simulated second,
+//! Trace::sort_and_renumber`]), TPS buckets are a `Vec` indexed by
+//! simulated second,
 //! and completed/token totals are maintained incrementally so the
 //! end-of-run report never rescans the slab for them.
 

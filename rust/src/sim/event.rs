@@ -74,6 +74,16 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Advance the clock to `t` without popping (never moves backwards).
+    /// Used when the driver consumes work from a side stream (e.g. a
+    /// streamed trace arrival) so that subsequent past-time pushes still
+    /// clamp against true simulated time.
+    pub fn advance_to(&mut self, t: SimTime) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -119,6 +129,19 @@ mod tests {
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, q.now());
         assert!((t.as_secs_f64() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_to_is_monotonic() {
+        let mut q = EventQueue::<()>::new();
+        q.advance_to(SimTime(50));
+        assert_eq!(q.now(), SimTime(50));
+        q.advance_to(SimTime(20)); // never backwards
+        assert_eq!(q.now(), SimTime(50));
+        // past pushes clamp against the advanced clock
+        q.push(SimTime(10), ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime(50));
     }
 
     #[test]

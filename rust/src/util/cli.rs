@@ -65,6 +65,24 @@ impl Args {
         self.get_parsed(key).unwrap_or(default)
     }
 
+    /// Typed option, strict: absent → `Ok(default)`; present but
+    /// malformed → `Err`. For flags where a typo'd value must never
+    /// silently become the default (e.g. a sweep horizon: every shard
+    /// would agree on the wrong job list and merge cleanly into a
+    /// figure the operator never asked for).
+    pub fn parsed_strict<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| format!("--{key} {raw:?} is not a valid value")),
+        }
+    }
+
     /// Was a bare `--flag` given? (`--flag=true/false` also honoured.)
     pub fn flag(&self, key: &str) -> bool {
         if self.flags.iter().any(|f| f == key) {
@@ -114,6 +132,15 @@ mod tests {
     fn trailing_flag_is_flag() {
         let a = parse("run --fast");
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn parsed_strict_rejects_malformed_but_defaults_when_absent() {
+        let a = parse("launch --horizon 3600s");
+        assert_eq!(a.parsed_strict::<f64>("segment-s", 60.0), Ok(60.0));
+        assert!(a.parsed_strict::<f64>("horizon", 240.0).is_err());
+        let ok = parse("launch --horizon 3600");
+        assert_eq!(ok.parsed_strict::<f64>("horizon", 240.0), Ok(3600.0));
     }
 
     #[test]

@@ -1,0 +1,36 @@
+//! Stable, dependency-free content hashing shared by the shard manifests
+//! and the trace-segment files (integrity fingerprints, not security).
+
+/// FNV-1a 64-bit over raw bytes — stable across platforms and runs,
+/// which is all the manifests need (integrity, not security).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fixed-width lowercase-hex form of a 64-bit hash.
+pub fn hex64(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hex_is_zero_padded() {
+        assert_eq!(hex64(0x1), "0000000000000001");
+        assert_eq!(hex64(u64::MAX), "ffffffffffffffff");
+    }
+}

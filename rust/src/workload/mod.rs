@@ -4,8 +4,13 @@
 
 pub mod arrivals;
 pub mod dist;
+pub mod source;
 pub mod trace;
 
 pub use arrivals::{BurstyProcess, Poisson};
 pub use dist::LengthModel;
+pub use source::{
+    ArrivalFeed, ChunkedTrace, MaterializedSource, ProductionStream, SegmentDir,
+    SegmentFileSource, StreamSource, TraceSegment, TraceSource,
+};
 pub use trace::{Trace, TraceRequest};

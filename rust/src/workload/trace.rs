@@ -37,8 +37,24 @@ impl Trace {
         self.requests.is_empty()
     }
 
+    /// Order requests by `(arrival, id)` WITHOUT touching ids.
+    ///
+    /// Ids are identity: re-sorting a trace whose ids are already
+    /// meaningful (segment concatenations, replayed files, hand-built
+    /// tests) must never rewrite them — the pre-PR-4 `sort` renumbered
+    /// on every call, silently desynchronizing request ids from
+    /// per-request recorder rows. Use [`Trace::sort_and_renumber`] when
+    /// building a fresh trace whose placeholder ids still need dense
+    /// assignment.
     pub fn sort(&mut self) {
         self.requests.sort_by_key(|r| (r.arrival, r.id));
+    }
+
+    /// Order by arrival and assign dense ids `0..n` in arrival order —
+    /// the trace-construction finalizer (generators build requests with
+    /// placeholder id 0, then call this exactly once).
+    pub fn sort_and_renumber(&mut self) {
+        self.sort();
         for (i, r) in self.requests.iter_mut().enumerate() {
             r.id = i as u64;
         }
@@ -71,7 +87,7 @@ impl Trace {
             });
         }
         let mut tr = Trace { requests };
-        tr.sort();
+        tr.sort_and_renumber();
         tr
     }
 
@@ -105,7 +121,7 @@ impl Trace {
             });
         }
         let mut tr = Trace { requests };
-        tr.sort();
+        tr.sort_and_renumber();
         tr
     }
 
@@ -123,7 +139,7 @@ impl Trace {
             requests.push(TraceRequest { id: 0, arrival: t, input_len: input, output_len: output });
         }
         let mut tr = Trace { requests };
-        tr.sort();
+        tr.sort_and_renumber();
         tr
     }
 
@@ -223,6 +239,42 @@ mod tests {
     fn csv_rejects_malformed() {
         assert!(Trace::from_csv("header\n1,2,3\n").is_err());
         assert!(Trace::from_csv("header\na,b,c,d\n").is_err());
+    }
+
+    #[test]
+    fn sort_preserves_assigned_ids() {
+        // Regression (PR 4): `sort` used to renumber `r.id = i` on every
+        // call, so re-sorting a trace with meaningful ids silently
+        // rewrote them.
+        let mut t = Trace::default();
+        for (id, at) in [(7u64, 3.0), (2, 1.0), (9, 2.0)] {
+            t.requests.push(TraceRequest {
+                id,
+                arrival: SimTime::from_secs_f64(at),
+                input_len: 10,
+                output_len: 1,
+            });
+        }
+        t.sort();
+        let ids: Vec<u64> = t.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 9, 7], "sort must order by arrival, never renumber");
+        t.sort();
+        let again: Vec<u64> = t.requests.iter().map(|r| r.id).collect();
+        assert_eq!(again, vec![2, 9, 7], "sort must be idempotent on ids");
+    }
+
+    #[test]
+    fn concatenated_segments_keep_globally_unique_ids() {
+        // Segment-concatenated replay: splitting a trace into windows and
+        // re-sorting the concatenation must preserve the original ids.
+        let full = Trace::production(21, 2.0, 90.0);
+        let cut = SimTime::from_secs_f64(45.0);
+        let (a, b): (Vec<TraceRequest>, Vec<TraceRequest>) =
+            full.requests.iter().cloned().partition(|r| r.arrival < cut);
+        let mut glued = Trace { requests: b };
+        glued.requests.extend(a);
+        glued.sort();
+        assert_eq!(glued.requests, full.requests, "ids must survive re-sorting");
     }
 
     #[test]

@@ -84,7 +84,10 @@ fn fig13_output_identical_with_and_without_routing_index() {
     let scanned: Vec<SweepResult> = jobs
         .iter()
         .map(|job| {
-            let mut sim = ClusterSim::new(job.cfg.clone(), job.system, (*job.trace).clone());
+            let gyges::experiments::sweep::JobTrace::Full(trace) = &job.trace else {
+                panic!("fig13 jobs are materialized")
+            };
+            let mut sim = ClusterSim::new(job.cfg.clone(), job.system, (**trace).clone());
             if let Some(p) = job.policy {
                 sim = sim.with_policy(p);
             }
