@@ -37,6 +37,10 @@ use crate::config::{ClusterConfig, Policy};
 use crate::metrics::{Recorder, RunReport};
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::sim::{EngineModel, EventQueue};
+use crate::snapshot::state::{
+    DeferredSnap, EventKindSnap, EventSnap, InstanceSnap, PendingSnap, RecorderSnap, ReqSnap,
+    RunContext, SimSnapshot, SimState, TransformSnap,
+};
 use crate::transform::{estimate, Mechanism, TransformExec, TransformPlan};
 use crate::workload::{ArrivalFeed, Trace, TraceRequest, TraceSource};
 use std::collections::VecDeque;
@@ -69,6 +73,19 @@ impl SystemKind {
             SystemKind::Seesaw => "seesaw",
             SystemKind::KunServe => "kunserve",
             SystemKind::LoongServe => "loongserve",
+        }
+    }
+
+    /// Inverse of [`SystemKind::name`] (CLI + snapshot decoding).
+    pub fn by_name(s: &str) -> Option<SystemKind> {
+        match s {
+            "gyges" => Some(SystemKind::Gyges),
+            "gyges-" => Some(SystemKind::GygesNoOverlap),
+            "basic" => Some(SystemKind::Basic),
+            "seesaw" => Some(SystemKind::Seesaw),
+            "kunserve" => Some(SystemKind::KunServe),
+            "loongserve" => Some(SystemKind::LoongServe),
+            _ => None,
         }
     }
 
@@ -267,6 +284,21 @@ pub struct ClusterSim {
     /// Reused per-decode-step id buffers (allocation-free event loop).
     scratch_stepped: Vec<u64>,
     scratch_finished: Vec<u64>,
+    /// Terminal failure of this run, set by the loop (event cap). A
+    /// field rather than a `run`-local so a paused run ([`ClusterSim::
+    /// run_until`]) carries it to [`ClusterSim::finish`].
+    error: Option<SimError>,
+}
+
+/// How [`ClusterSim::run_until`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    /// Nothing left to process (or the run hit a terminal error) — call
+    /// [`ClusterSim::finish`] for the outcome.
+    Done,
+    /// The next event/arrival lies at or beyond the stop time; the
+    /// simulation is between events and can be snapshotted or resumed.
+    Paused,
 }
 
 impl ClusterSim {
@@ -332,6 +364,7 @@ impl ClusterSim {
             backlog_wakeup_scheduled: false,
             scratch_stepped: Vec::new(),
             scratch_finished: Vec::new(),
+            error: None,
         }
     }
 
@@ -431,19 +464,47 @@ impl ClusterSim {
     /// of how the feed segments the trace — streamed replay is
     /// byte-identical to whole-trace replay by construction.
     pub fn run(mut self) -> SimOutcome {
+        let _ = self.run_until(None);
+        self.finish()
+    }
+
+    /// Drive the loop until nothing remains ([`RunStatus::Done`]) or the
+    /// next event/arrival would be at or beyond `stop_at`
+    /// ([`RunStatus::Paused`]). A paused simulation sits *between*
+    /// events — the next thing it would process carries a timestamp
+    /// `>= stop_at` — which is exactly the boundary [`ClusterSim::
+    /// snapshot`] captures: every decision the loop makes is a pure
+    /// function of the state serialized there, so resuming is
+    /// indistinguishable from never having paused. Re-invoking after
+    /// `Done` is a no-op (a terminal error stays terminal).
+    pub fn run_until(&mut self, stop_at: Option<SimTime>) -> RunStatus {
         let cap = self.cfg.max_events.max(1);
-        let mut error = None;
+        if self.error.is_some() {
+            return RunStatus::Done;
+        }
         loop {
-            let take_arrival = match (self.feed.peek_time(), self.queue.peek_time()) {
-                (None, None) => break,
+            let next_arrival = self.feed.peek_time();
+            let next_event = self.queue.peek_time();
+            let take_arrival = match (next_arrival, next_event) {
+                (None, None) => return RunStatus::Done,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
                 (Some(a), Some(e)) => a <= e,
             };
+            if let Some(stop) = stop_at {
+                let next = if take_arrival {
+                    next_arrival.expect("arrival peeked")
+                } else {
+                    next_event.expect("event peeked")
+                };
+                if next >= stop {
+                    return RunStatus::Paused;
+                }
+            }
             if self.counters.events >= cap {
                 let pending = self.queue.len() as u64 + u64::from(take_arrival);
-                error = Some(SimError::EventCapExceeded { cap, pending_events: pending });
-                break;
+                self.error = Some(SimError::EventCapExceeded { cap, pending_events: pending });
+                return RunStatus::Done;
             }
             self.counters.events += 1;
             if take_arrival {
@@ -484,6 +545,13 @@ impl ClusterSim {
                 }
             }
         }
+    }
+
+    /// Summarize a finished (or cut) run. Call after [`ClusterSim::
+    /// run_until`] returned [`RunStatus::Done`]; calling it on a merely
+    /// paused run summarizes the partial timeline.
+    pub fn finish(self) -> SimOutcome {
+        let mut error = self.error;
         // A trace-source failure outranks an event-cap cut: the cap may
         // itself be downstream of the truncated/corrupt workload, and
         // the tamper/IO diagnosis must never be masked by it.
@@ -507,6 +575,330 @@ impl ClusterSim {
             error,
             trace_peak_buffered: self.feed.peak_buffered(),
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Snapshot / resume (schema v1; see rust/src/snapshot/state.rs)
+    // -----------------------------------------------------------------
+
+    /// Simulated clock (checkpoint cadence bookkeeping).
+    pub fn sim_now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    /// Live instances with a transformation in flight (test hook for
+    /// the adversarial-instant resume coverage).
+    pub fn in_flight_transforms(&self) -> usize {
+        self.instances.iter().filter(|i| !i.retired && i.transforming.is_some()).count()
+    }
+
+    /// Deferred requests currently parked.
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    /// Deadline before which no backlog drain pass runs (ZERO = no
+    /// cooldown armed).
+    pub fn backlog_cooldown_deadline(&self) -> SimTime {
+        self.backlog_cooldown_until
+    }
+
+    /// Capture complete simulator state between two events (pause via
+    /// [`ClusterSim::run_until`] first). Refuses terminal and profiling
+    /// runs: an errored run has nothing to resume, and wall-clock
+    /// profile attribution is not simulation state.
+    pub fn snapshot(&self) -> Result<SimSnapshot, String> {
+        self.snapshot_with_context(None)
+    }
+
+    /// [`ClusterSim::snapshot`] with a run descriptor attached for the
+    /// resume/branch CLIs.
+    pub fn snapshot_with_context(
+        &self,
+        context: Option<RunContext>,
+    ) -> Result<SimSnapshot, String> {
+        if self.profiling {
+            return Err("cannot snapshot a profiling run: wall-clock attribution is not \
+                        resumable state"
+                .into());
+        }
+        if let Some(e) = &self.error {
+            return Err(format!("cannot snapshot a terminated run: {e}"));
+        }
+        let req_snap = |r: &ActiveRequest| ReqSnap {
+            id: r.id,
+            arrival: r.arrival,
+            input_len: r.input_len,
+            output_len: r.output_len,
+            generated: r.generated,
+            phase: r.phase.name().to_string(),
+        };
+        let events = self
+            .queue
+            .entries()
+            .into_iter()
+            .map(|(at, seq, ev)| EventSnap {
+                at,
+                seq,
+                kind: match ev {
+                    Event::Step(iid, epoch) => EventKindSnap::Step { iid: *iid, epoch: *epoch },
+                    Event::TransformDone(iid, epoch) => {
+                        EventKindSnap::TransformDone { iid: *iid, epoch: *epoch }
+                    }
+                    Event::BacklogWakeup => EventKindSnap::BacklogWakeup,
+                },
+            })
+            .collect();
+        let instances = self
+            .instances
+            .iter()
+            .map(|i| InstanceSnap {
+                id: i.id,
+                host: i.host,
+                workers: i.workers.clone(),
+                degree: i.degree,
+                kind: i.kind.name().to_string(),
+                running: i.running.iter().map(req_snap).collect(),
+                prefill: i.prefill_queue.iter().map(req_snap).collect(),
+                kv_tokens: i.kv_tokens,
+                transforming: i.transforming.as_ref().map(|ts| TransformSnap {
+                    from_tp: ts.exec.plan.from_tp,
+                    to_tp: ts.exec.plan.to_tp,
+                    ops_per_step: ts.exec.plan.ops_per_step,
+                    mech: ts.exec.mech.name().to_string(),
+                    per_op_visible: ts.exec.per_op_visible(),
+                    step: ts.exec.step,
+                    blocked_until: ts.blocked_until,
+                }),
+                last_transform: i.last_transform,
+                stepping: i.stepping,
+                retired: i.retired,
+            })
+            .collect();
+        let pending = self
+            .pending
+            .iter()
+            .map(|p| match p {
+                None => PendingSnap::None,
+                Some(Pending::Prefill { req_id }) => PendingSnap::Prefill { req_id: *req_id },
+                Some(Pending::Decode) => PendingSnap::Decode,
+                Some(Pending::Maintenance) => PendingSnap::Maintenance,
+            })
+            .collect();
+        let backlog = self
+            .backlog
+            .iter()
+            .map(|d| DeferredSnap { req: req_snap(&d.req), since: d.since })
+            .collect();
+        let recorder = RecorderSnap {
+            rows: self.recorder.records().map(|(id, r)| (id, r.clone())).collect(),
+            tps_buckets: self.recorder.tps_buckets().to_vec(),
+            horizon: self.recorder.horizon,
+        };
+        Ok(SimSnapshot {
+            system: self.system.name().to_string(),
+            config_fingerprint: crate::snapshot::state::config_fingerprint(&self.cfg),
+            sim_time: self.queue.now(),
+            context,
+            state: SimState {
+                queue_seq: self.queue.seq(),
+                events,
+                instances,
+                epochs: self.epochs.clone(),
+                pending,
+                dwell_check_scheduled: self.dwell_check_scheduled.clone(),
+                backlog,
+                counters: self.counters,
+                policy: self.policy.snapshot_state(),
+                transformation_disabled: self.transformation_disabled,
+                use_routing_index: self.use_routing_index,
+                backlog_cooldown_until: self.backlog_cooldown_until,
+                backlog_wakeup_scheduled: self.backlog_wakeup_scheduled,
+                recorder,
+                feed: self.feed.snapshot()?,
+            },
+        })
+    }
+
+    /// Rebuild a paused simulation from a snapshot. `cfg` must be the
+    /// exact configuration the snapshotting process ran under (proven
+    /// by the embedded fingerprint); derived routing indices are
+    /// rebuilt from the restored instance table and re-checked against
+    /// it in debug builds. Continuing the restored simulation is
+    /// byte-identical to never having paused (enforced by
+    /// `rust/tests/snapshot.rs`).
+    pub fn from_snapshot(cfg: ClusterConfig, snap: &SimSnapshot) -> Result<ClusterSim, String> {
+        let fp = crate::snapshot::state::config_fingerprint(&cfg);
+        if fp != snap.config_fingerprint {
+            return Err(format!(
+                "config fingerprint {fp} does not match the snapshot's {} — resume with the \
+                 exact configuration the run was started with",
+                snap.config_fingerprint
+            ));
+        }
+        let system = SystemKind::by_name(&snap.system)
+            .ok_or_else(|| format!("unknown system {:?} in snapshot", snap.system))?;
+        let s = &snap.state;
+        let n = s.instances.len();
+        if s.epochs.len() != n || s.pending.len() != n || s.dwell_check_scheduled.len() != n {
+            return Err(format!(
+                "snapshot inconsistency: {n} instances but {} epochs / {} pending / {} dwell \
+                 flags",
+                s.epochs.len(),
+                s.pending.len(),
+                s.dwell_check_scheduled.len()
+            ));
+        }
+        let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
+        let req_back = |r: &ReqSnap| -> Result<ActiveRequest, String> {
+            Ok(ActiveRequest {
+                id: r.id,
+                arrival: r.arrival,
+                input_len: r.input_len,
+                output_len: r.output_len,
+                generated: r.generated,
+                phase: super::request::Phase::by_name(&r.phase)
+                    .ok_or_else(|| format!("unknown request phase {:?}", r.phase))?,
+            })
+        };
+        let mut instances = Vec::with_capacity(n);
+        for (idx, i) in s.instances.iter().enumerate() {
+            if i.id != idx {
+                return Err(format!(
+                    "snapshot inconsistency: instance at slot {idx} declares id {}",
+                    i.id
+                ));
+            }
+            let transforming = match &i.transforming {
+                None => None,
+                Some(t) => {
+                    if t.ops_per_step < 2 || t.ops_per_step % 2 != 0 {
+                        return Err(format!(
+                            "instance {idx}: transform ops_per_step {} is not an even \
+                             positive count",
+                            t.ops_per_step
+                        ));
+                    }
+                    if t.from_tp == t.to_tp {
+                        return Err(format!(
+                            "instance {idx}: transform endpoints are equal (tp {})",
+                            t.from_tp
+                        ));
+                    }
+                    let mech = Mechanism::by_name(&t.mech)
+                        .ok_or_else(|| format!("unknown transform mechanism {:?}", t.mech))?;
+                    let plan =
+                        TransformPlan::build(&cfg.model, t.from_tp, t.to_tp, t.ops_per_step / 2);
+                    Some(TransformState {
+                        exec: TransformExec::from_parts(plan, mech, t.per_op_visible, t.step),
+                        blocked_until: t.blocked_until,
+                    })
+                }
+            };
+            let running = i
+                .running
+                .iter()
+                .map(req_back)
+                .collect::<Result<VecDeque<ActiveRequest>, String>>()?;
+            let prefill = i
+                .prefill
+                .iter()
+                .map(req_back)
+                .collect::<Result<VecDeque<ActiveRequest>, String>>()?;
+            let kind = super::instance::ParallelKind::by_name(&i.kind)
+                .ok_or_else(|| format!("unknown parallel kind {:?}", i.kind))?;
+            let inst = Instance::restore(
+                i.id,
+                i.host,
+                i.workers.clone(),
+                i.degree,
+                kind,
+                running,
+                prefill,
+                i.kv_tokens,
+                transforming,
+                i.last_transform,
+                i.stepping,
+                i.retired,
+            );
+            inst.debug_assert_consistent();
+            instances.push(inst);
+        }
+        let mut entries = Vec::with_capacity(s.events.len());
+        for e in &s.events {
+            let ev = match e.kind {
+                EventKindSnap::Step { iid, epoch } => {
+                    if iid >= n {
+                        return Err(format!("event references unknown instance {iid}"));
+                    }
+                    Event::Step(iid, epoch)
+                }
+                EventKindSnap::TransformDone { iid, epoch } => {
+                    if iid >= n {
+                        return Err(format!("event references unknown instance {iid}"));
+                    }
+                    Event::TransformDone(iid, epoch)
+                }
+                EventKindSnap::BacklogWakeup => Event::BacklogWakeup,
+            };
+            entries.push((e.at, e.seq, ev));
+        }
+        let queue = EventQueue::restore(snap.sim_time, s.queue_seq, entries)?;
+        let mut backlog = VecDeque::with_capacity(s.backlog.len());
+        for d in &s.backlog {
+            backlog.push_back(Deferred { req: req_back(&d.req)?, since: d.since });
+        }
+        let tp1_index = HostIndex::build(&instances, cfg.hosts);
+        let load_index = LoadIndex::build(&instances, &engine);
+        if s.use_routing_index {
+            // The rebuild IS the full rescan the end-of-run check
+            // compares against; re-verify here so a restore in a debug
+            // build proves the invariant at the resume boundary too.
+            #[cfg(debug_assertions)]
+            {
+                tp1_index.debug_verify(&instances);
+                load_index.debug_verify(&instances, &engine);
+            }
+        }
+        Ok(ClusterSim {
+            cfg,
+            engine,
+            system,
+            instances,
+            epochs: s.epochs.clone(),
+            pending: s
+                .pending
+                .iter()
+                .map(|p| match p {
+                    PendingSnap::None => None,
+                    PendingSnap::Prefill { req_id } => Some(Pending::Prefill { req_id: *req_id }),
+                    PendingSnap::Decode => Some(Pending::Decode),
+                    PendingSnap::Maintenance => Some(Pending::Maintenance),
+                })
+                .collect(),
+            queue,
+            feed: ArrivalFeed::restore(s.feed.clone())?,
+            policy: s.policy.restore(),
+            backlog,
+            recorder: Recorder::restore(
+                s.recorder.rows.clone(),
+                s.recorder.tps_buckets.clone(),
+                s.recorder.horizon,
+            ),
+            counters: s.counters,
+            transformation_disabled: s.transformation_disabled,
+            dwell_check_scheduled: s.dwell_check_scheduled.clone(),
+            tp1_index,
+            load_index,
+            use_routing_index: s.use_routing_index,
+            profiling: false,
+            profile: SimProfile::default(),
+            backlog_cooldown_until: s.backlog_cooldown_until,
+            backlog_wakeup_scheduled: s.backlog_wakeup_scheduled,
+            scratch_stepped: Vec::new(),
+            scratch_finished: Vec::new(),
+            error: None,
+        })
     }
 
     // -----------------------------------------------------------------

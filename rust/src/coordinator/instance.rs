@@ -32,6 +32,26 @@ pub enum ParallelKind {
     Sp,
 }
 
+impl ParallelKind {
+    /// Stable identifier used by snapshots.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParallelKind::Tp => "tp",
+            ParallelKind::Pp => "pp",
+            ParallelKind::Sp => "sp",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<ParallelKind> {
+        match s {
+            "tp" => Some(ParallelKind::Tp),
+            "pp" => Some(ParallelKind::Pp),
+            "sp" => Some(ParallelKind::Sp),
+            _ => None,
+        }
+    }
+}
+
 /// An in-flight transformation on an instance.
 #[derive(Debug)]
 pub struct TransformState {
@@ -88,6 +108,50 @@ impl Instance {
             last_transform: SimTime::ZERO,
             stepping: false,
             retired: false,
+        }
+    }
+
+    /// Rebuild an instance from snapshot parts. The incremental
+    /// committed/context aggregates are recomputed from the queues —
+    /// they are *defined* as those sums, so recomputation (not blind
+    /// restoration) is what keeps a tampered snapshot from silently
+    /// desynchronizing the O(1) hot paths.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        id: usize,
+        host: usize,
+        workers: Vec<usize>,
+        degree: u64,
+        kind: ParallelKind,
+        running: VecDeque<ActiveRequest>,
+        prefill_queue: VecDeque<ActiveRequest>,
+        kv_tokens: u64,
+        transforming: Option<TransformState>,
+        last_transform: SimTime,
+        stepping: bool,
+        retired: bool,
+    ) -> Instance {
+        let committed_tokens = running
+            .iter()
+            .chain(prefill_queue.iter())
+            .map(|r| r.final_len())
+            .sum();
+        let ctx_tokens = running.iter().map(|r| r.context_len()).sum();
+        Instance {
+            id,
+            host,
+            workers,
+            degree,
+            kind,
+            running,
+            prefill_queue,
+            kv_tokens,
+            committed_tokens,
+            ctx_tokens,
+            transforming,
+            last_transform,
+            stepping,
+            retired,
         }
     }
 

@@ -12,8 +12,9 @@ pub use cluster::{
 };
 pub use instance::{Instance, ParallelKind, StepKind, TransformState};
 pub use request::{ActiveRequest, Phase};
+pub use cluster::RunStatus;
 pub use scheduler::{
     default_scale_down, make_policy, needed_tp, pick_merge_group, pick_merge_group_into,
-    ClusterView, GygesPolicy, HIGH_TP_SHORT_PENALTY, HostIndex, LeastLoadPolicy, LoadIndex, Route,
-    RoundRobinPolicy, RoutePolicy,
+    ClusterView, GygesPolicy, HIGH_TP_SHORT_PENALTY, HostIndex, LeastLoadPolicy, LoadIndex,
+    PolicyState, Route, RoundRobinPolicy, RoutePolicy,
 };

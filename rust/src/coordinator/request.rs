@@ -15,6 +15,28 @@ pub enum Phase {
     Finished,
 }
 
+impl Phase {
+    /// Stable identifier used by snapshots.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Finished => "finished",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Phase> {
+        match s {
+            "queued" => Some(Phase::Queued),
+            "prefill" => Some(Phase::Prefill),
+            "decode" => Some(Phase::Decode),
+            "finished" => Some(Phase::Finished),
+            _ => None,
+        }
+    }
+}
+
 /// A request being served.
 #[derive(Clone, Debug)]
 pub struct ActiveRequest {

@@ -561,6 +561,48 @@ pub trait RoutePolicy: Send {
     fn should_scale_down(&mut self, inst: &Instance, view: &ClusterView<'_>) -> bool {
         default_scale_down(inst, view)
     }
+    /// The policy's persistent decision state, for snapshots. Scratch
+    /// buffers are excluded — only what a future `route` /
+    /// `should_scale_down` call can observe.
+    fn snapshot_state(&self) -> PolicyState;
+}
+
+/// Serializable routing-policy state (snapshot schema v1): which policy
+/// is installed plus every field a future decision can depend on.
+/// Restoring through [`PolicyState::restore`] reproduces decisions
+/// byte-identically — scratch buffers never affect decisions and are
+/// rebuilt empty.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyState {
+    Gyges {
+        reserved: Vec<usize>,
+        reserve_cap: f64,
+        last_long_seen: Option<SimTime>,
+        long_hold_s: f64,
+    },
+    RoundRobin { cursor: usize },
+    LeastLoad,
+}
+
+impl PolicyState {
+    /// Rebuild the boxed policy this state describes.
+    pub fn restore(&self) -> Box<dyn RoutePolicy> {
+        match self {
+            PolicyState::Gyges { reserved, reserve_cap, last_long_seen, long_hold_s } => {
+                Box::new(GygesPolicy {
+                    reserved: reserved.clone(),
+                    reserve_cap: *reserve_cap,
+                    last_long_seen: *last_long_seen,
+                    long_hold_s: *long_hold_s,
+                    scratch: Vec::new(),
+                })
+            }
+            PolicyState::RoundRobin { cursor } => {
+                Box::new(RoundRobinPolicy { cursor: *cursor, scratch: Vec::new() })
+            }
+            PolicyState::LeastLoad => Box::new(LeastLoadPolicy),
+        }
+    }
 }
 
 /// Algorithm 2's safety conditions: TP>1, no long request in flight, load
@@ -697,6 +739,15 @@ impl RoutePolicy for GygesPolicy {
             }
         }
         default_scale_down(inst, view)
+    }
+
+    fn snapshot_state(&self) -> PolicyState {
+        PolicyState::Gyges {
+            reserved: self.reserved.clone(),
+            reserve_cap: self.reserve_cap,
+            last_long_seen: self.last_long_seen,
+            long_hold_s: self.long_hold_s,
+        }
     }
 
     fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
@@ -842,6 +893,10 @@ impl RoutePolicy for RoundRobinPolicy {
         self.scratch = live;
         route
     }
+
+    fn snapshot_state(&self) -> PolicyState {
+        PolicyState::RoundRobin { cursor: self.cursor }
+    }
 }
 
 impl RoundRobinPolicy {
@@ -922,6 +977,10 @@ impl RoutePolicy for LeastLoadPolicy {
             }
         }
         Route::Defer
+    }
+
+    fn snapshot_state(&self) -> PolicyState {
+        PolicyState::LeastLoad
     }
 }
 

@@ -1,0 +1,373 @@
+//! Counterfactual branch explorer: `gyges branch`.
+//!
+//! Forks ONE simulation snapshot — a warm cluster mid-trace, with its
+//! in-flight transforms, backlog, and queue state intact — under K
+//! policy variants, runs every branch to completion through the PR 1
+//! parallel driver pattern (work-stealing threads, fixed-order merge),
+//! and reports per-branch divergence (throughput / p99 TTFT / transform
+//! count deltas) against the *parent timeline* (the unmodified
+//! continuation of the snapshot). This is the head-to-head framing the
+//! paper's transform-vs-queue claims need: every policy decides from
+//! the SAME warm state, which no cold-start comparison can produce —
+//! a cold start lets each policy shape its own cluster long before the
+//! interesting decision point.
+//!
+//! Determinism: each branch is a pure function of (snapshot, variant),
+//! so repeated explorations produce byte-identical reports (enforced by
+//! `rust/tests/snapshot.rs`).
+
+use super::sweep::{outcome_to_result, sweep_threads, SweepResult};
+use super::{named_sweep_jobs, NAMED_SWEEPS};
+use crate::config::Policy;
+use crate::coordinator::{ClusterSim, PolicyState};
+use crate::experiments::launch::streamed_named_jobs;
+use crate::snapshot::state::SimSnapshot;
+use crate::util::json::Json;
+use crate::util::Args;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Branch-report schema version.
+pub const BRANCH_SCHEMA_VERSION: u64 = 1;
+
+/// One counterfactual to fork from the snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BranchKind {
+    /// The unmodified continuation — the reference timeline.
+    Parent,
+    /// Swap in a fresh baseline routing policy (its internal state —
+    /// RR cursor, hysteresis stamp — starts cold; the cluster does
+    /// not).
+    Policy(Policy),
+    /// Keep the Gyges policy but override its anti-oscillation hold
+    /// (the A3 grid, now from warm state).
+    GygesHold(f64),
+    /// Freeze the current topology: no further transformations (the
+    /// static-deployment baseline, §3.3, continued from warm state).
+    Static,
+}
+
+impl BranchKind {
+    pub fn name(&self) -> String {
+        match self {
+            BranchKind::Parent => "parent".into(),
+            BranchKind::Policy(p) => p.name().into(),
+            BranchKind::GygesHold(h) => format!("gyges-hold{h}"),
+            BranchKind::Static => "static".into(),
+        }
+    }
+}
+
+/// The variant list `gyges branch` runs by default (parent excluded —
+/// it is always added as the reference).
+pub fn default_branches() -> Vec<BranchKind> {
+    vec![
+        BranchKind::GygesHold(0.0),
+        BranchKind::GygesHold(120.0),
+        BranchKind::Policy(Policy::RoundRobin),
+        BranchKind::Policy(Policy::LeastLoadFirst),
+        BranchKind::Static,
+    ]
+}
+
+fn fork(
+    cfg: &crate::config::ClusterConfig,
+    snap: &SimSnapshot,
+    kind: &BranchKind,
+) -> Result<ClusterSim, String> {
+    match kind {
+        BranchKind::Parent => ClusterSim::from_snapshot(cfg.clone(), snap),
+        BranchKind::Policy(p) => {
+            Ok(ClusterSim::from_snapshot(cfg.clone(), snap)?.with_policy(*p))
+        }
+        BranchKind::GygesHold(h) => {
+            // Override ONLY the hold knob inside the restored policy
+            // state: the warm reserve list and hysteresis stamp carry
+            // over, so the branch measures the knob, not a
+            // policy-state reset. (`set_gyges_hold` would rebuild the
+            // policy cold — the A3 cold-start path, wrong here.) On a
+            // non-Gyges snapshot the knob has no meaning and the
+            // branch degenerates to the parent timeline.
+            let mut warm = snap.clone();
+            if let PolicyState::Gyges { long_hold_s, .. } = &mut warm.state.policy {
+                *long_hold_s = *h;
+            }
+            ClusterSim::from_snapshot(cfg.clone(), &warm)
+        }
+        BranchKind::Static => {
+            let mut sim = ClusterSim::from_snapshot(cfg.clone(), snap)?;
+            sim.disable_transformation();
+            Ok(sim)
+        }
+    }
+}
+
+fn transforms(r: &SweepResult) -> u64 {
+    r.counters.scale_ups + r.counters.scale_downs
+}
+
+/// Fork `snap` under `[parent] + branches`, run all to completion in
+/// parallel, and build the divergence report. The returned JSON is
+/// canonical (sorted object keys, fixed branch order), so identical
+/// inputs produce identical bytes.
+pub fn explore(
+    cfg: &crate::config::ClusterConfig,
+    snap: &SimSnapshot,
+    branches: &[BranchKind],
+    threads: usize,
+) -> Result<Json, String> {
+    if branches.is_empty() {
+        return Err("branch: no variants to explore".into());
+    }
+    let mut kinds: Vec<BranchKind> = Vec::with_capacity(branches.len() + 1);
+    kinds.push(BranchKind::Parent);
+    kinds.extend_from_slice(branches);
+    // Fork first (serially — from_snapshot is cheap), then run the
+    // branches with the PR 1 work-stealing pattern and merge results in
+    // fixed branch order, so the report is deterministic regardless of
+    // which branch finishes first.
+    let mut sims = Vec::with_capacity(kinds.len());
+    for kind in &kinds {
+        sims.push(Some(fork(cfg, snap, kind)?));
+    }
+    let sims: Vec<Mutex<Option<ClusterSim>>> = sims.into_iter().map(Mutex::new).collect();
+    let slots: Vec<Mutex<Option<SweepResult>>> = kinds.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.clamp(1, kinds.len());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= kinds.len() {
+                    break;
+                }
+                let sim = sims[i].lock().unwrap().take().expect("each branch forks once");
+                let result = outcome_to_result(&kinds[i].name(), sim.run());
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    let results: Vec<SweepResult> = slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every claimed branch stores a result"))
+        .collect();
+    let parent = &results[0];
+
+    let mut branch_rows = Vec::new();
+    for (kind, r) in kinds.iter().zip(&results).skip(1) {
+        let mut delta = Json::obj();
+        delta
+            .set("throughput_tps", r.report.throughput_tps - parent.report.throughput_tps)
+            .set("ttft_p99_s", r.report.ttft_p99_s - parent.report.ttft_p99_s)
+            .set("tpot_p50_s", r.report.tpot_p50_s - parent.report.tpot_p50_s)
+            .set(
+                "transforms",
+                transforms(r) as i64 - transforms(parent) as i64,
+            )
+            .set("completed", r.report.completed as i64 - parent.report.completed as i64);
+        let mut row = Json::obj();
+        row.set("name", kind.name().as_str())
+            .set("row", r.to_json())
+            .set("delta_vs_parent", delta);
+        branch_rows.push(row);
+    }
+    let context = match &snap.context {
+        None => Json::Null,
+        Some(c) => {
+            let mut o = Json::obj();
+            o.set("sweep", c.sweep.as_str())
+                .set("horizon_s", c.horizon_s)
+                .set("job_index", c.job_index)
+                .set("key", c.key.as_str());
+            o
+        }
+    };
+    let mut report = Json::obj();
+    report
+        .set("schema_version", BRANCH_SCHEMA_VERSION)
+        .set("kind", "branch-report")
+        .set("forked_at_s", snap.sim_time.as_secs_f64())
+        .set("context", context)
+        .set("parent", parent.to_json())
+        .set("branches", Json::Arr(branch_rows));
+    Ok(report)
+}
+
+/// Render the report as the human table `gyges branch` prints.
+pub fn print_report(report: &Json) {
+    let mut t = crate::util::Table::new([
+        "branch", "tput (tps)", "Δ tput", "ttft p99", "Δ p99", "transforms", "Δ",
+    ]);
+    let row_of = |r: &Json| -> (f64, f64, u64) {
+        let rep = r.get("report");
+        let get = |k: &str| rep.and_then(|x| x.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let counters = r.get("counters");
+        let cnt = |k: &str| {
+            counters.and_then(|x| x.get(k)).and_then(|v| v.as_u64()).unwrap_or(0)
+        };
+        (get("throughput_tps"), get("ttft_p99_s"), cnt("scale_ups") + cnt("scale_downs"))
+    };
+    if let Some(parent) = report.get("parent") {
+        let (tput, p99, tr) = row_of(parent);
+        t.row([
+            "parent".to_string(),
+            format!("{tput:.1}"),
+            "-".into(),
+            format!("{p99:.2}s"),
+            "-".into(),
+            format!("{tr}"),
+            "-".into(),
+        ]);
+    }
+    for b in report.get("branches").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let name = b.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+        let Some(row) = b.get("row") else { continue };
+        let (tput, p99, tr) = row_of(row);
+        let delta = b.get("delta_vs_parent");
+        let d = |k: &str| delta.and_then(|x| x.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        t.row([
+            name.to_string(),
+            format!("{tput:.1}"),
+            format!("{:+.1}", d("throughput_tps")),
+            format!("{p99:.2}s"),
+            format!("{:+.2}s", d("ttft_p99_s")),
+            format!("{tr}"),
+            format!("{:+.0}", d("transforms")),
+        ]);
+    }
+    t.print();
+}
+
+/// `gyges branch --snapshot FILE ...` — fork one checkpoint under
+/// policy variants and write/print the divergence report. The snapshot
+/// must carry a run context (the CLI runner always attaches one): the
+/// job's configuration is rebuilt from the sweep registry and proven
+/// against the embedded fingerprint.
+pub fn branch_cli(args: &Args) -> i32 {
+    let Some(path) = args.get("snapshot") else {
+        eprintln!(
+            "usage: gyges branch --snapshot FILE [--holds CSV] [--policies CSV] [--no-static] \
+             [--out FILE] [--threads N]"
+        );
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("branch: read {path}: {e}");
+            return 1;
+        }
+    };
+    let snap = match SimSnapshot::parse(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("branch: {path}: {e}");
+            return 1;
+        }
+    };
+    let Some(ctx) = snap.context.clone() else {
+        eprintln!("branch: {path}: snapshot lacks a run context (captured outside the runner)");
+        return 1;
+    };
+    let jobs = match &ctx.stream_dir {
+        Some(root) => match streamed_named_jobs(&ctx.sweep, ctx.horizon_s, Path::new(root)) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("branch: {e}");
+                return 1;
+            }
+        },
+        None => match named_sweep_jobs(&ctx.sweep, ctx.horizon_s) {
+            Some(j) => j,
+            None => {
+                eprintln!(
+                    "branch: unknown sweep {:?} (known: {})",
+                    ctx.sweep,
+                    NAMED_SWEEPS.join(", ")
+                );
+                return 1;
+            }
+        },
+    };
+    let Some(job) = jobs.get(ctx.job_index) else {
+        eprintln!(
+            "branch: snapshot says job {} but {} has only {} jobs",
+            ctx.job_index,
+            ctx.sweep,
+            jobs.len()
+        );
+        return 1;
+    };
+    // Build the variant list.
+    let mut branches = Vec::new();
+    match (args.get("holds"), args.get("policies"), args.flag("no-static")) {
+        (None, None, false) => branches = default_branches(),
+        (holds, policies, no_static) => {
+            if let Some(csv) = holds {
+                for part in csv.split(',').filter(|s| !s.trim().is_empty()) {
+                    match part.trim().parse::<f64>() {
+                        Ok(h) if h.is_finite() && h >= 0.0 => {
+                            branches.push(BranchKind::GygesHold(h))
+                        }
+                        _ => {
+                            eprintln!("branch: --holds entry {part:?} is not a valid hold");
+                            return 2;
+                        }
+                    }
+                }
+            }
+            if let Some(csv) = policies {
+                for part in csv.split(',').filter(|s| !s.trim().is_empty()) {
+                    match Policy::by_name(part.trim()) {
+                        Some(p) => branches.push(BranchKind::Policy(p)),
+                        None => {
+                            eprintln!("branch: unknown policy {part:?}");
+                            return 2;
+                        }
+                    }
+                }
+            }
+            if !no_static {
+                branches.push(BranchKind::Static);
+            }
+        }
+    }
+    // Strict parse: a typo'd count must not silently become the default
+    // (the PR 4 `parsed_strict` rule for every numeric CLI flag).
+    let threads = match args.parsed_strict("threads", sweep_threads()) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("branch: {e}");
+            return 2;
+        }
+    };
+    let report = match explore(&job.cfg, &snap, &branches, threads) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("branch: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "forked {}[{}] ({}) at sim-time {:.3}s into {} branches + parent:",
+        ctx.sweep,
+        ctx.job_index,
+        ctx.key,
+        snap.sim_time.as_secs_f64(),
+        branches.len()
+    );
+    print_report(&report);
+    let out = args.get_or("out", "target/branch-report.json");
+    if let Some(parent) = Path::new(&out).parent() {
+        if !parent.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+    }
+    if let Err(e) = std::fs::write(&out, format!("{report}\n")) {
+        eprintln!("branch: write {out}: {e}");
+        return 1;
+    }
+    println!("report → {out}");
+    0
+}

@@ -342,7 +342,7 @@ pub fn trace_gen_cli(args: &Args) -> i32 {
     let Some(what) = args.positional.get(1).map(|s| s.as_str()) else {
         eprintln!(
             "usage: gyges trace-gen <{}|production> [--horizon S] [--segment-s S] \
-             [--out-dir DIR] [--resume-from K] [--qps Q --seed N]",
+             [--out-dir DIR] [--resume-from K] [--qps Q --seed N --bursty]",
             NAMED_SWEEPS.join("|")
         );
         return 2;
@@ -372,7 +372,11 @@ pub fn trace_gen_cli(args: &Args) -> i32 {
         return 2;
     }
     if what == "production" {
-        let spec = ProductionStream { seed, qps, segment_s, horizon_s: horizon };
+        // --bursty overlays the Figure-2b long-request process (phase
+        // boundaries derived from the seed, so resume-from-any-index
+        // still holds — see `workload::LongBursts`).
+        let longs = args.flag("bursty").then(crate::workload::LongBursts::paper);
+        let spec = ProductionStream { seed, qps, segment_s, horizon_s: horizon, longs };
         if !spec.qps.is_finite() || spec.qps <= 0.0 {
             // A zero rate would trip Prng::exp's assert deep in
             // generation; an infinite one would spin forever.

@@ -14,6 +14,7 @@
 //! sweep-launch` fans streamed shard jobs over them (O(segment) trace
 //! memory per worker) before merging with the same machinery.
 
+pub mod branch;
 pub mod launch;
 pub mod shard;
 pub mod sweep;

@@ -76,6 +76,21 @@ impl JobTrace {
                 {
                     bytes.extend_from_slice(&v.to_le_bytes());
                 }
+                // The Figure-2b bursty overlay is part of the workload
+                // identity; plain streams keep their historical hash
+                // (no trailing discriminant byte was ever emitted).
+                if let Some(l) = &s.longs {
+                    bytes.push(0x03);
+                    for v in [
+                        l.quiet_rate.to_bits(),
+                        l.burst_rate.to_bits(),
+                        l.quiet_mean_s.to_bits(),
+                        l.burst_mean_s.to_bits(),
+                        l.input_len,
+                    ] {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
             }
         }
     }
@@ -192,7 +207,10 @@ impl SweepResult {
     }
 }
 
-fn run_job(job: &SweepJob) -> SweepResult {
+/// Build the simulator one job describes, policy/hold applied — shared
+/// by the driver below, the checkpointed snapshot runner, and the
+/// branch explorer (all three must construct the byte-identical sim).
+pub fn build_job_sim(job: &SweepJob) -> ClusterSim {
     let mut sim = match &job.trace {
         JobTrace::Full(t) => ClusterSim::new(job.cfg.clone(), job.system, (**t).clone()),
         JobTrace::Chunked { trace, segment_s } => ClusterSim::with_source(
@@ -217,14 +235,22 @@ fn run_job(job: &SweepJob) -> SweepResult {
     if let Some(hold) = job.gyges_hold {
         sim.set_gyges_hold(hold);
     }
-    let out = sim.run();
+    sim
+}
+
+/// Fold a finished simulation into the portable per-job row.
+pub fn outcome_to_result(key: &str, out: crate::coordinator::SimOutcome) -> SweepResult {
     SweepResult {
-        key: job.key.clone(),
+        key: key.to_string(),
         tps_series: out.recorder.tps_series(),
         report: out.report,
         counters: out.counters,
         error: out.error.map(|e| e.to_string()),
     }
+}
+
+fn run_job(job: &SweepJob) -> SweepResult {
+    outcome_to_result(&job.key, build_job_sim(job).run())
 }
 
 /// Worker count: `GYGES_SWEEP_THREADS` override, else hardware threads.

@@ -32,6 +32,7 @@ pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod serve;
 pub mod sim;
+pub mod snapshot;
 pub mod util;
 
 pub use config::{ClusterConfig, GpuSpec, ModelConfig, Policy};

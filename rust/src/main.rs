@@ -16,9 +16,16 @@
 //!                     [--expect-horizon SECS]
 //!   gyges trace-gen   <sweep|production> [--horizon SECS] [--segment-s S]
 //!                     [--out-dir DIR] [--resume-from K] [--qps Q] [--seed N]
+//!                     [--bursty]
 //!   gyges sweep-launch <sweep> [--horizon SECS] [--segment-s S]
 //!                     [--shards N] [--trace-dir DIR] [--out-dir DIR]
 //!                     [--out FILE] [--procs J] [--in-process]
+//!   gyges snapshot    <sweep> [--horizon SECS] [--every SIM_SECS]
+//!                     [--dir DIR] [--out FILE] [--stream-dir DIR]
+//!                     [--stop-after K]   (exit 3 = paused deliberately)
+//!   gyges resume      --dir DIR [--stop-after K]
+//!   gyges branch      --snapshot FILE [--holds CSV] [--policies CSV]
+//!                     [--no-static] [--out FILE] [--threads N]
 //!   gyges bench-gate  [--baseline FILE] [--fresh FILE] [--max-regress F]
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
@@ -38,11 +45,14 @@ fn main() {
         Some("sweep-merge") => cmd_sweep_merge(&args),
         Some("trace-gen") => gyges::experiments::launch::trace_gen_cli(&args),
         Some("sweep-launch") => gyges::experiments::launch::sweep_launch_cli(&args),
+        Some("snapshot") => gyges::snapshot::runner::snapshot_cli(&args),
+        Some("resume") => gyges::snapshot::runner::resume_cli(&args),
+        Some("branch") => gyges::experiments::branch::branch_cli(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             eprintln!(
                 "usage: gyges <info|serve|serve-real|repro|sweep-shard|sweep-merge|trace-gen|\
-                 sweep-launch|bench-gate> [options]  (see rust/src/main.rs)"
+                 sweep-launch|snapshot|resume|branch|bench-gate> [options]  (see rust/src/main.rs)"
             );
             2
         }

@@ -223,6 +223,41 @@ impl Recorder {
             .map(|(s, &c)| (s as u64, c))
             .collect()
     }
+
+    /// Raw per-second token buckets (snapshot support — unlike
+    /// [`Recorder::tps_series`], zero buckets are preserved so a
+    /// restored recorder is field-identical).
+    pub fn tps_buckets(&self) -> &[u64] {
+        &self.tps_buckets
+    }
+
+    /// Rebuild a recorder from snapshot parts. The incremental totals
+    /// (`total`, `completed`, `tokens`) are recomputed from the records —
+    /// they are defined as those sums, so recomputation keeps a
+    /// hand-edited snapshot from desynchronizing the O(1) reads.
+    pub fn restore(
+        rows: Vec<(u64, RequestRecord)>,
+        tps_buckets: Vec<u64>,
+        horizon: SimTime,
+    ) -> Recorder {
+        let mut rec = Recorder {
+            records: Vec::new(),
+            total: 0,
+            completed: 0,
+            tokens: 0,
+            tps_buckets,
+            horizon,
+        };
+        for (id, row) in rows {
+            rec.total += 1;
+            if row.finished.is_some() {
+                rec.completed += 1;
+            }
+            rec.tokens += row.generated;
+            *rec.slot_mut(id) = Some(row);
+        }
+        rec
+    }
 }
 
 #[cfg(test)]

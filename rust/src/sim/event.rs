@@ -91,6 +91,49 @@ impl<E> EventQueue<E> {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Value of the internal sequence counter (snapshot support).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Every queued entry as `(time, seq, &payload)`, ascending by
+    /// `(time, seq)` — exactly the order [`EventQueue::pop`] would
+    /// deliver them. Heap iteration order is arbitrary, so this sorts a
+    /// copy of the handles; O(n log n), called only when snapshotting.
+    pub fn entries(&self) -> Vec<(SimTime, u64, &E)> {
+        let mut v: Vec<(SimTime, u64, &E)> =
+            self.heap.iter().map(|e| (e.time, e.seq, &e.payload)).collect();
+        v.sort_by_key(|&(t, s, _)| (t, s));
+        v
+    }
+
+    /// Rebuild a queue from snapshot parts. Entries keep their original
+    /// sequence numbers, so FIFO tie-breaking — and the interleaving
+    /// with post-restore pushes (which continue from `seq`) — is
+    /// identical to the never-paused queue.
+    pub fn restore(
+        now: SimTime,
+        seq: u64,
+        entries: Vec<(SimTime, u64, E)>,
+    ) -> Result<EventQueue<E>, String> {
+        let mut heap = BinaryHeap::with_capacity(entries.len());
+        for (time, s, payload) in entries {
+            if time < now {
+                return Err(format!(
+                    "event queue restore: entry at {} ns is before the clock ({} ns)",
+                    time.0, now.0
+                ));
+            }
+            if s >= seq {
+                return Err(format!(
+                    "event queue restore: entry seq {s} is not below the counter {seq}"
+                ));
+            }
+            heap.push(Entry { time, seq: s, payload });
+        }
+        Ok(EventQueue { heap, seq, now })
+    }
 }
 
 #[cfg(test)]
@@ -142,6 +185,31 @@ mod tests {
         q.push(SimTime(10), ());
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, SimTime(50));
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_pop_order_and_ties() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.push(SimTime(40), i); // equal timestamps: FIFO by seq
+        }
+        q.push(SimTime(10), 100);
+        q.push(SimTime(20), 101);
+        q.pop(); // consume the t=10 entry, clock now 10
+        let entries: Vec<(SimTime, u64, i32)> =
+            q.entries().into_iter().map(|(t, s, &p)| (t, s, p)).collect();
+        let mut restored = EventQueue::restore(q.now(), q.seq(), entries).unwrap();
+        // Future pushes interleave identically on both queues.
+        q.push(SimTime(40), 200);
+        restored.push(SimTime(40), 200);
+        let drain = |q: &mut EventQueue<i32>| -> Vec<(u64, i32)> {
+            std::iter::from_fn(|| q.pop().map(|(t, e)| (t.0, e))).collect()
+        };
+        assert_eq!(drain(&mut q), drain(&mut restored));
+        // A stale entry (before the clock) or seq at/over the counter is
+        // refused.
+        assert!(EventQueue::restore(SimTime(50), 10, vec![(SimTime(40), 3, ())]).is_err());
+        assert!(EventQueue::restore(SimTime(0), 2, vec![(SimTime(40), 2, ())]).is_err());
     }
 
     #[test]

@@ -1,0 +1,28 @@
+//! Deterministic simulation snapshot/resume.
+//!
+//! Three layers:
+//!
+//! * [`state`] — schema-v1 serialization of complete `ClusterSim` state
+//!   (FNV-1a payload hash, config fingerprint, self-describing run
+//!   context). `ClusterSim::snapshot` / `ClusterSim::from_snapshot`
+//!   produce/consume it; a resumed run is byte-identical to an
+//!   uninterrupted one because every value the event loop's next
+//!   decision can observe is restored exactly (and everything derived —
+//!   routing indices, incremental aggregates — is rebuilt from the
+//!   restored primaries and debug-checked against a full rescan).
+//! * [`runner`] — the checkpointed sweep runner behind `gyges snapshot`
+//!   / `gyges resume`: runs a named sweep's canonical job list serially,
+//!   checkpointing every N simulated seconds (kill-safe tmp+rename
+//!   writes, per-job row files with payload hashes, a run manifest that
+//!   pins the job-list fingerprint), and resumes an interrupted run
+//!   from its latest checkpoint to the exact bytes
+//!   `run_sweep_serial` + `results_to_jsonl` would have produced.
+//! * the branch explorer (`experiments::branch`) — forks one snapshot
+//!   under K policy variants from the same warm cluster state and
+//!   reports per-branch divergence against the parent timeline.
+
+pub mod runner;
+pub mod state;
+
+pub use runner::{resume_run, run_checkpointed, RunOutcome, RunPlan};
+pub use state::{RunContext, SimSnapshot, SNAPSHOT_SCHEMA_VERSION};

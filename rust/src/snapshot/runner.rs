@@ -1,0 +1,549 @@
+//! Checkpointed sweep runner: `gyges snapshot` / `gyges resume`.
+//!
+//! Runs a named sweep's canonical job list serially (the serial order is
+//! the byte-identity reference), checkpointing the in-progress job's
+//! complete simulator state every `every_s` simulated seconds. Killing
+//! the process at ANY point loses at most the work since the last
+//! checkpoint; `gyges resume` restores the newest checkpoint and
+//! finishes the run, producing output byte-identical to an
+//! uninterrupted `run_sweep_serial` + `results_to_jsonl` (the same
+//! bytes `gyges sweep-shard <sweep> --shard 0/1` writes — CI `cmp`s the
+//! two).
+//!
+//! On-disk layout under the state directory:
+//!
+//!   `snapshot-run.json`        run manifest (schema v1): sweep,
+//!                              horizon, cadence, job-list fingerprint,
+//!                              completed-job row hashes
+//!   `rows-XXXXX.jsonl`         one finished job's result row
+//!   `job-XXXXX.snapshot.json`  newest checkpoint of the in-progress
+//!                              job (tmp+rename, so a kill mid-write
+//!                              leaves the previous checkpoint valid)
+//!
+//! `--stop-after K` exits with a distinct status after writing K
+//! checkpoints — the deliberate-kill hook the CI `snapshot-verify` job
+//! uses, and the stage budget that splits an hour-horizon run across
+//! chained CI jobs.
+
+use crate::coordinator::{ClusterSim, RunStatus};
+use crate::experiments::launch::streamed_named_jobs;
+use crate::experiments::shard::job_list_hash;
+use crate::experiments::sweep::{build_job_sim, outcome_to_result, SweepJob};
+use crate::experiments::{named_sweep_default_horizon, named_sweep_jobs, NAMED_SWEEPS};
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::snapshot::state::{RunContext, SimSnapshot};
+use crate::util::hash::{fnv1a, hex64};
+use crate::util::json::Json;
+use crate::util::Args;
+use std::path::{Path, PathBuf};
+
+/// Run-manifest schema version.
+pub const RUN_SCHEMA_VERSION: u64 = 1;
+
+/// Everything `gyges snapshot` needs to drive one checkpointed sweep.
+#[derive(Clone, Debug)]
+pub struct RunPlan {
+    pub sweep: String,
+    pub horizon_s: f64,
+    /// Checkpoint cadence in simulated seconds.
+    pub every_s: f64,
+    /// State directory (manifest + rows + checkpoints).
+    pub dir: PathBuf,
+    /// Final merged JSONL path.
+    pub out: PathBuf,
+    /// Replay traces from a `gyges trace-gen` segment root instead of
+    /// materializing them (O(segment) trace memory, as `sweep-shard
+    /// --stream-dir`).
+    pub stream_dir: Option<PathBuf>,
+    /// Exit (status 3) after writing this many checkpoints — the
+    /// deliberate-kill / stage-budget hook.
+    pub stop_after: Option<usize>,
+}
+
+/// What a runner invocation did.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunOutcome {
+    Completed { rows: usize, bytes: usize },
+    /// Paused after `checkpoints` checkpoint writes; job `next_job` is
+    /// parked at simulated time `at`. Resume with `gyges resume`.
+    Paused { checkpoints: usize, next_job: usize, at: SimTime },
+}
+
+// ---------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct DoneJob {
+    index: usize,
+    payload_hash: String,
+}
+
+#[derive(Clone, Debug)]
+struct RunManifest {
+    sweep: String,
+    horizon_s: f64,
+    every_s: f64,
+    stream_dir: Option<String>,
+    jobs_hash: String,
+    total_jobs: usize,
+    out: String,
+    done: Vec<DoneJob>,
+}
+
+impl RunManifest {
+    fn path(dir: &Path) -> PathBuf {
+        dir.join("snapshot-run.json")
+    }
+
+    fn rows_name(index: usize) -> String {
+        format!("rows-{index:05}.jsonl")
+    }
+
+    fn snapshot_name(index: usize) -> String {
+        format!("job-{index:05}.snapshot.json")
+    }
+
+    fn to_json(&self) -> Json {
+        let done: Vec<Json> = self
+            .done
+            .iter()
+            .map(|d| {
+                let mut o = Json::obj();
+                o.set("index", d.index).set("payload_hash", d.payload_hash.as_str());
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("schema_version", RUN_SCHEMA_VERSION)
+            .set("kind", "snapshot-run")
+            .set("sweep", self.sweep.as_str())
+            .set("horizon_s", self.horizon_s)
+            .set("every_s", self.every_s)
+            .set(
+                "stream_dir",
+                self.stream_dir.as_deref().map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("jobs_hash", self.jobs_hash.as_str())
+            .set("total_jobs", self.total_jobs)
+            .set("out", self.out.as_str())
+            .set("done", Json::Arr(done));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<RunManifest, String> {
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_u64())
+            .ok_or("run manifest: missing schema_version")?;
+        if version != RUN_SCHEMA_VERSION {
+            return Err(format!(
+                "run manifest: schema_version {version} unsupported (this reads \
+                 v{RUN_SCHEMA_VERSION})"
+            ));
+        }
+        if j.get("kind").and_then(|v| v.as_str()) != Some("snapshot-run") {
+            return Err("run manifest: not a snapshot-run document".into());
+        }
+        let s = |k: &str| -> Result<String, String> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("run manifest: missing {k:?}"))
+        };
+        let f = |k: &str| -> Result<f64, String> {
+            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("run manifest: bad {k:?}"))
+        };
+        let mut done = Vec::new();
+        for (k, d) in j
+            .get("done")
+            .and_then(|v| v.as_arr())
+            .ok_or("run manifest: missing done array")?
+            .iter()
+            .enumerate()
+        {
+            let index = d
+                .get("index")
+                .and_then(|v| v.as_u64())
+                .ok_or("run manifest: bad done index")? as usize;
+            if index != k {
+                return Err(format!(
+                    "run manifest: done jobs are not a prefix (entry {k} has index {index})"
+                ));
+            }
+            done.push(DoneJob {
+                index,
+                payload_hash: d
+                    .get("payload_hash")
+                    .and_then(|v| v.as_str())
+                    .ok_or("run manifest: bad done payload_hash")?
+                    .to_string(),
+            });
+        }
+        Ok(RunManifest {
+            sweep: s("sweep")?,
+            horizon_s: f("horizon_s")?,
+            every_s: f("every_s")?,
+            stream_dir: match j.get("stream_dir") {
+                None | Some(Json::Null) => None,
+                Some(v) => {
+                    Some(v.as_str().ok_or("run manifest: bad stream_dir")?.to_string())
+                }
+            },
+            jobs_hash: s("jobs_hash")?,
+            total_jobs: j
+                .get("total_jobs")
+                .and_then(|v| v.as_u64())
+                .ok_or("run manifest: bad total_jobs")? as usize,
+            out: s("out")?,
+            done,
+        })
+    }
+}
+
+/// Write `text` kill-safely: a tmp file in the same directory, then an
+/// atomic rename. A process killed mid-write leaves the previous
+/// version (or nothing) — never a truncated document.
+fn write_atomic(path: &Path, text: &str) -> Result<(), String> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+fn build_jobs(
+    sweep: &str,
+    horizon_s: f64,
+    stream_dir: Option<&Path>,
+) -> Result<Vec<SweepJob>, String> {
+    match stream_dir {
+        Some(root) => streamed_named_jobs(sweep, horizon_s, root),
+        None => named_sweep_jobs(sweep, horizon_s)
+            .ok_or_else(|| format!("unknown sweep {sweep:?} (known: {})", NAMED_SWEEPS.join(", "))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The drive loop
+// ---------------------------------------------------------------------
+
+/// Run jobs `manifest.done.len()..` to completion, checkpointing every
+/// `manifest.every_s` simulated seconds. `current` carries a restored
+/// mid-job simulator when resuming.
+fn drive(
+    dir: &Path,
+    jobs: &[SweepJob],
+    manifest: &mut RunManifest,
+    mut current: Option<ClusterSim>,
+    stop_after: Option<usize>,
+) -> Result<RunOutcome, String> {
+    let every = {
+        let d = SimDuration::from_secs_f64(manifest.every_s);
+        SimDuration(d.0.max(1))
+    };
+    let mut written = 0usize;
+    let start = manifest.done.len();
+    for (idx, job) in jobs.iter().enumerate().skip(start) {
+        let mut sim = match current.take() {
+            Some(s) => s,
+            None => build_job_sim(job),
+        };
+        // First boundary strictly ahead of the restored clock; after a
+        // pause the boundary advances by `every`. A window that
+        // processed NO events writes no checkpoint and burns no
+        // `--stop-after` credit: the state is identical to the last
+        // one written, and a resumed run re-derives its first boundary
+        // from the restored clock — which sits below the boundary it
+        // paused at — so counting empty windows would re-checkpoint
+        // the same state forever (zero forward progress per resume).
+        let mut next_stop = SimTime((sim.sim_now().0 / every.0 + 1) * every.0);
+        loop {
+            let events_before = sim.counters.events;
+            match sim.run_until(Some(next_stop)) {
+                RunStatus::Done => break,
+                RunStatus::Paused => {
+                    if sim.counters.events == events_before {
+                        next_stop = next_stop + every;
+                        continue;
+                    }
+                    let ctx = RunContext {
+                        sweep: manifest.sweep.clone(),
+                        horizon_s: manifest.horizon_s,
+                        job_index: idx,
+                        key: job.key.clone(),
+                        stream_dir: manifest.stream_dir.clone(),
+                    };
+                    let snap = sim.snapshot_with_context(Some(ctx))?;
+                    let at = snap.sim_time;
+                    write_atomic(
+                        &dir.join(RunManifest::snapshot_name(idx)),
+                        &snap.to_string_pretty(),
+                    )?;
+                    written += 1;
+                    if let Some(budget) = stop_after {
+                        if written >= budget {
+                            return Ok(RunOutcome::Paused {
+                                checkpoints: written,
+                                next_job: idx,
+                                at,
+                            });
+                        }
+                    }
+                    next_stop = next_stop + every;
+                }
+            }
+        }
+        let row = format!("{}\n", outcome_to_result(&job.key, sim.finish()).to_json());
+        write_atomic(&dir.join(RunManifest::rows_name(idx)), &row)?;
+        manifest.done.push(DoneJob { index: idx, payload_hash: hex64(fnv1a(row.as_bytes())) });
+        write_atomic(&RunManifest::path(dir), &format!("{}\n", manifest.to_json()))?;
+        // The row supersedes any checkpoint of this job.
+        let _ = std::fs::remove_file(dir.join(RunManifest::snapshot_name(idx)));
+    }
+    seal(dir, manifest)
+}
+
+/// Concatenate the verified per-job rows into the final JSONL.
+fn seal(dir: &Path, manifest: &RunManifest) -> Result<RunOutcome, String> {
+    let mut merged = String::new();
+    for d in &manifest.done {
+        let path = dir.join(RunManifest::rows_name(d.index));
+        let row =
+            std::fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let actual = hex64(fnv1a(row.as_bytes()));
+        if actual != d.payload_hash {
+            return Err(format!(
+                "{}: payload hash {actual} does not match manifest {} (row file corrupted or \
+                 edited after the run)",
+                path.display(),
+                d.payload_hash
+            ));
+        }
+        merged.push_str(&row);
+    }
+    let out = PathBuf::from(&manifest.out);
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("create {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(&out, &merged).map_err(|e| format!("write {}: {e}", out.display()))?;
+    Ok(RunOutcome::Completed { rows: manifest.done.len(), bytes: merged.len() })
+}
+
+/// Start a checkpointed run from scratch (any previous state under
+/// `plan.dir` is cleared — it belonged to a different invocation).
+pub fn run_checkpointed(plan: &RunPlan) -> Result<RunOutcome, String> {
+    if !plan.every_s.is_finite() || plan.every_s <= 0.0 {
+        return Err("snapshot: --every must be a positive number of simulated seconds".into());
+    }
+    let jobs = build_jobs(&plan.sweep, plan.horizon_s, plan.stream_dir.as_deref())?;
+    std::fs::create_dir_all(&plan.dir)
+        .map_err(|e| format!("create {}: {e}", plan.dir.display()))?;
+    // Clear stale state files so resume can never mix two runs.
+    if let Ok(entries) = std::fs::read_dir(&plan.dir) {
+        for entry in entries.filter_map(|e| e.ok()) {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with("rows-")
+                || name.starts_with("job-")
+                || name == "snapshot-run.json"
+            {
+                std::fs::remove_file(entry.path())
+                    .map_err(|e| format!("remove stale {}: {e}", entry.path().display()))?;
+            }
+        }
+    }
+    let mut manifest = RunManifest {
+        sweep: plan.sweep.clone(),
+        horizon_s: plan.horizon_s,
+        every_s: plan.every_s,
+        stream_dir: plan.stream_dir.as_ref().map(|p| p.to_string_lossy().into_owned()),
+        jobs_hash: job_list_hash(&jobs),
+        total_jobs: jobs.len(),
+        out: plan.out.to_string_lossy().into_owned(),
+        done: Vec::new(),
+    };
+    write_atomic(&RunManifest::path(&plan.dir), &format!("{}\n", manifest.to_json()))?;
+    drive(&plan.dir, &jobs, &mut manifest, None, plan.stop_after)
+}
+
+/// Resume an interrupted checkpointed run from its state directory.
+/// Verifies the manifest, re-derives the canonical job list and proves
+/// it matches the one the run started from (`jobs_hash`), re-verifies
+/// every completed row's payload hash, restores the newest checkpoint
+/// of the in-progress job (if one exists — otherwise that job restarts
+/// from its trace, which is equivalent work, not wrong results), and
+/// drives the rest of the sweep to the exact uninterrupted bytes.
+pub fn resume_run(dir: &Path, stop_after: Option<usize>) -> Result<RunOutcome, String> {
+    let path = RunManifest::path(dir);
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+    let mut manifest = RunManifest::from_json(&doc)?;
+    let jobs = build_jobs(
+        &manifest.sweep,
+        manifest.horizon_s,
+        manifest.stream_dir.as_deref().map(Path::new),
+    )?;
+    if jobs.len() != manifest.total_jobs {
+        return Err(format!(
+            "resume: rebuilt job list has {} jobs, manifest says {}",
+            jobs.len(),
+            manifest.total_jobs
+        ));
+    }
+    let hash = job_list_hash(&jobs);
+    if hash != manifest.jobs_hash {
+        return Err(format!(
+            "resume: rebuilt job list hashes to {hash}, manifest says {} — the sweep registry \
+             or trace inputs changed since the run started",
+            manifest.jobs_hash
+        ));
+    }
+    if manifest.done.len() >= jobs.len() {
+        // Every job already finished; (re)seal idempotently.
+        return seal(dir, &manifest);
+    }
+    let idx = manifest.done.len();
+    let snap_path = dir.join(RunManifest::snapshot_name(idx));
+    let current = match std::fs::read_to_string(&snap_path) {
+        Err(_) => None, // no checkpoint yet: restart this job from its trace
+        Ok(text) => {
+            let snap = SimSnapshot::parse(&text)
+                .map_err(|e| format!("{}: {e}", snap_path.display()))?;
+            let ctx = snap
+                .context
+                .as_ref()
+                .ok_or_else(|| format!("{}: checkpoint lacks a run context", snap_path.display()))?;
+            if ctx.sweep != manifest.sweep || ctx.job_index != idx || ctx.key != jobs[idx].key {
+                return Err(format!(
+                    "{}: checkpoint describes {}[{}] {:?}, expected {}[{idx}] {:?}",
+                    snap_path.display(),
+                    ctx.sweep,
+                    ctx.job_index,
+                    ctx.key,
+                    manifest.sweep,
+                    jobs[idx].key
+                ));
+            }
+            if snap.system != jobs[idx].system.name() {
+                return Err(format!(
+                    "{}: checkpoint system {:?} does not match the job's {:?}",
+                    snap_path.display(),
+                    snap.system,
+                    jobs[idx].system.name()
+                ));
+            }
+            Some(ClusterSim::from_snapshot(jobs[idx].cfg.clone(), &snap)
+                .map_err(|e| format!("{}: {e}", snap_path.display()))?)
+        }
+    };
+    drive(dir, &jobs, &mut manifest, current, stop_after)
+}
+
+// ---------------------------------------------------------------------
+// CLI glue
+// ---------------------------------------------------------------------
+
+/// Exit status for a deliberate `--stop-after` pause (distinct from 0 =
+/// completed and 1 = error, so CI stages can assert "paused as asked").
+pub const PAUSED_EXIT_CODE: i32 = 3;
+
+/// `gyges snapshot <sweep> ...` — checkpointed serial sweep run.
+pub fn snapshot_cli(args: &Args) -> i32 {
+    let Some(sweep) = args.positional.get(1).map(|s| s.as_str()) else {
+        eprintln!(
+            "usage: gyges snapshot <{}> [--horizon S] [--every SIM_S] [--dir DIR] [--out FILE] \
+             [--stream-dir DIR] [--stop-after K]",
+            NAMED_SWEEPS.join("|")
+        );
+        return 2;
+    };
+    let parsed = (|| -> Result<(f64, f64, Option<usize>), String> {
+        Ok((
+            args.parsed_strict("horizon", named_sweep_default_horizon(sweep))?,
+            args.parsed_strict("every", 30.0f64)?,
+            match args.get("stop-after") {
+                None => None,
+                Some(raw) => Some(
+                    raw.parse::<usize>()
+                        .map_err(|_| format!("--stop-after {raw:?} is not a count"))?,
+                ),
+            },
+        ))
+    })();
+    let (horizon_s, every_s, stop_after) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("snapshot: {e}");
+            return 2;
+        }
+    };
+    let plan = RunPlan {
+        sweep: sweep.to_string(),
+        horizon_s,
+        every_s,
+        dir: PathBuf::from(args.get_or("dir", &format!("target/snapshots/{sweep}"))),
+        out: PathBuf::from(args.get_or("out", &format!("target/{sweep}-snapshot-run.jsonl"))),
+        stream_dir: args.get("stream-dir").map(PathBuf::from),
+        stop_after,
+    };
+    match run_checkpointed(&plan) {
+        Ok(RunOutcome::Completed { rows, bytes }) => {
+            println!(
+                "{sweep}: completed with checkpoints every {every_s} sim-s → {rows} rows \
+                 ({bytes} bytes) → {}",
+                plan.out.display()
+            );
+            0
+        }
+        Ok(RunOutcome::Paused { checkpoints, next_job, at }) => {
+            println!(
+                "{sweep}: paused after {checkpoints} checkpoint(s); job {next_job} parked at \
+                 sim-time {at} — `gyges resume --dir {}` continues",
+                plan.dir.display()
+            );
+            PAUSED_EXIT_CODE
+        }
+        Err(e) => {
+            eprintln!("snapshot: {e}");
+            1
+        }
+    }
+}
+
+/// `gyges resume --dir DIR ...` — continue an interrupted run.
+pub fn resume_cli(args: &Args) -> i32 {
+    let Some(dir) = args.get("dir") else {
+        eprintln!("usage: gyges resume --dir DIR [--stop-after K]");
+        return 2;
+    };
+    let stop_after = match args.get("stop-after") {
+        None => None,
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(k) => Some(k),
+            Err(_) => {
+                eprintln!("resume: --stop-after {raw:?} is not a count");
+                return 2;
+            }
+        },
+    };
+    match resume_run(Path::new(dir), stop_after) {
+        Ok(RunOutcome::Completed { rows, bytes }) => {
+            println!("resumed run completed: {rows} rows ({bytes} bytes)");
+            0
+        }
+        Ok(RunOutcome::Paused { checkpoints, next_job, at }) => {
+            println!(
+                "paused again after {checkpoints} checkpoint(s); job {next_job} parked at \
+                 sim-time {at}"
+            );
+            PAUSED_EXIT_CODE
+        }
+        Err(e) => {
+            eprintln!("resume: {e}");
+            1
+        }
+    }
+}

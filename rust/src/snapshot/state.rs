@@ -1,0 +1,823 @@
+//! Snapshot schema v1: a versioned, self-describing serialization of
+//! complete [`ClusterSim`](crate::coordinator::ClusterSim) state.
+//!
+//! Everything the event loop's next decision can observe is captured:
+//! the event queue (entries with their original FIFO sequence numbers
+//! plus the counter), the simulated clock, every instance with its
+//! request queues and in-flight transformation, the deferred backlog
+//! with its cooldown deadline, routing-policy state, the recorder's
+//! rows and TPS buckets, and the arrival feed's replay cursor
+//! ([`crate::workload::SourceCursor`] — a few integers for seeded/
+//! file-backed streams, the remaining requests for in-memory traces).
+//!
+//! What is deliberately NOT serialized, and why that is sound:
+//!
+//! * **Derived routing indices** (`LoadIndex` / `HostIndex`) — rebuilt
+//!   from the restored instance table on load; the rebuild *is* the
+//!   from-scratch construction the end-of-run debug check compares
+//!   against, and `ClusterSim::from_snapshot` debug-asserts it again.
+//! * **Incremental aggregates** (instance committed/context tokens,
+//!   recorder totals) — recomputed from the serialized queues/rows they
+//!   are defined over.
+//! * **Wall-clock profiling** (`SimProfile`) — not simulation state; a
+//!   profiling run refuses to snapshot.
+//! * **The `ClusterConfig`/`EngineModel`** — the resuming process
+//!   reconstructs them from the same run descriptor (sweep registry or
+//!   CLI flags) and the envelope's `config_fingerprint` proves the
+//!   reconstruction matches the snapshotting process's config exactly.
+//!
+//! The envelope carries `schema_version`, the config fingerprint, and
+//! an FNV-1a `payload_hash` over the canonical state encoding (object
+//! keys sort deterministically), so truncated or edited snapshot files
+//! are rejected loudly at load — same integrity discipline as the PR 3
+//! shard manifests and PR 4 segment files.
+
+use crate::config::ClusterConfig;
+use crate::coordinator::PolicyState;
+use crate::coordinator::SimCounters;
+use crate::metrics::RequestRecord;
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::util::hash::{fnv1a, hex64};
+use crate::util::json::Json;
+use crate::workload::FeedState;
+
+/// Snapshot schema version this module reads and writes.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+/// One queued runtime event (arrivals are never queue events — they
+/// live in the feed cursor).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventSnap {
+    pub at: SimTime,
+    /// Original FIFO sequence number inside the event queue.
+    pub seq: u64,
+    pub kind: EventKindSnap,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EventKindSnap {
+    Step { iid: usize, epoch: u64 },
+    TransformDone { iid: usize, epoch: u64 },
+    BacklogWakeup,
+}
+
+/// What an instance's in-flight step will do when it completes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PendingSnap {
+    None,
+    Prefill { req_id: u64 },
+    Decode,
+    Maintenance,
+}
+
+/// An active request (running, queued for prefill, or backlogged).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReqSnap {
+    pub id: u64,
+    pub arrival: SimTime,
+    pub input_len: u64,
+    pub output_len: u64,
+    pub generated: u64,
+    /// [`crate::coordinator::Phase`] name.
+    pub phase: String,
+}
+
+/// A backlogged request with its first-deferral stamp.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeferredSnap {
+    pub req: ReqSnap,
+    pub since: SimTime,
+}
+
+/// An in-flight transformation: enough to rebuild the executor exactly
+/// (the plan regenerates from the model + endpoints + stagger; the
+/// derived per-op overhead is carried verbatim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransformSnap {
+    pub from_tp: u64,
+    pub to_tp: u64,
+    /// `TransformPlan::ops_per_step` (2 × layers per step).
+    pub ops_per_step: usize,
+    /// [`crate::transform::Mechanism`] name.
+    pub mech: String,
+    pub per_op_visible: SimDuration,
+    pub step: usize,
+    pub blocked_until: Option<SimTime>,
+}
+
+/// One serving instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstanceSnap {
+    pub id: usize,
+    pub host: usize,
+    pub workers: Vec<usize>,
+    pub degree: u64,
+    /// [`crate::coordinator::ParallelKind`] name.
+    pub kind: String,
+    pub running: Vec<ReqSnap>,
+    pub prefill: Vec<ReqSnap>,
+    pub kv_tokens: u64,
+    pub transforming: Option<TransformSnap>,
+    pub last_transform: SimTime,
+    pub stepping: bool,
+    pub retired: bool,
+}
+
+/// The recorder's state: occupied rows (dense-id slab holes omitted),
+/// raw per-second token buckets, and the horizon watermark.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecorderSnap {
+    pub rows: Vec<(u64, RequestRecord)>,
+    pub tps_buckets: Vec<u64>,
+    pub horizon: SimTime,
+}
+
+/// Complete simulator state between two events.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimState {
+    pub queue_seq: u64,
+    /// Sorted ascending by `(at, seq)`.
+    pub events: Vec<EventSnap>,
+    pub instances: Vec<InstanceSnap>,
+    pub epochs: Vec<u64>,
+    pub pending: Vec<PendingSnap>,
+    pub dwell_check_scheduled: Vec<bool>,
+    pub backlog: Vec<DeferredSnap>,
+    pub counters: SimCounters,
+    pub policy: PolicyState,
+    pub transformation_disabled: bool,
+    pub use_routing_index: bool,
+    pub backlog_cooldown_until: SimTime,
+    pub backlog_wakeup_scheduled: bool,
+    pub recorder: RecorderSnap,
+    pub feed: FeedState,
+}
+
+/// Where this snapshot came from, for the resume/branch CLIs: which
+/// named sweep, at which horizon, which job of its canonical list, and
+/// (for streamed jobs) the segment-directory root. `None` for snapshots
+/// taken through the library API directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunContext {
+    pub sweep: String,
+    pub horizon_s: f64,
+    pub job_index: usize,
+    pub key: String,
+    pub stream_dir: Option<String>,
+}
+
+/// The full snapshot: envelope + state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSnapshot {
+    /// [`crate::coordinator::SystemKind`] name.
+    pub system: String,
+    /// [`config_fingerprint`] of the `ClusterConfig` the simulation ran
+    /// under — resume reconstructs the config and must match it.
+    pub config_fingerprint: String,
+    /// The simulated clock at capture (`EventQueue::now`).
+    pub sim_time: SimTime,
+    pub context: Option<RunContext>,
+    pub state: SimState,
+}
+
+/// Fingerprint of every config field the simulation's behaviour depends
+/// on. Strings are 0xFF-delimited (never valid UTF-8) so adjacent
+/// fields cannot alias; f64 knobs hash their exact bit patterns.
+pub fn config_fingerprint(cfg: &ClusterConfig) -> String {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(cfg.model.name.as_bytes());
+    bytes.push(0xFF);
+    bytes.extend_from_slice(cfg.gpu.name.as_bytes());
+    bytes.push(0xFF);
+    bytes.extend_from_slice(cfg.policy.name().as_bytes());
+    bytes.push(0xFF);
+    bytes.extend_from_slice(&(cfg.tp_choices.len() as u64).to_le_bytes());
+    for &tp in &cfg.tp_choices {
+        bytes.extend_from_slice(&tp.to_le_bytes());
+    }
+    for v in [
+        cfg.hosts as u64,
+        cfg.gpus_per_host as u64,
+        cfg.scale_down_threshold.to_bits(),
+        cfg.min_dwell_s.to_bits(),
+        cfg.backlog_retry_cooldown_s.to_bits(),
+        cfg.max_batch_tokens,
+        cfg.max_batch_size as u64,
+        cfg.max_events,
+        cfg.seed,
+    ] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    hex64(fnv1a(&bytes))
+}
+
+// ---------------------------------------------------------------------
+// JSON encoding
+// ---------------------------------------------------------------------
+
+fn time_opt(t: Option<SimTime>) -> Json {
+    match t {
+        Some(t) => Json::from(t.0),
+        None => Json::Null,
+    }
+}
+
+fn req_to_json(r: &ReqSnap) -> Json {
+    let mut o = Json::obj();
+    o.set("id", r.id)
+        .set("arrival_ns", r.arrival.0)
+        .set("input", r.input_len)
+        .set("output", r.output_len)
+        .set("generated", r.generated)
+        .set("phase", r.phase.as_str());
+    o
+}
+
+fn req_from_json(j: &Json) -> Result<ReqSnap, String> {
+    let num = |k: &str| -> Result<u64, String> {
+        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("request: bad {k:?}"))
+    };
+    Ok(ReqSnap {
+        id: num("id")?,
+        arrival: SimTime(num("arrival_ns")?),
+        input_len: num("input")?,
+        output_len: num("output")?,
+        generated: num("generated")?,
+        phase: j
+            .get("phase")
+            .and_then(|v| v.as_str())
+            .ok_or("request: bad phase")?
+            .to_string(),
+    })
+}
+
+fn counters_to_json(c: &SimCounters) -> Json {
+    let mut o = Json::obj();
+    o.set("scale_ups", c.scale_ups)
+        .set("scale_downs", c.scale_downs)
+        .set("deferred", c.deferred)
+        .set("steps", c.steps)
+        .set("events", c.events)
+        .set("arrival_events", c.arrival_events)
+        .set("step_events", c.step_events)
+        .set("transform_done_events", c.transform_done_events)
+        .set("stale_events", c.stale_events)
+        .set("backlog_wakeup_events", c.backlog_wakeup_events)
+        .set("routes", c.routes)
+        .set("kicks", c.kicks)
+        .set("backlog_retries", c.backlog_retries)
+        .set("backlog_requeues", c.backlog_requeues)
+        .set("backlog_suppressed", c.backlog_suppressed)
+        // Exact ticks, not the float seconds the report rows print.
+        .set("backlog_wait_ns", c.backlog_wait.0);
+    o
+}
+
+fn counters_from_json(j: &Json) -> Result<SimCounters, String> {
+    let num = |k: &str| -> Result<u64, String> {
+        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("counters: bad {k:?}"))
+    };
+    Ok(SimCounters {
+        scale_ups: num("scale_ups")?,
+        scale_downs: num("scale_downs")?,
+        deferred: num("deferred")?,
+        steps: num("steps")?,
+        events: num("events")?,
+        arrival_events: num("arrival_events")?,
+        step_events: num("step_events")?,
+        transform_done_events: num("transform_done_events")?,
+        stale_events: num("stale_events")?,
+        backlog_wakeup_events: num("backlog_wakeup_events")?,
+        routes: num("routes")?,
+        kicks: num("kicks")?,
+        backlog_retries: num("backlog_retries")?,
+        backlog_requeues: num("backlog_requeues")?,
+        backlog_suppressed: num("backlog_suppressed")?,
+        backlog_wait: SimDuration(num("backlog_wait_ns")?),
+    })
+}
+
+fn policy_to_json(p: &PolicyState) -> Json {
+    let mut o = Json::obj();
+    match p {
+        PolicyState::Gyges { reserved, reserve_cap, last_long_seen, long_hold_s } => {
+            o.set("kind", "gyges")
+                .set("reserved", Json::Arr(reserved.iter().map(|&i| Json::from(i)).collect()))
+                .set("reserve_cap", *reserve_cap)
+                .set("last_long_seen_ns", time_opt(*last_long_seen))
+                .set("long_hold_s", *long_hold_s);
+        }
+        PolicyState::RoundRobin { cursor } => {
+            o.set("kind", "rr").set("cursor", *cursor);
+        }
+        PolicyState::LeastLoad => {
+            o.set("kind", "llf");
+        }
+    }
+    o
+}
+
+fn policy_from_json(j: &Json) -> Result<PolicyState, String> {
+    match j.get("kind").and_then(|v| v.as_str()) {
+        Some("gyges") => Ok(PolicyState::Gyges {
+            reserved: j
+                .get("reserved")
+                .and_then(|v| v.as_arr())
+                .ok_or("policy: bad reserved")?
+                .iter()
+                .map(|v| v.as_u64().map(|x| x as usize).ok_or("policy: bad reserved entry"))
+                .collect::<Result<Vec<_>, _>>()?,
+            reserve_cap: j
+                .get("reserve_cap")
+                .and_then(|v| v.as_f64())
+                .ok_or("policy: bad reserve_cap")?,
+            last_long_seen: match j.get("last_long_seen_ns") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(SimTime(v.as_u64().ok_or("policy: bad last_long_seen_ns")?)),
+            },
+            long_hold_s: j
+                .get("long_hold_s")
+                .and_then(|v| v.as_f64())
+                .ok_or("policy: bad long_hold_s")?,
+        }),
+        Some("rr") => Ok(PolicyState::RoundRobin {
+            cursor: j
+                .get("cursor")
+                .and_then(|v| v.as_u64())
+                .ok_or("policy: bad cursor")? as usize,
+        }),
+        Some("llf") => Ok(PolicyState::LeastLoad),
+        other => Err(format!("policy: unknown kind {other:?}")),
+    }
+}
+
+fn event_to_json(e: &EventSnap) -> Json {
+    let mut o = Json::obj();
+    o.set("at_ns", e.at.0).set("seq", e.seq);
+    match &e.kind {
+        EventKindSnap::Step { iid, epoch } => {
+            o.set("kind", "step").set("iid", *iid).set("epoch", *epoch);
+        }
+        EventKindSnap::TransformDone { iid, epoch } => {
+            o.set("kind", "transform_done").set("iid", *iid).set("epoch", *epoch);
+        }
+        EventKindSnap::BacklogWakeup => {
+            o.set("kind", "backlog_wakeup");
+        }
+    }
+    o
+}
+
+fn event_from_json(j: &Json) -> Result<EventSnap, String> {
+    let num = |k: &str| -> Result<u64, String> {
+        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("event: bad {k:?}"))
+    };
+    let kind = match j.get("kind").and_then(|v| v.as_str()) {
+        Some("step") => EventKindSnap::Step { iid: num("iid")? as usize, epoch: num("epoch")? },
+        Some("transform_done") => {
+            EventKindSnap::TransformDone { iid: num("iid")? as usize, epoch: num("epoch")? }
+        }
+        Some("backlog_wakeup") => EventKindSnap::BacklogWakeup,
+        other => return Err(format!("event: unknown kind {other:?}")),
+    };
+    Ok(EventSnap { at: SimTime(num("at_ns")?), seq: num("seq")?, kind })
+}
+
+fn transform_to_json(t: &TransformSnap) -> Json {
+    let mut o = Json::obj();
+    o.set("from_tp", t.from_tp)
+        .set("to_tp", t.to_tp)
+        .set("ops_per_step", t.ops_per_step)
+        .set("mech", t.mech.as_str())
+        .set("per_op_visible_ns", t.per_op_visible.0)
+        .set("step", t.step)
+        .set("blocked_until_ns", time_opt(t.blocked_until));
+    o
+}
+
+fn transform_from_json(j: &Json) -> Result<TransformSnap, String> {
+    let num = |k: &str| -> Result<u64, String> {
+        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("transform: bad {k:?}"))
+    };
+    Ok(TransformSnap {
+        from_tp: num("from_tp")?,
+        to_tp: num("to_tp")?,
+        ops_per_step: num("ops_per_step")? as usize,
+        mech: j
+            .get("mech")
+            .and_then(|v| v.as_str())
+            .ok_or("transform: bad mech")?
+            .to_string(),
+        per_op_visible: SimDuration(num("per_op_visible_ns")?),
+        step: num("step")? as usize,
+        blocked_until: match j.get("blocked_until_ns") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(SimTime(v.as_u64().ok_or("transform: bad blocked_until_ns")?)),
+        },
+    })
+}
+
+fn instance_to_json(i: &InstanceSnap) -> Json {
+    let reqs = |rs: &[ReqSnap]| Json::Arr(rs.iter().map(req_to_json).collect());
+    let mut o = Json::obj();
+    o.set("id", i.id)
+        .set("host", i.host)
+        .set("workers", Json::Arr(i.workers.iter().map(|&w| Json::from(w)).collect()))
+        .set("degree", i.degree)
+        .set("parallel", i.kind.as_str())
+        .set("running", reqs(&i.running))
+        .set("prefill", reqs(&i.prefill))
+        .set("kv_tokens", i.kv_tokens)
+        .set(
+            "transforming",
+            i.transforming.as_ref().map(transform_to_json).unwrap_or(Json::Null),
+        )
+        .set("last_transform_ns", i.last_transform.0)
+        .set("stepping", i.stepping)
+        .set("retired", i.retired);
+    o
+}
+
+fn instance_from_json(j: &Json) -> Result<InstanceSnap, String> {
+    let num = |k: &str| -> Result<u64, String> {
+        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("instance: bad {k:?}"))
+    };
+    let flag = |k: &str| -> Result<bool, String> {
+        j.get(k).and_then(|v| v.as_bool()).ok_or_else(|| format!("instance: bad {k:?}"))
+    };
+    let reqs = |k: &str| -> Result<Vec<ReqSnap>, String> {
+        j.get(k)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("instance: missing {k:?}"))?
+            .iter()
+            .map(req_from_json)
+            .collect()
+    };
+    Ok(InstanceSnap {
+        id: num("id")? as usize,
+        host: num("host")? as usize,
+        workers: j
+            .get("workers")
+            .and_then(|v| v.as_arr())
+            .ok_or("instance: missing workers")?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as usize).ok_or("instance: bad worker"))
+            .collect::<Result<Vec<_>, _>>()?,
+        degree: num("degree")?,
+        kind: j
+            .get("parallel")
+            .and_then(|v| v.as_str())
+            .ok_or("instance: bad parallel")?
+            .to_string(),
+        running: reqs("running")?,
+        prefill: reqs("prefill")?,
+        kv_tokens: num("kv_tokens")?,
+        transforming: match j.get("transforming") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(transform_from_json(t)?),
+        },
+        last_transform: SimTime(num("last_transform_ns")?),
+        stepping: flag("stepping")?,
+        retired: flag("retired")?,
+    })
+}
+
+fn recorder_to_json(r: &RecorderSnap) -> Json {
+    let rows: Vec<Json> = r
+        .rows
+        .iter()
+        .map(|(id, rec)| {
+            let mut o = Json::obj();
+            o.set("id", *id)
+                .set("arrival_ns", rec.arrival.0)
+                .set("first_token_ns", time_opt(rec.first_token))
+                .set("finished_ns", time_opt(rec.finished))
+                .set("input", rec.input_len)
+                .set("output", rec.output_len)
+                .set("generated", rec.generated);
+            o
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("rows", Json::Arr(rows))
+        .set("tps_buckets", Json::Arr(r.tps_buckets.iter().map(|&c| Json::from(c)).collect()))
+        .set("horizon_ns", r.horizon.0);
+    o
+}
+
+fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
+    let mut rows = Vec::new();
+    for row in j.get("rows").and_then(|v| v.as_arr()).ok_or("recorder: missing rows")? {
+        let num = |k: &str| -> Result<u64, String> {
+            row.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("recorder row: bad {k:?}"))
+        };
+        let opt = |k: &str| -> Result<Option<SimTime>, String> {
+            match row.get(k) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(SimTime(
+                    v.as_u64().ok_or_else(|| format!("recorder row: bad {k:?}"))?,
+                ))),
+            }
+        };
+        rows.push((
+            num("id")?,
+            RequestRecord {
+                arrival: SimTime(num("arrival_ns")?),
+                first_token: opt("first_token_ns")?,
+                finished: opt("finished_ns")?,
+                input_len: num("input")?,
+                output_len: num("output")?,
+                generated: num("generated")?,
+            },
+        ));
+    }
+    Ok(RecorderSnap {
+        rows,
+        tps_buckets: j
+            .get("tps_buckets")
+            .and_then(|v| v.as_arr())
+            .ok_or("recorder: missing tps_buckets")?
+            .iter()
+            .map(|v| v.as_u64().ok_or("recorder: bad tps bucket"))
+            .collect::<Result<Vec<_>, _>>()?,
+        horizon: SimTime(
+            j.get("horizon_ns").and_then(|v| v.as_u64()).ok_or("recorder: bad horizon_ns")?,
+        ),
+    })
+}
+
+fn pending_to_json(p: &PendingSnap) -> Json {
+    match p {
+        PendingSnap::None => Json::Str("none".into()),
+        PendingSnap::Decode => Json::Str("decode".into()),
+        PendingSnap::Maintenance => Json::Str("maintenance".into()),
+        PendingSnap::Prefill { req_id } => {
+            let mut o = Json::obj();
+            o.set("prefill", *req_id);
+            o
+        }
+    }
+}
+
+fn pending_from_json(j: &Json) -> Result<PendingSnap, String> {
+    match j {
+        Json::Str(s) => match s.as_str() {
+            "none" => Ok(PendingSnap::None),
+            "decode" => Ok(PendingSnap::Decode),
+            "maintenance" => Ok(PendingSnap::Maintenance),
+            other => Err(format!("pending: unknown {other:?}")),
+        },
+        Json::Obj(_) => Ok(PendingSnap::Prefill {
+            req_id: j.get("prefill").and_then(|v| v.as_u64()).ok_or("pending: bad prefill")?,
+        }),
+        _ => Err("pending: expected string or object".into()),
+    }
+}
+
+fn state_to_json(s: &SimState) -> Json {
+    let backlog: Vec<Json> = s
+        .backlog
+        .iter()
+        .map(|d| {
+            let mut o = Json::obj();
+            o.set("req", req_to_json(&d.req)).set("since_ns", d.since.0);
+            o
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("queue_seq", s.queue_seq)
+        .set("events", Json::Arr(s.events.iter().map(event_to_json).collect()))
+        .set("instances", Json::Arr(s.instances.iter().map(instance_to_json).collect()))
+        .set("epochs", Json::Arr(s.epochs.iter().map(|&e| Json::from(e)).collect()))
+        .set("pending", Json::Arr(s.pending.iter().map(pending_to_json).collect()))
+        .set(
+            "dwell_check_scheduled",
+            Json::Arr(s.dwell_check_scheduled.iter().map(|&b| Json::from(b)).collect()),
+        )
+        .set("backlog", Json::Arr(backlog))
+        .set("counters", counters_to_json(&s.counters))
+        .set("policy", policy_to_json(&s.policy))
+        .set("transformation_disabled", s.transformation_disabled)
+        .set("use_routing_index", s.use_routing_index)
+        .set("backlog_cooldown_until_ns", s.backlog_cooldown_until.0)
+        .set("backlog_wakeup_scheduled", s.backlog_wakeup_scheduled)
+        .set("recorder", recorder_to_json(&s.recorder))
+        .set("feed", s.feed.to_json());
+    o
+}
+
+fn state_from_json(j: &Json) -> Result<SimState, String> {
+    let arr = |k: &str| -> Result<&[Json], String> {
+        j.get(k).and_then(|v| v.as_arr()).ok_or_else(|| format!("state: missing {k:?}"))
+    };
+    let flag = |k: &str| -> Result<bool, String> {
+        j.get(k).and_then(|v| v.as_bool()).ok_or_else(|| format!("state: bad {k:?}"))
+    };
+    let num = |k: &str| -> Result<u64, String> {
+        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("state: bad {k:?}"))
+    };
+    let mut backlog = Vec::new();
+    for d in arr("backlog")? {
+        backlog.push(DeferredSnap {
+            req: req_from_json(d.get("req").ok_or("state: backlog entry missing req")?)?,
+            since: SimTime(
+                d.get("since_ns").and_then(|v| v.as_u64()).ok_or("state: bad since_ns")?,
+            ),
+        });
+    }
+    Ok(SimState {
+        queue_seq: num("queue_seq")?,
+        events: arr("events")?.iter().map(event_from_json).collect::<Result<Vec<_>, _>>()?,
+        instances: arr("instances")?
+            .iter()
+            .map(instance_from_json)
+            .collect::<Result<Vec<_>, _>>()?,
+        epochs: arr("epochs")?
+            .iter()
+            .map(|v| v.as_u64().ok_or("state: bad epoch"))
+            .collect::<Result<Vec<_>, _>>()?,
+        pending: arr("pending")?
+            .iter()
+            .map(pending_from_json)
+            .collect::<Result<Vec<_>, _>>()?,
+        dwell_check_scheduled: arr("dwell_check_scheduled")?
+            .iter()
+            .map(|v| v.as_bool().ok_or("state: bad dwell flag"))
+            .collect::<Result<Vec<_>, _>>()?,
+        backlog,
+        counters: counters_from_json(j.get("counters").ok_or("state: missing counters")?)?,
+        policy: policy_from_json(j.get("policy").ok_or("state: missing policy")?)?,
+        transformation_disabled: flag("transformation_disabled")?,
+        use_routing_index: flag("use_routing_index")?,
+        backlog_cooldown_until: SimTime(num("backlog_cooldown_until_ns")?),
+        backlog_wakeup_scheduled: flag("backlog_wakeup_scheduled")?,
+        recorder: recorder_from_json(j.get("recorder").ok_or("state: missing recorder")?)?,
+        feed: FeedState::from_json(j.get("feed").ok_or("state: missing feed")?)?,
+    })
+}
+
+impl SimSnapshot {
+    /// The full snapshot document: envelope + hashed state payload.
+    pub fn to_json(&self) -> Json {
+        let state = state_to_json(&self.state);
+        let payload_hash = hex64(fnv1a(state.to_string().as_bytes()));
+        let context = match &self.context {
+            None => Json::Null,
+            Some(c) => {
+                let mut o = Json::obj();
+                o.set("sweep", c.sweep.as_str())
+                    .set("horizon_s", c.horizon_s)
+                    .set("job_index", c.job_index)
+                    .set("key", c.key.as_str())
+                    .set(
+                        "stream_dir",
+                        c.stream_dir.as_deref().map(Json::from).unwrap_or(Json::Null),
+                    );
+                o
+            }
+        };
+        let mut o = Json::obj();
+        o.set("schema_version", SNAPSHOT_SCHEMA_VERSION)
+            .set("kind", "sim-snapshot")
+            .set("system", self.system.as_str())
+            .set("config_fingerprint", self.config_fingerprint.as_str())
+            .set("sim_time_ns", self.sim_time.0)
+            .set("context", context)
+            .set("payload_hash", payload_hash.as_str())
+            .set("state", state);
+        o
+    }
+
+    /// Parse and integrity-check a snapshot document: schema version,
+    /// kind, and the FNV-1a payload hash over the canonical state
+    /// encoding must all match.
+    pub fn from_json(j: &Json) -> Result<SimSnapshot, String> {
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_u64())
+            .ok_or("snapshot: missing schema_version")?;
+        if version != SNAPSHOT_SCHEMA_VERSION {
+            return Err(format!(
+                "snapshot: schema_version {version} unsupported (this reads \
+                 v{SNAPSHOT_SCHEMA_VERSION})"
+            ));
+        }
+        if j.get("kind").and_then(|v| v.as_str()) != Some("sim-snapshot") {
+            return Err("snapshot: not a sim-snapshot document".into());
+        }
+        let state_json = j.get("state").ok_or("snapshot: missing state")?;
+        let want = j
+            .get("payload_hash")
+            .and_then(|v| v.as_str())
+            .ok_or("snapshot: missing payload_hash")?;
+        let got = hex64(fnv1a(state_json.to_string().as_bytes()));
+        if got != want {
+            return Err(format!(
+                "snapshot: state payload hash {got} does not match envelope {want} (file \
+                 corrupted or edited after capture)"
+            ));
+        }
+        let context = match j.get("context") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(RunContext {
+                sweep: c
+                    .get("sweep")
+                    .and_then(|v| v.as_str())
+                    .ok_or("snapshot context: bad sweep")?
+                    .to_string(),
+                horizon_s: c
+                    .get("horizon_s")
+                    .and_then(|v| v.as_f64())
+                    .ok_or("snapshot context: bad horizon_s")?,
+                job_index: c
+                    .get("job_index")
+                    .and_then(|v| v.as_u64())
+                    .ok_or("snapshot context: bad job_index")?
+                    as usize,
+                key: c
+                    .get("key")
+                    .and_then(|v| v.as_str())
+                    .ok_or("snapshot context: bad key")?
+                    .to_string(),
+                stream_dir: match c.get("stream_dir") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_str().ok_or("snapshot context: bad stream_dir")?.to_string(),
+                    ),
+                },
+            }),
+        };
+        Ok(SimSnapshot {
+            system: j
+                .get("system")
+                .and_then(|v| v.as_str())
+                .ok_or("snapshot: missing system")?
+                .to_string(),
+            config_fingerprint: j
+                .get("config_fingerprint")
+                .and_then(|v| v.as_str())
+                .ok_or("snapshot: missing config_fingerprint")?
+                .to_string(),
+            sim_time: SimTime(
+                j.get("sim_time_ns").and_then(|v| v.as_u64()).ok_or("snapshot: bad sim_time")?,
+            ),
+            context,
+            state: state_from_json(state_json)?,
+        })
+    }
+
+    /// Serialize to the canonical single-document string (with trailing
+    /// newline, the on-disk form).
+    pub fn to_string_pretty(&self) -> String {
+        format!("{}\n", self.to_json())
+    }
+
+    /// Parse [`SimSnapshot::to_string_pretty`] output.
+    pub fn parse(text: &str) -> Result<SimSnapshot, String> {
+        let doc = Json::parse(text.trim_end())?;
+        Self::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn config_fingerprint_is_sensitive_to_knobs() {
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let a = config_fingerprint(&cfg);
+        assert_eq!(a, config_fingerprint(&cfg.clone()), "deterministic");
+        let mut b = cfg.clone();
+        b.min_dwell_s += 1.0;
+        assert_ne!(a, config_fingerprint(&b), "dwell change must show");
+        let mut c = cfg.clone();
+        c.seed ^= 1;
+        assert_ne!(a, config_fingerprint(&c), "seed change must show");
+        let mut d = cfg;
+        d.model = ModelConfig::llama3_8b();
+        assert_ne!(a, config_fingerprint(&d), "model change must show");
+    }
+
+    #[test]
+    fn tampered_payload_is_rejected() {
+        // Build a tiny synthetic snapshot through a real simulation in
+        // the integration tests; here, check the envelope mechanics on a
+        // hand-rolled doc: flipping one state byte must break the hash.
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let sim = crate::coordinator::ClusterSim::new(
+            cfg.clone(),
+            crate::coordinator::SystemKind::Gyges,
+            crate::workload::Trace::default(),
+        );
+        let snap = sim.snapshot().unwrap();
+        let text = snap.to_string_pretty();
+        assert_eq!(SimSnapshot::parse(&text).unwrap(), snap, "roundtrip");
+        // Tamper inside the state object (retain valid JSON).
+        let tampered = text.replace("\"queue_seq\":0", "\"queue_seq\":7");
+        assert_ne!(tampered, text, "tamper target must exist");
+        let err = SimSnapshot::parse(&tampered).unwrap_err();
+        assert!(err.contains("payload hash"), "{err}");
+    }
+}

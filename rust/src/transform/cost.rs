@@ -19,6 +19,28 @@ pub enum Mechanism {
     Seesaw,
 }
 
+impl Mechanism {
+    /// Stable identifier used by snapshots and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::Gyges => "gyges",
+            Mechanism::GygesNoOverlap => "gyges-",
+            Mechanism::Basic => "basic",
+            Mechanism::Seesaw => "seesaw",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Mechanism> {
+        match s {
+            "gyges" => Some(Mechanism::Gyges),
+            "gyges-" => Some(Mechanism::GygesNoOverlap),
+            "basic" => Some(Mechanism::Basic),
+            "seesaw" => Some(Mechanism::Seesaw),
+            _ => None,
+        }
+    }
+}
+
 /// Effective bandwidth factor of Seesaw's CPU-shared-memory path relative
 /// to raw PCIe: serialization through host buffers, pageable copies and
 /// re-partitioning on the CPU (fits the paper's "up to 41×" §6.2.3).

@@ -30,6 +30,25 @@ impl TransformExec {
         TransformExec { plan, mech, per_op_visible, step: 0 }
     }
 
+    /// Rebuild a mid-flight executor from snapshot parts. The derived
+    /// `per_op_visible` is restored verbatim (it folded the KV
+    /// utilization at transform-start time, which no longer exists),
+    /// so resumed steps charge exactly the overhead the original would
+    /// have.
+    pub fn from_parts(
+        plan: TransformPlan,
+        mech: Mechanism,
+        per_op_visible: SimDuration,
+        step: usize,
+    ) -> TransformExec {
+        TransformExec { plan, mech, per_op_visible, step }
+    }
+
+    /// The derived per-op visible overhead (snapshot support).
+    pub fn per_op_visible(&self) -> SimDuration {
+        self.per_op_visible
+    }
+
     /// Advance one serving step; returns the extra visible time this step
     /// absorbs. `None` when the transformation already finished.
     pub fn advance(&mut self) -> Option<SimDuration> {

@@ -10,7 +10,7 @@ pub mod trace;
 pub use arrivals::{BurstyProcess, Poisson};
 pub use dist::LengthModel;
 pub use source::{
-    ArrivalFeed, ChunkedTrace, MaterializedSource, ProductionStream, SegmentDir,
-    SegmentFileSource, StreamSource, TraceSegment, TraceSource,
+    ArrivalFeed, ChunkedTrace, FeedState, LongBursts, MaterializedSource, ProductionStream,
+    SegmentDir, SegmentFileSource, SourceCursor, StreamSource, TraceSegment, TraceSource,
 };
 pub use trace::{Trace, TraceRequest};

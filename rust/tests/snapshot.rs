@@ -1,0 +1,408 @@
+//! Deterministic snapshot/resume guarantees (PR 5):
+//!
+//! 1. A run paused at ANY point, serialized to JSON, parsed back, and
+//!    resumed produces output byte-identical to the uninterrupted run —
+//!    property-tested over random workloads and random checkpoint
+//!    instants, plus targeted adversarial instants: mid-transform,
+//!    during a backlog retry cooldown, between a segment boundary and
+//!    its first arrival, and just before an event-cap cut.
+//! 2. The checkpointed sweep runner (`gyges snapshot` / `resume`)
+//!    survives a deliberate mid-job kill and reassembles the exact
+//!    serial-driver bytes; tampered state files are rejected loudly.
+//! 3. The branch explorer forks one snapshot into policy variants whose
+//!    divergence report is deterministic across repeated runs, and
+//!    whose parent branch equals the uninterrupted timeline.
+
+use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::coordinator::{ClusterSim, RunStatus, SimOutcome, SystemKind};
+use gyges::experiments::branch::{default_branches, explore};
+use gyges::experiments::sweep::{build_job_sim, outcome_to_result, results_to_jsonl};
+use gyges::experiments::sweep::run_sweep_serial;
+use gyges::experiments::named_sweep_jobs;
+use gyges::sim::SimTime;
+use gyges::snapshot::runner::{resume_run, run_checkpointed, RunOutcome, RunPlan};
+use gyges::snapshot::state::{RunContext, SimSnapshot};
+use gyges::util::proptest;
+use gyges::util::Prng;
+use gyges::workload::{ChunkedTrace, LongBursts, ProductionStream, StreamSource, Trace};
+use gyges::workload::{TraceRequest, TraceSegment, TraceSource};
+use std::path::PathBuf;
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gyges-snapshot-{name}-{}", std::process::id()))
+}
+
+/// Full observable state of one run (everything a sweep row serializes).
+fn sig(out: &SimOutcome) -> String {
+    format!(
+        "{}|{:?}|{:?}|{:?}",
+        out.report.to_json(),
+        out.counters,
+        out.recorder.tps_series(),
+        out.error
+    )
+}
+
+/// Pause `sim` at `at`, roundtrip its state through the JSON envelope,
+/// and return the restored simulator — or `None` if the run finished
+/// before the checkpoint instant.
+fn checkpoint_roundtrip(
+    sim: &mut ClusterSim,
+    at: SimTime,
+    cfg: &ClusterConfig,
+) -> Option<ClusterSim> {
+    match sim.run_until(Some(at)) {
+        RunStatus::Done => None,
+        RunStatus::Paused => {
+            let snap = sim.snapshot().expect("paused run must snapshot");
+            let text = snap.to_string_pretty();
+            let parsed = SimSnapshot::parse(&text).expect("snapshot must parse");
+            assert_eq!(parsed, snap, "JSON roundtrip must be lossless");
+            Some(ClusterSim::from_snapshot(cfg.clone(), &parsed).expect("restore must succeed"))
+        }
+    }
+}
+
+#[test]
+fn prop_resume_is_byte_identical_at_random_checkpoint_times() {
+    proptest::forall(
+        "resume == uninterrupted",
+        proptest::Config { cases: 8, seed: 0x5AAB_5 },
+        |rng: &mut Prng| {
+            let seed = rng.next();
+            let horizon = 30.0 + rng.f64() * 40.0;
+            let t1 = 1.0 + rng.f64() * horizon;
+            let t2 = t1 + rng.f64() * horizon;
+            let streamed = rng.chance(0.5);
+            (seed, horizon, t1, t2, streamed)
+        },
+        |&(seed, horizon, t1, t2, streamed)| {
+            let build = || -> ClusterSim {
+                if streamed {
+                    let trace = Trace::hybrid_paper(seed, horizon);
+                    let source = ChunkedTrace::with_horizon(trace, 7.5, horizon);
+                    ClusterSim::with_source(cfg(), SystemKind::Gyges, Box::new(source))
+                } else {
+                    ClusterSim::new(cfg(), SystemKind::Gyges, Trace::hybrid_paper(seed, horizon))
+                }
+            };
+            let reference = sig(&build().run());
+            let mut sim = build();
+            // Two checkpoints at random instants; each roundtrips the
+            // full state through JSON.
+            for t in [t1, t2] {
+                match checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(t), &cfg()) {
+                    Some(restored) => sim = restored,
+                    None => break,
+                }
+            }
+            let _ = sim.run_until(None);
+            let resumed = sig(&sim.finish());
+            gyges::prop_assert!(
+                resumed == reference,
+                "resumed run diverged (seed {seed:#x}, horizon {horizon:.1}, t1 {t1:.2}, \
+                 t2 {t2:.2}):\n  ref: {reference}\n  got: {resumed}"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// A trace that forces a scale-up (one 50K long amid shorts).
+fn transforming_trace() -> Trace {
+    let mut trace = Trace::default();
+    for i in 0..30u64 {
+        trace.requests.push(TraceRequest {
+            id: 0,
+            arrival: SimTime::from_secs_f64(i as f64 * 0.5),
+            input_len: 1000,
+            output_len: 60,
+        });
+    }
+    trace.requests.push(TraceRequest {
+        id: 0,
+        arrival: SimTime::from_secs_f64(1.0),
+        input_len: 50_000,
+        output_len: 64,
+    });
+    trace.sort_and_renumber();
+    trace
+}
+
+#[test]
+fn resume_mid_transform_is_byte_identical() {
+    let reference = sig(&ClusterSim::new(cfg(), SystemKind::Gyges, transforming_trace()).run());
+    let mut sim = ClusterSim::new(cfg(), SystemKind::Gyges, transforming_trace());
+    let mut restored = None;
+    let mut t = 0.25;
+    while t < 120.0 {
+        if sim.run_until(Some(SimTime::from_secs_f64(t))) == RunStatus::Done {
+            break;
+        }
+        if sim.in_flight_transforms() > 0 {
+            restored = checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(t), &cfg());
+            break;
+        }
+        t += 0.25;
+    }
+    let mut sim = restored.expect("must capture an in-flight transformation");
+    assert!(sim.in_flight_transforms() > 0, "restored state must still be mid-transform");
+    let _ = sim.run_until(None);
+    assert_eq!(sig(&sim.finish()), reference, "mid-transform resume diverged");
+}
+
+/// Steady shorts plus one request beyond even TP4's max sequence: the
+/// long can never be placed (`needed_tp` = None → Defer), so EVERY
+/// backlog drain pass is a no-progress pass — each finish arms the
+/// retry cooldown and schedules a wakeup, guaranteeing armed-cooldown
+/// intervals for the adversarial checkpoint to land in. (Liveness
+/// still holds: once the shorts drain, the final no-progress pass has
+/// no other pending events and stops re-arming.)
+fn overload_trace() -> Trace {
+    let mut trace = Trace::default();
+    for i in 0..200u64 {
+        trace.requests.push(TraceRequest {
+            id: 0,
+            arrival: SimTime::from_secs_f64(i as f64 * 0.5),
+            input_len: 1000,
+            output_len: 60,
+        });
+    }
+    trace.requests.push(TraceRequest {
+        id: 0,
+        arrival: SimTime::from_secs_f64(0.2),
+        input_len: 200_000, // beyond max_seq(4): unserveable, defers forever
+        output_len: 64,
+    });
+    trace.sort_and_renumber();
+    trace
+}
+
+#[test]
+fn resume_during_backlog_cooldown_is_byte_identical() {
+    let reference_out = ClusterSim::new(cfg(), SystemKind::Gyges, overload_trace()).run();
+    assert!(
+        reference_out.counters.backlog_wakeup_events > 0,
+        "scenario must actually arm the retry cooldown (got {:?})",
+        reference_out.counters
+    );
+    let reference = sig(&reference_out);
+    let mut sim = ClusterSim::new(cfg(), SystemKind::Gyges, overload_trace());
+    let mut restored = None;
+    let mut t = 0.02;
+    while t < 400.0 {
+        if sim.run_until(Some(SimTime::from_secs_f64(t))) == RunStatus::Done {
+            break;
+        }
+        if sim.backlog_len() > 0 && sim.backlog_cooldown_deadline() > sim.sim_now() {
+            restored = checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(t), &cfg());
+            break;
+        }
+        t += 0.02;
+    }
+    let mut sim = restored.expect("must capture an armed backlog cooldown");
+    assert!(sim.backlog_len() > 0, "restored state must still hold the backlog");
+    let _ = sim.run_until(None);
+    assert_eq!(sig(&sim.finish()), reference, "backlog-cooldown resume diverged");
+}
+
+#[test]
+fn resume_between_segment_boundary_and_first_arrival() {
+    // Arrivals at 1 s and 11 s, 5 s windows: the 10.5 s checkpoint sits
+    // after the [10, 15) boundary but before its first arrival.
+    let mut trace = Trace::default();
+    for (id, at) in [(0u64, 1.0), (1, 11.0)] {
+        trace.requests.push(TraceRequest {
+            id,
+            arrival: SimTime::from_secs_f64(at),
+            input_len: 2000,
+            output_len: 150,
+        });
+    }
+    let build = || {
+        let source = ChunkedTrace::with_horizon(
+            Trace { requests: trace.requests.clone() },
+            5.0,
+            15.0,
+        );
+        ClusterSim::with_source(cfg(), SystemKind::Gyges, Box::new(source))
+    };
+    let reference = sig(&build().run());
+    let mut sim = build();
+    let restored = checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(10.5), &cfg())
+        .expect("run must still be live at 10.5 s (arrival at 11 s pending)");
+    let mut sim = restored;
+    let _ = sim.run_until(None);
+    assert_eq!(sig(&sim.finish()), reference, "segment-boundary resume diverged");
+}
+
+#[test]
+fn resume_through_event_cap_cut_is_byte_identical() {
+    let mut capped = cfg();
+    capped.max_events = 400; // cuts the overload trace long before drain
+    let reference =
+        sig(&ClusterSim::new(capped.clone(), SystemKind::Gyges, overload_trace()).run());
+    assert!(reference.contains("EventCapExceeded"), "reference must actually hit the cap");
+    let mut sim = ClusterSim::new(capped.clone(), SystemKind::Gyges, overload_trace());
+    let restored = checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(0.1), &capped)
+        .expect("cap must not be reached by 0.1 s");
+    let mut sim = restored;
+    let _ = sim.run_until(None);
+    assert_eq!(
+        sig(&sim.finish()),
+        reference,
+        "resume must reproduce the event-cap cut exactly (cap and pending count included)"
+    );
+}
+
+#[test]
+fn resume_of_bursty_production_stream_is_byte_identical() {
+    let spec = ProductionStream {
+        seed: 0xF1627B,
+        qps: 2.0,
+        segment_s: 15.0,
+        horizon_s: 90.0,
+        longs: Some(LongBursts::paper()),
+    };
+    let build = || {
+        let source = StreamSource::new(spec.clone());
+        ClusterSim::with_source(cfg(), SystemKind::Gyges, Box::new(source))
+    };
+    let reference = sig(&build().run());
+    let mut sim = build();
+    // Checkpoint mid-stream: the cursor is (spec, next, next_id) — the
+    // bursty phase state reconstructs from the seed alone.
+    let restored = checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(40.0), &cfg())
+        .expect("90 s bursty stream must still be live at 40 s");
+    let mut sim = restored;
+    let _ = sim.run_until(None);
+    assert_eq!(sig(&sim.finish()), reference, "bursty-stream resume diverged");
+}
+
+#[test]
+fn snapshot_refuses_unsnapshottable_sources_and_config_drift() {
+    // A custom test-double source has no cursor: snapshot must refuse,
+    // not guess.
+    struct Opaque(bool);
+    impl TraceSource for Opaque {
+        fn next_segment(&mut self) -> Option<Result<TraceSegment, String>> {
+            if self.0 {
+                return None;
+            }
+            self.0 = true;
+            Some(Ok(TraceSegment {
+                index: 0,
+                start: SimTime::ZERO,
+                end: SimTime::from_secs_f64(5.0),
+                requests: vec![TraceRequest {
+                    id: 0,
+                    arrival: SimTime::from_secs_f64(1.0),
+                    input_len: 1000,
+                    output_len: 500,
+                }],
+            }))
+        }
+    }
+    let mut sim = ClusterSim::with_source(cfg(), SystemKind::Gyges, Box::new(Opaque(false)));
+    assert_eq!(sim.run_until(Some(SimTime::from_secs_f64(2.0))), RunStatus::Paused);
+    let err = sim.snapshot().unwrap_err();
+    assert!(err.contains("does not support snapshotting"), "{err}");
+
+    // Restoring under a different config is refused by the fingerprint.
+    let mut sim = ClusterSim::new(cfg(), SystemKind::Gyges, transforming_trace());
+    assert_eq!(sim.run_until(Some(SimTime::from_secs_f64(2.0))), RunStatus::Paused);
+    let snap = sim.snapshot().unwrap();
+    let mut other = cfg();
+    other.min_dwell_s += 1.0;
+    let err = ClusterSim::from_snapshot(other, &snap).unwrap_err();
+    assert!(err.contains("fingerprint"), "{err}");
+}
+
+#[test]
+fn checkpointed_runner_survives_kill_and_reassembles_serial_bytes() {
+    let dir = tmp("runner");
+    let out = dir.join("merged.jsonl");
+    let _ = std::fs::remove_dir_all(&dir);
+    let plan = RunPlan {
+        sweep: "fig12-qwen".into(),
+        horizon_s: 30.0,
+        every_s: 5.0,
+        dir: dir.clone(),
+        out: out.clone(),
+        stream_dir: None,
+        stop_after: Some(2),
+    };
+    // Stage 1: "dies" (deliberately) after two checkpoints, mid job 0.
+    match run_checkpointed(&plan).unwrap() {
+        RunOutcome::Paused { checkpoints, next_job, at } => {
+            assert_eq!(checkpoints, 2);
+            assert_eq!(next_job, 0);
+            assert!(at > SimTime::ZERO);
+        }
+        other => panic!("expected a pause, got {other:?}"),
+    }
+    assert!(!out.exists(), "no merged output before completion");
+    // Stage 2: resume to completion.
+    match resume_run(&dir, None).unwrap() {
+        RunOutcome::Completed { rows, .. } => assert_eq!(rows, 3),
+        other => panic!("expected completion, got {other:?}"),
+    }
+    let merged = std::fs::read_to_string(&out).unwrap();
+    let canonical = named_sweep_jobs("fig12-qwen", 30.0).unwrap();
+    let serial = results_to_jsonl(&run_sweep_serial(&canonical));
+    assert_eq!(merged, serial, "checkpoint/kill/resume must reproduce the serial bytes");
+    // Resuming a completed run is an idempotent re-seal.
+    match resume_run(&dir, None).unwrap() {
+        RunOutcome::Completed { rows, .. } => assert_eq!(rows, 3),
+        other => panic!("expected idempotent completion, got {other:?}"),
+    }
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), serial);
+    // A tampered completed-row file is rejected loudly.
+    let victim = dir.join("rows-00000.jsonl");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    bytes[0] ^= 1;
+    std::fs::write(&victim, &bytes).unwrap();
+    let err = resume_run(&dir, None).unwrap_err();
+    assert!(err.contains("payload hash"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn branch_explorer_is_deterministic_and_parent_matches_uninterrupted_run() {
+    let jobs = named_sweep_jobs("fig12-qwen", 30.0).unwrap();
+    let job_index = 2; // qwen2.5-32b under the Gyges policy
+    let job = &jobs[job_index];
+    assert_eq!(job.key, "qwen2.5-32b/gyges");
+    let mut sim = build_job_sim(job);
+    assert_eq!(sim.run_until(Some(SimTime::from_secs_f64(15.0))), RunStatus::Paused);
+    let snap = sim
+        .snapshot_with_context(Some(RunContext {
+            sweep: "fig12-qwen".into(),
+            horizon_s: 30.0,
+            job_index,
+            key: job.key.clone(),
+            stream_dir: None,
+        }))
+        .unwrap();
+    let branches = default_branches();
+    assert!(branches.len() >= 3, "acceptance: at least 3 policy variants");
+    let a = explore(&job.cfg, &snap, &branches, 4).unwrap().to_string();
+    let b = explore(&job.cfg, &snap, &branches, 2).unwrap().to_string();
+    assert_eq!(a, b, "divergence report must be deterministic across runs and thread counts");
+    // The parent branch IS the uninterrupted timeline.
+    let report = gyges::util::Json::parse(&a).unwrap();
+    let parent = report.get("parent").unwrap().to_string();
+    let uninterrupted = outcome_to_result("parent", build_job_sim(job).run()).to_json().to_string();
+    assert_eq!(parent, uninterrupted, "parent continuation must equal the never-paused run");
+    // Branches diverge from the parent in at least one variant (the
+    // whole point of a warm-state ablation).
+    let rows = report.get("branches").unwrap().as_arr().unwrap();
+    assert!(
+        rows.iter().any(|b| b.get("row").map(|r| r.to_string()) != Some(parent.clone())),
+        "at least one branch must diverge from the parent timeline"
+    );
+}

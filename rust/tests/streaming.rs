@@ -163,7 +163,8 @@ fn segment_file_replay_identical_with_peak_memory_bounded_by_one_segment() {
 #[test]
 fn stream_jobs_match_materialized_jobs_and_fingerprint_their_spec() {
     use gyges::experiments::sweep::JobTrace;
-    let spec = ProductionStream { seed: 17, qps: 2.0, segment_s: 15.0, horizon_s: 90.0 };
+    let spec =
+        ProductionStream { seed: 17, qps: 2.0, segment_s: 15.0, horizon_s: 90.0, longs: None };
     let full = Arc::new(spec.materialize());
     let mk = |trace: JobTrace, p: Policy| {
         let key = format!("ps/{}", p.name());
@@ -196,7 +197,8 @@ fn stream_jobs_match_materialized_jobs_and_fingerprint_their_spec() {
 
 #[test]
 fn production_stream_replay_matches_materialized_and_file_replay() {
-    let spec = ProductionStream { seed: 9, qps: 2.0, segment_s: 20.0, horizon_s: 120.0 };
+    let spec =
+        ProductionStream { seed: 9, qps: 2.0, segment_s: 20.0, horizon_s: 120.0, longs: None };
     let whole = ClusterSim::new(cfg(), SystemKind::Gyges, spec.materialize()).run();
     let streamed =
         ClusterSim::with_source(cfg(), SystemKind::Gyges, Box::new(StreamSource::new(spec.clone())))
