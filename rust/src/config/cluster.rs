@@ -56,6 +56,13 @@ pub struct ClusterConfig {
     /// sustained overload. `0` disables the cooldown (retry on every
     /// finish, the pre-PR-2 behaviour).
     pub backlog_retry_cooldown_s: f64,
+    /// Placement attempts before a deferred/requeued request is dropped
+    /// (admission control under capacity loss). `0` retries forever — the
+    /// legacy behaviour, and the default.
+    pub retry_max_attempts: u32,
+    /// First-retry backoff in seconds for a request that failed placement;
+    /// doubles per attempt. `0` disables backoff (the default).
+    pub retry_backoff_base_s: f64,
     /// Continuous-batching token budget per step per worker.
     pub max_batch_tokens: u64,
     /// Maximum concurrent decode slots per instance at TP1.
@@ -81,6 +88,8 @@ impl ClusterConfig {
             scale_down_threshold: super::calib::workload::SCALE_DOWN_LOAD_THRESHOLD,
             min_dwell_s: 5.0,
             backlog_retry_cooldown_s: 0.05,
+            retry_max_attempts: 0,
+            retry_backoff_base_s: 0.0,
             max_batch_tokens: 8192,
             // Decode-batch cap at the Table-1 calibration point: the
             // paper's throughput anchors are measured under its
@@ -135,6 +144,10 @@ impl ClusterConfig {
         cfg.min_dwell_s = doc.f64_or("scheduler.min_dwell_s", cfg.min_dwell_s);
         cfg.backlog_retry_cooldown_s =
             doc.f64_or("scheduler.backlog_retry_cooldown_s", cfg.backlog_retry_cooldown_s);
+        cfg.retry_max_attempts =
+            doc.i64_or("scheduler.retry_max_attempts", i64::from(cfg.retry_max_attempts)) as u32;
+        cfg.retry_backoff_base_s =
+            doc.f64_or("scheduler.retry_backoff_base_s", cfg.retry_backoff_base_s);
         cfg.max_batch_tokens = doc.i64_or("batch.max_tokens", cfg.max_batch_tokens as i64) as u64;
         cfg.max_batch_size = doc.i64_or("batch.max_size", cfg.max_batch_size as i64) as usize;
         cfg.max_events = doc.i64_or("sim.max_events", cfg.max_events as i64) as u64;
@@ -185,6 +198,9 @@ impl ClusterConfig {
         }
         if !self.backlog_retry_cooldown_s.is_finite() || self.backlog_retry_cooldown_s < 0.0 {
             return Err("backlog_retry_cooldown_s must be a finite non-negative number".into());
+        }
+        if !self.retry_backoff_base_s.is_finite() || self.retry_backoff_base_s < 0.0 {
+            return Err("retry_backoff_base_s must be a finite non-negative number".into());
         }
         if self.max_events == 0 {
             return Err("max_events must be positive".into());
@@ -267,6 +283,24 @@ mod tests {
         assert!((cfg.backlog_retry_cooldown_s - 0.25).abs() < 1e-12);
         let mut bad = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
         bad.backlog_retry_cooldown_s = -1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn retry_knobs_parsed_and_validated() {
+        let doc = Doc::parse(
+            r#"
+            [scheduler]
+            retry_max_attempts = 6
+            retry_backoff_base_s = 0.2
+            "#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.retry_max_attempts, 6);
+        assert!((cfg.retry_backoff_base_s - 0.2).abs() < 1e-12);
+        let mut bad = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        bad.retry_backoff_base_s = f64::NAN;
         assert!(bad.validate().is_err());
     }
 

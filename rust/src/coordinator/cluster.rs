@@ -34,6 +34,7 @@ use super::instance::{Instance, ParallelKind, StepKind, TransformState};
 use super::request::ActiveRequest;
 use super::scheduler::{make_policy, ClusterView, HostIndex, LoadIndex, Route, RoutePolicy};
 use crate::config::{ClusterConfig, Policy};
+use crate::faults::{Fault, FaultKind, FaultPlan, RetryPolicy};
 use crate::metrics::{Recorder, RunReport};
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::sim::{EngineModel, EventQueue};
@@ -41,7 +42,7 @@ use crate::snapshot::state::{
     DeferredSnap, EventKindSnap, EventSnap, InstanceSnap, PendingSnap, RecorderSnap, ReqSnap,
     RunContext, SimSnapshot, SimState, TransformSnap,
 };
-use crate::transform::{estimate, Mechanism, TransformExec, TransformPlan};
+use crate::transform::{estimate, Direction, Mechanism, TransformExec, TransformPlan};
 use crate::workload::{ArrivalFeed, Trace, TraceRequest, TraceSource};
 use std::collections::VecDeque;
 use std::fmt;
@@ -122,6 +123,19 @@ enum Event {
     /// Deferred-queue retry deadline: re-route the backlog once the
     /// cooldown after a no-progress drain pass has elapsed.
     BacklogWakeup,
+    /// Injected fault number `idx` of the armed [`FaultPlan`] fires.
+    /// Exactly one fault event is outstanding at a time: handling fault
+    /// `idx` schedules fault `idx + 1`, so an empty plan pushes nothing
+    /// and the event/sequence stream stays byte-identical to an
+    /// unfaulted run.
+    Fault(usize),
+    /// A crashed host's MTTR elapsed: fresh TP1 instances rejoin.
+    HostRestore(usize),
+    /// (instance id, epoch) — a transient stall window closed; stale
+    /// epochs are dropped like Step events.
+    StallEnd(usize, u64),
+    /// A KV-migration link outage window closed.
+    LinkRestore(usize),
 }
 
 /// What the in-flight step of an instance will do when it completes.
@@ -169,6 +183,28 @@ pub struct SimCounters {
     /// Total simulated time deferred requests waited between their first
     /// deferral and their eventual assignment (deferral latency).
     pub backlog_wait: SimDuration,
+    /// Injected [`Event::Fault`] events processed.
+    pub fault_events: u64,
+    /// HostRestore/StallEnd/LinkRestore events processed (fault recovery).
+    pub recovery_events: u64,
+    /// Instances killed by a host crash (their KV cache is lost).
+    pub crashed_instances: u64,
+    /// In-flight requests requeued through the backlog after losing
+    /// their serving state to a crash or rollback (KV gone; they restart
+    /// from scratch but keep their original arrival stamp).
+    pub crash_requeued: u64,
+    /// Requests shed by admission control: the bounded [`RetryPolicy`]
+    /// exhausted its attempts and the request was dropped instead of
+    /// parked again (graceful degradation under capacity < demand).
+    pub dropped: u64,
+    /// Mid-flight transformations aborted and rolled back to `from_tp`
+    /// (fault-charged: the rollback itself costs blocked time).
+    pub transform_rollbacks: u64,
+    /// Transient instance stalls injected (in-flight step discarded).
+    pub stalled_instances: u64,
+    /// ScaleUp routes refused because the target host was degraded or
+    /// its KV-migration link was down (failure-aware policy backstop).
+    pub scale_up_blocked: u64,
 }
 
 /// Wall-clock attribution of the event loop, accumulated only when
@@ -185,6 +221,8 @@ pub struct SimProfile {
     pub step_s: f64,
     pub transform_done_s: f64,
     pub backlog_wakeup_s: f64,
+    /// Fault-injection and recovery events (all four kinds).
+    pub fault_s: f64,
     pub route_s: f64,
     pub kick_s: f64,
     pub drain_backlog_s: f64,
@@ -238,10 +276,16 @@ pub struct SimOutcome {
 
 /// A deferred request parked in the backlog, stamped with its *first*
 /// deferral time so `SimCounters::backlog_wait` measures true deferral
-/// latency across re-queues.
+/// latency across re-queues, plus its [`RetryPolicy`] state: how many
+/// placement attempts have failed and when the exponential-backoff
+/// window reopens. With the legacy unlimited policy both fields are
+/// inert (`attempts` grows but never exhausts; `next_retry` equals the
+/// enqueue time), so unfaulted runs stay byte-identical.
 struct Deferred {
     req: ActiveRequest,
     since: SimTime,
+    attempts: u32,
+    next_retry: SimTime,
 }
 
 /// The cluster simulator.
@@ -281,6 +325,26 @@ pub struct ClusterSim {
     backlog_cooldown_until: SimTime,
     /// A BacklogWakeup event is outstanding in the queue.
     backlog_wakeup_scheduled: bool,
+    /// Armed fault schedule; empty means no fault events ever enter the
+    /// queue (byte-identical to an unfaulted run).
+    fault_plan: FaultPlan,
+    /// Index of the next plan entry to fire (== plan length once spent).
+    fault_cursor: usize,
+    /// Per-host: crashed until this time (ZERO / past = healthy).
+    degraded_until: Vec<SimTime>,
+    /// Per-host: KV-migration link down until this time.
+    link_down_until: Vec<SimTime>,
+    /// Per-host derived flag: degraded OR link down, recomputed at every
+    /// fault/recovery transition event (between events it cannot change),
+    /// and consulted identically by the indexed and scanning routing
+    /// paths via [`ClusterView::blocked_hosts`].
+    host_blocked: Vec<bool>,
+    /// Per-instance: frozen by an injected stall until this time.
+    stall_until: Vec<SimTime>,
+    /// Bounded-retry/backoff policy for backlog parking (from
+    /// `ClusterConfig::retry_max_attempts` / `retry_backoff_base_s`;
+    /// defaults reproduce the legacy retry-forever behaviour).
+    retry: RetryPolicy,
     /// Reused per-decode-step id buffers (allocation-free event loop).
     scratch_stepped: Vec<u64>,
     scratch_finished: Vec<u64>,
@@ -340,6 +404,11 @@ impl ClusterSim {
         let n = instances.len();
         let tp1_index = HostIndex::build(&instances, cfg.hosts);
         let load_index = LoadIndex::build(&instances, &engine);
+        let retry = RetryPolicy {
+            max_attempts: cfg.retry_max_attempts,
+            backoff_base_s: cfg.retry_backoff_base_s,
+        };
+        let hosts = cfg.hosts;
         ClusterSim {
             cfg,
             engine,
@@ -362,6 +431,13 @@ impl ClusterSim {
             profile: SimProfile::default(),
             backlog_cooldown_until: SimTime::ZERO,
             backlog_wakeup_scheduled: false,
+            fault_plan: FaultPlan::empty(),
+            fault_cursor: 0,
+            degraded_until: vec![SimTime::ZERO; hosts],
+            link_down_until: vec![SimTime::ZERO; hosts],
+            host_blocked: vec![false; hosts],
+            stall_until: vec![SimTime::ZERO; n],
+            retry,
             scratch_stepped: Vec::new(),
             scratch_finished: Vec::new(),
             error: None,
@@ -385,6 +461,7 @@ impl ClusterSim {
         self.epochs = vec![0; self.instances.len()];
         self.pending = vec![None; self.instances.len()];
         self.dwell_check_scheduled = vec![false; self.instances.len()];
+        self.stall_until = vec![SimTime::ZERO; self.instances.len()];
         self.tp1_index = HostIndex::build(&self.instances, self.cfg.hosts);
         self.load_index = LoadIndex::build(&self.instances, &self.engine);
     }
@@ -408,6 +485,38 @@ impl ClusterSim {
     /// `Instant::now` calls.
     pub fn enable_profiling(&mut self) {
         self.profiling = true;
+    }
+
+    /// Arm a deterministic fault schedule. Call once, before running:
+    /// the first fault enters the [`EventQueue`] as a first-class event
+    /// and each fault schedules its successor on firing, so an empty
+    /// plan pushes nothing (byte-identical to an unfaulted run) and the
+    /// whole storm replays identically from any snapshot (plan + cursor
+    /// serialize in schema v2).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<(), String> {
+        if !self.fault_plan.is_empty() {
+            return Err("a fault plan is already armed".into());
+        }
+        plan.validate(self.cfg.hosts, self.cfg.gpus_per_host)?;
+        if let Some(first) = plan.faults.first() {
+            self.queue.push(first.at, Event::Fault(0));
+        }
+        self.fault_plan = plan;
+        self.fault_cursor = 0;
+        Ok(())
+    }
+
+    /// The routing view's blocked-host mask: `None` while no fault plan
+    /// is armed (the unfaulted case — policies skip the check entirely,
+    /// preserving byte-identity with pre-fault builds), `Some` once one
+    /// is. Both the indexed and scanning routing paths consult the same
+    /// mask, so decision equivalence carries over.
+    fn blocked_hosts_view(&self) -> Option<&[bool]> {
+        if self.fault_plan.is_empty() {
+            None
+        } else {
+            Some(&self.host_blocked)
+        }
     }
 
     /// Reconcile both incremental indices with instance `iid`'s current
@@ -543,6 +652,30 @@ impl ClusterSim {
                     self.drain_backlog(now);
                     Self::prof_add(t0, &mut self.profile.backlog_wakeup_s);
                 }
+                Event::Fault(idx) => {
+                    self.counters.fault_events += 1;
+                    self.on_fault(now, idx);
+                    Self::prof_add(t0, &mut self.profile.fault_s);
+                }
+                Event::HostRestore(host) => {
+                    self.counters.recovery_events += 1;
+                    self.on_host_restore(now, host);
+                    Self::prof_add(t0, &mut self.profile.fault_s);
+                }
+                Event::StallEnd(iid, epoch) => {
+                    if self.epochs[iid] == epoch && !self.instances[iid].retired {
+                        self.counters.recovery_events += 1;
+                        self.kick(now, iid);
+                    } else {
+                        self.counters.stale_events += 1;
+                    }
+                    Self::prof_add(t0, &mut self.profile.fault_s);
+                }
+                Event::LinkRestore(host) => {
+                    self.counters.recovery_events += 1;
+                    self.on_link_restore(now, host);
+                    Self::prof_add(t0, &mut self.profile.fault_s);
+                }
             }
         }
     }
@@ -597,6 +730,19 @@ impl ClusterSim {
         self.backlog.len()
     }
 
+    /// Hosts currently crashed (pre-restore) — test hook for the
+    /// adversarial mid-crash snapshot coverage.
+    pub fn degraded_hosts(&self) -> usize {
+        let now = self.queue.now();
+        self.degraded_until.iter().filter(|&&until| now < until).count()
+    }
+
+    /// Backlog entries with at least one failed placement attempt —
+    /// test hook for the armed-retry-backoff snapshot coverage.
+    pub fn armed_retries(&self) -> usize {
+        self.backlog.iter().filter(|d| d.attempts > 0).count()
+    }
+
     /// Deadline before which no backlog drain pass runs (ZERO = no
     /// cooldown armed).
     pub fn backlog_cooldown_deadline(&self) -> SimTime {
@@ -646,6 +792,12 @@ impl ClusterSim {
                         EventKindSnap::TransformDone { iid: *iid, epoch: *epoch }
                     }
                     Event::BacklogWakeup => EventKindSnap::BacklogWakeup,
+                    Event::Fault(idx) => EventKindSnap::Fault { idx: *idx },
+                    Event::HostRestore(host) => EventKindSnap::HostRestore { host: *host },
+                    Event::StallEnd(iid, epoch) => {
+                        EventKindSnap::StallEnd { iid: *iid, epoch: *epoch }
+                    }
+                    Event::LinkRestore(host) => EventKindSnap::LinkRestore { host: *host },
                 },
             })
             .collect();
@@ -688,7 +840,12 @@ impl ClusterSim {
         let backlog = self
             .backlog
             .iter()
-            .map(|d| DeferredSnap { req: req_snap(&d.req), since: d.since })
+            .map(|d| DeferredSnap {
+                req: req_snap(&d.req),
+                since: d.since,
+                attempts: d.attempts,
+                next_retry: d.next_retry,
+            })
             .collect();
         let recorder = RecorderSnap {
             rows: self.recorder.records().map(|(id, r)| (id, r.clone())).collect(),
@@ -714,6 +871,11 @@ impl ClusterSim {
                 use_routing_index: self.use_routing_index,
                 backlog_cooldown_until: self.backlog_cooldown_until,
                 backlog_wakeup_scheduled: self.backlog_wakeup_scheduled,
+                fault_plan: self.fault_plan.clone(),
+                fault_cursor: self.fault_cursor,
+                degraded_until: self.degraded_until.clone(),
+                link_down_until: self.link_down_until.clone(),
+                stall_until: self.stall_until.clone(),
                 recorder,
                 feed: self.feed.snapshot()?,
             },
@@ -740,13 +902,34 @@ impl ClusterSim {
             .ok_or_else(|| format!("unknown system {:?} in snapshot", snap.system))?;
         let s = &snap.state;
         let n = s.instances.len();
-        if s.epochs.len() != n || s.pending.len() != n || s.dwell_check_scheduled.len() != n {
+        if s.epochs.len() != n
+            || s.pending.len() != n
+            || s.dwell_check_scheduled.len() != n
+            || s.stall_until.len() != n
+        {
             return Err(format!(
                 "snapshot inconsistency: {n} instances but {} epochs / {} pending / {} dwell \
-                 flags",
+                 flags / {} stall deadlines",
                 s.epochs.len(),
                 s.pending.len(),
-                s.dwell_check_scheduled.len()
+                s.dwell_check_scheduled.len(),
+                s.stall_until.len()
+            ));
+        }
+        if s.degraded_until.len() != cfg.hosts || s.link_down_until.len() != cfg.hosts {
+            return Err(format!(
+                "snapshot inconsistency: {} hosts but {} degraded / {} link deadlines",
+                cfg.hosts,
+                s.degraded_until.len(),
+                s.link_down_until.len()
+            ));
+        }
+        s.fault_plan.validate(cfg.hosts, cfg.gpus_per_host)?;
+        if s.fault_cursor > s.fault_plan.len() {
+            return Err(format!(
+                "snapshot inconsistency: fault cursor {} beyond plan length {}",
+                s.fault_cursor,
+                s.fault_plan.len()
             ));
         }
         let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
@@ -840,14 +1023,48 @@ impl ClusterSim {
                     Event::TransformDone(iid, epoch)
                 }
                 EventKindSnap::BacklogWakeup => Event::BacklogWakeup,
+                EventKindSnap::Fault { idx } => {
+                    if idx >= s.fault_plan.len() {
+                        return Err(format!("fault event references unknown plan entry {idx}"));
+                    }
+                    Event::Fault(idx)
+                }
+                EventKindSnap::HostRestore { host } => {
+                    if host >= cfg.hosts {
+                        return Err(format!("event references unknown host {host}"));
+                    }
+                    Event::HostRestore(host)
+                }
+                EventKindSnap::StallEnd { iid, epoch } => {
+                    if iid >= n {
+                        return Err(format!("event references unknown instance {iid}"));
+                    }
+                    Event::StallEnd(iid, epoch)
+                }
+                EventKindSnap::LinkRestore { host } => {
+                    if host >= cfg.hosts {
+                        return Err(format!("event references unknown host {host}"));
+                    }
+                    Event::LinkRestore(host)
+                }
             };
             entries.push((e.at, e.seq, ev));
         }
         let queue = EventQueue::restore(snap.sim_time, s.queue_seq, entries)?;
         let mut backlog = VecDeque::with_capacity(s.backlog.len());
         for d in &s.backlog {
-            backlog.push_back(Deferred { req: req_back(&d.req)?, since: d.since });
+            backlog.push_back(Deferred {
+                req: req_back(&d.req)?,
+                since: d.since,
+                attempts: d.attempts,
+                next_retry: d.next_retry,
+            });
         }
+        let retry = RetryPolicy {
+            max_attempts: cfg.retry_max_attempts,
+            backoff_base_s: cfg.retry_backoff_base_s,
+        };
+        let hosts = cfg.hosts;
         let tp1_index = HostIndex::build(&instances, cfg.hosts);
         let load_index = LoadIndex::build(&instances, &engine);
         if s.use_routing_index {
@@ -860,7 +1077,7 @@ impl ClusterSim {
                 load_index.debug_verify(&instances, &engine);
             }
         }
-        Ok(ClusterSim {
+        let mut sim = ClusterSim {
             cfg,
             engine,
             system,
@@ -895,10 +1112,21 @@ impl ClusterSim {
             profile: SimProfile::default(),
             backlog_cooldown_until: s.backlog_cooldown_until,
             backlog_wakeup_scheduled: s.backlog_wakeup_scheduled,
+            fault_plan: s.fault_plan.clone(),
+            fault_cursor: s.fault_cursor,
+            degraded_until: s.degraded_until.clone(),
+            link_down_until: s.link_down_until.clone(),
+            host_blocked: vec![false; hosts],
+            stall_until: s.stall_until.clone(),
+            retry,
             scratch_stepped: Vec::new(),
             scratch_finished: Vec::new(),
             error: None,
-        })
+        };
+        // Derived state: the blocked mask is a pure function of the
+        // serialized crash/link windows at the snapshot instant.
+        sim.refresh_host_blocked(snap.sim_time);
+        Ok(sim)
     }
 
     // -----------------------------------------------------------------
@@ -912,15 +1140,16 @@ impl ClusterSim {
         self.route_one(now, req, None);
     }
 
-    /// Route one request — a fresh arrival (`deferred_since: None`) or a
-    /// backlog retry (stamped with its first deferral time). Returns true
-    /// when the request was placed (assign or scale-up), false when it
-    /// (re-)joined the backlog.
+    /// Route one request — a fresh arrival (`deferred: None`) or a
+    /// backlog retry carrying its (first-deferral time, failed-attempt
+    /// count). Returns true when the request was placed (assign or
+    /// scale-up), false when it (re-)joined the backlog or was dropped
+    /// by an exhausted [`RetryPolicy`].
     fn route_one(
         &mut self,
         now: SimTime,
         req: ActiveRequest,
-        deferred_since: Option<SimTime>,
+        deferred: Option<(SimTime, u32)>,
     ) -> bool {
         let (tp1, load) = if self.use_routing_index {
             (Some(&self.tp1_index), Some(&self.load_index))
@@ -934,16 +1163,30 @@ impl ClusterSim {
             now,
             tp1,
             load,
+            blocked_hosts: self.blocked_hosts_view(),
         };
         self.counters.routes += 1;
-        if deferred_since.is_some() {
+        if deferred.is_some() {
             self.counters.backlog_retries += 1;
         }
         let t0 = self.prof_start();
         let route = self.policy.route(&req, &view);
         Self::prof_add(t0, &mut self.profile.route_s);
+        // Failure-aware backstop: even if a policy ignores the blocked
+        // mask, no transformation may target a crashed host or migrate
+        // KV over a dead link.
+        let route = match route {
+            Route::ScaleUp { ref members, .. }
+                if !self.transformation_disabled
+                    && self.host_blocked[self.instances[members[0]].host] =>
+            {
+                self.counters.scale_up_blocked += 1;
+                Route::Defer
+            }
+            r => r,
+        };
         let placed = |sim: &mut ClusterSim, iid: usize, req: ActiveRequest| {
-            if let Some(since) = deferred_since {
+            if let Some((since, _)) = deferred {
                 sim.counters.backlog_wait += now.since(since);
             }
             sim.instances[iid].admit(req);
@@ -962,12 +1205,25 @@ impl ClusterSim {
             }
             // ScaleUp with transformation disabled degrades to Defer.
             Route::ScaleUp { .. } | Route::Defer => {
-                match deferred_since {
-                    None => self.counters.deferred += 1,
-                    Some(_) => self.counters.backlog_requeues += 1,
+                let (since, prior) = match deferred {
+                    None => {
+                        self.counters.deferred += 1;
+                        (now, 0)
+                    }
+                    Some((s, a)) => {
+                        self.counters.backlog_requeues += 1;
+                        (s, a)
+                    }
+                };
+                let attempts = prior + 1;
+                if self.retry.exhausted(attempts) {
+                    // Admission control: shed the request instead of
+                    // livelocking the backlog when capacity < demand.
+                    self.counters.dropped += 1;
+                    return false;
                 }
-                let since = deferred_since.unwrap_or(now);
-                self.backlog.push_back(Deferred { req, since });
+                let next_retry = self.retry.next_retry(now, attempts);
+                self.backlog.push_back(Deferred { req, since, attempts, next_retry });
                 false
             }
         }
@@ -1077,6 +1333,10 @@ impl ClusterSim {
         if inst.retired || inst.stepping {
             return;
         }
+        if now < self.stall_until[iid] {
+            // Frozen by an injected stall; the StallEnd event re-kicks.
+            return;
+        }
         if let Some(ts) = &inst.transforming {
             if let Some(until) = ts.blocked_until {
                 // Blocked (Seesaw): wait for TransformDone.
@@ -1179,7 +1439,13 @@ impl ClusterSim {
         while tries > 0 {
             tries -= 1;
             let Some(d) = self.backlog.pop_front() else { break };
-            if self.route_one(now, d.req, Some(d.since)) {
+            if now < d.next_retry {
+                // Exponential-backoff window still open: rotate the
+                // entry back untouched — not an attempt, not progress.
+                self.backlog.push_back(d);
+                continue;
+            }
+            if self.route_one(now, d.req, Some((d.since, d.attempts))) {
                 progress = true;
             }
         }
@@ -1190,9 +1456,27 @@ impl ClusterSim {
             // Pending future arrivals count as "other events" here: in
             // the pre-streaming loop they sat in the event queue, and a
             // wakeup must keep retrying while anything can still change
-            // cluster state.
-            if cooldown > SimDuration::ZERO && (!self.queue.is_empty() || self.feed.pending()) {
-                self.backlog_cooldown_until = now + cooldown;
+            // cluster state. Under a *bounded* retry policy the backlog
+            // itself keeps the wakeup chain alive even when every other
+            // event source is drained (a fault can empty the fleet with
+            // nothing else queued): each retry pass increments attempt
+            // counts, so the chain terminates in counted drops instead
+            // of an unbounded wakeup loop.
+            if cooldown > SimDuration::ZERO
+                && (!self.queue.is_empty()
+                    || self.feed.pending()
+                    || (self.retry.bounded() && !self.backlog.is_empty()))
+            {
+                let mut deadline = now + cooldown;
+                // If every parked entry is backing off past the
+                // cooldown, waking earlier would be a guaranteed
+                // no-op pass: push the wakeup to first eligibility.
+                if let Some(min_retry) = self.backlog.iter().map(|d| d.next_retry).min() {
+                    if min_retry > deadline {
+                        deadline = min_retry;
+                    }
+                }
+                self.backlog_cooldown_until = deadline;
                 self.schedule_backlog_wakeup();
             }
         }
@@ -1242,10 +1526,20 @@ impl ClusterSim {
             self.reindex(m);
         }
         merged.last_transform = now;
+        // A stalled member's freeze carries into the merged instance
+        // (its workers are the same stalled GPUs); the members' own
+        // StallEnd events went stale with their epoch bump, so re-arm
+        // one for the merged id.
+        let inherited_stall =
+            members.iter().map(|&m| self.stall_until[m]).max().unwrap_or(SimTime::ZERO);
         self.instances.push(merged);
         self.epochs.push(0);
         self.pending.push(None);
         self.dwell_check_scheduled.push(false);
+        self.stall_until.push(inherited_stall);
+        if inherited_stall > now {
+            self.queue.push(inherited_stall, Event::StallEnd(new_id, 0));
+        }
         self.attach_transform(now, new_id, 1, to_tp, avg_util);
         new_id
     }
@@ -1265,6 +1559,7 @@ impl ClusterSim {
             (workers, running, prefill)
         };
         self.reindex(iid);
+        let parent_stall = self.stall_until[iid];
         let n = from_tp as usize;
         let mut new_ids = Vec::with_capacity(n);
         for k in 0..n {
@@ -1275,6 +1570,12 @@ impl ClusterSim {
             self.epochs.push(0);
             self.pending.push(None);
             self.dwell_check_scheduled.push(false);
+            // Split children of a stalled parent stay frozen until the
+            // stall window closes (their GPUs are the stalled ones).
+            self.stall_until.push(parent_stall);
+            if parent_stall > now {
+                self.queue.push(parent_stall, Event::StallEnd(id, 0));
+            }
             new_ids.push(id);
         }
         // Redistribute work round-robin; everything fits by the
@@ -1355,11 +1656,314 @@ impl ClusterSim {
             now,
             tp1,
             load,
+            blocked_hosts: self.blocked_hosts_view(),
         };
         let inst = &self.instances[iid];
         if self.policy.should_scale_down(inst, &view) {
             self.scale_down(now, iid);
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Fault injection (see rust/src/faults/ and PERF.md)
+    // -----------------------------------------------------------------
+
+    /// Dispatch fault `idx` of the armed plan and schedule its successor.
+    fn on_fault(&mut self, now: SimTime, idx: usize) {
+        let Fault { kind, .. } = self.fault_plan.faults[idx];
+        self.fault_cursor = idx + 1;
+        if let Some(next) = self.fault_plan.faults.get(self.fault_cursor) {
+            self.queue.push(next.at, Event::Fault(self.fault_cursor));
+        }
+        match kind {
+            FaultKind::HostCrash { host, mttr } => self.on_host_crash(now, host, mttr),
+            FaultKind::InstanceStall { worker, dur } => self.on_instance_stall(now, worker, dur),
+            FaultKind::TransformAbort { worker } => self.on_transform_abort(now, worker),
+            FaultKind::LinkDown { host, dur } => self.on_link_down(now, host, dur),
+        }
+    }
+
+    /// Recompute the per-host blocked flags from the crash/link windows.
+    /// Called only at fault/recovery transition events — between events
+    /// the flags cannot change, so routing views read exact state.
+    fn refresh_host_blocked(&mut self, now: SimTime) {
+        for h in 0..self.cfg.hosts {
+            self.host_blocked[h] = now < self.degraded_until[h] || now < self.link_down_until[h];
+        }
+    }
+
+    /// A host dies: every instance on it loses its KV cache and weights;
+    /// their in-flight requests restart from scratch through the backlog
+    /// (original arrival stamps preserved, so TTFT/latency metrics charge
+    /// the crash to the request). The host rejoins after `mttr`.
+    fn on_host_crash(&mut self, now: SimTime, host: usize, mttr: SimDuration) {
+        if now < self.degraded_until[host] {
+            return; // already down: nothing left on it to kill
+        }
+        let victims: Vec<usize> = self
+            .instances
+            .iter()
+            .filter(|i| !i.retired && i.host == host)
+            .map(|i| i.id)
+            .collect();
+        for iid in victims {
+            self.crash_instance(now, iid);
+        }
+        self.degraded_until[host] = now + mttr;
+        self.refresh_host_blocked(now);
+        self.queue.push(now + mttr, Event::HostRestore(host));
+        self.drain_backlog(now);
+    }
+
+    /// Kill one instance: retire it, invalidate its in-flight events,
+    /// and requeue whatever it was serving.
+    fn crash_instance(&mut self, now: SimTime, iid: usize) {
+        self.counters.crashed_instances += 1;
+        self.epochs[iid] += 1; // in-flight Step/TransformDone go stale
+        self.pending[iid] = None;
+        self.dwell_check_scheduled[iid] = false;
+        self.stall_until[iid] = SimTime::ZERO;
+        let (running, prefill) = {
+            let inst = &mut self.instances[iid];
+            inst.retired = true;
+            inst.transforming = None;
+            inst.stepping = false;
+            inst.workers.clear();
+            let (running, prefill, _lost_kv) = inst.take_work();
+            (running, prefill)
+        };
+        self.reindex(iid);
+        for r in running.into_iter().chain(prefill) {
+            self.requeue_lost(now, r);
+        }
+    }
+
+    /// A request whose serving state died with its instance: generated
+    /// tokens and KV are gone. Re-register it with the recorder at its
+    /// ORIGINAL arrival (unwinding the lost progress from the totals)
+    /// and send the rebuilt request through the backlog as a fresh
+    /// attempt (`attempts: 0` — a crash is not a placement failure).
+    fn requeue_lost(&mut self, now: SimTime, r: ActiveRequest) {
+        self.counters.crash_requeued += 1;
+        self.recorder.on_arrival(r.id, r.arrival, r.input_len, r.output_len);
+        let req = ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len);
+        self.backlog.push_back(Deferred { req, since: now, attempts: 0, next_retry: now });
+    }
+
+    /// MTTR elapsed: the host's GPUs rejoin as fresh TP1 instances
+    /// (cold — no KV, no running work) through the same `reindex` path
+    /// every other topology mutation uses.
+    fn on_host_restore(&mut self, now: SimTime, host: usize) {
+        if now < self.degraded_until[host] {
+            return; // superseded by a later crash of the same host
+        }
+        for g in 0..self.cfg.gpus_per_host {
+            let id = self.instances.len();
+            let mut inst = Instance::new(id, host, vec![host * self.cfg.gpus_per_host + g], 1);
+            inst.last_transform = now;
+            self.instances.push(inst);
+            self.epochs.push(0);
+            self.pending.push(None);
+            self.dwell_check_scheduled.push(false);
+            self.stall_until.push(SimTime::ZERO);
+            self.reindex(id);
+        }
+        self.refresh_host_blocked(now);
+        self.drain_backlog(now);
+    }
+
+    /// A transient stall freezes the instance owning `worker`: the
+    /// in-flight step is discarded (epoch bump) and no new step is
+    /// scheduled until the window closes. Request state survives intact.
+    fn on_instance_stall(&mut self, now: SimTime, worker: usize, dur: SimDuration) {
+        let Some(iid) = self
+            .instances
+            .iter()
+            .position(|i| !i.retired && i.workers.contains(&worker))
+        else {
+            return; // worker currently unowned (its host is down)
+        };
+        self.counters.stalled_instances += 1;
+        self.epochs[iid] += 1;
+        self.pending[iid] = None;
+        self.instances[iid].stepping = false;
+        self.dwell_check_scheduled[iid] = false;
+        let until = self.stall_until[iid].max(now + dur);
+        self.stall_until[iid] = until;
+        // A blocked (Seesaw) transform's TransformDone went stale with
+        // the epoch bump: extend it past the stall and re-arm it.
+        let mut re_push = None;
+        if let Some(ts) = &mut self.instances[iid].transforming {
+            if let Some(b) = ts.blocked_until {
+                let nb = b.max(until);
+                ts.blocked_until = Some(nb);
+                re_push = Some(nb);
+            }
+        }
+        if let Some(at) = re_push {
+            self.queue.push(at, Event::TransformDone(iid, self.epochs[iid]));
+        }
+        self.queue.push(until, Event::StallEnd(iid, self.epochs[iid]));
+    }
+
+    /// Abort the in-flight (non-blocked, unfinished) transformation on
+    /// the instance owning `worker`, rolling it back to `from_tp`.
+    fn on_transform_abort(&mut self, now: SimTime, worker: usize) {
+        let Some(iid) = self.instances.iter().position(|i| {
+            !i.retired
+                && i.workers.contains(&worker)
+                && i.transforming
+                    .as_ref()
+                    .map(|ts| ts.blocked_until.is_none() && !ts.exec.done())
+                    .unwrap_or(false)
+        }) else {
+            return; // nothing transforming there — the abort fizzles
+        };
+        self.rollback_transform(now, iid);
+    }
+
+    /// Roll a mid-flight transformation back to its `from_tp` topology
+    /// with a charged rollback cost. Direction decides the mechanics:
+    ///
+    /// - **ScaleUp exec** (a merged instance still re-sharding): the
+    ///   merge un-does — split back into TP1 instances, each blocked
+    ///   for the reverse re-shard cost scaled by how far the aborted
+    ///   transform had progressed. Requests that no longer fit a TP1
+    ///   (the long request that motivated the merge) lost their KV
+    ///   mid-migration and retry through the backlog.
+    /// - **ScaleDown exec** (a TP1 still draining its split): the
+    ///   executor restarts at step 0 — the already-transformed layers
+    ///   re-transform, re-charging their visible overhead.
+    fn rollback_transform(&mut self, now: SimTime, iid: usize) {
+        self.counters.transform_rollbacks += 1;
+        let (direction, to_tp, mech, progress) = {
+            let ts = self.instances[iid].transforming.as_ref().expect("caller checked");
+            (ts.exec.plan.direction, ts.exec.plan.to_tp, ts.exec.mech, ts.exec.progress())
+        };
+        match direction {
+            Direction::ScaleDown => {
+                let inst = &mut self.instances[iid];
+                if let Some(ts) = &mut inst.transforming {
+                    let plan = ts.exec.plan.clone();
+                    let pov = ts.exec.per_op_visible();
+                    ts.exec = TransformExec::from_parts(plan, mech, pov, 0);
+                }
+                self.reindex(iid);
+            }
+            Direction::ScaleUp => {
+                let host = self.instances[iid].host;
+                let util = self.instances[iid].load(&self.engine).clamp(0.05, 0.95);
+                self.epochs[iid] += 1;
+                self.pending[iid] = None;
+                self.dwell_check_scheduled[iid] = false;
+                let parent_stall = self.stall_until[iid];
+                self.stall_until[iid] = SimTime::ZERO;
+                let (workers, running, prefill) = {
+                    let inst = &mut self.instances[iid];
+                    inst.retired = true;
+                    inst.transforming = None;
+                    inst.stepping = false;
+                    let workers = std::mem::take(&mut inst.workers);
+                    let (running, prefill, _kv) = inst.take_work();
+                    (workers, running, prefill)
+                };
+                self.reindex(iid);
+                let n = workers.len();
+                let mut new_ids = Vec::with_capacity(n);
+                for k in 0..n {
+                    let id = self.instances.len();
+                    let mut inst = Instance::new(id, host, vec![workers[k]], 1);
+                    inst.last_transform = now;
+                    self.instances.push(inst);
+                    self.epochs.push(0);
+                    self.pending.push(None);
+                    self.dwell_check_scheduled.push(false);
+                    self.stall_until.push(parent_stall);
+                    if parent_stall > now {
+                        self.queue.push(parent_stall, Event::StallEnd(id, 0));
+                    }
+                    new_ids.push(id);
+                }
+                let tp1_max = self.engine.max_seq(1);
+                let mut k = 0usize;
+                for r in running {
+                    if r.final_len() <= tp1_max {
+                        self.instances[new_ids[k % n]].receive_running(r);
+                        k += 1;
+                    } else {
+                        self.requeue_lost(now, r);
+                    }
+                }
+                for r in prefill {
+                    if r.final_len() <= tp1_max {
+                        self.instances[new_ids[k % n]].enqueue_prefill(r);
+                        k += 1;
+                    } else {
+                        self.requeue_lost(now, r);
+                    }
+                }
+                // Charge the rollback: each TP1 blocks for the reverse
+                // re-shard, scaled by the aborted transform's progress
+                // (aborting at 10% un-does less than at 90%).
+                let cost = estimate(&self.cfg.model, &self.cfg.gpu, to_tp, 1, util, mech);
+                let charge = cost.total.scale(progress);
+                let rb_plan = TransformPlan::build(&self.cfg.model, to_tp, 1, 1);
+                let rb_steps = rb_plan.num_steps();
+                for &id in &new_ids {
+                    let until = now + charge;
+                    self.instances[id].transforming = Some(TransformState {
+                        exec: TransformExec::from_parts(
+                            rb_plan.clone(),
+                            mech,
+                            SimDuration::ZERO,
+                            rb_steps,
+                        ),
+                        blocked_until: Some(until),
+                    });
+                    self.queue.push(until, Event::TransformDone(id, 0));
+                    self.reindex(id);
+                }
+                self.drain_backlog(now);
+            }
+        }
+    }
+
+    /// A KV-migration link outage: in-flight (non-blocked) transforms on
+    /// the host abort mid-migration, and no new transformation may
+    /// target the host until the link restores.
+    fn on_link_down(&mut self, now: SimTime, host: usize, dur: SimDuration) {
+        let victims: Vec<usize> = self
+            .instances
+            .iter()
+            .filter(|i| {
+                !i.retired
+                    && i.host == host
+                    && i.transforming
+                        .as_ref()
+                        .map(|ts| ts.blocked_until.is_none() && !ts.exec.done())
+                        .unwrap_or(false)
+            })
+            .map(|i| i.id)
+            .collect();
+        for iid in victims {
+            self.rollback_transform(now, iid);
+        }
+        let until = now + dur;
+        if until > self.link_down_until[host] {
+            self.link_down_until[host] = until;
+            self.queue.push(until, Event::LinkRestore(host));
+        }
+        self.refresh_host_blocked(now);
+    }
+
+    /// The link outage window closed (unless a later outage extended it,
+    /// in which case that outage's own LinkRestore event governs).
+    fn on_link_restore(&mut self, now: SimTime, host: usize) {
+        if now < self.link_down_until[host] {
+            return;
+        }
+        self.refresh_host_blocked(now);
+        self.drain_backlog(now);
     }
 }
 

@@ -106,9 +106,15 @@ impl HostIndex {
 
     /// Host with the most mergeable TP1 instances, requiring at least `n`
     /// (ties resolve to the lowest host id, matching a full rescan).
-    pub fn best_merge_host(&self, n: usize) -> Option<usize> {
+    /// Hosts flagged in `blocked` (crashed / link down) are excluded —
+    /// the scanning fallback consults the same mask, so decision
+    /// equivalence holds under faults too.
+    pub fn best_merge_host(&self, n: usize, blocked: Option<&[bool]>) -> Option<usize> {
         let mut best: Option<(usize, usize)> = None; // (count, host)
         for (host, list) in self.per_host.iter().enumerate() {
+            if blocked.is_some_and(|b| b.get(host).copied().unwrap_or(false)) {
+                continue;
+            }
             if best.map(|(c, _)| list.len() > c).unwrap_or(true) {
                 best = Some((list.len(), host));
             }
@@ -470,6 +476,12 @@ pub struct ClusterView<'a> {
     /// unless `ClusterSim::disable_routing_index` was called (scan
     /// baseline for benches and the equivalence tests).
     pub load: Option<&'a LoadIndex>,
+    /// Per-host failure mask (crashed / KV-migration link down). `None`
+    /// when no fault plan is armed — the unfaulted fast path. Both the
+    /// indexed and scanning merge-candidate paths consult the same mask,
+    /// so no transformation ever targets a degraded host and decision
+    /// equivalence carries over under faults.
+    pub blocked_hosts: Option<&'a [bool]>,
 }
 
 impl<'a> ClusterView<'a> {
@@ -480,6 +492,11 @@ impl<'a> ClusterView<'a> {
 
     fn is_mergeable(i: &Instance) -> bool {
         i.degree == 1 && i.transforming.is_none()
+    }
+
+    /// Is `host` degraded (crashed or its KV-migration link down)?
+    pub fn host_blocked(&self, host: usize) -> bool {
+        self.blocked_hosts.is_some_and(|b| b.get(host).copied().unwrap_or(false))
     }
 
     /// Any live TP>1 instance?
@@ -494,6 +511,9 @@ impl<'a> ClusterView<'a> {
     /// ascending, without allocating (beyond `out`'s retained capacity).
     pub fn tp1_on_host_into(&self, host: usize, out: &mut Vec<usize>) {
         out.clear();
+        if self.host_blocked(host) {
+            return; // no merge candidates on a degraded host
+        }
         match self.tp1 {
             Some(idx) => out.extend_from_slice(idx.mergeable_on(host)),
             None => out.extend(
@@ -509,26 +529,28 @@ impl<'a> ClusterView<'a> {
         v
     }
 
-    /// Host with the most mergeable TP1 instances, requiring at least `n`.
+    /// Host with the most mergeable TP1 instances, requiring at least `n`
+    /// (degraded hosts excluded).
     pub fn best_merge_host(&self, n: usize) -> Option<usize> {
         match self.tp1 {
-            Some(idx) => idx.best_merge_host(n),
+            Some(idx) => idx.best_merge_host(n, self.blocked_hosts),
             None => self.hosts_by_tp1().into_iter().find(|&(_, c)| c >= n).map(|(h, _)| h),
         }
     }
 
     /// Hosts ordered by count of mergeable TP1 instances (desc; ties
-    /// ascend by host id). Allocates — prefer [`Self::best_merge_host`].
+    /// ascend by host id), degraded hosts excluded. Allocates — prefer
+    /// [`Self::best_merge_host`].
     pub fn hosts_by_tp1(&self) -> Vec<(usize, usize)> {
         let mut v: Vec<(usize, usize)> = match self.tp1 {
             Some(idx) => (0..idx.hosts())
-                .filter(|&h| idx.count(h) > 0)
+                .filter(|&h| idx.count(h) > 0 && !self.host_blocked(h))
                 .map(|h| (h, idx.count(h)))
                 .collect(),
             None => {
                 let mut counts = std::collections::BTreeMap::new();
                 for i in self.live() {
-                    if Self::is_mergeable(i) {
+                    if Self::is_mergeable(i) && !self.host_blocked(i.host) {
                         *counts.entry(i.host).or_insert(0usize) += 1;
                     }
                 }
@@ -609,6 +631,11 @@ impl PolicyState {
 /// under threshold, dwell time elapsed, not already transforming.
 pub fn default_scale_down(inst: &Instance, view: &ClusterView<'_>) -> bool {
     if inst.degree <= 1 || inst.transforming.is_some() || inst.retired {
+        return false;
+    }
+    // Failure awareness: a split re-shards KV across the host's GPUs —
+    // never start one while the host is degraded or its link is down.
+    if view.host_blocked(inst.host) {
         return false;
     }
     // Scale-down decomposes all the way back to TP1 ("the TP4 instance can
@@ -1034,6 +1061,7 @@ mod tests {
             now: SimTime::from_secs_f64(100.0),
             tp1: None,
             load: None,
+            blocked_hosts: None,
         }
     }
 
@@ -1144,6 +1172,7 @@ mod tests {
             now: SimTime::from_secs_f64(100.0),
             tp1: None,
             load: None,
+            blocked_hosts: None,
         };
         assert!(default_scale_down(&inst, &v), "idle TP4 should scale down");
         // long request blocks it
@@ -1193,6 +1222,7 @@ mod tests {
             now: SimTime::ZERO,
             tp1: Some(&idx),
             load: None,
+            blocked_hosts: None,
         };
         let scanned = view(&cfg, &engine, &instances);
         assert_eq!(with_idx.tp1_on_host(0), scanned.tp1_on_host(0));
@@ -1215,6 +1245,7 @@ mod tests {
             now: SimTime::ZERO,
             tp1: Some(&idx),
             load: None,
+            blocked_hosts: None,
         };
         let mut buf = Vec::new();
         assert!(pick_merge_group_into(&v, 4, &mut buf));
@@ -1273,6 +1304,7 @@ mod tests {
             now: SimTime::from_secs_f64(100.0),
             tp1: Some(&hidx),
             load: Some(&lidx),
+            blocked_hosts: None,
         };
         let scanning = view(&cfg, &engine, &instances);
         for req in [short_req(1), long_req(), ActiveRequest::new(3, SimTime::ZERO, 20_000, 64)] {

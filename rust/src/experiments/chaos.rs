@@ -1,0 +1,168 @@
+//! The `fig-faults` chaos experiment (`gyges chaos`): goodput, SLO
+//! attainment, and drop rate for Gyges vs RR/LLF/static under a seeded
+//! fault storm.
+//!
+//! Not a paper figure — Gyges is evaluated on healthy clusters — but
+//! the natural robustness companion to Figure 12: the same saturating
+//! short traffic + long bursts workload, now with host crashes,
+//! instance stalls, mid-flight transformation aborts, and KV-migration
+//! link outages injected through the event queue. Every comparator
+//! sees the *identical* storm (one [`FaultPlan`] shared across jobs),
+//! so the only variable is how the policy absorbs it. The whole sweep
+//! is a named sweep (`fig-faults`), so sharding, checkpointed
+//! snapshot/resume, and CI's chaos-verify kill/resume `cmp` all reuse
+//! the standard machinery.
+
+use crate::config::{ClusterConfig, ModelConfig, Policy};
+use crate::coordinator::SystemKind;
+use crate::faults::FaultPlan;
+use crate::util::json::{write_repro_rows, Json};
+use crate::util::table::Table;
+
+use super::sweep::{self, run_sweep};
+use super::{row_json, ShapeEntry, SweepShape, TraceSpec};
+
+/// Seed for both the storm and the workload trace group — fixed so the
+/// experiment (and CI's chaos-verify job) is one deterministic artifact.
+pub const CHAOS_SEED: u64 = 0xC8A05;
+
+/// Fault storm intensity, expected faults per minute across the fleet.
+pub const CHAOS_FAULTS_PER_MIN: f64 = 4.0;
+
+/// The chaos cluster config: paper defaults plus a bounded, backoff-ed
+/// retry policy — under capacity loss the backlog must shed load
+/// (counted drops), not livelock.
+pub fn chaos_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    cfg.retry_max_attempts = 6;
+    cfg.retry_backoff_base_s = 0.2;
+    cfg
+}
+
+/// The storm every `fig-faults` job shares.
+pub fn chaos_plan(cfg: &ClusterConfig, horizon_s: f64) -> FaultPlan {
+    FaultPlan::storm(CHAOS_SEED, horizon_s, cfg.hosts, cfg.gpus_per_host, CHAOS_FAULTS_PER_MIN)
+}
+
+/// The `fig-faults` sweep shape: the Figure-12 workload under one
+/// shared fault storm, across Gyges / RR / LLF and a static (no
+/// transformation) deployment.
+pub fn chaos_shape(horizon_s: f64) -> SweepShape {
+    let cfg = chaos_cfg();
+    let plan = chaos_plan(&cfg, horizon_s);
+    let mut entries: Vec<ShapeEntry> = [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges]
+        .into_iter()
+        .map(|policy| ShapeEntry {
+            key: format!("faults/{}", policy.name()),
+            cfg: cfg.clone(),
+            system: SystemKind::Gyges,
+            policy: Some(policy),
+            gyges_hold: None,
+            faults: Some(plan.clone()),
+            static_deploy: false,
+            trace_group: 0,
+        })
+        .collect();
+    entries.push(ShapeEntry {
+        key: "faults/static".into(),
+        cfg: cfg.clone(),
+        system: SystemKind::Gyges,
+        policy: Some(Policy::Gyges),
+        gyges_hold: None,
+        faults: Some(plan),
+        static_deploy: true,
+        trace_group: 0,
+    });
+    SweepShape {
+        name: "fig-faults".into(),
+        horizon_s,
+        entries,
+        traces: vec![TraceSpec::Fig12 { cfg, seed: CHAOS_SEED }],
+    }
+}
+
+/// Build the `fig-faults` job list for the sweep driver.
+pub fn fig_faults_jobs(horizon_s: f64) -> Vec<super::sweep::SweepJob> {
+    chaos_shape(horizon_s).materialized_jobs()
+}
+
+/// Run the chaos comparison and print/emit the goodput / SLO / drop
+/// table (deterministic JSONL rows under `target/repro/fig-faults`).
+pub fn fig_faults(horizon_s: f64) -> Vec<Json> {
+    let jobs = fig_faults_jobs(horizon_s);
+    let results = run_sweep(&jobs);
+    sweep::warn_on_errors(&results);
+    let mut t = Table::new([
+        "deployment", "goodput (tps)", "SLO attain", "completed", "dropped", "crashes",
+        "requeued", "rollbacks", "blocked scale-ups",
+    ]);
+    let mut rows = Vec::new();
+    for out in &results {
+        let c = &out.counters;
+        let served = out.report.total as f64;
+        let drop_rate = if served > 0.0 { c.dropped as f64 / (served + c.dropped as f64) } else { 0.0 };
+        t.row([
+            out.key.clone(),
+            format!("{:.1}", out.report.throughput_tps),
+            format!("{:.1}%", out.report.slo_attainment * 100.0),
+            format!("{}/{}", out.report.completed, out.report.total),
+            format!("{} ({:.1}%)", c.dropped, drop_rate * 100.0),
+            format!("{}", c.crashed_instances),
+            format!("{}", c.crash_requeued),
+            format!("{}", c.transform_rollbacks),
+            format!("{}", c.scale_up_blocked),
+        ]);
+        let mut row = row_json(&[
+            ("key", Json::from(out.key.as_str())),
+            ("goodput_tps", Json::from(out.report.throughput_tps)),
+            ("slo_attainment", Json::from(out.report.slo_attainment)),
+            ("completed", Json::from(out.report.completed)),
+            ("total", Json::from(out.report.total)),
+            ("dropped", Json::from(c.dropped)),
+            ("drop_rate", Json::from(drop_rate)),
+            ("fault_events", Json::from(c.fault_events)),
+            ("crashed_instances", Json::from(c.crashed_instances)),
+            ("crash_requeued", Json::from(c.crash_requeued)),
+            ("transform_rollbacks", Json::from(c.transform_rollbacks)),
+            ("stalled_instances", Json::from(c.stalled_instances)),
+            ("scale_up_blocked", Json::from(c.scale_up_blocked)),
+        ]);
+        if let Some(e) = &out.error {
+            row.set("error", e.as_str());
+        }
+        rows.push(row);
+    }
+    println!(
+        "fig-faults — goodput/SLO/drops under a seeded fault storm ({CHAOS_FAULTS_PER_MIN} \
+         faults/min, seed {CHAOS_SEED:#x})"
+    );
+    t.print();
+    let _ = write_repro_rows("fig-faults", &rows);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sweep::{results_to_jsonl, run_sweep_serial};
+
+    #[test]
+    fn chaos_shape_builds_and_shares_one_storm() {
+        let shape = chaos_shape(120.0);
+        assert_eq!(shape.name, "fig-faults");
+        assert_eq!(shape.entries.len(), 4);
+        let plans: Vec<&FaultPlan> =
+            shape.entries.iter().map(|e| e.faults.as_ref().expect("every job faulted")).collect();
+        assert!(!plans[0].is_empty(), "storm must inject at least one fault in 120 s");
+        assert!(plans.windows(2).all(|w| w[0] == w[1]), "all comparators share one storm");
+        assert!(shape.entries.iter().filter(|e| e.static_deploy).count() == 1);
+    }
+
+    #[test]
+    fn chaos_jobs_are_deterministic() {
+        let jobs = fig_faults_jobs(60.0);
+        let a = results_to_jsonl(&run_sweep_serial(&jobs));
+        let b = results_to_jsonl(&run_sweep_serial(&jobs));
+        assert_eq!(a, b, "same storm + same trace must reproduce byte-identically");
+    }
+}

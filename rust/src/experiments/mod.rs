@@ -15,6 +15,7 @@
 //! memory per worker) before merging with the same machinery.
 
 pub mod branch;
+pub mod chaos;
 pub mod launch;
 pub mod shard;
 pub mod sweep;
@@ -369,6 +370,11 @@ pub struct ShapeEntry {
     pub system: SystemKind,
     pub policy: Option<Policy>,
     pub gyges_hold: Option<f64>,
+    /// Fault storm armed on this job (`fig-faults`); `None` elsewhere.
+    pub faults: Option<crate::faults::FaultPlan>,
+    /// Pin the deployment static (no transformation) — the chaos
+    /// experiment's "static" comparator.
+    pub static_deploy: bool,
     pub trace_group: usize,
 }
 
@@ -432,6 +438,12 @@ impl SweepShape {
                 if let Some(h) = e.gyges_hold {
                     job = job.with_gyges_hold(h);
                 }
+                if let Some(plan) = &e.faults {
+                    job = job.with_faults(plan.clone());
+                }
+                if e.static_deploy {
+                    job = job.with_transformation_disabled();
+                }
                 job
             })
             .collect()
@@ -453,6 +465,8 @@ pub fn fig12_shape(horizon_s: f64, models: &[ModelConfig]) -> SweepShape {
                 system: SystemKind::Gyges,
                 policy: Some(policy),
                 gyges_hold: None,
+                faults: None,
+                static_deploy: false,
                 trace_group: g,
             });
         }
@@ -551,6 +565,8 @@ pub fn fig13_shape() -> SweepShape {
             system: SystemKind::Gyges,
             policy: Some(policy),
             gyges_hold: None,
+            faults: None,
+            static_deploy: false,
             trace_group: 0,
         })
         .collect();
@@ -620,6 +636,8 @@ pub fn fig14_shape(horizon_s: f64, qps_list: &[f64]) -> SweepShape {
                 system: sys,
                 policy: None,
                 gyges_hold: None,
+                faults: None,
+                static_deploy: false,
                 trace_group: g,
             });
         }
@@ -701,6 +719,8 @@ pub fn ablation_hold_shape(horizon_s: f64) -> SweepShape {
             system: SystemKind::Gyges,
             policy: Some(Policy::Gyges),
             gyges_hold: Some(hold),
+            faults: None,
+            static_deploy: false,
             trace_group: 0,
         })
         .collect();
@@ -738,6 +758,7 @@ pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
         "fig13" => fig13_shape(),
         "fig14" => fig14_shape(horizon_s, &[2.0, 6.0, 10.0]),
         "ablation-hold" => ablation_hold_shape(horizon_s),
+        "fig-faults" => chaos::chaos_shape(horizon_s),
         _ => return None,
     };
     // Registry aliases (fig12-qwen) keep their registry name so segment
@@ -747,7 +768,8 @@ pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
 }
 
 /// Names [`named_sweep_jobs`] understands (usage strings, error text).
-pub const NAMED_SWEEPS: [&str; 5] = ["fig12", "fig12-qwen", "fig13", "fig14", "ablation-hold"];
+pub const NAMED_SWEEPS: [&str; 6] =
+    ["fig12", "fig12-qwen", "fig13", "fig14", "ablation-hold", "fig-faults"];
 
 /// Default horizon (seconds) of a named sweep when the caller passes
 /// none — the same default its canonical figure bench uses, so a

@@ -181,6 +181,8 @@ pub fn job_list_hash(jobs: &[SweepJob]) -> String {
             job.cfg.hosts as u64,
             job.cfg.gpus_per_host as u64,
             job.cfg.max_events,
+            job.cfg.retry_max_attempts as u64,
+            job.cfg.retry_backoff_base_s.to_bits(),
         ] {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
@@ -194,6 +196,17 @@ pub fn job_list_hash(jobs: &[SweepJob]) -> String {
             }
             None => bytes.push(0),
         }
+        // Fault storm and static-deployment pin are part of the job's
+        // identity: a faulted job must never merge with its unfaulted
+        // twin (same key, same trace, very different rows).
+        match &job.faults {
+            Some(plan) => {
+                bytes.push(1);
+                plan.fingerprint_into(&mut bytes);
+            }
+            None => bytes.push(0),
+        }
+        bytes.push(job.disable_transformation as u8);
     }
     hex64(fnv1a(&bytes))
 }

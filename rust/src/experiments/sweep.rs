@@ -15,6 +15,7 @@
 
 use crate::config::{ClusterConfig, Policy};
 use crate::coordinator::{ClusterSim, SimCounters, SystemKind};
+use crate::faults::FaultPlan;
 use crate::metrics::RunReport;
 use crate::util::json::Json;
 use crate::workload::{ChunkedTrace, ProductionStream, SegmentDir, SegmentFileSource};
@@ -110,6 +111,13 @@ pub struct SweepJob {
     /// Override for the Gyges policy's anti-oscillation hold (ablation
     /// A3); `None` keeps the policy default.
     pub gyges_hold: Option<f64>,
+    /// Seeded fault storm armed before the run (`fig-faults` / `gyges
+    /// chaos`); `None` (and an empty plan) leave the simulation byte-
+    /// identical to a fault-free job.
+    pub faults: Option<FaultPlan>,
+    /// Pin the deployment static (no scale-up/down) — the "static"
+    /// comparator in the chaos experiment.
+    pub disable_transformation: bool,
 }
 
 impl SweepJob {
@@ -131,12 +139,35 @@ impl SweepJob {
         policy: Option<Policy>,
         trace: JobTrace,
     ) -> SweepJob {
-        SweepJob { key: key.into(), cfg, system, policy, trace, gyges_hold: None }
+        SweepJob {
+            key: key.into(),
+            cfg,
+            system,
+            policy,
+            trace,
+            gyges_hold: None,
+            faults: None,
+            disable_transformation: false,
+        }
     }
 
     /// Run this job with a custom Gyges long-request hold.
     pub fn with_gyges_hold(mut self, hold_s: f64) -> SweepJob {
         self.gyges_hold = Some(hold_s);
+        self
+    }
+
+    /// Arm a fault plan for this job (validated against the job's
+    /// cluster shape when the simulator is built).
+    pub fn with_faults(mut self, plan: FaultPlan) -> SweepJob {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Pin the deployment static: routing still runs, transformation
+    /// never fires.
+    pub fn with_transformation_disabled(mut self) -> SweepJob {
+        self.disable_transformation = true;
         self
     }
 
@@ -188,7 +219,15 @@ impl SweepResult {
             .set("backlog_retries", self.counters.backlog_retries)
             .set("backlog_requeues", self.counters.backlog_requeues)
             .set("backlog_suppressed", self.counters.backlog_suppressed)
-            .set("backlog_wait_s", self.counters.backlog_wait.as_secs_f64());
+            .set("backlog_wait_s", self.counters.backlog_wait.as_secs_f64())
+            .set("fault_events", self.counters.fault_events)
+            .set("recovery_events", self.counters.recovery_events)
+            .set("crashed_instances", self.counters.crashed_instances)
+            .set("crash_requeued", self.counters.crash_requeued)
+            .set("dropped", self.counters.dropped)
+            .set("transform_rollbacks", self.counters.transform_rollbacks)
+            .set("stalled_instances", self.counters.stalled_instances)
+            .set("scale_up_blocked", self.counters.scale_up_blocked);
         let series: Vec<Json> = self
             .tps_series
             .iter()
@@ -234,6 +273,14 @@ pub fn build_job_sim(job: &SweepJob) -> ClusterSim {
     }
     if let Some(hold) = job.gyges_hold {
         sim.set_gyges_hold(hold);
+    }
+    if job.disable_transformation {
+        sim.disable_transformation();
+    }
+    if let Some(plan) = &job.faults {
+        if !plan.is_empty() {
+            sim.set_fault_plan(plan.clone()).expect("sweep job fault plan must fit its cluster");
+        }
     }
     sim
 }

@@ -1,0 +1,441 @@
+//! Deterministic fault injection: seeded fault plans whose faults flow
+//! through the simulator's [`crate::sim::EventQueue`] as first-class
+//! events, so every determinism property of the simulator carries over —
+//! same seed, same fault storm, byte-identical output, including across
+//! the work-stealing sweep driver and snapshot kill/resume.
+//!
+//! Four failure modes, chosen to exercise exactly the machinery the paper
+//! assumes never fails:
+//! * **Host crash** — every instance on the host loses its KV cache and
+//!   its in-flight requests; the host restarts after an MTTR and its GPUs
+//!   rejoin as fresh TP1 instances.
+//! * **Instance stall** — a transient hang (driver hiccup, network
+//!   partition blip): the in-flight step is discarded and the instance
+//!   freezes for the stall window, then resumes with its state intact.
+//! * **Transform abort** — a mid-flight [`crate::transform::TransformExec`]
+//!   fails and rolls back to `from_tp`, paying a charged rollback cost.
+//! * **Link failure** — the host's interconnect drops: KV-migration
+//!   transforms in flight abort, and no new transformation may target the
+//!   host until the link restores.
+//!
+//! An empty plan injects nothing and pushes no events, so a zero-fault
+//! run is byte-identical to a run without any plan at all (proven by
+//! `tests/faults.rs`).
+
+use crate::sim::clock::{SimDuration, SimTime};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+
+/// One failure mode, with its target and (where applicable) duration.
+///
+/// Crash and link faults target a *host* (hosts are stable identities);
+/// stall and abort faults target a *worker* GPU id (also stable), which is
+/// resolved to whichever live instance owns that GPU when the fault fires
+/// — instance ids churn across merges/splits and would make plans
+/// meaningless as written.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Host loses all instances (KV caches gone, in-flight requests
+    /// requeued); restarts after `mttr`.
+    HostCrash { host: usize, mttr: SimDuration },
+    /// The instance owning `worker` freezes for `dur`; its in-flight step
+    /// is discarded but queued/running requests survive.
+    InstanceStall { worker: usize, dur: SimDuration },
+    /// The in-flight transformation on the instance owning `worker`
+    /// aborts and rolls back to `from_tp` with a charged rollback cost.
+    TransformAbort { worker: usize },
+    /// The host's interconnect drops for `dur`: in-flight KV-migration
+    /// transforms on the host abort, and the host is excluded from new
+    /// transformations until the link restores.
+    LinkDown { host: usize, dur: SimDuration },
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, sorted ascending by fire time.
+///
+/// The simulator keeps a cursor into the plan and at any moment has at
+/// most ONE fault event outstanding in its queue (the next one); firing
+/// it schedules the one after. This keeps the event-queue contents — and
+/// therefore sequence numbering and output bytes — independent of how
+/// many faults the plan holds beyond the cursor, and makes the plan
+/// trivially snapshottable (plan + cursor).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (and pushes no events).
+    pub fn empty() -> FaultPlan {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Check the plan against a cluster shape: targets in range, sorted
+    /// fire times, positive durations.
+    pub fn validate(&self, hosts: usize, gpus_per_host: usize) -> Result<(), String> {
+        let workers = hosts * gpus_per_host;
+        let mut prev = SimTime::ZERO;
+        for (i, f) in self.faults.iter().enumerate() {
+            if f.at < prev {
+                return Err(format!("fault {i}: fire times must ascend"));
+            }
+            prev = f.at;
+            match f.kind {
+                FaultKind::HostCrash { host, mttr } => {
+                    if host >= hosts {
+                        return Err(format!("fault {i}: host {host} out of range ({hosts})"));
+                    }
+                    if mttr == SimDuration::ZERO {
+                        return Err(format!("fault {i}: mttr must be positive"));
+                    }
+                }
+                FaultKind::LinkDown { host, dur } => {
+                    if host >= hosts {
+                        return Err(format!("fault {i}: host {host} out of range ({hosts})"));
+                    }
+                    if dur == SimDuration::ZERO {
+                        return Err(format!("fault {i}: link outage must be positive"));
+                    }
+                }
+                FaultKind::InstanceStall { worker, dur } => {
+                    if worker >= workers {
+                        return Err(format!("fault {i}: worker {worker} out of range ({workers})"));
+                    }
+                    if dur == SimDuration::ZERO {
+                        return Err(format!("fault {i}: stall must be positive"));
+                    }
+                }
+                FaultKind::TransformAbort { worker } => {
+                    if worker >= workers {
+                        return Err(format!("fault {i}: worker {worker} out of range ({workers})"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Generate a seeded fault storm over `[0, horizon_s)`: Poisson fault
+    /// arrivals at `intensity` faults/minute, with a fixed kind mix
+    /// (crash 20%, stall 35%, abort 25%, link 20%) and exponential
+    /// repair/stall/outage tails. Same seed → same storm, always.
+    pub fn storm(
+        seed: u64,
+        horizon_s: f64,
+        hosts: usize,
+        gpus_per_host: usize,
+        intensity: f64,
+    ) -> FaultPlan {
+        assert!(hosts > 0 && gpus_per_host > 0, "storm needs a cluster shape");
+        assert!(intensity > 0.0 && horizon_s > 0.0, "storm needs a positive rate and horizon");
+        let mut rng = Prng::new(seed);
+        let rate_per_s = intensity / 60.0;
+        let workers = hosts * gpus_per_host;
+        let mut t = 0.0;
+        let mut faults = Vec::new();
+        loop {
+            t += rng.exp(rate_per_s);
+            if t >= horizon_s {
+                break;
+            }
+            let at = SimTime::from_secs_f64(t);
+            let roll = rng.f64();
+            let kind = if roll < 0.20 {
+                let host = rng.index(hosts);
+                let mttr = SimDuration::from_secs_f64(5.0 + rng.exp(0.1));
+                FaultKind::HostCrash { host, mttr }
+            } else if roll < 0.55 {
+                let worker = rng.index(workers);
+                let dur = SimDuration::from_secs_f64(0.5 + rng.exp(0.5));
+                FaultKind::InstanceStall { worker, dur }
+            } else if roll < 0.80 {
+                let worker = rng.index(workers);
+                FaultKind::TransformAbort { worker }
+            } else {
+                let host = rng.index(hosts);
+                let dur = SimDuration::from_secs_f64(2.0 + rng.exp(0.25));
+                FaultKind::LinkDown { host, dur }
+            };
+            faults.push(Fault { at, kind });
+        }
+        FaultPlan { faults }
+    }
+
+    /// Serialize for snapshots and the chaos CLI.
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .faults
+            .iter()
+            .map(|f| {
+                let mut o = Json::obj();
+                o.set("at", f.at.0);
+                match f.kind {
+                    FaultKind::HostCrash { host, mttr } => {
+                        o.set("kind", "crash").set("host", host).set("dur", mttr.0);
+                    }
+                    FaultKind::InstanceStall { worker, dur } => {
+                        o.set("kind", "stall").set("worker", worker).set("dur", dur.0);
+                    }
+                    FaultKind::TransformAbort { worker } => {
+                        o.set("kind", "abort").set("worker", worker);
+                    }
+                    FaultKind::LinkDown { host, dur } => {
+                        o.set("kind", "link").set("host", host).set("dur", dur.0);
+                    }
+                }
+                o
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.set("faults", Json::Arr(rows));
+        o
+    }
+
+    /// Parse the [`Self::to_json`] form back.
+    pub fn from_json(v: &Json) -> Result<FaultPlan, String> {
+        let rows = v.req_arr("faults", "fault plan")?;
+        let mut faults = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            let ctx = format!("fault {i}");
+            let at = SimTime(row.req_u64("at", &ctx)?);
+            let kind = match row.req_str("kind", &ctx)? {
+                "crash" => FaultKind::HostCrash {
+                    host: row.req_u64("host", &ctx)? as usize,
+                    mttr: SimDuration(row.req_u64("dur", &ctx)?),
+                },
+                "stall" => FaultKind::InstanceStall {
+                    worker: row.req_u64("worker", &ctx)? as usize,
+                    dur: SimDuration(row.req_u64("dur", &ctx)?),
+                },
+                "abort" => FaultKind::TransformAbort {
+                    worker: row.req_u64("worker", &ctx)? as usize,
+                },
+                "link" => FaultKind::LinkDown {
+                    host: row.req_u64("host", &ctx)? as usize,
+                    dur: SimDuration(row.req_u64("dur", &ctx)?),
+                },
+                other => return Err(format!("{ctx}: unknown kind {other:?}")),
+            };
+            faults.push(Fault { at, kind });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Feed the plan's identity into a fingerprint hasher's byte stream
+    /// (shard-manifest job hashing: a faulted job must never alias its
+    /// unfaulted twin).
+    pub fn fingerprint_into(&self, bytes: &mut Vec<u8>) {
+        bytes.extend_from_slice(&(self.faults.len() as u64).to_le_bytes());
+        for f in &self.faults {
+            bytes.extend_from_slice(&f.at.0.to_le_bytes());
+            match f.kind {
+                FaultKind::HostCrash { host, mttr } => {
+                    bytes.push(1);
+                    bytes.extend_from_slice(&(host as u64).to_le_bytes());
+                    bytes.extend_from_slice(&mttr.0.to_le_bytes());
+                }
+                FaultKind::InstanceStall { worker, dur } => {
+                    bytes.push(2);
+                    bytes.extend_from_slice(&(worker as u64).to_le_bytes());
+                    bytes.extend_from_slice(&dur.0.to_le_bytes());
+                }
+                FaultKind::TransformAbort { worker } => {
+                    bytes.push(3);
+                    bytes.extend_from_slice(&(worker as u64).to_le_bytes());
+                }
+                FaultKind::LinkDown { host, dur } => {
+                    bytes.push(4);
+                    bytes.extend_from_slice(&(host as u64).to_le_bytes());
+                    bytes.extend_from_slice(&dur.0.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Bounded retry with exponential backoff for requeued/deferred requests.
+///
+/// The defaults (`max_attempts == 0`, `backoff_base_s == 0.0`) reproduce
+/// the pre-fault behaviour exactly: unlimited retries, no backoff — every
+/// new branch in the coordinator is a no-op, keeping zero-fault runs
+/// byte-identical. A bounded policy is the simulator's admission-control /
+/// load-shedding mechanism: when capacity < demand, requests exhaust
+/// their attempts and drop (counted) instead of livelocking the backlog.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempts before a request is dropped; `0` means unlimited.
+    pub max_attempts: u32,
+    /// First-retry delay in seconds; doubles per attempt. `0` disables
+    /// backoff (retries are immediately eligible).
+    pub backoff_base_s: f64,
+}
+
+impl RetryPolicy {
+    /// Unlimited retries, no backoff — the legacy behaviour.
+    pub fn unlimited() -> RetryPolicy {
+        RetryPolicy { max_attempts: 0, backoff_base_s: 0.0 }
+    }
+
+    /// Does this policy ever drop a request?
+    pub fn bounded(&self) -> bool {
+        self.max_attempts > 0
+    }
+
+    /// Has a request with `attempts` failed placements exhausted its
+    /// budget?
+    pub fn exhausted(&self, attempts: u32) -> bool {
+        self.max_attempts > 0 && attempts >= self.max_attempts
+    }
+
+    /// Earliest time a request that just failed its `attempts`-th
+    /// placement becomes eligible again: `now + base · 2^(attempts-1)`,
+    /// exponent capped so the duration stays finite.
+    pub fn next_retry(&self, now: SimTime, attempts: u32) -> SimTime {
+        if self.backoff_base_s <= 0.0 || attempts == 0 {
+            return now;
+        }
+        let exp = (attempts - 1).min(10);
+        now + SimDuration::from_secs_f64(self.backoff_base_s * f64::from(1u32 << exp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_valid_and_injects_nothing() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        assert_eq!(p.len(), 0);
+        p.validate(1, 8).unwrap();
+    }
+
+    #[test]
+    fn storm_is_deterministic_and_valid() {
+        let a = FaultPlan::storm(42, 120.0, 2, 8, 6.0);
+        let b = FaultPlan::storm(42, 120.0, 2, 8, 6.0);
+        assert_eq!(a, b, "same seed must give the same storm");
+        assert!(!a.is_empty(), "2 min at 6 faults/min should fire");
+        a.validate(2, 8).unwrap();
+        let c = FaultPlan::storm(43, 120.0, 2, 8, 6.0);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn storm_respects_horizon_and_ascends() {
+        let p = FaultPlan::storm(7, 60.0, 1, 8, 12.0);
+        let horizon = SimTime::from_secs_f64(60.0);
+        let mut prev = SimTime::ZERO;
+        for f in &p.faults {
+            assert!(f.at < horizon);
+            assert!(f.at >= prev);
+            prev = f.at;
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = FaultPlan::storm(99, 90.0, 2, 4, 8.0);
+        let s = p.to_json().to_string();
+        let back = FaultPlan::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(p, back);
+        // Empty plan roundtrips too.
+        let e = FaultPlan::empty();
+        let back = FaultPlan::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(e, back);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(FaultPlan::from_json(&Json::parse(r#"{}"#).unwrap()).is_err());
+        let bad = r#"{"faults":[{"at":5,"kind":"meteor"}]}"#;
+        assert!(FaultPlan::from_json(&Json::parse(bad).unwrap()).is_err());
+        let missing = r#"{"faults":[{"at":5,"kind":"crash","host":0}]}"#;
+        assert!(FaultPlan::from_json(&Json::parse(missing).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_targets() {
+        let p = FaultPlan {
+            faults: vec![Fault {
+                at: SimTime::ZERO,
+                kind: FaultKind::HostCrash { host: 3, mttr: SimDuration::from_secs_f64(5.0) },
+            }],
+        };
+        assert!(p.validate(2, 8).is_err());
+        let p = FaultPlan {
+            faults: vec![Fault {
+                at: SimTime::ZERO,
+                kind: FaultKind::InstanceStall { worker: 16, dur: SimDuration::from_secs_f64(1.0) },
+            }],
+        };
+        assert!(p.validate(2, 8).is_err());
+        let unsorted = FaultPlan {
+            faults: vec![
+                Fault {
+                    at: SimTime::from_secs_f64(2.0),
+                    kind: FaultKind::TransformAbort { worker: 0 },
+                },
+                Fault {
+                    at: SimTime::from_secs_f64(1.0),
+                    kind: FaultKind::TransformAbort { worker: 1 },
+                },
+            ],
+        };
+        assert!(unsorted.validate(2, 8).is_err());
+    }
+
+    #[test]
+    fn fingerprints_distinguish_plans() {
+        let mut a = Vec::new();
+        FaultPlan::storm(1, 60.0, 1, 8, 6.0).fingerprint_into(&mut a);
+        let mut b = Vec::new();
+        FaultPlan::storm(2, 60.0, 1, 8, 6.0).fingerprint_into(&mut b);
+        assert_ne!(a, b);
+        let mut e = Vec::new();
+        FaultPlan::empty().fingerprint_into(&mut e);
+        assert_eq!(e, 0u64.to_le_bytes().to_vec());
+    }
+
+    #[test]
+    fn retry_policy_defaults_are_inert() {
+        let p = RetryPolicy::unlimited();
+        assert!(!p.bounded());
+        assert!(!p.exhausted(1_000_000));
+        let now = SimTime::from_secs_f64(3.0);
+        assert_eq!(p.next_retry(now, 5), now);
+    }
+
+    #[test]
+    fn retry_policy_backoff_doubles_and_caps() {
+        let p = RetryPolicy { max_attempts: 4, backoff_base_s: 0.2 };
+        assert!(p.bounded());
+        assert!(!p.exhausted(3));
+        assert!(p.exhausted(4));
+        let now = SimTime::ZERO;
+        let d1 = p.next_retry(now, 1).since(now).as_secs_f64();
+        let d2 = p.next_retry(now, 2).since(now).as_secs_f64();
+        let d3 = p.next_retry(now, 3).since(now).as_secs_f64();
+        assert!((d1 - 0.2).abs() < 1e-9);
+        assert!((d2 - 0.4).abs() < 1e-9);
+        assert!((d3 - 0.8).abs() < 1e-9);
+        // Exponent cap: huge attempt counts stay finite.
+        let far = p.next_retry(now, 64).since(now).as_secs_f64();
+        assert!((far - 0.2 * 1024.0).abs() < 1e-6);
+    }
+}

@@ -22,6 +22,7 @@ pub mod baselines;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod metrics;
 pub mod transform;
 pub mod workload;

@@ -8,10 +8,12 @@
 //!                     [--horizon SECS] [--seed N] [--config FILE]
 //!   gyges serve-real  [--artifacts DIR] [--shorts N] [--longs N]
 //!   gyges repro       <table1|table2|table3|fig2|fig9|fig10|fig11|fig12|
-//!                      fig13|fig14|static|all> [--horizon SECS]
-//!   gyges sweep-shard <fig12|fig12-qwen|fig13|fig14|ablation-hold>
-//!                     [--shard K/N] [--horizon SECS] [--out-dir DIR]
-//!                     [--stream-dir DIR]
+//!                      fig13|fig14|fig-faults|static|all> [--horizon SECS]
+//!   gyges chaos       [--horizon SECS]   (fig-faults: goodput/SLO/drops
+//!                     for gyges|rr|llf|static under a seeded fault storm)
+//!   gyges sweep-shard <fig12|fig12-qwen|fig13|fig14|ablation-hold|
+//!                      fig-faults> [--shard K/N] [--horizon SECS]
+//!                     [--out-dir DIR] [--stream-dir DIR]
 //!   gyges sweep-merge <sweep> [--dir DIR] [--out FILE]
 //!                     [--expect-horizon SECS]
 //!   gyges trace-gen   <sweep|production> [--horizon SECS] [--segment-s S]
@@ -41,6 +43,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("serve-real") => cmd_serve_real(&args),
         Some("repro") => cmd_repro(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("sweep-shard") => cmd_sweep_shard(&args),
         Some("sweep-merge") => cmd_sweep_merge(&args),
         Some("trace-gen") => gyges::experiments::launch::trace_gen_cli(&args),
@@ -51,8 +54,9 @@ fn main() {
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             eprintln!(
-                "usage: gyges <info|serve|serve-real|repro|sweep-shard|sweep-merge|trace-gen|\
-                 sweep-launch|snapshot|resume|branch|bench-gate> [options]  (see rust/src/main.rs)"
+                "usage: gyges <info|serve|serve-real|repro|chaos|sweep-shard|sweep-merge|\
+                 trace-gen|sweep-launch|snapshot|resume|branch|bench-gate> [options]  \
+                 (see rust/src/main.rs)"
             );
             2
         }
@@ -363,6 +367,7 @@ fn cmd_repro(args: &Args) -> i32 {
         "fig12" => drop(exp::fig12(horizon, &ModelConfig::eval_set())),
         "fig13" => drop(exp::fig13()),
         "fig14" => drop(exp::fig14(horizon, &[2.0, 6.0, 10.0])),
+        "fig-faults" => drop(exp::chaos::fig_faults(horizon)),
         "static" => drop(exp::static_hybrid_compare(horizon)),
         other => eprintln!("unknown experiment {other:?}"),
     };
@@ -377,6 +382,16 @@ fn cmd_repro(args: &Args) -> i32 {
     } else {
         run(what);
     }
+    println!("\nJSON rows written under target/repro/");
+    0
+}
+
+/// The chaos experiment: the Figure-12 workload under a seeded fault
+/// storm, Gyges vs RR/LLF/static (`fig-faults` in the sweep registry).
+fn cmd_chaos(args: &Args) -> i32 {
+    let horizon =
+        args.parsed_or("horizon", gyges::experiments::named_sweep_default_horizon("fig-faults"));
+    gyges::experiments::chaos::fig_faults(horizon);
     println!("\nJSON rows written under target/repro/");
     0
 }

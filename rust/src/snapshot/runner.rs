@@ -145,15 +145,8 @@ impl RunManifest {
         if j.get("kind").and_then(|v| v.as_str()) != Some("snapshot-run") {
             return Err("run manifest: not a snapshot-run document".into());
         }
-        let s = |k: &str| -> Result<String, String> {
-            j.get(k)
-                .and_then(|v| v.as_str())
-                .map(str::to_string)
-                .ok_or_else(|| format!("run manifest: missing {k:?}"))
-        };
-        let f = |k: &str| -> Result<f64, String> {
-            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("run manifest: bad {k:?}"))
-        };
+        let s = |k: &str| j.req_str(k, "run manifest").map(str::to_string);
+        let f = |k: &str| j.req_f64(k, "run manifest");
         let mut done = Vec::new();
         for (k, d) in j
             .get("done")

@@ -1,4 +1,4 @@
-//! Snapshot schema v1: a versioned, self-describing serialization of
+//! Snapshot schema v2: a versioned, self-describing serialization of
 //! complete [`ClusterSim`](crate::coordinator::ClusterSim) state.
 //!
 //! Everything the event loop's next decision can observe is captured:
@@ -9,6 +9,15 @@
 //! rows and TPS buckets, and the arrival feed's replay cursor
 //! ([`crate::workload::SourceCursor`] — a few integers for seeded/
 //! file-backed streams, the remaining requests for in-memory traces).
+//!
+//! Schema v2 adds the fault-injection state introduced alongside
+//! `rust/src/faults/`: the armed [`FaultPlan`] with its cursor, the
+//! per-host degraded/link-down deadlines, the per-instance stall
+//! deadlines, per-backlog-entry retry bookkeeping (`attempts`,
+//! `next_retry`), and four new event kinds (`fault`, `host_restore`,
+//! `stall_end`, `link_restore`) — so a kill/resume stays byte-identical
+//! even mid-fault-storm. v1 documents are rejected (no migration: they
+//! predate the fault subsystem and every v1 producer can re-run).
 //!
 //! What is deliberately NOT serialized, and why that is sound:
 //!
@@ -35,6 +44,7 @@
 use crate::config::ClusterConfig;
 use crate::coordinator::PolicyState;
 use crate::coordinator::SimCounters;
+use crate::faults::FaultPlan;
 use crate::metrics::RequestRecord;
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::util::hash::{fnv1a, hex64};
@@ -42,7 +52,7 @@ use crate::util::json::Json;
 use crate::workload::FeedState;
 
 /// Snapshot schema version this module reads and writes.
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 2;
 
 /// One queued runtime event (arrivals are never queue events — they
 /// live in the feed cursor).
@@ -59,6 +69,11 @@ pub enum EventKindSnap {
     Step { iid: usize, epoch: u64 },
     TransformDone { iid: usize, epoch: u64 },
     BacklogWakeup,
+    /// Index into the armed [`FaultPlan`]'s fault list.
+    Fault { idx: usize },
+    HostRestore { host: usize },
+    StallEnd { iid: usize, epoch: u64 },
+    LinkRestore { host: usize },
 }
 
 /// What an instance's in-flight step will do when it completes.
@@ -82,11 +97,15 @@ pub struct ReqSnap {
     pub phase: String,
 }
 
-/// A backlogged request with its first-deferral stamp.
+/// A backlogged request with its first-deferral stamp and retry
+/// bookkeeping (zero / epoch for requests that never failed a route
+/// under a bounded [`crate::faults::RetryPolicy`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeferredSnap {
     pub req: ReqSnap,
     pub since: SimTime,
+    pub attempts: u32,
+    pub next_retry: SimTime,
 }
 
 /// An in-flight transformation: enough to rebuild the executor exactly
@@ -149,6 +168,16 @@ pub struct SimState {
     pub use_routing_index: bool,
     pub backlog_cooldown_until: SimTime,
     pub backlog_wakeup_scheduled: bool,
+    /// The armed fault plan (empty when no faults were injected) and
+    /// how many of its faults have already fired.
+    pub fault_plan: FaultPlan,
+    pub fault_cursor: usize,
+    /// Per-host crash-recovery deadlines (`ZERO` = healthy).
+    pub degraded_until: Vec<SimTime>,
+    /// Per-host KV-migration-link outage deadlines (`ZERO` = up).
+    pub link_down_until: Vec<SimTime>,
+    /// Per-instance stall deadlines, parallel to `instances`.
+    pub stall_until: Vec<SimTime>,
     pub recorder: RecorderSnap,
     pub feed: FeedState,
 }
@@ -201,6 +230,8 @@ pub fn config_fingerprint(cfg: &ClusterConfig) -> String {
         cfg.scale_down_threshold.to_bits(),
         cfg.min_dwell_s.to_bits(),
         cfg.backlog_retry_cooldown_s.to_bits(),
+        cfg.retry_max_attempts as u64,
+        cfg.retry_backoff_base_s.to_bits(),
         cfg.max_batch_tokens,
         cfg.max_batch_size as u64,
         cfg.max_events,
@@ -234,20 +265,14 @@ fn req_to_json(r: &ReqSnap) -> Json {
 }
 
 fn req_from_json(j: &Json) -> Result<ReqSnap, String> {
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("request: bad {k:?}"))
-    };
+    let num = |k: &str| j.req_u64(k, "request");
     Ok(ReqSnap {
         id: num("id")?,
         arrival: SimTime(num("arrival_ns")?),
         input_len: num("input")?,
         output_len: num("output")?,
         generated: num("generated")?,
-        phase: j
-            .get("phase")
-            .and_then(|v| v.as_str())
-            .ok_or("request: bad phase")?
-            .to_string(),
+        phase: j.req_str("phase", "request")?.to_string(),
     })
 }
 
@@ -269,14 +294,20 @@ fn counters_to_json(c: &SimCounters) -> Json {
         .set("backlog_requeues", c.backlog_requeues)
         .set("backlog_suppressed", c.backlog_suppressed)
         // Exact ticks, not the float seconds the report rows print.
-        .set("backlog_wait_ns", c.backlog_wait.0);
+        .set("backlog_wait_ns", c.backlog_wait.0)
+        .set("fault_events", c.fault_events)
+        .set("recovery_events", c.recovery_events)
+        .set("crashed_instances", c.crashed_instances)
+        .set("crash_requeued", c.crash_requeued)
+        .set("dropped", c.dropped)
+        .set("transform_rollbacks", c.transform_rollbacks)
+        .set("stalled_instances", c.stalled_instances)
+        .set("scale_up_blocked", c.scale_up_blocked);
     o
 }
 
 fn counters_from_json(j: &Json) -> Result<SimCounters, String> {
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("counters: bad {k:?}"))
-    };
+    let num = |k: &str| j.req_u64(k, "counters");
     Ok(SimCounters {
         scale_ups: num("scale_ups")?,
         scale_downs: num("scale_downs")?,
@@ -294,6 +325,14 @@ fn counters_from_json(j: &Json) -> Result<SimCounters, String> {
         backlog_requeues: num("backlog_requeues")?,
         backlog_suppressed: num("backlog_suppressed")?,
         backlog_wait: SimDuration(num("backlog_wait_ns")?),
+        fault_events: num("fault_events")?,
+        recovery_events: num("recovery_events")?,
+        crashed_instances: num("crashed_instances")?,
+        crash_requeued: num("crash_requeued")?,
+        dropped: num("dropped")?,
+        transform_rollbacks: num("transform_rollbacks")?,
+        stalled_instances: num("stalled_instances")?,
+        scale_up_blocked: num("scale_up_blocked")?,
     })
 }
 
@@ -364,20 +403,36 @@ fn event_to_json(e: &EventSnap) -> Json {
         EventKindSnap::BacklogWakeup => {
             o.set("kind", "backlog_wakeup");
         }
+        EventKindSnap::Fault { idx } => {
+            o.set("kind", "fault").set("idx", *idx);
+        }
+        EventKindSnap::HostRestore { host } => {
+            o.set("kind", "host_restore").set("host", *host);
+        }
+        EventKindSnap::StallEnd { iid, epoch } => {
+            o.set("kind", "stall_end").set("iid", *iid).set("epoch", *epoch);
+        }
+        EventKindSnap::LinkRestore { host } => {
+            o.set("kind", "link_restore").set("host", *host);
+        }
     }
     o
 }
 
 fn event_from_json(j: &Json) -> Result<EventSnap, String> {
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("event: bad {k:?}"))
-    };
+    let num = |k: &str| j.req_u64(k, "event");
     let kind = match j.get("kind").and_then(|v| v.as_str()) {
         Some("step") => EventKindSnap::Step { iid: num("iid")? as usize, epoch: num("epoch")? },
         Some("transform_done") => {
             EventKindSnap::TransformDone { iid: num("iid")? as usize, epoch: num("epoch")? }
         }
         Some("backlog_wakeup") => EventKindSnap::BacklogWakeup,
+        Some("fault") => EventKindSnap::Fault { idx: num("idx")? as usize },
+        Some("host_restore") => EventKindSnap::HostRestore { host: num("host")? as usize },
+        Some("stall_end") => {
+            EventKindSnap::StallEnd { iid: num("iid")? as usize, epoch: num("epoch")? }
+        }
+        Some("link_restore") => EventKindSnap::LinkRestore { host: num("host")? as usize },
         other => return Err(format!("event: unknown kind {other:?}")),
     };
     Ok(EventSnap { at: SimTime(num("at_ns")?), seq: num("seq")?, kind })
@@ -396,18 +451,12 @@ fn transform_to_json(t: &TransformSnap) -> Json {
 }
 
 fn transform_from_json(j: &Json) -> Result<TransformSnap, String> {
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("transform: bad {k:?}"))
-    };
+    let num = |k: &str| j.req_u64(k, "transform");
     Ok(TransformSnap {
         from_tp: num("from_tp")?,
         to_tp: num("to_tp")?,
         ops_per_step: num("ops_per_step")? as usize,
-        mech: j
-            .get("mech")
-            .and_then(|v| v.as_str())
-            .ok_or("transform: bad mech")?
-            .to_string(),
+        mech: j.req_str("mech", "transform")?.to_string(),
         per_op_visible: SimDuration(num("per_op_visible_ns")?),
         step: num("step")? as usize,
         blocked_until: match j.get("blocked_until_ns") {
@@ -439,36 +488,21 @@ fn instance_to_json(i: &InstanceSnap) -> Json {
 }
 
 fn instance_from_json(j: &Json) -> Result<InstanceSnap, String> {
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("instance: bad {k:?}"))
-    };
-    let flag = |k: &str| -> Result<bool, String> {
-        j.get(k).and_then(|v| v.as_bool()).ok_or_else(|| format!("instance: bad {k:?}"))
-    };
+    let num = |k: &str| j.req_u64(k, "instance");
+    let flag = |k: &str| j.req_bool(k, "instance");
     let reqs = |k: &str| -> Result<Vec<ReqSnap>, String> {
-        j.get(k)
-            .and_then(|v| v.as_arr())
-            .ok_or_else(|| format!("instance: missing {k:?}"))?
-            .iter()
-            .map(req_from_json)
-            .collect()
+        j.req_arr(k, "instance")?.iter().map(req_from_json).collect()
     };
     Ok(InstanceSnap {
         id: num("id")? as usize,
         host: num("host")? as usize,
         workers: j
-            .get("workers")
-            .and_then(|v| v.as_arr())
-            .ok_or("instance: missing workers")?
+            .req_arr("workers", "instance")?
             .iter()
             .map(|v| v.as_u64().map(|x| x as usize).ok_or("instance: bad worker"))
             .collect::<Result<Vec<_>, _>>()?,
         degree: num("degree")?,
-        kind: j
-            .get("parallel")
-            .and_then(|v| v.as_str())
-            .ok_or("instance: bad parallel")?
-            .to_string(),
+        kind: j.req_str("parallel", "instance")?.to_string(),
         running: reqs("running")?,
         prefill: reqs("prefill")?,
         kv_tokens: num("kv_tokens")?,
@@ -507,10 +541,8 @@ fn recorder_to_json(r: &RecorderSnap) -> Json {
 
 fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
     let mut rows = Vec::new();
-    for row in j.get("rows").and_then(|v| v.as_arr()).ok_or("recorder: missing rows")? {
-        let num = |k: &str| -> Result<u64, String> {
-            row.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("recorder row: bad {k:?}"))
-        };
+    for row in j.req_arr("rows", "recorder")? {
+        let num = |k: &str| row.req_u64(k, "recorder row");
         let opt = |k: &str| -> Result<Option<SimTime>, String> {
             match row.get(k) {
                 None | Some(Json::Null) => Ok(None),
@@ -534,9 +566,7 @@ fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
     Ok(RecorderSnap {
         rows,
         tps_buckets: j
-            .get("tps_buckets")
-            .and_then(|v| v.as_arr())
-            .ok_or("recorder: missing tps_buckets")?
+            .req_arr("tps_buckets", "recorder")?
             .iter()
             .map(|v| v.as_u64().ok_or("recorder: bad tps bucket"))
             .collect::<Result<Vec<_>, _>>()?,
@@ -580,10 +610,14 @@ fn state_to_json(s: &SimState) -> Json {
         .iter()
         .map(|d| {
             let mut o = Json::obj();
-            o.set("req", req_to_json(&d.req)).set("since_ns", d.since.0);
+            o.set("req", req_to_json(&d.req))
+                .set("since_ns", d.since.0)
+                .set("attempts", u64::from(d.attempts))
+                .set("next_retry_ns", d.next_retry.0);
             o
         })
         .collect();
+    let times = |ts: &[SimTime]| Json::Arr(ts.iter().map(|t| Json::from(t.0)).collect());
     let mut o = Json::obj();
     o.set("queue_seq", s.queue_seq)
         .set("events", Json::Arr(s.events.iter().map(event_to_json).collect()))
@@ -601,28 +635,33 @@ fn state_to_json(s: &SimState) -> Json {
         .set("use_routing_index", s.use_routing_index)
         .set("backlog_cooldown_until_ns", s.backlog_cooldown_until.0)
         .set("backlog_wakeup_scheduled", s.backlog_wakeup_scheduled)
+        .set("fault_plan", s.fault_plan.to_json())
+        .set("fault_cursor", s.fault_cursor)
+        .set("degraded_until_ns", times(&s.degraded_until))
+        .set("link_down_until_ns", times(&s.link_down_until))
+        .set("stall_until_ns", times(&s.stall_until))
         .set("recorder", recorder_to_json(&s.recorder))
         .set("feed", s.feed.to_json());
     o
 }
 
 fn state_from_json(j: &Json) -> Result<SimState, String> {
-    let arr = |k: &str| -> Result<&[Json], String> {
-        j.get(k).and_then(|v| v.as_arr()).ok_or_else(|| format!("state: missing {k:?}"))
-    };
-    let flag = |k: &str| -> Result<bool, String> {
-        j.get(k).and_then(|v| v.as_bool()).ok_or_else(|| format!("state: bad {k:?}"))
-    };
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("state: bad {k:?}"))
+    let arr = |k: &str| j.req_arr(k, "state");
+    let flag = |k: &str| j.req_bool(k, "state");
+    let num = |k: &str| j.req_u64(k, "state");
+    let times = |k: &str| -> Result<Vec<SimTime>, String> {
+        arr(k)?
+            .iter()
+            .map(|v| v.as_u64().map(SimTime).ok_or_else(|| format!("state: bad {k:?} entry")))
+            .collect()
     };
     let mut backlog = Vec::new();
     for d in arr("backlog")? {
         backlog.push(DeferredSnap {
             req: req_from_json(d.get("req").ok_or("state: backlog entry missing req")?)?,
-            since: SimTime(
-                d.get("since_ns").and_then(|v| v.as_u64()).ok_or("state: bad since_ns")?,
-            ),
+            since: SimTime(d.req_u64("since_ns", "state")?),
+            attempts: d.req_u64("attempts", "state")? as u32,
+            next_retry: SimTime(d.req_u64("next_retry_ns", "state")?),
         });
     }
     Ok(SimState {
@@ -651,6 +690,11 @@ fn state_from_json(j: &Json) -> Result<SimState, String> {
         use_routing_index: flag("use_routing_index")?,
         backlog_cooldown_until: SimTime(num("backlog_cooldown_until_ns")?),
         backlog_wakeup_scheduled: flag("backlog_wakeup_scheduled")?,
+        fault_plan: FaultPlan::from_json(j.get("fault_plan").ok_or("state: missing fault_plan")?)?,
+        fault_cursor: num("fault_cursor")? as usize,
+        degraded_until: times("degraded_until_ns")?,
+        link_down_until: times("link_down_until_ns")?,
+        stall_until: times("stall_until_ns")?,
         recorder: recorder_from_json(j.get("recorder").ok_or("state: missing recorder")?)?,
         feed: FeedState::from_json(j.get("feed").ok_or("state: missing feed")?)?,
     })

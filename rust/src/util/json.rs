@@ -79,6 +79,31 @@ impl Json {
         }
     }
 
+    /// Required-field accessors for the snapshot/manifest codecs: fetch
+    /// `key` from an object and coerce, with a `"{ctx}: bad {key}"` /
+    /// `"{ctx}: missing {key}"` error naming the record being decoded.
+    /// These replace the near-identical per-codec closures each decoder
+    /// used to carry.
+    pub fn req_u64(&self, key: &str, ctx: &str) -> Result<u64, String> {
+        self.get(key).and_then(|v| v.as_u64()).ok_or_else(|| format!("{ctx}: bad {key:?}"))
+    }
+
+    pub fn req_f64(&self, key: &str, ctx: &str) -> Result<f64, String> {
+        self.get(key).and_then(|v| v.as_f64()).ok_or_else(|| format!("{ctx}: bad {key:?}"))
+    }
+
+    pub fn req_bool(&self, key: &str, ctx: &str) -> Result<bool, String> {
+        self.get(key).and_then(|v| v.as_bool()).ok_or_else(|| format!("{ctx}: bad {key:?}"))
+    }
+
+    pub fn req_str(&self, key: &str, ctx: &str) -> Result<&str, String> {
+        self.get(key).and_then(|v| v.as_str()).ok_or_else(|| format!("{ctx}: missing {key:?}"))
+    }
+
+    pub fn req_arr(&self, key: &str, ctx: &str) -> Result<&[Json], String> {
+        self.get(key).and_then(|v| v.as_arr()).ok_or_else(|| format!("{ctx}: missing {key:?}"))
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -408,6 +433,20 @@ mod tests {
         assert_eq!(Json::Bool(true).as_bool(), Some(true));
         assert_eq!(Json::Null.as_bool(), None);
         assert_eq!(Json::Str("1".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn required_field_accessors() {
+        let v = Json::parse(r#"{"n": 3, "x": 0.5, "s": "hi", "b": true, "a": [1]}"#).unwrap();
+        assert_eq!(v.req_u64("n", "t").unwrap(), 3);
+        assert_eq!(v.req_f64("x", "t").unwrap(), 0.5);
+        assert_eq!(v.req_str("s", "t").unwrap(), "hi");
+        assert!(v.req_bool("b", "t").unwrap());
+        assert_eq!(v.req_arr("a", "t").unwrap().len(), 1);
+        assert_eq!(v.req_u64("x", "t").unwrap_err(), "t: bad \"x\"");
+        assert_eq!(v.req_u64("zz", "t").unwrap_err(), "t: bad \"zz\"");
+        assert_eq!(v.req_str("zz", "t").unwrap_err(), "t: missing \"zz\"");
+        assert_eq!(v.req_arr("n", "t").unwrap_err(), "t: missing \"n\"");
     }
 
     #[test]

@@ -205,19 +205,10 @@ impl SourceCursor {
             .and_then(|v| v.as_str())
             .ok_or("source cursor: missing kind")?;
         let reqs = |key: &str| -> Result<Vec<TraceRequest>, String> {
-            j.get(key)
-                .and_then(|v| v.as_arr())
-                .ok_or_else(|| format!("source cursor: missing {key:?} array"))?
-                .iter()
-                .map(request_from_json)
-                .collect()
+            j.req_arr(key, "source cursor")?.iter().map(request_from_json).collect()
         };
-        let num = |j: &Json, k: &str| -> Result<u64, String> {
-            j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("source cursor: bad {k:?}"))
-        };
-        let float = |j: &Json, k: &str| -> Result<f64, String> {
-            j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| format!("source cursor: bad {k:?}"))
-        };
+        let num = |j: &Json, k: &str| j.req_u64(k, "source cursor");
+        let float = |j: &Json, k: &str| j.req_f64(k, "source cursor");
         Ok(match kind {
             "exhausted" => SourceCursor::Exhausted,
             "materialized" => SourceCursor::Materialized { requests: reqs("requests")? },
@@ -728,11 +719,8 @@ impl SegmentDir {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
         let doc = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
-        let num = |k: &str| -> Result<u64, String> {
-            doc.get(k)
-                .and_then(|v| v.as_u64())
-                .ok_or_else(|| format!("{}: missing or non-integer {k:?}", path.display()))
-        };
+        let ctx = path.display().to_string();
+        let num = |k: &str| doc.req_u64(k, &ctx);
         let version = num("schema_version")?;
         if version != TRACE_SEGMENT_SCHEMA_VERSION {
             return Err(format!(
@@ -740,33 +728,18 @@ impl SegmentDir {
                 path.display()
             ));
         }
-        let label = doc
-            .get("label")
-            .and_then(|v| v.as_str())
-            .ok_or_else(|| format!("{}: missing label", path.display()))?
-            .to_string();
-        let files_json = doc
-            .get("files")
-            .and_then(|v| v.as_arr())
-            .ok_or_else(|| format!("{}: missing files array", path.display()))?;
+        let label = doc.req_str("label", &ctx)?.to_string();
+        let files_json = doc.req_arr("files", &ctx)?;
         let mut files = Vec::with_capacity(files_json.len());
         for f in files_json {
-            let fnum = |k: &str| -> Result<u64, String> {
-                f.get(k)
-                    .and_then(|v| v.as_u64())
-                    .ok_or_else(|| format!("{}: file entry missing {k:?}", path.display()))
-            };
+            let fnum = |k: &str| f.req_u64(k, &ctx);
             files.push(SegmentFileMeta {
                 index: fnum("index")? as usize,
                 start: SimTime(fnum("start_ns")?),
                 end: SimTime(fnum("end_ns")?),
                 first_id: fnum("first_id")?,
                 count: fnum("count")? as usize,
-                payload_hash: f
-                    .get("payload_hash")
-                    .and_then(|v| v.as_str())
-                    .ok_or_else(|| format!("{}: file entry missing payload_hash", path.display()))?
-                    .to_string(),
+                payload_hash: f.req_str("payload_hash", &ctx)?.to_string(),
             });
         }
         let out = SegmentDir {
@@ -835,9 +808,7 @@ fn request_to_json(r: &TraceRequest) -> Json {
 }
 
 fn request_from_json(j: &Json) -> Result<TraceRequest, String> {
-    let num = |k: &str| -> Result<u64, String> {
-        j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("missing or non-integer {k:?}"))
-    };
+    let num = |k: &str| j.req_u64(k, "request");
     Ok(TraceRequest {
         id: num("id")?,
         arrival: SimTime(num("arrival_ns")?),
@@ -1258,21 +1229,14 @@ impl FeedState {
     }
 
     pub fn from_json(j: &Json) -> Result<FeedState, String> {
-        let num = |k: &str| -> Result<u64, String> {
-            j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("feed state: bad {k:?}"))
-        };
+        let num = |k: &str| j.req_u64(k, "feed state");
         Ok(FeedState {
             buf: j
-                .get("buf")
-                .and_then(|v| v.as_arr())
-                .ok_or("feed state: missing buf")?
+                .req_arr("buf", "feed state")?
                 .iter()
                 .map(request_from_json)
                 .collect::<Result<Vec<_>, _>>()?,
-            exhausted: j
-                .get("exhausted")
-                .and_then(|v| v.as_bool())
-                .ok_or("feed state: bad exhausted")?,
+            exhausted: j.req_bool("exhausted", "feed state")?,
             next_index: num("next_index")? as usize,
             window_end: SimTime(num("window_end_ns")?),
             last_arrival: SimTime(num("last_arrival_ns")?),

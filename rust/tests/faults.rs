@@ -1,0 +1,273 @@
+//! Deterministic fault injection guarantees (PR 6):
+//!
+//! 1. A zero-fault [`FaultPlan`] is byte-identical to today's simulator
+//!    for every named paper sweep — the fault subsystem costs nothing
+//!    when disarmed.
+//! 2. A seeded fault storm is byte-identical across the serial driver
+//!    and the work-stealing parallel driver at any thread count —
+//!    property-tested over random storm seeds and workloads.
+//! 3. Crash / recovery semantics: a host crash kills every instance on
+//!    the host, requeues its in-flight requests through the backlog,
+//!    and the restored host rejoins and serves.
+//! 4. Snapshot/resume stays byte-identical at adversarial instants with
+//!    faults armed: paused mid-outage (degraded host serialized) and
+//!    with retry backoff timers armed.
+//! 5. Liveness under total capacity loss: an unserveable-but-retryable
+//!    backlog with a bounded retry policy terminates through counted
+//!    drops, not an event-cap `SimError` (the PR 6 backlog fix).
+
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::coordinator::{ClusterSim, RunStatus, SimOutcome, SystemKind};
+use gyges::experiments::named_sweep_jobs;
+use gyges::experiments::sweep::{
+    results_to_jsonl, run_sweep_parallel, run_sweep_serial, SweepJob,
+};
+use gyges::faults::{Fault, FaultKind, FaultPlan};
+use gyges::sim::{SimDuration, SimTime};
+use gyges::snapshot::state::SimSnapshot;
+use gyges::util::proptest;
+use gyges::util::Prng;
+use gyges::workload::{Trace, TraceRequest};
+use std::sync::Arc;
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+}
+
+/// Paper defaults plus a bounded, backoff-ed retry policy (the chaos
+/// experiment's admission-control posture).
+fn retry_cfg(max_attempts: u32, backoff_base_s: f64) -> ClusterConfig {
+    let mut cfg = cfg();
+    cfg.retry_max_attempts = max_attempts;
+    cfg.retry_backoff_base_s = backoff_base_s;
+    cfg
+}
+
+/// Full observable state of one run (everything a sweep row serializes).
+fn sig(out: &SimOutcome) -> String {
+    format!(
+        "{}|{:?}|{:?}|{:?}",
+        out.report.to_json(),
+        out.counters,
+        out.recorder.tps_series(),
+        out.error
+    )
+}
+
+/// Pause `sim` at `at`, roundtrip its state through the JSON envelope,
+/// and return the restored simulator — or `None` if the run finished
+/// before the checkpoint instant.
+fn checkpoint_roundtrip(
+    sim: &mut ClusterSim,
+    at: SimTime,
+    cfg: &ClusterConfig,
+) -> Option<ClusterSim> {
+    match sim.run_until(Some(at)) {
+        RunStatus::Done => None,
+        RunStatus::Paused => {
+            let snap = sim.snapshot().expect("paused run must snapshot");
+            let text = snap.to_string_pretty();
+            let parsed = SimSnapshot::parse(&text).expect("snapshot must parse");
+            assert_eq!(parsed, snap, "JSON roundtrip must be lossless");
+            Some(ClusterSim::from_snapshot(cfg.clone(), &parsed).expect("restore must succeed"))
+        }
+    }
+}
+
+/// Arming an EMPTY fault plan must not perturb a single byte of any
+/// named paper sweep — proves the fault subsystem is free when unused
+/// (the ISSUE 6 zero-fault acceptance criterion for fig12/13/14).
+#[test]
+fn zero_fault_plan_is_byte_identical_for_named_sweeps() {
+    for name in ["fig12", "fig13", "fig14"] {
+        let jobs = named_sweep_jobs(name, 30.0).expect("known sweep name");
+        let plain = results_to_jsonl(&run_sweep_serial(&jobs));
+        let armed: Vec<SweepJob> =
+            jobs.iter().cloned().map(|j| j.with_faults(FaultPlan::empty())).collect();
+        let faulted = results_to_jsonl(&run_sweep_serial(&armed));
+        assert_eq!(
+            plain, faulted,
+            "{name}: an empty FaultPlan must leave the sweep byte-identical"
+        );
+    }
+}
+
+/// Same seed → same storm → same bytes, regardless of which sweep
+/// driver runs the jobs or how many threads steal work.
+#[test]
+fn prop_fault_storms_are_deterministic_across_sweep_threads() {
+    proptest::forall(
+        "fault storm determinism",
+        proptest::Config { cases: 5, seed: 0xFA_017 },
+        |rng: &mut Prng| {
+            let storm_seed = rng.next();
+            let trace_seed = rng.next();
+            let horizon = 20.0 + rng.f64() * 20.0;
+            (storm_seed, trace_seed, horizon)
+        },
+        |&(storm_seed, trace_seed, horizon)| {
+            let cfg = retry_cfg(6, 0.2);
+            let plan =
+                FaultPlan::storm(storm_seed, horizon, cfg.hosts, cfg.gpus_per_host, 6.0);
+            let trace = Arc::new(Trace::hybrid_paper(trace_seed, horizon));
+            let jobs: Vec<SweepJob> =
+                [Policy::Gyges, Policy::RoundRobin, Policy::LeastLoadFirst]
+                    .into_iter()
+                    .map(|p| {
+                        SweepJob::new(
+                            format!("storm/{}", p.name()),
+                            cfg.clone(),
+                            SystemKind::Gyges,
+                            Some(p),
+                            trace.clone(),
+                        )
+                        .with_faults(plan.clone())
+                    })
+                    .collect();
+            let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+            for threads in [2usize, 4] {
+                let parallel = results_to_jsonl(&run_sweep_parallel(&jobs, threads));
+                gyges::prop_assert!(
+                    parallel == serial,
+                    "storm {storm_seed:#x} / trace {trace_seed:#x} diverged at {threads} \
+                     threads:\n  serial:   {serial}\n  parallel: {parallel}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A host crash mid-run kills the host's instances, requeues their
+/// in-flight work through the backlog, and the MTTR restore rejoins the
+/// host — the run still completes requests on the other side.
+#[test]
+fn host_crash_requeues_in_flight_and_recovery_rejoins() {
+    let mut plan = FaultPlan::empty();
+    plan.faults.push(Fault {
+        at: SimTime::from_secs_f64(10.0),
+        kind: FaultKind::HostCrash { host: 0, mttr: SimDuration::from_secs_f64(5.0) },
+    });
+    let mut sim = ClusterSim::new(cfg(), SystemKind::Gyges, Trace::hybrid_paper(0xFEED, 30.0));
+    sim.set_fault_plan(plan).expect("plan must fit the cluster");
+    let out = sim.run();
+    assert!(out.error.is_none(), "faulted run must terminate cleanly: {:?}", out.error);
+    let c = &out.counters;
+    assert_eq!(c.fault_events, 1, "exactly one injected fault: {c:?}");
+    assert!(c.crashed_instances > 0, "the crash must kill instances: {c:?}");
+    assert!(c.crash_requeued > 0, "in-flight work at t=10s must requeue: {c:?}");
+    assert_eq!(c.recovery_events, 1, "the MTTR restore must fire: {c:?}");
+    assert_eq!(c.dropped, 0, "unlimited retry never sheds load: {c:?}");
+    assert!(
+        out.report.completed == out.report.total,
+        "every request must eventually finish once the host rejoins: {}/{}",
+        out.report.completed,
+        out.report.total
+    );
+}
+
+/// Snapshot/resume with faults ARMED: checkpoints landing mid-outage
+/// (host degraded, KV lost) and inside retry-backoff windows must all
+/// resume to the uninterrupted faulted run's exact bytes — and the walk
+/// must actually visit both adversarial states.
+#[test]
+fn resume_with_armed_faults_is_byte_identical() {
+    let cfg = retry_cfg(6, 0.2);
+    let plan = || {
+        let mut p = FaultPlan::empty();
+        p.faults.push(Fault {
+            at: SimTime::from_secs_f64(4.0),
+            kind: FaultKind::TransformAbort { worker: 0 },
+        });
+        p.faults.push(Fault {
+            at: SimTime::from_secs_f64(10.0),
+            kind: FaultKind::HostCrash { host: 0, mttr: SimDuration::from_secs_f64(5.0) },
+        });
+        p.faults.push(Fault {
+            at: SimTime::from_secs_f64(16.0),
+            kind: FaultKind::InstanceStall { worker: 2, dur: SimDuration::from_secs_f64(1.0) },
+        });
+        p.faults.push(Fault {
+            at: SimTime::from_secs_f64(18.0),
+            kind: FaultKind::LinkDown { host: 0, dur: SimDuration::from_secs_f64(2.0) },
+        });
+        p
+    };
+    let build = || {
+        let mut sim =
+            ClusterSim::new(cfg.clone(), SystemKind::Gyges, Trace::hybrid_paper(0xC0FFEE, 25.0));
+        sim.set_fault_plan(plan()).expect("plan must fit the cluster");
+        sim
+    };
+    let reference = sig(&build().run());
+    let mut sim = build();
+    let (mut saw_degraded, mut saw_retry) = (false, false);
+    let mut t = 0.5;
+    while t < 400.0 {
+        match checkpoint_roundtrip(&mut sim, SimTime::from_secs_f64(t), &cfg) {
+            Some(restored) => sim = restored,
+            None => break,
+        }
+        saw_degraded |= sim.degraded_hosts() > 0;
+        saw_retry |= sim.armed_retries() > 0;
+        t += 0.5;
+    }
+    let _ = sim.run_until(None);
+    let resumed = sig(&sim.finish());
+    assert!(saw_degraded, "walk must checkpoint mid-outage (host 0 down 10s–15s)");
+    assert!(saw_retry, "walk must checkpoint with retry backoff timers armed");
+    assert_eq!(resumed, reference, "armed-fault resume diverged from the uninterrupted run");
+}
+
+/// PR 6 backlog-liveness regression: when a crash removes ALL capacity
+/// (hosts=1) and the MTTR is effectively forever, a bounded retry
+/// policy must walk every backlog entry to attempt-exhaustion and drop
+/// it — terminating the run with counted drops instead of spinning
+/// wakeup-only events into the event cap.
+#[test]
+fn total_capacity_loss_with_bounded_retry_terminates_with_drops() {
+    let cfg = retry_cfg(3, 0.1);
+    let mut trace = Trace::default();
+    for i in 0..24u64 {
+        trace.requests.push(TraceRequest {
+            id: 0,
+            arrival: SimTime::from_secs_f64(i as f64 * 0.25),
+            input_len: 2000,
+            output_len: 2000, // long decode: plenty in flight at the crash
+        });
+    }
+    trace.sort_and_renumber();
+    let mut plan = FaultPlan::empty();
+    plan.faults.push(Fault {
+        at: SimTime::from_secs_f64(6.5),
+        kind: FaultKind::HostCrash { host: 0, mttr: SimDuration::from_secs_f64(100_000.0) },
+    });
+    let mut sim = ClusterSim::new(cfg.clone(), SystemKind::Gyges, trace);
+    sim.disable_transformation(); // keep all 8 TP1s so the kill count is exact
+    sim.set_fault_plan(plan).expect("plan must fit the cluster");
+    let out = sim.run();
+    assert!(
+        out.error.is_none(),
+        "must terminate via counted drops, not an event-cap SimError: {:?}",
+        out.error
+    );
+    let c = &out.counters;
+    assert_eq!(
+        c.crashed_instances as usize,
+        cfg.gpus_per_host,
+        "hosts=1 crash is total fleet loss: {c:?}"
+    );
+    assert!(c.crash_requeued > 0, "in-flight work must requeue before dropping: {c:?}");
+    assert!(c.dropped > 0, "bounded retry must shed the unserveable backlog: {c:?}");
+    assert!(
+        out.report.completed < out.report.total,
+        "dropped requests must show up as incomplete: {}/{}",
+        out.report.completed,
+        out.report.total
+    );
+    assert_eq!(
+        c.dropped + out.report.completed as u64,
+        out.report.total as u64,
+        "every admitted request is either completed or counted dropped: {c:?}"
+    );
+}
