@@ -1,11 +1,17 @@
 //! Perf harness for the cluster-simulator hot paths. Emits a
-//! machine-readable `BENCH_sim.json` (schema v2, documented in PERF.md)
+//! machine-readable `BENCH_sim.json` (schema v3, documented in PERF.md)
 //! so the events/sec and sweep wall-time trajectory is tracked from PR 1
 //! onward.
 //!
 //!   cargo bench --bench bench_sim [-- --out BENCH_sim.json
 //!       --requests 10000 --sweep-horizon 120 --samples 3
-//!       --fleet-hosts 32 --route-requests 20000]
+//!       --fleet-hosts 32 --route-requests 20000
+//!       --queue calendar --curve-hosts 32,128,512,1250
+//!       --curve-horizon 60 --curve-qps-per-instance 0.25]
+//!
+//! The 10k-instance hour-horizon point from the issue is
+//! `--curve-hosts 1250 --curve-horizon 3600` (1250 hosts × 8 GPUs);
+//! CI runs it from the scaling-curve-10k workflow_dispatch job.
 //!
 //! Measures:
 //!  1. Single-threaded events/sec replaying a ~10k-request production
@@ -24,7 +30,7 @@ use gyges::coordinator::{run_system, ClusterSim, SimOutcome, SystemKind};
 use gyges::experiments::sweep::{
     results_to_jsonl, run_sweep_parallel, run_sweep_serial, sweep_threads, SweepJob,
 };
-use gyges::sim::SimTime;
+use gyges::sim::{set_queue_backend, QueueBackend, SimTime};
 use gyges::util::json::Json;
 use gyges::util::Args;
 use gyges::workload::{Trace, TraceRequest};
@@ -83,6 +89,47 @@ fn outcome_fingerprint(out: &SimOutcome) -> (String, gyges::coordinator::SimCoun
     (out.report.to_json().to_string(), out.counters)
 }
 
+/// Fleet-size scaling curve: one full simulator run per host count, all
+/// shape knobs held fixed so points are comparable across bench runs.
+/// Load scales with the fleet (`qps_per_instance × instances`) so every
+/// point exercises routing + stepping at a proportional arrival rate.
+fn scaling_curve(hosts_list: &[usize], horizon_s: f64, qps_per_instance: f64) -> Json {
+    let mut points = Vec::new();
+    for &hosts in hosts_list {
+        let mut cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        cfg.hosts = hosts;
+        let instances = cfg.total_gpus();
+        let qps = qps_per_instance * instances as f64;
+        let trace = Trace::production(0x5CA1E, qps, horizon_s);
+        let requests = trace.len();
+        println!("  {instances} instances ({hosts} hosts): {requests} requests at {qps:.0} qps");
+        let mut sim = ClusterSim::new(cfg, SystemKind::Gyges, trace);
+        let t0 = Instant::now();
+        let out = sim.run();
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(out.error.is_none(), "scaling-curve point {hosts} hosts hit the event cap");
+        let eps = out.counters.events as f64 / wall;
+        println!(
+            "    {wall:.3} s wall, {} events → {eps:.0} events/s ({} completed)",
+            out.counters.events, out.report.completed
+        );
+        let mut p = Json::obj();
+        p.set("hosts", hosts)
+            .set("instances", instances)
+            .set("requests", requests)
+            .set("events", out.counters.events)
+            .set("wall_s", wall)
+            .set("events_per_sec", eps);
+        points.push(p);
+    }
+    let mut curve = Json::obj();
+    curve
+        .set("qps_per_instance", qps_per_instance)
+        .set("horizon_s", horizon_s)
+        .set("points", Json::Arr(points));
+    curve
+}
+
 fn main() {
     let args = Args::from_env();
     let out_path = args.get_or("out", "BENCH_sim.json");
@@ -91,6 +138,21 @@ fn main() {
     let samples = args.parsed_or("samples", 3usize).max(1);
     let fleet_hosts = args.parsed_or("fleet-hosts", 32usize).max(1);
     let route_requests = args.parsed_or("route-requests", 20_000usize).max(100);
+    let queue = args.get_or("queue", "calendar");
+    let backend = QueueBackend::by_name(&queue).unwrap_or_else(|| {
+        eprintln!("unknown --queue backend {queue:?} (expected calendar|heap)");
+        std::process::exit(2);
+    });
+    set_queue_backend(backend);
+    let curve_hosts: Vec<usize> = args
+        .get_or("curve-hosts", "32,128")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("bad --curve-hosts entry {s:?}")))
+        .collect();
+    let curve_horizon = args.parsed_or("curve-horizon", 60.0f64);
+    let curve_qps = args.parsed_or("curve-qps-per-instance", 0.25f64);
+    println!("event queue backend: {}", backend.name());
 
     // ---- 1. single-threaded events/sec on a ~10k-request trace --------
     // Production lengths at 10 qps: ~1000 s of simulated traffic ≈ 10k.
@@ -243,7 +305,14 @@ fn main() {
         jobs.len()
     );
 
-    // ---- 4. machine-readable report -----------------------------------
+    // ---- 4. fleet-size scaling curve ----------------------------------
+    println!(
+        "\nscaling curve: hosts {:?}, horizon {curve_horizon}s, {curve_qps} qps/instance",
+        curve_hosts
+    );
+    let curve = scaling_curve(&curve_hosts, curve_horizon, curve_qps);
+
+    // ---- 5. machine-readable report -----------------------------------
     let mut single = Json::obj();
     single
         .set("trace_requests", trace.len())
@@ -265,12 +334,14 @@ fn main() {
         .set("speedup", speedup)
         .set("byte_identical", true);
     let mut root = Json::obj();
-    root.set("schema_version", 2u64)
+    root.set("schema_version", 3u64)
         .set("bench", "bench_sim")
         .set("measured", true)
+        .set("queue_backend", backend.name())
         .set("single_thread", single)
         .set("routing_microbench", micro)
-        .set("sweep", sweep);
+        .set("sweep", sweep)
+        .set("scaling_curve", curve);
     std::fs::write(&out_path, format!("{root}\n"))
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
     println!("\nwrote {out_path}");

@@ -44,6 +44,7 @@ fn main() {
         now: SimTime::ZERO,
         tp1: Some(&index),
         load: Some(&load),
+        blocked_hosts: None,
     };
     let r = Bench::new("gyges.route(short, 64 instances)")
         .iters(2000)

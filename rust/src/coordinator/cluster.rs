@@ -348,6 +348,13 @@ pub struct ClusterSim {
     /// Reused per-decode-step id buffers (allocation-free event loop).
     scratch_stepped: Vec<u64>,
     scratch_finished: Vec<u64>,
+    /// Reused request-transfer buffers for merge/split/crash paths
+    /// (drained empty after every use; the capacity is the pool). See
+    /// PERF.md arena rules: requests themselves live inline in the
+    /// instances' ring buffers, so reusing the transfer scratch removes
+    /// the last per-transform allocation.
+    pool_running: Vec<ActiveRequest>,
+    pool_prefill: Vec<ActiveRequest>,
     /// Terminal failure of this run, set by the loop (event cap). A
     /// field rather than a `run`-local so a paused run ([`ClusterSim::
     /// run_until`]) carries it to [`ClusterSim::finish`].
@@ -440,6 +447,8 @@ impl ClusterSim {
             retry,
             scratch_stepped: Vec::new(),
             scratch_finished: Vec::new(),
+            pool_running: Vec::new(),
+            pool_prefill: Vec::new(),
             error: None,
         }
     }
@@ -1121,6 +1130,8 @@ impl ClusterSim {
             retry,
             scratch_stepped: Vec::new(),
             scratch_finished: Vec::new(),
+            pool_running: Vec::new(),
+            pool_prefill: Vec::new(),
             error: None,
         };
         // Derived state: the blocked mask is a pure function of the
@@ -1503,10 +1514,12 @@ impl ClusterSim {
         let mut merged = Instance::new(new_id, host, Vec::new(), to_tp);
         merged.kind = self.system.parallel_kind();
         let mut avg_util = 0.0;
+        let mut running = std::mem::take(&mut self.pool_running);
+        let mut prefill = std::mem::take(&mut self.pool_prefill);
         for &m in &members {
             assert_eq!(self.instances[m].host, host, "cross-host merge");
             assert_eq!(self.instances[m].degree, 1, "only TP1 members merge");
-            // Sample utilization BEFORE take_work() drains the member (as
+            // Sample utilization BEFORE the drain empties the member (as
             // scale_down already does): the merge's transformation cost is
             // charged at the members' real KV occupancy, not the 0.05
             // clamp floor the drained-then-sampled seed ordering produced.
@@ -1514,17 +1527,18 @@ impl ClusterSim {
             let inst = &mut self.instances[m];
             inst.retired = true;
             merged.workers.extend(inst.workers.drain(..));
-            let (running, prefill, kv) = inst.take_work();
-            merged.kv_tokens += kv;
-            for r in running {
+            merged.kv_tokens += inst.drain_work_into(&mut running, &mut prefill);
+            for r in running.drain(..) {
                 merged.enqueue_running(r);
             }
-            for r in prefill {
+            for r in prefill.drain(..) {
                 merged.enqueue_prefill(r);
             }
             self.epochs[m] += 1; // invalidate in-flight events
             self.reindex(m);
         }
+        self.pool_running = running;
+        self.pool_prefill = prefill;
         merged.last_transform = now;
         // A stalled member's freeze carries into the merged instance
         // (its workers are the same stalled GPUs); the members' own
@@ -1550,13 +1564,15 @@ impl ClusterSim {
         let from_tp = self.instances[iid].degree;
         let host = self.instances[iid].host;
         let util = self.instances[iid].load(&self.engine);
-        let (workers, running, prefill) = {
+        let mut running = std::mem::take(&mut self.pool_running);
+        let mut prefill = std::mem::take(&mut self.pool_prefill);
+        let workers = {
             let inst = &mut self.instances[iid];
             inst.retired = true;
             self.epochs[iid] += 1;
             let workers = std::mem::take(&mut inst.workers);
-            let (running, prefill, _stale_kv) = inst.take_work();
-            (workers, running, prefill)
+            let _stale_kv = inst.drain_work_into(&mut running, &mut prefill);
+            workers
         };
         self.reindex(iid);
         let parent_stall = self.stall_until[iid];
@@ -1581,12 +1597,14 @@ impl ClusterSim {
         // Redistribute work round-robin; everything fits by the
         // `should_scale_down` precondition (no long requests). KV moves
         // with each request at its exact current context length.
-        for (k, r) in running.into_iter().enumerate() {
+        for (k, r) in running.drain(..).enumerate() {
             self.instances[new_ids[k % n]].receive_running(r);
         }
-        for (k, r) in prefill.into_iter().enumerate() {
+        for (k, r) in prefill.drain(..).enumerate() {
             self.instances[new_ids[k % n]].enqueue_prefill(r);
         }
+        self.pool_running = running;
+        self.pool_prefill = prefill;
         for &id in &new_ids {
             self.attach_transform(now, id, from_tp, 1, util);
             self.kick(now, id);
@@ -1723,19 +1741,22 @@ impl ClusterSim {
         self.pending[iid] = None;
         self.dwell_check_scheduled[iid] = false;
         self.stall_until[iid] = SimTime::ZERO;
-        let (running, prefill) = {
+        let mut running = std::mem::take(&mut self.pool_running);
+        let mut prefill = std::mem::take(&mut self.pool_prefill);
+        {
             let inst = &mut self.instances[iid];
             inst.retired = true;
             inst.transforming = None;
             inst.stepping = false;
             inst.workers.clear();
-            let (running, prefill, _lost_kv) = inst.take_work();
-            (running, prefill)
-        };
+            let _lost_kv = inst.drain_work_into(&mut running, &mut prefill);
+        }
         self.reindex(iid);
-        for r in running.into_iter().chain(prefill) {
+        for r in running.drain(..).chain(prefill.drain(..)) {
             self.requeue_lost(now, r);
         }
+        self.pool_running = running;
+        self.pool_prefill = prefill;
     }
 
     /// A request whose serving state died with its instance: generated
@@ -1858,14 +1879,16 @@ impl ClusterSim {
                 self.dwell_check_scheduled[iid] = false;
                 let parent_stall = self.stall_until[iid];
                 self.stall_until[iid] = SimTime::ZERO;
-                let (workers, running, prefill) = {
+                let mut running = std::mem::take(&mut self.pool_running);
+                let mut prefill = std::mem::take(&mut self.pool_prefill);
+                let workers = {
                     let inst = &mut self.instances[iid];
                     inst.retired = true;
                     inst.transforming = None;
                     inst.stepping = false;
                     let workers = std::mem::take(&mut inst.workers);
-                    let (running, prefill, _kv) = inst.take_work();
-                    (workers, running, prefill)
+                    let _kv = inst.drain_work_into(&mut running, &mut prefill);
+                    workers
                 };
                 self.reindex(iid);
                 let n = workers.len();
@@ -1886,7 +1909,7 @@ impl ClusterSim {
                 }
                 let tp1_max = self.engine.max_seq(1);
                 let mut k = 0usize;
-                for r in running {
+                for r in running.drain(..) {
                     if r.final_len() <= tp1_max {
                         self.instances[new_ids[k % n]].receive_running(r);
                         k += 1;
@@ -1894,7 +1917,7 @@ impl ClusterSim {
                         self.requeue_lost(now, r);
                     }
                 }
-                for r in prefill {
+                for r in prefill.drain(..) {
                     if r.final_len() <= tp1_max {
                         self.instances[new_ids[k % n]].enqueue_prefill(r);
                         k += 1;
@@ -1902,6 +1925,8 @@ impl ClusterSim {
                         self.requeue_lost(now, r);
                     }
                 }
+                self.pool_running = running;
+                self.pool_prefill = prefill;
                 // Charge the rollback: each TP1 blocks for the reverse
                 // re-shard, scaled by the aborted transform's progress
                 // (aborting at 10% un-does less than at 90%).

@@ -291,6 +291,24 @@ impl Instance {
         (running, prefill, kv)
     }
 
+    /// Pooled-buffer form of [`Instance::take_work`]: appends the drained
+    /// requests front-to-back (same order `take_work`'s deques iterate)
+    /// into caller-owned scratch vectors and returns the drained KV token
+    /// count. The instance's own ring buffers keep their capacity, so a
+    /// transform on a warm instance allocates nothing (PERF.md arena
+    /// rules).
+    pub fn drain_work_into(
+        &mut self,
+        running: &mut Vec<ActiveRequest>,
+        prefill: &mut Vec<ActiveRequest>,
+    ) -> u64 {
+        running.extend(self.running.drain(..));
+        prefill.extend(self.prefill_queue.drain(..));
+        self.committed_tokens = 0;
+        self.ctx_tokens = 0;
+        std::mem::take(&mut self.kv_tokens)
+    }
+
     pub fn is_idle(&self) -> bool {
         self.running.is_empty() && self.prefill_queue.is_empty()
     }

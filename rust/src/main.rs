@@ -29,6 +29,10 @@
 //!   gyges branch      --snapshot FILE [--holds CSV] [--policies CSV]
 //!                     [--no-static] [--out FILE] [--threads N]
 //!   gyges bench-gate  [--baseline FILE] [--fresh FILE] [--max-regress F]
+//!
+//! Global options (every subcommand):
+//!   --queue <calendar|heap>   event-queue backend (default calendar;
+//!                             outputs are byte-identical across both)
 
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
 use gyges::coordinator::{run_system, SystemKind};
@@ -38,6 +42,20 @@ use gyges::workload::Trace;
 fn main() {
     gyges::util::logging::init(gyges::util::logging::Level::Info);
     let args = Args::from_env();
+    // Global knob, parsed before dispatch so every subcommand (serve,
+    // repro, sweeps, snapshot/resume, ...) honours it. The backend is
+    // deliberately NOT part of ClusterConfig or the snapshot format:
+    // both backends pop the exact same (time, seq) stream, so outputs
+    // are byte-identical and snapshots resume across backends.
+    if let Some(q) = args.get("queue") {
+        match gyges::sim::QueueBackend::by_name(q) {
+            Some(b) => gyges::sim::set_queue_backend(b),
+            None => {
+                eprintln!("unknown --queue backend {q:?} (expected calendar|heap)");
+                std::process::exit(2);
+            }
+        }
+    }
     let code = match args.command() {
         Some("info") => cmd_info(),
         Some("serve") => cmd_serve(&args),

@@ -10,6 +10,14 @@
 //! the baseline and the knobs match by construction). The default 25%
 //! tolerance absorbs runner noise.
 //!
+//! Schema v3 adds the `scaling_curve` section (fleet-size sweep). The
+//! gate compares `events_per_sec` per fleet size, matching baseline and
+//! fresh points by `hosts` and gating only points whose shape knobs
+//! (`instances`, `requests`, plus the curve-level `qps_per_instance`
+//! and `horizon_s`) agree; any mismatched or unmatched point is skipped
+//! loudly. A v2 baseline with no curve leaves the curve ungated (noted
+//! as info) so the gate stays green across the schema bump.
+//!
 //! A baseline with `measured != true` is a hand-written complexity
 //! placeholder (PR 1/PR 2 shipped those because their build containers
 //! had no Rust toolchain); the gate SKIPS rather than compare against
@@ -66,6 +74,102 @@ fn get_path<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
 
 fn is_measured(doc: &Json) -> bool {
     doc.get("measured").and_then(Json::as_bool) == Some(true)
+}
+
+/// Schema v3 scaling-curve gate: compare `events_per_sec` per fleet
+/// size. Returns `true` when a matched same-shape point regressed
+/// beyond tolerance. Shape mismatches never fail — they skip loudly,
+/// same policy as the top-level workload knobs.
+fn gate_scaling_curve(
+    baseline: &Json,
+    fresh: &Json,
+    max_regress: f64,
+    lines: &mut Vec<String>,
+) -> bool {
+    let (bc, nc) = match (baseline.get("scaling_curve"), fresh.get("scaling_curve")) {
+        (Some(b), Some(n)) => (b, n),
+        _ => {
+            lines.push(
+                "info: scaling_curve absent from a snapshot (schema v2 baseline?) — not gated"
+                    .into(),
+            );
+            return false;
+        }
+    };
+    for knob in ["qps_per_instance", "horizon_s"] {
+        let b = bc.get(knob).and_then(Json::as_f64);
+        let n = nc.get(knob).and_then(Json::as_f64);
+        if b != n {
+            lines.push(format!(
+                "skip: scaling_curve.{knob} differs (baseline {b:?}, fresh {n:?}) — \
+                 curves measured different workloads, curve not gated"
+            ));
+            return false;
+        }
+    }
+    let empty: Vec<Json> = Vec::new();
+    let bpoints = match bc.get("points") {
+        Some(Json::Arr(v)) => v,
+        _ => &empty,
+    };
+    let npoints = match nc.get("points") {
+        Some(Json::Arr(v)) => v,
+        _ => &empty,
+    };
+    let mut failed = false;
+    for bp in bpoints {
+        let hosts = bp.get("hosts").and_then(Json::as_f64);
+        let h = hosts.unwrap_or(f64::NAN);
+        let found = npoints.iter().find(|p| p.get("hosts").and_then(Json::as_f64) == hosts);
+        let np = match found {
+            Some(p) => p,
+            None => {
+                lines.push(format!(
+                    "skip: scaling_curve point hosts={h:.0} absent from fresh snapshot"
+                ));
+                continue;
+            }
+        };
+        let same_shape = ["instances", "requests"].iter().all(|k| {
+            bp.get(k).and_then(Json::as_f64) == np.get(k).and_then(Json::as_f64)
+        });
+        if !same_shape {
+            lines.push(format!(
+                "skip: scaling_curve point hosts={h:.0} measured a different workload shape"
+            ));
+            continue;
+        }
+        let base = bp.get("events_per_sec").and_then(Json::as_f64);
+        let new = np.get("events_per_sec").and_then(Json::as_f64);
+        match (base, new) {
+            (Some(b), Some(n)) if b > 0.0 => {
+                let ratio = n / b;
+                if ratio < 1.0 - max_regress {
+                    failed = true;
+                    let drop = (1.0 - ratio) * 100.0;
+                    let tol = max_regress * 100.0;
+                    lines.push(format!(
+                        "FAIL: scaling_curve[hosts={h:.0}].events_per_sec regressed {drop:.1}% \
+                         (baseline {b:.1} → fresh {n:.1}, tolerance {tol:.0}%)"
+                    ));
+                } else {
+                    let pct = (ratio - 1.0) * 100.0;
+                    lines.push(format!(
+                        "ok:   scaling_curve[hosts={h:.0}].events_per_sec {b:.1} → {n:.1} \
+                         ({pct:+.1}%)"
+                    ));
+                }
+            }
+            _ => {
+                failed = true;
+                lines.push(format!(
+                    "FAIL: scaling_curve[hosts={h:.0}].events_per_sec missing or non-positive \
+                     (baseline {base:?}, fresh {new:?})"
+                ));
+            }
+        }
+    }
+    failed
 }
 
 /// Compare `fresh` against `baseline`; a gated metric fails when
@@ -146,6 +250,9 @@ pub fn evaluate(baseline: &Json, fresh: &Json, max_regress: f64) -> GateReport {
                 ));
             }
         }
+    }
+    if gate_scaling_curve(baseline, fresh, max_regress, &mut lines) {
+        verdict = GateVerdict::Fail;
     }
     for path in INFO_METRICS {
         if let (Some(b), Some(n)) = (
@@ -243,5 +350,97 @@ mod tests {
         let base = Json::parse(r#"{"measured": true, "single_thread": {}}"#).unwrap();
         let r = evaluate(&base, &snapshot(true, 1000.0, 5.0), 0.25);
         assert_eq!(r.verdict, GateVerdict::Fail);
+    }
+
+    /// Splice a schema-v3 scaling curve into a headline-passing snapshot.
+    fn with_curve(mut doc: Json, points: &[(u64, u64, u64, f64)]) -> Json {
+        let rows = points
+            .iter()
+            .map(|&(hosts, instances, requests, eps)| {
+                let mut p = Json::obj();
+                p.set("hosts", hosts)
+                    .set("instances", instances)
+                    .set("requests", requests)
+                    .set("events", 1_000_000u64)
+                    .set("wall_s", 1.0)
+                    .set("events_per_sec", eps);
+                p
+            })
+            .collect();
+        let mut curve = Json::obj();
+        curve
+            .set("qps_per_instance", 0.25)
+            .set("horizon_s", 60.0)
+            .set("points", Json::Arr(rows));
+        doc.set("scaling_curve", curve);
+        doc
+    }
+
+    #[test]
+    fn v2_baseline_without_curve_stays_green() {
+        let fresh = with_curve(snapshot(true, 1000.0, 5.0), &[(32, 256, 4000, 9e5)]);
+        let r = evaluate(&snapshot(true, 1000.0, 5.0), &fresh, 0.25);
+        assert_eq!(r.verdict, GateVerdict::Pass);
+        assert!(r.lines.iter().any(|l| l.contains("scaling_curve absent")));
+    }
+
+    #[test]
+    fn curve_point_regression_fails_per_fleet_size() {
+        let base = with_curve(
+            snapshot(true, 1000.0, 5.0),
+            &[(32, 256, 4000, 1e6), (1250, 10_000, 150_000, 5e5)],
+        );
+        let fresh = with_curve(
+            snapshot(true, 1000.0, 5.0),
+            &[(32, 256, 4000, 1e6), (1250, 10_000, 150_000, 2e5)],
+        );
+        let r = evaluate(&base, &fresh, 0.25);
+        assert_eq!(r.verdict, GateVerdict::Fail);
+        assert!(r.lines.iter().any(|l| l.contains("scaling_curve[hosts=1250]")));
+        assert!(r.lines.iter().any(|l| l.contains("ok:   scaling_curve[hosts=32]")));
+    }
+
+    #[test]
+    fn curve_shape_mismatch_skips_that_point_only() {
+        let base = with_curve(
+            snapshot(true, 1000.0, 5.0),
+            &[(32, 256, 4000, 1e6), (128, 1024, 16_000, 8e5)],
+        );
+        // hosts=128 re-measured with a different request count AND a huge
+        // eps drop: the mismatch must skip, not fail; hosts=32 still gates.
+        let fresh = with_curve(
+            snapshot(true, 1000.0, 5.0),
+            &[(32, 256, 4000, 1e6), (128, 1024, 99_000, 1e2)],
+        );
+        let r = evaluate(&base, &fresh, 0.25);
+        assert_eq!(r.verdict, GateVerdict::Pass);
+        assert!(r.lines.iter().any(|l| l.contains("different workload shape")));
+    }
+
+    #[test]
+    fn curve_level_knob_mismatch_ungates_whole_curve() {
+        let base = with_curve(snapshot(true, 1000.0, 5.0), &[(32, 256, 4000, 1e6)]);
+        let mut fresh = snapshot(true, 1000.0, 5.0);
+        let mut curve = Json::obj();
+        curve
+            .set("qps_per_instance", 0.25)
+            .set("horizon_s", 3600.0)
+            .set("points", Json::Arr(Vec::new()));
+        fresh.set("scaling_curve", curve);
+        let r = evaluate(&base, &fresh, 0.25);
+        assert_eq!(r.verdict, GateVerdict::Pass);
+        assert!(r.lines.iter().any(|l| l.contains("scaling_curve.horizon_s differs")));
+    }
+
+    #[test]
+    fn curve_point_missing_from_fresh_skips_loudly() {
+        let base = with_curve(
+            snapshot(true, 1000.0, 5.0),
+            &[(32, 256, 4000, 1e6), (512, 4096, 60_000, 6e5)],
+        );
+        let fresh = with_curve(snapshot(true, 1000.0, 5.0), &[(32, 256, 4000, 1e6)]);
+        let r = evaluate(&base, &fresh, 0.25);
+        assert_eq!(r.verdict, GateVerdict::Pass);
+        assert!(r.lines.iter().any(|l| l.contains("hosts=512 absent")));
     }
 }

@@ -24,6 +24,13 @@ pub struct RequestRecord {
     pub output_len: u64,
     /// Tokens generated so far.
     pub generated: u64,
+    /// Seconds this request credited into the cluster TPS buckets, as
+    /// (second, count) run-length pairs. Tokens arrive in time order,
+    /// so appends are amortized O(1) (same-second tokens bump the last
+    /// pair). This is what lets a crash-requeue re-registration unwind
+    /// exactly the per-second credits of the lost run — without it the
+    /// cluster `tps_buckets` kept phantom counts (the PR 6 caveat).
+    pub tok_buckets: Vec<(u32, u32)>,
 }
 
 impl RequestRecord {
@@ -81,16 +88,33 @@ impl Recorder {
         self.tps_buckets[idx] += 1;
     }
 
+    /// Log one token into the record's per-second credit ledger
+    /// (mirrors the `bump_bucket` the caller performs).
+    fn log_token(r: &mut RequestRecord, at: SimTime) {
+        let sec = at.as_secs_f64() as u32;
+        match r.tok_buckets.last_mut() {
+            Some((s, c)) if *s == sec => *c += 1,
+            _ => r.tok_buckets.push((sec, 1)),
+        }
+    }
+
     pub fn on_arrival(&mut self, id: u64, at: SimTime, input_len: u64, output_len: u64) {
         let record = RequestRecord { arrival: at, input_len, output_len, ..Default::default() };
         let slot = self.slot_mut(id);
         match slot.replace(record) {
             // Re-registering an id unwinds the old record's contributions
-            // so the incremental totals stay exact.
+            // so the incremental totals stay exact — including the
+            // per-second TPS credits (crash requeue replays generation
+            // from scratch, so the lost run's buckets must vanish).
             Some(old) => {
                 self.tokens -= old.generated;
                 if old.finished.is_some() {
                     self.completed -= 1;
+                }
+                for &(sec, c) in &old.tok_buckets {
+                    if let Some(b) = self.tps_buckets.get_mut(sec as usize) {
+                        *b = b.saturating_sub(u64::from(c));
+                    }
                 }
             }
             None => self.total += 1,
@@ -104,6 +128,7 @@ impl Recorder {
             if r.first_token.is_none() {
                 r.first_token = Some(at);
                 r.generated = 1;
+                Self::log_token(r, at);
                 emitted = true;
             }
         }
@@ -118,6 +143,7 @@ impl Recorder {
         let mut emitted = false;
         if let Some(r) = self.slot_mut(id).as_mut() {
             r.generated += 1;
+            Self::log_token(r, at);
             emitted = true;
         }
         if emitted {
@@ -360,5 +386,34 @@ mod tests {
         assert_eq!(rec.completed(), 1);
         // 2 tokens live (second pass) over horizon 3.1 s.
         assert!((rec.throughput_tps() - 2.0 / 3.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rearrival_unwinds_tps_buckets() {
+        let mut rec = Recorder::new();
+        // Credit tokens across three distinct seconds, then lose the
+        // request to a crash (modeled as re-registration).
+        rec.on_arrival(1, t(0.0), 10, 5);
+        rec.on_first_token(1, t(0.5));
+        rec.on_token(1, t(1.2));
+        rec.on_token(1, t(1.4));
+        rec.on_token(1, t(2.7));
+        // An unrelated request shares second 1 — its credit must survive.
+        rec.on_arrival(2, t(0.0), 10, 2);
+        rec.on_first_token(2, t(1.0));
+        assert_eq!(rec.tps_series(), vec![(0, 1), (1, 3), (2, 1)]);
+        rec.on_arrival(1, t(3.0), 10, 5);
+        // Only request 2's second-1 credit remains.
+        assert_eq!(rec.tps_series(), vec![(1, 1)]);
+        // Invariant: per-second credits always sum to the token total.
+        let sum: u64 = rec.tps_buckets().iter().sum();
+        assert_eq!(sum, 1);
+        assert!((rec.throughput_tps() - 1.0 / 3.0).abs() < 1e-9);
+        // The replayed run re-credits cleanly.
+        rec.on_first_token(1, t(3.5));
+        rec.on_token(1, t(4.1));
+        assert_eq!(rec.tps_series(), vec![(1, 1), (3, 1), (4, 1)]);
+        let sum: u64 = rec.tps_buckets().iter().sum();
+        assert_eq!(sum, 3);
     }
 }

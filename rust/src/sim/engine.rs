@@ -31,14 +31,34 @@ pub struct EngineModel {
     /// Multiplicative step-time correction per TP degree (index by log2 tp),
     /// fit so saturated decode tput matches Table 1.
     scale: [f64; 4],
+    /// Memoised [`EngineModel::activation_bytes`]: depends only on the
+    /// model, but the pre-memo code rebuilt the Qwen anchor
+    /// `ModelConfig` on every call — and `fits()` probes capacity per
+    /// routing candidate (ROADMAP hot spot). Computed once at
+    /// construction; a test pins memoised == re-derived.
+    act_bytes: u64,
+    /// Memoised [`EngineModel::kv_capacity_bytes`] for TP 1/2/4/8 (the
+    /// only degrees the transform space uses); other degrees fall back
+    /// to the derivation.
+    kv_caps: [u64; 4],
 }
 
 impl EngineModel {
     pub fn new(model: ModelConfig, gpu: GpuSpec) -> EngineModel {
-        let comm = CommModel::for_gpu(&gpu);
-        let mut e = EngineModel { model, gpu, comm, scale: [1.0; 4] };
+        let mut e = Self::assemble(model, gpu);
         e.calibrate();
         e
+    }
+
+    /// Build the model with memo tables filled and unit scale (shared by
+    /// [`EngineModel::new`] and the calibration anchor, which must not
+    /// recurse into `calibrate`).
+    fn assemble(model: ModelConfig, gpu: GpuSpec) -> EngineModel {
+        let comm = CommModel::for_gpu(&gpu);
+        let act_bytes = Self::derive_activation_bytes(&model);
+        let kv_caps =
+            [1u64, 2, 4, 8].map(|tp| Self::derive_kv_capacity_bytes(&model, &gpu, act_bytes, tp));
+        EngineModel { model, gpu, comm, scale: [1.0; 4], act_bytes, kv_caps }
     }
 
     /// FLOPs to process one token (dense decoder: ~2 × active params).
@@ -141,19 +161,33 @@ impl EngineModel {
 
     /// Total KV-cache capacity (bytes) of a TP-`tp` instance: per-GPU free
     /// memory after weights (classic full-TP sharding, as the measured
-    /// Table 1 deployments use) and activations, × tp GPUs.
+    /// Table 1 deployments use) and activations, × tp GPUs. Memoised at
+    /// construction for the transform-space degrees (1/2/4/8).
     pub fn kv_capacity_bytes(&self, tp: u64) -> u64 {
-        let w = self.model.worker_weight_bytes_full_tp(tp);
-        let act = self.activation_bytes();
-        let per_gpu = self.gpu.hbm_bytes.saturating_sub(w).saturating_sub(act);
+        match tp {
+            1 => self.kv_caps[0],
+            2 => self.kv_caps[1],
+            4 => self.kv_caps[2],
+            8 => self.kv_caps[3],
+            _ => Self::derive_kv_capacity_bytes(&self.model, &self.gpu, self.act_bytes, tp),
+        }
+    }
+
+    fn derive_kv_capacity_bytes(model: &ModelConfig, gpu: &GpuSpec, act: u64, tp: u64) -> u64 {
+        let w = model.worker_weight_bytes_full_tp(tp);
+        let per_gpu = gpu.hbm_bytes.saturating_sub(w).saturating_sub(act);
         per_gpu * tp
     }
 
     /// Runtime activation reservation, scaled from the paper's Qwen/H20
-    /// measurement by hidden-size ratio.
+    /// measurement by hidden-size ratio. Memoised at construction.
     pub fn activation_bytes(&self) -> u64 {
+        self.act_bytes
+    }
+
+    fn derive_activation_bytes(model: &ModelConfig) -> u64 {
         let anchor = ModelConfig::qwen2_5_32b();
-        let ratio = (self.model.hidden_size * self.model.num_layers) as f64
+        let ratio = (model.hidden_size * model.num_layers) as f64
             / (anchor.hidden_size * anchor.num_layers) as f64;
         (memory::ACTIVATION_BYTES as f64 * ratio.min(4.0)) as u64
     }
@@ -180,12 +214,7 @@ impl EngineModel {
     /// Uncalibrated Qwen-on-H20 anchor (unit scale) used by the
     /// calibration fits.
     fn qwen_anchor() -> EngineModel {
-        EngineModel {
-            model: ModelConfig::qwen2_5_32b(),
-            gpu: GpuSpec::h20(),
-            comm: CommModel::for_gpu(&GpuSpec::h20()),
-            scale: [1.0; 4],
-        }
+        Self::assemble(ModelConfig::qwen2_5_32b(), GpuSpec::h20())
     }
 
     /// Memoised `max_seq` anchor coefficients. The pair is a process-
@@ -306,6 +335,33 @@ mod tests {
                 let b = b_bytes / e.model.kv_bytes_per_token() as f64;
                 let expect = ((a * cap + b).max(0.0)) as u64;
                 assert_eq!(e.max_seq(tp), expect, "{} tp{tp}", e.model.name);
+            }
+        }
+    }
+
+    #[test]
+    fn memoised_capacity_matches_rederived() {
+        // activation_bytes / kv_capacity_bytes are filled once at
+        // construction; they must equal a fresh derivation for every
+        // model, both on the memoised TP degrees (1/2/4/8) and on the
+        // fallback path (tp=3 here).
+        for m in ModelConfig::all() {
+            let gpu = GpuSpec::for_model(&m);
+            let e = EngineModel::new(m, gpu);
+            assert_eq!(
+                e.activation_bytes(),
+                EngineModel::derive_activation_bytes(&e.model),
+                "{} activation_bytes",
+                e.model.name
+            );
+            for tp in [1u64, 2, 3, 4, 8] {
+                let expect = EngineModel::derive_kv_capacity_bytes(
+                    &e.model,
+                    &e.gpu,
+                    e.activation_bytes(),
+                    tp,
+                );
+                assert_eq!(e.kv_capacity_bytes(tp), expect, "{} tp{tp}", e.model.name);
             }
         }
     }

@@ -1,8 +1,78 @@
 //! Discrete-event queue: time-ordered, FIFO-stable for equal timestamps.
+//!
+//! Two backends implement the exact same `(time, seq)` contract:
+//!
+//! * **Calendar** (default): a hashed calendar queue / timing wheel — the
+//!   classic DES structure (Brown 1988). Entries hash into `2^k` bucket
+//!   heaps by "day" (`time >> shift`); push and pop are O(1) amortized
+//!   instead of the heap's O(log n), which is what keeps a 10k-instance
+//!   fleet's event loop flat as the queue grows (PERF.md).
+//! * **Heap**: the original `BinaryHeap` reference implementation, kept
+//!   behind `--queue heap` for bisection and as the property-test oracle
+//!   (`rust/tests/queue_equivalence.rs` proves identical pop streams).
+//!
+//! The backend is a process-wide default ([`set_queue_backend`]) chosen
+//! by the `--queue` CLI/bench knob. It is deliberately NOT part of
+//! `ClusterConfig`, the config fingerprint, or snapshots: both backends
+//! pop the identical `(time, seq)` stream, so figure outputs and
+//! snapshot bytes are backend-agnostic and a snapshot taken under one
+//! backend resumes byte-identically under the other (CI `cmp`s fig12
+//! JSONL across backends to enforce this).
 
 use super::clock::SimTime;
+use std::cell::Cell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU8, Ordering as AtomicOrdering};
+
+/// Which `EventQueue` implementation backs new queues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueBackend {
+    /// Hashed calendar queue (O(1) amortized; the default).
+    Calendar,
+    /// Binary heap (O(log n); reference/bisection backend).
+    Heap,
+}
+
+impl QueueBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueBackend::Calendar => "calendar",
+            QueueBackend::Heap => "heap",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<QueueBackend> {
+        match s {
+            "calendar" => Some(QueueBackend::Calendar),
+            "heap" => Some(QueueBackend::Heap),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide default backend (0 = calendar, 1 = heap). Relaxed is
+/// enough: the knob is set once at startup before any queue exists, and
+/// every load sees a fully-initialized value either way.
+static DEFAULT_BACKEND: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide default backend (the `--queue` knob). Affects
+/// queues constructed afterwards; existing queues keep their backend.
+pub fn set_queue_backend(b: QueueBackend) {
+    let v = match b {
+        QueueBackend::Calendar => 0,
+        QueueBackend::Heap => 1,
+    };
+    DEFAULT_BACKEND.store(v, AtomicOrdering::Relaxed);
+}
+
+/// The current process-wide default backend.
+pub fn queue_backend() -> QueueBackend {
+    match DEFAULT_BACKEND.load(AtomicOrdering::Relaxed) {
+        1 => QueueBackend::Heap,
+        _ => QueueBackend::Calendar,
+    }
+}
 
 struct Entry<E> {
     time: SimTime,
@@ -31,9 +101,214 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// Smallest bucket count (power of two).
+const MIN_BUCKETS: usize = 16;
+/// Bucket-width bounds, as log2(nanoseconds): 2^10 ns ≈ 1 µs up to
+/// 2^33 ns ≈ 8.6 s. The sim's event gaps (decode steps ~10–100 ms,
+/// transforms ~seconds) always land inside this window.
+const MIN_SHIFT: u32 = 10;
+const MAX_SHIFT: u32 = 33;
+/// Initial bucket width: 2^20 ns ≈ 1 ms (typical step granularity).
+const INITIAL_SHIFT: u32 = 20;
+
+/// Hashed calendar queue. Entries live in `buckets[day & mask]` where
+/// `day = time.0 >> shift`; each bucket is a small min-heap (via the
+/// reversed [`Entry`] order), so all entries of one day sit in exactly
+/// one bucket and the bucket top is that bucket's `(time, seq)` minimum.
+///
+/// Finding the global minimum walks days upward from a proven lower
+/// bound (`floor_day`): the first bucket whose top belongs to the walked
+/// day holds the global minimum, because every entry of an earlier day
+/// would sit in an already-walked bucket. A walk that completes one full
+/// revolution without a hit (entries sparser than one revolution) falls
+/// back to an O(buckets) scan of the bucket tops. Both paths cache the
+/// result in `min_hint` so `peek_time` + `pop` share one search.
+///
+/// Resizes are deterministic and integer-only: bucket count tracks
+/// `len.next_power_of_two()` (×2 hysteresis both ways) and the bucket
+/// width re-fits to `2 × span/(len-1)` clamped to [2^10, 2^33] ns, so
+/// the walk stays O(1) amortized whatever the event density. Drained
+/// bucket storage and the resize scratch vector are reused, not
+/// reallocated.
+struct Calendar<E> {
+    buckets: Vec<BinaryHeap<Entry<E>>>,
+    /// `buckets.len() - 1`; bucket count is always a power of two.
+    mask: u64,
+    /// log2 of the bucket width in nanoseconds.
+    shift: u32,
+    len: usize,
+    /// Proven lower bound on `time.0 >> shift` over all queued entries.
+    /// `Cell`: the min-search runs under `&self` (peek path) and may
+    /// tighten the bound as it proves days empty.
+    floor_day: Cell<u64>,
+    /// Cached global minimum `(time, seq, bucket)`; cleared on pop and
+    /// resize, tightened on insert.
+    min_hint: Cell<Option<(SimTime, u64, u32)>>,
+    /// Recycled scratch for resizes (entries in flight between layouts).
+    spare: Vec<Entry<E>>,
+}
+
+impl<E> Calendar<E> {
+    fn new() -> Calendar<E> {
+        Calendar {
+            buckets: (0..MIN_BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            mask: (MIN_BUCKETS - 1) as u64,
+            shift: INITIAL_SHIFT,
+            len: 0,
+            floor_day: Cell::new(0),
+            min_hint: Cell::new(None),
+            spare: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn day(&self, t: SimTime) -> u64 {
+        t.0 >> self.shift
+    }
+
+    #[inline]
+    fn bucket_of_day(&self, day: u64) -> usize {
+        (day & self.mask) as usize
+    }
+
+    fn insert(&mut self, e: Entry<E>) {
+        let day = self.day(e.time);
+        if self.len == 0 {
+            self.floor_day.set(day);
+        } else if day < self.floor_day.get() {
+            self.floor_day.set(day);
+        }
+        if let Some((ht, hs, _)) = self.min_hint.get() {
+            if (e.time, e.seq) < (ht, hs) {
+                let b = self.bucket_of_day(day) as u32;
+                self.min_hint.set(Some((e.time, e.seq, b)));
+            }
+        }
+        let b = self.bucket_of_day(day);
+        self.buckets[b].push(e);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            self.resize();
+        }
+    }
+
+    /// Locate the global `(time, seq)` minimum without removing it.
+    fn find_min(&self) -> Option<(SimTime, u64, u32)> {
+        if self.len == 0 {
+            return None;
+        }
+        if let Some(h) = self.min_hint.get() {
+            return Some(h);
+        }
+        // Walk days upward from the floor. Each visited day maps to one
+        // bucket; a top entry of exactly that day is the global minimum
+        // (all earlier days are proven empty, and within a day the
+        // bucket heap already orders by (time, seq)). A bucket that is
+        // empty — or whose top belongs to a later day — proves the
+        // walked day empty, which lets the floor advance.
+        let nbuckets = self.buckets.len();
+        let mut d = self.floor_day.get();
+        for _ in 0..nbuckets {
+            let b = self.bucket_of_day(d);
+            if let Some(top) = self.buckets[b].peek() {
+                debug_assert!(self.day(top.time) >= d, "floor_day invariant violated");
+                if self.day(top.time) == d {
+                    self.floor_day.set(d);
+                    let hit = (top.time, top.seq, b as u32);
+                    self.min_hint.set(Some(hit));
+                    return Some(hit);
+                }
+            }
+            d += 1;
+            self.floor_day.set(d);
+        }
+        // One full revolution without a hit: every remaining entry is at
+        // least a revolution past the floor. Scan the bucket tops (each
+        // is its bucket's minimum) for the exact (time, seq) global min.
+        let mut best: Option<(SimTime, u64, u32)> = None;
+        for (b, heap) in self.buckets.iter().enumerate() {
+            if let Some(top) = heap.peek() {
+                let cand = (top.time, top.seq, b as u32);
+                if best.map(|(t, s, _)| (cand.0, cand.1) < (t, s)).unwrap_or(true) {
+                    best = Some(cand);
+                }
+            }
+        }
+        let hit = best.expect("len > 0 but no bucket has entries");
+        self.floor_day.set(self.day(hit.0));
+        self.min_hint.set(Some(hit));
+        Some(hit)
+    }
+
+    fn pop_min(&mut self) -> Option<Entry<E>> {
+        let (time, seq, b) = self.find_min()?;
+        let e = self.buckets[b as usize].pop().expect("hinted bucket is empty");
+        debug_assert!(e.time == time && e.seq == seq, "min hint diverged from bucket top");
+        self.len -= 1;
+        self.min_hint.set(None);
+        // floor_day stays valid: the popped entry was the global minimum,
+        // so every remaining entry's day is >= its day >= floor_day.
+        if self.buckets.len() > MIN_BUCKETS && self.len * 4 < self.buckets.len() {
+            self.resize();
+        }
+        Some(e)
+    }
+
+    /// Re-fit bucket count and width to the current population, reusing
+    /// bucket storage and the scratch vector across layouts.
+    fn resize(&mut self) {
+        let mut spare = std::mem::take(&mut self.spare);
+        debug_assert!(spare.is_empty());
+        for heap in &mut self.buckets {
+            spare.extend(heap.drain());
+        }
+        debug_assert_eq!(spare.len(), self.len);
+        let n = self.len.max(MIN_BUCKETS).next_power_of_two();
+        if spare.len() >= 2 {
+            let mut tmin = u64::MAX;
+            let mut tmax = 0u64;
+            for e in &spare {
+                tmin = tmin.min(e.time.0);
+                tmax = tmax.max(e.time.0);
+            }
+            let span = tmax - tmin;
+            if span > 0 {
+                // Bucket width ≈ 2× the mean inter-event gap: dense
+                // enough that the min-walk hits within a day or two,
+                // sparse enough that one day holds O(1) entries.
+                let width = ((span / (spare.len() as u64 - 1)) * 2).max(1);
+                self.shift = width.ilog2().clamp(MIN_SHIFT, MAX_SHIFT);
+            }
+        }
+        self.buckets.resize_with(n, BinaryHeap::new);
+        self.buckets.truncate(n);
+        self.mask = (n - 1) as u64;
+        let mut floor = u64::MAX;
+        for e in &spare {
+            floor = floor.min(self.day(e.time));
+        }
+        self.floor_day.set(if floor == u64::MAX { 0 } else { floor });
+        self.min_hint.set(None);
+        for e in spare.drain(..) {
+            let b = self.bucket_of_day(self.day(e.time));
+            self.buckets[b].push(e);
+        }
+        self.spare = spare;
+    }
+
+    fn iter(&self) -> impl Iterator<Item = &Entry<E>> {
+        self.buckets.iter().flat_map(|b| b.iter())
+    }
+}
+
+enum Backend<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    Calendar(Calendar<E>),
+}
+
 /// A deterministic discrete-event queue.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    backend: Backend<E>,
     seq: u64,
     now: SimTime,
 }
@@ -45,8 +320,26 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// A queue on the process-wide default backend ([`queue_backend`]).
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: SimTime::ZERO }
+        Self::with_backend(queue_backend())
+    }
+
+    /// A queue on an explicit backend (tests, equivalence harnesses).
+    pub fn with_backend(kind: QueueBackend) -> Self {
+        let backend = match kind {
+            QueueBackend::Heap => Backend::Heap(BinaryHeap::new()),
+            QueueBackend::Calendar => Backend::Calendar(Calendar::new()),
+        };
+        EventQueue { backend, seq: 0, now: SimTime::ZERO }
+    }
+
+    /// Which backend this queue runs on.
+    pub fn backend(&self) -> QueueBackend {
+        match self.backend {
+            Backend::Heap(_) => QueueBackend::Heap,
+            Backend::Calendar(_) => QueueBackend::Calendar,
+        }
     }
 
     /// Current simulated time (advances on `pop`).
@@ -58,20 +351,30 @@ impl<E> EventQueue<E> {
     /// clamped to `now` (can occur with zero-duration stages).
     pub fn push(&mut self, at: SimTime, payload: E) {
         let t = if at < self.now { self.now } else { at };
-        self.heap.push(Entry { time: t, seq: self.seq, payload });
+        let e = Entry { time: t, seq: self.seq, payload };
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(e),
+            Backend::Calendar(c) => c.insert(e),
+        }
         self.seq += 1;
     }
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let e = self.heap.pop()?;
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop()?,
+            Backend::Calendar(c) => c.pop_min()?,
+        };
         self.now = e.time;
         Some((e.time, e.payload))
     }
 
     /// Peek at the next event time without advancing.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.time)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+            Backend::Calendar(c) => c.find_min().map(|(t, _, _)| t),
+        }
     }
 
     /// Advance the clock to `t` without popping (never moves backwards).
@@ -85,11 +388,14 @@ impl<E> EventQueue<E> {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len,
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Value of the internal sequence counter (snapshot support).
@@ -99,25 +405,41 @@ impl<E> EventQueue<E> {
 
     /// Every queued entry as `(time, seq, &payload)`, ascending by
     /// `(time, seq)` — exactly the order [`EventQueue::pop`] would
-    /// deliver them. Heap iteration order is arbitrary, so this sorts a
-    /// copy of the handles; O(n log n), called only when snapshotting.
+    /// deliver them. Backend iteration order is arbitrary, so this sorts
+    /// a copy of the handles; O(n log n), called only when snapshotting.
+    /// Both backends produce identical output, which is what keeps
+    /// snapshot bytes backend-agnostic.
     pub fn entries(&self) -> Vec<(SimTime, u64, &E)> {
-        let mut v: Vec<(SimTime, u64, &E)> =
-            self.heap.iter().map(|e| (e.time, e.seq, &e.payload)).collect();
+        let mut v: Vec<(SimTime, u64, &E)> = match &self.backend {
+            Backend::Heap(h) => h.iter().map(|e| (e.time, e.seq, &e.payload)).collect(),
+            Backend::Calendar(c) => c.iter().map(|e| (e.time, e.seq, &e.payload)).collect(),
+        };
         v.sort_by_key(|&(t, s, _)| (t, s));
         v
     }
 
-    /// Rebuild a queue from snapshot parts. Entries keep their original
-    /// sequence numbers, so FIFO tie-breaking — and the interleaving
-    /// with post-restore pushes (which continue from `seq`) — is
-    /// identical to the never-paused queue.
+    /// Rebuild a queue from snapshot parts on the process-wide default
+    /// backend. Entries keep their original sequence numbers, so FIFO
+    /// tie-breaking — and the interleaving with post-restore pushes
+    /// (which continue from `seq`) — is identical to the never-paused
+    /// queue. Snapshots carry no backend marker: a snapshot written
+    /// under either backend restores onto whichever is selected.
     pub fn restore(
         now: SimTime,
         seq: u64,
         entries: Vec<(SimTime, u64, E)>,
     ) -> Result<EventQueue<E>, String> {
-        let mut heap = BinaryHeap::with_capacity(entries.len());
+        Self::restore_with_backend(queue_backend(), now, seq, entries)
+    }
+
+    /// [`EventQueue::restore`] onto an explicit backend.
+    pub fn restore_with_backend(
+        kind: QueueBackend,
+        now: SimTime,
+        seq: u64,
+        entries: Vec<(SimTime, u64, E)>,
+    ) -> Result<EventQueue<E>, String> {
+        let mut q = Self::with_backend(kind);
         for (time, s, payload) in entries {
             if time < now {
                 return Err(format!(
@@ -130,9 +452,15 @@ impl<E> EventQueue<E> {
                     "event queue restore: entry seq {s} is not below the counter {seq}"
                 ));
             }
-            heap.push(Entry { time, seq: s, payload });
+            let e = Entry { time, seq: s, payload };
+            match &mut q.backend {
+                Backend::Heap(h) => h.push(e),
+                Backend::Calendar(c) => c.insert(e),
+            }
         }
-        Ok(EventQueue { heap, seq, now })
+        q.seq = seq;
+        q.now = now;
+        Ok(q)
     }
 }
 
@@ -141,87 +469,214 @@ mod tests {
     use super::*;
     use crate::sim::clock::SimDuration;
 
+    const BOTH: [QueueBackend; 2] = [QueueBackend::Calendar, QueueBackend::Heap];
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in BOTH {
+            assert_eq!(QueueBackend::by_name(b.name()), Some(b));
+        }
+        assert_eq!(QueueBackend::by_name("splay"), None);
+        let q = EventQueue::<()>::with_backend(QueueBackend::Heap);
+        assert_eq!(q.backend(), QueueBackend::Heap);
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(SimTime(30), "c");
-        q.push(SimTime(10), "a");
-        q.push(SimTime(20), "b");
-        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            q.push(SimTime(30), "c");
+            q.push(SimTime(10), "a");
+            q.push(SimTime(20), "b");
+            let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, vec!["a", "b", "c"], "{}", b.name());
+        }
     }
 
     #[test]
     fn fifo_for_equal_times() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.push(SimTime(5), i);
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            for i in 0..10 {
+                q.push(SimTime(5), i);
+            }
+            let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, (0..10).collect::<Vec<_>>(), "{}", b.name());
         }
-        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn clock_advances() {
-        let mut q = EventQueue::new();
-        q.push(SimTime::from_secs_f64(1.0), ());
-        q.pop();
-        assert!((q.now().as_secs_f64() - 1.0).abs() < 1e-9);
-        // past event clamps to now
-        q.push(SimTime::ZERO, ());
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t, q.now());
-        assert!((t.as_secs_f64() - 1.0).abs() < 1e-9);
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            q.push(SimTime::from_secs_f64(1.0), ());
+            q.pop();
+            assert!((q.now().as_secs_f64() - 1.0).abs() < 1e-9);
+            // past event clamps to now
+            q.push(SimTime::ZERO, ());
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, q.now());
+            assert!((t.as_secs_f64() - 1.0).abs() < 1e-9, "{}", b.name());
+        }
     }
 
     #[test]
     fn advance_to_is_monotonic() {
-        let mut q = EventQueue::<()>::new();
-        q.advance_to(SimTime(50));
-        assert_eq!(q.now(), SimTime(50));
-        q.advance_to(SimTime(20)); // never backwards
-        assert_eq!(q.now(), SimTime(50));
-        // past pushes clamp against the advanced clock
-        q.push(SimTime(10), ());
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t, SimTime(50));
+        for b in BOTH {
+            let mut q = EventQueue::<()>::with_backend(b);
+            q.advance_to(SimTime(50));
+            assert_eq!(q.now(), SimTime(50));
+            q.advance_to(SimTime(20)); // never backwards
+            assert_eq!(q.now(), SimTime(50));
+            // past pushes clamp against the advanced clock
+            q.push(SimTime(10), ());
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, SimTime(50), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn pop_can_move_clock_backwards_after_advance() {
+        // advance_to does not clamp entries already queued: popping one
+        // of them legally moves the clock backwards. Both backends must
+        // reproduce this exactly (the streamed-arrival merge loop
+        // depends on it).
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            q.push(SimTime(10), 1);
+            q.advance_to(SimTime(100));
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, SimTime(10), "{}", b.name());
+            assert_eq!(q.now(), SimTime(10), "{}", b.name());
+        }
     }
 
     #[test]
     fn snapshot_restore_preserves_pop_order_and_ties() {
-        let mut q = EventQueue::new();
-        for i in 0..5 {
-            q.push(SimTime(40), i); // equal timestamps: FIFO by seq
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            for i in 0..5 {
+                q.push(SimTime(40), i); // equal timestamps: FIFO by seq
+            }
+            q.push(SimTime(10), 100);
+            q.push(SimTime(20), 101);
+            q.pop(); // consume the t=10 entry, clock now 10
+            let entries: Vec<(SimTime, u64, i32)> =
+                q.entries().into_iter().map(|(t, s, &p)| (t, s, p)).collect();
+            // Restore onto BOTH backends: snapshots carry no backend
+            // marker, so cross-backend resume must pop identically.
+            for rb in BOTH {
+                let mut restored =
+                    EventQueue::restore_with_backend(rb, q.now(), q.seq(), entries.clone())
+                        .unwrap();
+                let mut orig =
+                    EventQueue::restore_with_backend(b, q.now(), q.seq(), entries.clone())
+                        .unwrap();
+                // Future pushes interleave identically on both queues.
+                orig.push(SimTime(40), 200);
+                restored.push(SimTime(40), 200);
+                let drain = |q: &mut EventQueue<i32>| -> Vec<(u64, i32)> {
+                    std::iter::from_fn(|| q.pop().map(|(t, e)| (t.0, e))).collect()
+                };
+                assert_eq!(drain(&mut orig), drain(&mut restored), "{}→{}", b.name(), rb.name());
+            }
+            // A stale entry (before the clock) or seq at/over the counter
+            // is refused.
+            let stale = vec![(SimTime(40), 3u64, ())];
+            assert!(EventQueue::restore_with_backend(b, SimTime(50), 10, stale).is_err());
+            let high = vec![(SimTime(40), 2u64, ())];
+            assert!(EventQueue::restore_with_backend(b, SimTime(0), 2, high).is_err());
         }
-        q.push(SimTime(10), 100);
-        q.push(SimTime(20), 101);
-        q.pop(); // consume the t=10 entry, clock now 10
-        let entries: Vec<(SimTime, u64, i32)> =
-            q.entries().into_iter().map(|(t, s, &p)| (t, s, p)).collect();
-        let mut restored = EventQueue::restore(q.now(), q.seq(), entries).unwrap();
-        // Future pushes interleave identically on both queues.
-        q.push(SimTime(40), 200);
-        restored.push(SimTime(40), 200);
-        let drain = |q: &mut EventQueue<i32>| -> Vec<(u64, i32)> {
-            std::iter::from_fn(|| q.pop().map(|(t, e)| (t.0, e))).collect()
-        };
-        assert_eq!(drain(&mut q), drain(&mut restored));
-        // A stale entry (before the clock) or seq at/over the counter is
-        // refused.
-        assert!(EventQueue::restore(SimTime(50), 10, vec![(SimTime(40), 3, ())]).is_err());
-        assert!(EventQueue::restore(SimTime(0), 2, vec![(SimTime(40), 2, ())]).is_err());
     }
 
     #[test]
     fn interleaved_push_pop() {
-        let mut q = EventQueue::new();
-        q.push(SimTime(10), 1);
-        let (t, v) = q.pop().unwrap();
-        assert_eq!((t.0, v), (10, 1));
-        q.push(t + SimDuration(5), 2);
-        q.push(t + SimDuration(3), 3);
-        assert_eq!(q.pop().unwrap().1, 3);
-        assert_eq!(q.pop().unwrap().1, 2);
-        assert!(q.is_empty());
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            q.push(SimTime(10), 1);
+            let (t, v) = q.pop().unwrap();
+            assert_eq!((t.0, v), (10, 1));
+            q.push(t + SimDuration(5), 2);
+            q.push(t + SimDuration(3), 3);
+            assert_eq!(q.pop().unwrap().1, 3);
+            assert_eq!(q.pop().unwrap().1, 2);
+            assert!(q.is_empty(), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn calendar_resizes_and_stays_sorted() {
+        // Enough entries to force several grow resizes (16 → 256+
+        // buckets) and then shrink resizes on the way down.
+        let mut q = EventQueue::with_backend(QueueBackend::Calendar);
+        let mut r = crate::util::Prng::new(0xCA1E);
+        for i in 0..500u64 {
+            q.push(SimTime(r.gen_range(0, 5_000_000)), i);
+        }
+        let mut prev: Option<(SimTime, u64)> = None;
+        let mut n = 0;
+        while let Some((t, v)) = q.pop() {
+            if let Some((pt, pv)) = prev {
+                assert!((pt, pv) <= (t, v), "out of order: {pt:?} then {t:?}");
+            }
+            prev = Some((t, v));
+            n += 1;
+        }
+        assert_eq!(n, 500);
+    }
+
+    #[test]
+    fn calendar_handles_sparse_far_apart_times() {
+        // Days far beyond one revolution exercise the fallback scan.
+        let mut q = EventQueue::with_backend(QueueBackend::Calendar);
+        let times = [0u64, 1, 1_000_000, 3_600_000_000_000, 7_200_000_000_000, 42];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(SimTime(t), i);
+        }
+        let mut sorted: Vec<u64> = times.to_vec();
+        sorted.sort_unstable();
+        let mut popped = Vec::new();
+        // pop clamps nothing here; collect raw times (clock moves with
+        // each pop, and later pushes were already enqueued unclamped).
+        while let Some((t, _)) = q.pop() {
+            popped.push(t.0);
+        }
+        assert_eq!(popped, sorted);
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_interleaving() {
+        // In-crate smoke version of the full equivalence property test
+        // (rust/tests/queue_equivalence.rs drives longer sequences).
+        let mut cal = EventQueue::with_backend(QueueBackend::Calendar);
+        let mut heap = EventQueue::with_backend(QueueBackend::Heap);
+        let mut r = crate::util::Prng::new(0xE0_0E);
+        for i in 0..2000u64 {
+            match r.index(4) {
+                0 | 1 => {
+                    let at = SimTime(cal.now().0 + r.gen_range(0, 200_000_000));
+                    cal.push(at, i);
+                    heap.push(at, i);
+                }
+                2 => {
+                    assert_eq!(cal.pop(), heap.pop(), "pop diverged at op {i}");
+                }
+                _ => {
+                    let t = SimTime(cal.now().0 + r.gen_range(0, 50_000_000));
+                    cal.advance_to(t);
+                    heap.advance_to(t);
+                }
+            }
+            assert_eq!(cal.len(), heap.len());
+            assert_eq!(cal.peek_time(), heap.peek_time(), "peek diverged at op {i}");
+            assert_eq!(cal.now(), heap.now());
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 }

@@ -17,7 +17,7 @@ pub mod vmm;
 pub use clock::{SimDuration, SimTime};
 pub use comm::CommModel;
 pub use engine::EngineModel;
-pub use event::EventQueue;
+pub use event::{queue_backend, set_queue_backend, EventQueue, QueueBackend};
 pub use gpu::GpuDevice;
 pub use link::Link;
 pub use vmm::{PagePool, VmmCosts, VmmError};

@@ -1,4 +1,4 @@
-//! Snapshot schema v2: a versioned, self-describing serialization of
+//! Snapshot schema v3: a versioned, self-describing serialization of
 //! complete [`ClusterSim`](crate::coordinator::ClusterSim) state.
 //!
 //! Everything the event loop's next decision can observe is captured:
@@ -18,6 +18,15 @@
 //! `stall_end`, `link_restore`) — so a kill/resume stays byte-identical
 //! even mid-fault-storm. v1 documents are rejected (no migration: they
 //! predate the fault subsystem and every v1 producer can re-run).
+//!
+//! Schema v3 adds the per-request TPS-credit ledger
+//! (`RequestRecord::tok_buckets`, serialized as each recorder row's
+//! `buckets` array, omitted when empty) so a resumed run can unwind
+//! per-second throughput credits when a later host crash requeues a
+//! request it had already generated tokens for. v2 documents are
+//! rejected for the same reason v1 ones were: a v2 snapshot cannot
+//! say which seconds a live request credited, so resume-then-crash
+//! would diverge from the uninterrupted run.
 //!
 //! What is deliberately NOT serialized, and why that is sound:
 //!
@@ -52,7 +61,7 @@ use crate::util::json::Json;
 use crate::workload::FeedState;
 
 /// Snapshot schema version this module reads and writes.
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 2;
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 3;
 
 /// One queued runtime event (arrivals are never queue events — they
 /// live in the feed cursor).
@@ -529,6 +538,18 @@ fn recorder_to_json(r: &RecorderSnap) -> Json {
                 .set("input", rec.input_len)
                 .set("output", rec.output_len)
                 .set("generated", rec.generated);
+            // Per-second TPS credits as [second, count] pairs (schema
+            // v3); omitted when the request never generated a token.
+            if !rec.tok_buckets.is_empty() {
+                let pairs = rec
+                    .tok_buckets
+                    .iter()
+                    .map(|&(s, c)| {
+                        Json::Arr(vec![Json::from(u64::from(s)), Json::from(u64::from(c))])
+                    })
+                    .collect();
+                o.set("buckets", Json::Arr(pairs));
+            }
             o
         })
         .collect();
@@ -551,6 +572,15 @@ fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
                 ))),
             }
         };
+        let mut tok_buckets = Vec::new();
+        if let Some(pairs) = row.get("buckets") {
+            for p in pairs.as_arr().ok_or("recorder row: bad buckets")? {
+                let pair = p.as_arr().filter(|a| a.len() == 2).ok_or("recorder row: bad pair")?;
+                let sec = pair[0].as_u64().ok_or("recorder row: bad bucket second")?;
+                let c = pair[1].as_u64().ok_or("recorder row: bad bucket count")?;
+                tok_buckets.push((sec as u32, c as u32));
+            }
+        }
         rows.push((
             num("id")?,
             RequestRecord {
@@ -560,6 +590,7 @@ fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
                 input_len: num("input")?,
                 output_len: num("output")?,
                 generated: num("generated")?,
+                tok_buckets,
             },
         ));
     }

@@ -166,6 +166,53 @@ fn host_crash_requeues_in_flight_and_recovery_rejoins() {
     );
 }
 
+/// PR 6 `tps_buckets` caveat regression: a crash that requeues running
+/// requests must unwind the per-second TPS credits the lost run had
+/// already banked. The final series must equal a never-crashed replay
+/// of the same completions — i.e. the sum of each surviving record's
+/// own credit ledger — and the bucket total must equal the token total
+/// (both failed before the unwind: phantom pre-crash credits survived).
+#[test]
+fn crash_requeue_unwinds_tps_buckets() {
+    let mut plan = FaultPlan::empty();
+    plan.faults.push(Fault {
+        at: SimTime::from_secs_f64(10.0),
+        kind: FaultKind::HostCrash { host: 0, mttr: SimDuration::from_secs_f64(5.0) },
+    });
+    let mut sim = ClusterSim::new(cfg(), SystemKind::Gyges, Trace::hybrid_paper(0xFEED, 30.0));
+    sim.set_fault_plan(plan).expect("plan must fit the cluster");
+    let out = sim.run();
+    assert!(out.error.is_none(), "faulted run must terminate cleanly: {:?}", out.error);
+    assert!(out.counters.crash_requeued > 0, "crash must requeue in-flight work");
+    // Replay: a run that only ever saw the surviving completions would
+    // credit exactly each record's ledger, nothing more.
+    let mut replay: Vec<u64> = Vec::new();
+    let mut tokens = 0u64;
+    for (id, r) in out.recorder.records() {
+        tokens += r.generated;
+        let ledger: u64 = r.tok_buckets.iter().map(|&(_, c)| u64::from(c)).sum();
+        assert_eq!(ledger, r.generated, "request {id}: ledger must count every live token");
+        for &(sec, c) in &r.tok_buckets {
+            let idx = sec as usize;
+            if idx >= replay.len() {
+                replay.resize(idx + 1, 0);
+            }
+            replay[idx] += u64::from(c);
+        }
+    }
+    // Trailing zero buckets are resize high-water marks; compare content.
+    let trim = |b: &[u64]| {
+        let mut v = b.to_vec();
+        while v.last() == Some(&0) {
+            v.pop();
+        }
+        v
+    };
+    let got = out.recorder.tps_buckets();
+    assert_eq!(trim(got), trim(&replay), "buckets diverged from the never-crashed replay");
+    assert_eq!(got.iter().sum::<u64>(), tokens, "bucket total must equal live token total");
+}
+
 /// Snapshot/resume with faults ARMED: checkpoints landing mid-outage
 /// (host degraded, KV lost) and inside retry-backoff windows must all
 /// resume to the uninterrupted faulted run's exact bytes — and the walk

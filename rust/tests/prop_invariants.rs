@@ -97,6 +97,7 @@ fn prop_routing_decisions_are_sound() {
                     now: SimTime::from_secs_f64(1000.0),
                     tp1: Some(&index),
                     load: Some(&load),
+                    blocked_hosts: None,
                 };
                 let scan_view = ClusterView {
                     instances,
@@ -105,6 +106,7 @@ fn prop_routing_decisions_are_sound() {
                     now: SimTime::from_secs_f64(1000.0),
                     tp1: None,
                     load: None,
+                    blocked_hosts: None,
                 };
                 let mut scan_policy = make_policy(policy_kind);
                 let indexed_route = policy.route(&req, &view);
@@ -257,6 +259,7 @@ fn prop_load_index_survives_mutation_sequences() {
                     now: SimTime::from_secs_f64(50.0),
                     tp1: Some(&hidx),
                     load: Some(&idx),
+                    blocked_hosts: None,
                 };
                 let scanning = ClusterView {
                     instances: &instances,
@@ -265,6 +268,7 @@ fn prop_load_index_survives_mutation_sequences() {
                     now: SimTime::from_secs_f64(50.0),
                     tp1: None,
                     load: None,
+                    blocked_hosts: None,
                 };
                 for pk in [gyges::config::Policy::Gyges, gyges::config::Policy::RoundRobin] {
                     let mut pi = make_policy(pk);

@@ -1,0 +1,203 @@
+//! Calendar-queue ↔ heap-queue equivalence (ISSUE 7 satellite).
+//!
+//! The calendar backend replaces the `BinaryHeap` on every hot path, so
+//! this property test is the proof that the swap is invisible: random
+//! interleaved push / pop / advance_to / snapshot-restore sequences must
+//! produce byte-identical `(time, seq, event)` pop streams on both
+//! backends, including past-push clamping and mid-sequence restores
+//! (onto the same AND the opposite backend — snapshots carry no backend
+//! marker).
+
+use gyges::prop_assert;
+use gyges::sim::{EventQueue, QueueBackend, SimTime};
+use gyges::util::proptest::{forall, Config};
+use gyges::util::Prng;
+
+/// One scripted queue operation. Times are *offsets* so the script is
+/// meaningful regardless of where the clock sits when it runs.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Push at `now + offset`; negative offsets (`past == true`)
+    /// exercise the clamp-to-now path.
+    Push { offset: u64, past: bool },
+    Pop,
+    /// `advance_to(now + offset)` — may strand queued entries behind
+    /// the clock, which later pops must legally move backwards to.
+    Advance { offset: u64 },
+    /// Snapshot via `entries()/seq()/now()` and rebuild both queues via
+    /// `restore`, each onto a random backend.
+    Restore,
+}
+
+fn gen_script(r: &mut Prng, len: usize) -> Vec<Op> {
+    (0..len)
+        .map(|_| match r.index(10) {
+            0..=4 => Op::Push { offset: r.gen_range(0, 50_000_000), past: r.chance(0.2) },
+            5..=7 => Op::Pop,
+            8 => Op::Advance { offset: r.gen_range(0, 20_000_000) },
+            _ => Op::Restore,
+        })
+        .collect()
+}
+
+/// Drive both queues through the script in lockstep, asserting every
+/// observable (pop stream, peek, len, now, seq) matches at every step.
+fn run_lockstep(script: &[Op], restore_seed: u64) -> Result<(), String> {
+    let mut cal = EventQueue::with_backend(QueueBackend::Calendar);
+    let mut heap = EventQueue::with_backend(QueueBackend::Heap);
+    let mut restore_rng = Prng::new(restore_seed);
+    let mut next_payload: u64 = 0;
+
+    for (step, &op) in script.iter().enumerate() {
+        match op {
+            Op::Push { offset, past } => {
+                // A "past" push targets a time below now (clamped); a
+                // normal one targets now + offset.
+                let base = cal.now().0;
+                let at = if past {
+                    SimTime(base.saturating_sub(offset))
+                } else {
+                    SimTime(base + offset)
+                };
+                cal.push(at, next_payload);
+                heap.push(at, next_payload);
+                next_payload += 1;
+            }
+            Op::Pop => {
+                let (a, b) = (cal.pop(), heap.pop());
+                prop_assert!(a == b, "step {step}: pop diverged: {a:?} vs {b:?}");
+            }
+            Op::Advance { offset } => {
+                let t = SimTime(cal.now().0 + offset);
+                cal.advance_to(t);
+                heap.advance_to(t);
+            }
+            Op::Restore => {
+                // entries() is the snapshot surface; both backends must
+                // serialize the identical (time, seq, payload) list.
+                let ce: Vec<(SimTime, u64, u64)> =
+                    cal.entries().into_iter().map(|(t, s, &p)| (t, s, p)).collect();
+                let he: Vec<(SimTime, u64, u64)> =
+                    heap.entries().into_iter().map(|(t, s, &p)| (t, s, p)).collect();
+                prop_assert!(ce == he, "step {step}: entries diverged: {ce:?} vs {he:?}");
+                // Restore onto random backends: the snapshot must not
+                // care which backend wrote it or which one reads it.
+                let pick = |r: &mut Prng| {
+                    if r.chance(0.5) { QueueBackend::Calendar } else { QueueBackend::Heap }
+                };
+                let (ca, cb) = (pick(&mut restore_rng), pick(&mut restore_rng));
+                cal = EventQueue::restore_with_backend(ca, cal.now(), cal.seq(), ce)
+                    .map_err(|e| format!("step {step}: calendar restore refused: {e}"))?;
+                heap = EventQueue::restore_with_backend(cb, heap.now(), heap.seq(), he)
+                    .map_err(|e| format!("step {step}: heap restore refused: {e}"))?;
+            }
+        }
+        prop_assert!(
+            cal.len() == heap.len(),
+            "step {step}: len diverged: {} vs {}",
+            cal.len(),
+            heap.len()
+        );
+        prop_assert!(
+            cal.peek_time() == heap.peek_time(),
+            "step {step}: peek diverged: {:?} vs {:?}",
+            cal.peek_time(),
+            heap.peek_time()
+        );
+        prop_assert!(
+            cal.now() == heap.now() && cal.seq() == heap.seq(),
+            "step {step}: clock/seq diverged: ({:?},{}) vs ({:?},{})",
+            cal.now(),
+            cal.seq(),
+            heap.now(),
+            heap.seq()
+        );
+    }
+
+    // Drain both to the end: the full residual pop stream must match.
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        prop_assert!(a == b, "drain diverged: {a:?} vs {b:?}");
+        if a.is_none() {
+            return Ok(());
+        }
+    }
+}
+
+#[test]
+fn random_interleavings_pop_identically() {
+    forall(
+        "queue-backend-equivalence",
+        Config { cases: 64, seed: 0x9_0E0E },
+        |r| {
+            let len = r.gen_range(20, 400) as usize;
+            let restore_seed = r.next();
+            (gen_script(r, len), restore_seed)
+        },
+        |(script, restore_seed)| run_lockstep(script, *restore_seed),
+    );
+}
+
+#[test]
+fn burst_of_equal_timestamps_keeps_fifo_across_backends() {
+    // Heavy seq-tie-breaking pressure: many entries on few distinct
+    // timestamps, popped across a mid-burst restore.
+    let mut cal = EventQueue::with_backend(QueueBackend::Calendar);
+    let mut heap = EventQueue::with_backend(QueueBackend::Heap);
+    for i in 0..300u64 {
+        let t = SimTime((i % 3) * 1_000);
+        cal.push(t, i);
+        heap.push(t, i);
+    }
+    for _ in 0..100 {
+        assert_eq!(cal.pop(), heap.pop());
+    }
+    let entries: Vec<(SimTime, u64, u64)> =
+        cal.entries().into_iter().map(|(t, s, &p)| (t, s, p)).collect();
+    // Cross-backend swap: calendar snapshot → heap queue and vice versa.
+    let mut cal2 =
+        EventQueue::restore_with_backend(QueueBackend::Heap, cal.now(), cal.seq(), entries.clone())
+            .unwrap();
+    let mut heap2 = EventQueue::restore_with_backend(
+        QueueBackend::Calendar,
+        heap.now(),
+        heap.seq(),
+        entries,
+    )
+    .unwrap();
+    loop {
+        let (a, b) = (cal2.pop(), heap2.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn hour_scale_offsets_exercise_bucket_rotation() {
+    // Offsets spanning ns..hours force the calendar through grows,
+    // shrinks, and the sparse fallback scan while the heap oracle
+    // watches.
+    let mut cal = EventQueue::with_backend(QueueBackend::Calendar);
+    let mut heap = EventQueue::with_backend(QueueBackend::Heap);
+    let mut r = Prng::new(0x40C4_E0D4);
+    let scales = [1_000u64, 1_000_000, 1_000_000_000, 3_600_000_000_000];
+    for i in 0..1500u64 {
+        if r.chance(0.6) || cal.is_empty() {
+            let scale = scales[r.index(scales.len())];
+            let at = SimTime(cal.now().0 + r.gen_range(0, scale));
+            cal.push(at, i);
+            heap.push(at, i);
+        } else {
+            assert_eq!(cal.pop(), heap.pop(), "diverged at op {i}");
+        }
+    }
+    loop {
+        let (a, b) = (cal.pop(), heap.pop());
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
