@@ -33,7 +33,7 @@ use gyges::experiments::sweep::{
 use gyges::sim::{set_queue_backend, QueueBackend, SimTime};
 use gyges::util::json::Json;
 use gyges::util::Args;
-use gyges::workload::{Trace, TraceRequest};
+use gyges::workload::{SloClass, Trace, TraceRequest};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -48,7 +48,7 @@ fn fig13_qps_sweep_jobs(horizon_s: f64) -> Vec<SweepJob> {
                 format!("qps{qps}/{}", policy.name()),
                 cfg.clone(),
                 SystemKind::Gyges,
-                Some(policy),
+                Some(policy.into()),
                 Arc::clone(&trace),
             ));
         }
@@ -67,6 +67,7 @@ fn routing_trace(requests: usize) -> Trace {
             arrival: SimTime::from_secs_f64(i as f64 * 0.005), // 200 qps
             input_len: 1000,
             output_len: 4,
+            class: SloClass::Interactive,
         });
     }
     t.sort();

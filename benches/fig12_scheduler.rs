@@ -5,9 +5,9 @@
 //! and writes shard JSONL + manifest instead (merge the stripes with
 //! `gyges sweep-merge fig12`).
 
-use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::config::{ClusterConfig, ModelConfig, Policy};
 use gyges::coordinator::{
-    ActiveRequest, ClusterView, GygesPolicy, HostIndex, Instance, LoadIndex, RoutePolicy,
+    make_policy, ActiveRequest, ClusterView, HostIndex, Instance, LoadIndex,
 };
 use gyges::experiments as exp;
 use gyges::sim::{EngineModel, SimTime};
@@ -34,7 +34,10 @@ fn main() {
     // the simulator does (the fallback scan path is not the hot path).
     let index = HostIndex::build(&instances, 8);
     let load = LoadIndex::build(&instances, &engine);
-    let mut policy = GygesPolicy::default();
+    // The production path: the gyges composition of the filter/score
+    // pipeline (the legacy GygesPolicy only exists behind the test-only
+    // `legacy-policies` feature).
+    let mut policy = make_policy(Policy::Gyges);
     let req = ActiveRequest::new(1, SimTime::ZERO, 1000, 100);
     let long = ActiveRequest::new(2, SimTime::ZERO, 50_000, 256);
     let view = ClusterView {

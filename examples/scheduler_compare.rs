@@ -28,7 +28,7 @@ fn main() {
         "scheduler", "tput (tps)", "ttft p50", "tpot p50", "scale-ups", "scale-downs",
     ]);
     for policy in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
-        let out = run_system(cfg.clone(), SystemKind::Gyges, Some(policy), trace.clone());
+        let out = run_system(cfg.clone(), SystemKind::Gyges, Some(policy.into()), trace.clone());
         t.row([
             policy.name().to_string(),
             format!("{:.1}", out.report.throughput_tps),

@@ -93,6 +93,7 @@ mod tests {
                 arrival: crate::sim::SimTime::from_secs_f64(i as f64 * 0.05),
                 input_len: 200,
                 output_len: 300,
+                class: crate::workload::SloClass::Interactive,
             });
         }
         trace.sort();

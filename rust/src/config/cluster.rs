@@ -35,6 +35,80 @@ impl Policy {
     }
 }
 
+/// Full policy identity: a base routing policy plus the composed
+/// pipeline stages layered on top. This is THE policy-name registry —
+/// CLI flags (`--policy`, `branch --policies`, `chaos`), sweep job
+/// builders, snapshot fingerprints, and the scheduler pipeline all
+/// parse and print through it, so a name round-trips everywhere:
+/// `<base>[-slo][-admit]` (e.g. `gyges`, `rr-slo`, `llf-slo-admit`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PolicyId {
+    pub base: Policy,
+    /// SLO-class lanes: interactive requests drain the backlog first and
+    /// may preempt queued batch prefills (preemption-by-requeue).
+    pub slo: bool,
+    /// Deadline-aware admission control: a request older than its
+    /// class deadline is dropped at the decision stage under overload.
+    pub admit: bool,
+}
+
+impl PolicyId {
+    /// Parse a canonical `<base>[-slo][-admit]` policy name. Base
+    /// aliases (`round-robin`, `least-load`, ...) are accepted; stage
+    /// suffixes only in canonical order (`-slo` before `-admit`).
+    pub fn parse(s: &str) -> Option<PolicyId> {
+        let lower = s.to_ascii_lowercase();
+        let mut rest = lower.as_str();
+        let mut admit = false;
+        let mut slo = false;
+        if let Some(r) = rest.strip_suffix("-admit") {
+            admit = true;
+            rest = r;
+        }
+        if let Some(r) = rest.strip_suffix("-slo") {
+            slo = true;
+            rest = r;
+        }
+        Policy::by_name(rest).map(|base| PolicyId { base, slo, admit })
+    }
+
+    /// Canonical name. Static so `RoutePolicy::name` (and through it the
+    /// snapshot config fingerprint and sweep labels) can return it.
+    pub fn name(&self) -> &'static str {
+        match (self.base, self.slo, self.admit) {
+            (Policy::Gyges, false, false) => "gyges",
+            (Policy::Gyges, true, false) => "gyges-slo",
+            (Policy::Gyges, false, true) => "gyges-admit",
+            (Policy::Gyges, true, true) => "gyges-slo-admit",
+            (Policy::RoundRobin, false, false) => "rr",
+            (Policy::RoundRobin, true, false) => "rr-slo",
+            (Policy::RoundRobin, false, true) => "rr-admit",
+            (Policy::RoundRobin, true, true) => "rr-slo-admit",
+            (Policy::LeastLoadFirst, false, false) => "llf",
+            (Policy::LeastLoadFirst, true, false) => "llf-slo",
+            (Policy::LeastLoadFirst, false, true) => "llf-admit",
+            (Policy::LeastLoadFirst, true, true) => "llf-slo-admit",
+        }
+    }
+
+    /// A plain base policy with no composed stages.
+    pub fn plain(&self) -> bool {
+        !self.slo && !self.admit
+    }
+}
+
+impl From<Policy> for PolicyId {
+    fn from(base: Policy) -> PolicyId {
+        PolicyId { base, slo: false, admit: false }
+    }
+}
+
+impl std::fmt::Display for PolicyId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Full cluster + experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -44,9 +118,15 @@ pub struct ClusterConfig {
     pub gpus_per_host: usize,
     /// Allowed TP degrees, ascending (e.g. [1, 2, 4]).
     pub tp_choices: Vec<u64>,
-    pub policy: Policy,
+    pub policy: PolicyId,
     /// Algorithm 2 scale-down load threshold.
     pub scale_down_threshold: f64,
+    /// Deadline for interactive-class requests under `-admit` policies:
+    /// a request still unplaced this many seconds after arrival is shed
+    /// at the decision stage instead of retried. Seconds.
+    pub slo_interactive_deadline_s: f64,
+    /// Deadline for batch-class requests under `-admit` policies.
+    pub slo_batch_deadline_s: f64,
     /// Minimum dwell time between transformations on one instance
     /// (oscillation damping), seconds.
     pub min_dwell_s: f64,
@@ -84,8 +164,10 @@ impl ClusterConfig {
             hosts: 1,
             gpus_per_host: 8,
             tp_choices: vec![1, 2, 4],
-            policy: Policy::Gyges,
+            policy: Policy::Gyges.into(),
             scale_down_threshold: super::calib::workload::SCALE_DOWN_LOAD_THRESHOLD,
+            slo_interactive_deadline_s: 30.0,
+            slo_batch_deadline_s: 240.0,
             min_dwell_s: 5.0,
             backlog_retry_cooldown_s: 0.05,
             retry_max_attempts: 0,
@@ -137,10 +219,14 @@ impl ClusterConfig {
         if let Some(p) = doc.get("scheduler.policy") {
             let name = p.as_str().unwrap_or("");
             cfg.policy =
-                Policy::by_name(name).ok_or_else(|| format!("unknown policy {name:?}"))?;
+                PolicyId::parse(name).ok_or_else(|| format!("unknown policy {name:?}"))?;
         }
         cfg.scale_down_threshold =
             doc.f64_or("scheduler.scale_down_threshold", cfg.scale_down_threshold);
+        cfg.slo_interactive_deadline_s =
+            doc.f64_or("scheduler.slo_interactive_deadline_s", cfg.slo_interactive_deadline_s);
+        cfg.slo_batch_deadline_s =
+            doc.f64_or("scheduler.slo_batch_deadline_s", cfg.slo_batch_deadline_s);
         cfg.min_dwell_s = doc.f64_or("scheduler.min_dwell_s", cfg.min_dwell_s);
         cfg.backlog_retry_cooldown_s =
             doc.f64_or("scheduler.backlog_retry_cooldown_s", cfg.backlog_retry_cooldown_s);
@@ -196,6 +282,12 @@ impl ClusterConfig {
         if !(0.0..=1.0).contains(&self.scale_down_threshold) {
             return Err("scale_down_threshold must be in [0,1]".into());
         }
+        if !self.slo_interactive_deadline_s.is_finite() || self.slo_interactive_deadline_s <= 0.0 {
+            return Err("slo_interactive_deadline_s must be a finite positive number".into());
+        }
+        if !self.slo_batch_deadline_s.is_finite() || self.slo_batch_deadline_s <= 0.0 {
+            return Err("slo_batch_deadline_s must be a finite positive number".into());
+        }
         if !self.backlog_retry_cooldown_s.is_finite() || self.backlog_retry_cooldown_s < 0.0 {
             return Err("backlog_retry_cooldown_s must be a finite non-negative number".into());
         }
@@ -249,7 +341,7 @@ mod tests {
         let cfg = ClusterConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.model.name, "llama3-8b");
         assert_eq!(cfg.hosts, 2);
-        assert_eq!(cfg.policy, Policy::LeastLoadFirst);
+        assert_eq!(cfg.policy, Policy::LeastLoadFirst.into());
         assert_eq!(cfg.gpu.name, "a100-40g"); // paired automatically
         assert!((cfg.scale_down_threshold - 0.3).abs() < 1e-12);
     }
@@ -316,5 +408,47 @@ mod tests {
         for p in [Policy::Gyges, Policy::RoundRobin, Policy::LeastLoadFirst] {
             assert_eq!(Policy::by_name(p.name()), Some(p));
         }
+    }
+
+    #[test]
+    fn policy_id_names_roundtrip() {
+        for base in [Policy::Gyges, Policy::RoundRobin, Policy::LeastLoadFirst] {
+            for slo in [false, true] {
+                for admit in [false, true] {
+                    let id = PolicyId { base, slo, admit };
+                    assert_eq!(PolicyId::parse(id.name()), Some(id), "{}", id.name());
+                    assert_eq!(format!("{id}"), id.name());
+                }
+            }
+        }
+        // Base aliases still parse, with and without stage suffixes.
+        assert_eq!(PolicyId::parse("round-robin"), Some(Policy::RoundRobin.into()));
+        assert_eq!(
+            PolicyId::parse("least-load-slo-admit"),
+            Some(PolicyId { base: Policy::LeastLoadFirst, slo: true, admit: true })
+        );
+        // Only the canonical suffix order is a name.
+        assert_eq!(PolicyId::parse("gyges-admit-slo"), None);
+        assert_eq!(PolicyId::parse("bogus"), None);
+    }
+
+    #[test]
+    fn slo_deadlines_parsed_and_validated() {
+        let doc = Doc::parse(
+            r#"
+            [scheduler]
+            policy = "gyges-slo-admit"
+            slo_interactive_deadline_s = 12.5
+            slo_batch_deadline_s = 99.0
+            "#,
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.policy.name(), "gyges-slo-admit");
+        assert!((cfg.slo_interactive_deadline_s - 12.5).abs() < 1e-12);
+        assert!((cfg.slo_batch_deadline_s - 99.0).abs() < 1e-12);
+        let mut bad = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        bad.slo_interactive_deadline_s = 0.0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -7,6 +7,6 @@ pub mod gpu;
 pub mod model;
 pub mod parse;
 
-pub use cluster::{ClusterConfig, Policy};
+pub use cluster::{ClusterConfig, Policy, PolicyId};
 pub use gpu::GpuSpec;
 pub use model::{MlpKind, ModelConfig};

@@ -32,8 +32,10 @@
 
 use super::instance::{Instance, ParallelKind, StepKind, TransformState};
 use super::request::ActiveRequest;
-use super::scheduler::{make_policy, ClusterView, HostIndex, LoadIndex, Route, RoutePolicy};
-use crate::config::{ClusterConfig, Policy};
+use super::scheduler::{
+    make_policy, make_policy_with_hold, ClusterView, HostIndex, LoadIndex, Route, RoutePolicy,
+};
+use crate::config::{ClusterConfig, Policy, PolicyId};
 use crate::faults::{Fault, FaultKind, FaultPlan, RetryPolicy};
 use crate::metrics::{Recorder, RunReport};
 use crate::sim::clock::{SimDuration, SimTime};
@@ -43,7 +45,7 @@ use crate::snapshot::state::{
     RunContext, SimSnapshot, SimState, TransformSnap,
 };
 use crate::transform::{estimate, Direction, Mechanism, TransformExec, TransformPlan};
-use crate::workload::{ArrivalFeed, Trace, TraceRequest, TraceSource};
+use crate::workload::{ArrivalFeed, SloClass, Trace, TraceRequest, TraceSource};
 use std::collections::VecDeque;
 use std::fmt;
 use std::time::Instant;
@@ -205,6 +207,14 @@ pub struct SimCounters {
     /// ScaleUp routes refused because the target host was degraded or
     /// its KV-migration link was down (failure-aware policy backstop).
     pub scale_up_blocked: u64,
+    /// Queued batch-class prefills evicted (requeued through the
+    /// backlog) to make room for an interactive request (`-slo`
+    /// policies' preemption lane).
+    pub preemptions: u64,
+    /// Subset of `dropped` shed by the decision stage itself
+    /// ([`Route::Drop`], `-admit` policies' deadline check) rather than
+    /// by retry exhaustion.
+    pub admission_dropped: u64,
 }
 
 /// Wall-clock attribution of the event loop, accumulated only when
@@ -557,17 +567,31 @@ impl ClusterSim {
     }
 
     /// Tune the Gyges policy's anti-oscillation hold (ablation A3).
-    /// No-op for other policies.
+    /// No-op for non-Gyges-based policies; slo/admit stage flags are
+    /// preserved (the composition is rebuilt, resetting decision state —
+    /// call before running, as the ablation harness does).
     pub fn set_gyges_hold(&mut self, hold_s: f64) {
-        if self.policy.name() == "gyges" {
-            self.policy = Box::new(super::scheduler::GygesPolicy::with_long_hold(hold_s));
+        if let Some(id) = PolicyId::parse(self.policy.name()) {
+            if id.base == Policy::Gyges {
+                self.policy = make_policy_with_hold(id, hold_s);
+            }
         }
     }
 
     /// Override the routing policy (Figure 12 compares policies on the
-    /// same Gyges transformation machinery).
-    pub fn with_policy(mut self, policy: Policy) -> ClusterSim {
+    /// same Gyges transformation machinery). Accepts a plain [`Policy`]
+    /// or a composed [`PolicyId`].
+    pub fn with_policy(mut self, policy: impl Into<PolicyId>) -> ClusterSim {
         self.policy = make_policy(policy);
+        self
+    }
+
+    /// Install an already-built policy object (lockstep tests drive the
+    /// legacy reference impls through this without touching the
+    /// process-global `legacy_routing` flag, which is unsafe under
+    /// parallel test threads).
+    pub fn with_boxed_policy(mut self, policy: Box<dyn RoutePolicy>) -> ClusterSim {
+        self.policy = policy;
         self
     }
 
@@ -787,6 +811,7 @@ impl ClusterSim {
             output_len: r.output_len,
             generated: r.generated,
             phase: r.phase.name().to_string(),
+            class: r.class,
         };
         let events = self
             .queue
@@ -951,6 +976,7 @@ impl ClusterSim {
                 generated: r.generated,
                 phase: super::request::Phase::by_name(&r.phase)
                     .ok_or_else(|| format!("unknown request phase {:?}", r.phase))?,
+                class: r.class,
             })
         };
         let mut instances = Vec::with_capacity(n);
@@ -1147,7 +1173,7 @@ impl ClusterSim {
     fn on_arrival(&mut self, tr: TraceRequest) {
         let now = tr.arrival;
         self.recorder.on_arrival(tr.id, now, tr.input_len, tr.output_len);
-        let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len);
+        let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len).with_class(tr.class);
         self.route_one(now, req, None);
     }
 
@@ -1183,6 +1209,20 @@ impl ClusterSim {
         let t0 = self.prof_start();
         let route = self.policy.route(&req, &view);
         Self::prof_add(t0, &mut self.profile.route_s);
+        // Resolve preemption against exact pending state: the policy's
+        // victim check is optimistic (it cannot see which queued prefill
+        // already has its completion event in flight), so a failed plan
+        // degrades to Defer here rather than inside the policy.
+        let route = match route {
+            Route::Preempt { victim } => {
+                if self.try_preempt(now, victim, &req) {
+                    Route::Assign(victim)
+                } else {
+                    Route::Defer
+                }
+            }
+            r => r,
+        };
         // Failure-aware backstop: even if a policy ignores the blocked
         // mask, no transformation may target a crashed host or migrate
         // KV over a dead link.
@@ -1214,6 +1254,16 @@ impl ClusterSim {
                 placed(self, iid, req);
                 true
             }
+            Route::Drop => {
+                // Deadline-aware admission control: the decision stage
+                // shed the request outright. It never re-enters the
+                // backlog; the recorder keeps its arrival row (an
+                // accepted-then-unserved request, like retry exhaustion).
+                self.counters.dropped += 1;
+                self.counters.admission_dropped += 1;
+                false
+            }
+            Route::Preempt { .. } => unreachable!("preemption resolved above"),
             // ScaleUp with transformation disabled degrades to Defer.
             Route::ScaleUp { .. } | Route::Defer => {
                 let (since, prior) = match deferred {
@@ -1238,6 +1288,43 @@ impl ClusterSim {
                 false
             }
         }
+    }
+
+    /// Execute a [`Route::Preempt`] decision: evict the minimal set of
+    /// queued batch-class prefills from `victim` (newest first, never
+    /// the one whose completion event is in flight) so `req` fits, and
+    /// requeue them through the backlog as fresh attempts (`attempts:
+    /// 0` — being preempted is not a placement failure). Queued
+    /// prefills hold no KV and have recorded no progress, so eviction
+    /// is pure queue/aggregate surgery. Returns false (caller defers
+    /// `req`) when even the full evictable set falls short.
+    fn try_preempt(&mut self, now: SimTime, victim: usize, req: &ActiveRequest) -> bool {
+        let inflight = match self.pending[victim] {
+            Some(Pending::Prefill { req_id }) => Some(req_id),
+            _ => None,
+        };
+        let Some(plan) =
+            self.instances[victim].preempt_plan(&self.engine, inflight, req)
+        else {
+            return false;
+        };
+        if plan.is_empty() {
+            return true; // already fits — nothing to evict
+        }
+        let evicted = self.instances[victim].evict_prefills(&plan);
+        self.counters.preemptions += evicted.len() as u64;
+        for r in evicted {
+            let back = ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len)
+                .with_class(r.class);
+            self.backlog.push_back(Deferred {
+                req: back,
+                since: now,
+                attempts: 0,
+                next_retry: now,
+            });
+        }
+        self.reindex(victim);
+        true
     }
 
     fn on_step(&mut self, now: SimTime, iid: usize) {
@@ -1444,6 +1531,22 @@ impl ClusterSim {
             self.counters.backlog_suppressed += 1;
             self.schedule_backlog_wakeup();
             return;
+        }
+        // SLO lanes: stable-partition the backlog interactive-first, so
+        // every retry pass places interactive work before batch work.
+        // Plain policies never reach this (wants_slo_lanes is false), so
+        // their backlog order — and output bytes — are untouched.
+        if self.policy.wants_slo_lanes() && self.backlog.len() > 1 {
+            let mut lanes: VecDeque<Deferred> = VecDeque::with_capacity(self.backlog.len());
+            let mut batch: Vec<Deferred> = Vec::new();
+            for d in self.backlog.drain(..) {
+                match d.req.class {
+                    SloClass::Interactive => lanes.push_back(d),
+                    SloClass::Batch => batch.push(d),
+                }
+            }
+            lanes.extend(batch);
+            self.backlog = lanes;
         }
         let mut progress = false;
         let mut tries = self.backlog.len();
@@ -1767,7 +1870,8 @@ impl ClusterSim {
     fn requeue_lost(&mut self, now: SimTime, r: ActiveRequest) {
         self.counters.crash_requeued += 1;
         self.recorder.on_arrival(r.id, r.arrival, r.input_len, r.output_len);
-        let req = ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len);
+        let req =
+            ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len).with_class(r.class);
         self.backlog.push_back(Deferred { req, since: now, attempts: 0, next_retry: now });
     }
 
@@ -1996,7 +2100,7 @@ impl ClusterSim {
 pub fn run_system(
     cfg: ClusterConfig,
     system: SystemKind,
-    policy: Option<Policy>,
+    policy: Option<PolicyId>,
     trace: Trace,
 ) -> SimOutcome {
     let mut sim = ClusterSim::new(cfg, system, trace);
@@ -2023,6 +2127,7 @@ mod tests {
                 arrival: SimTime::from_secs_f64(i as f64 * 0.5),
                 input_len: 1000,
                 output_len: 50,
+                class: SloClass::Interactive,
             });
         }
         t
@@ -2046,6 +2151,7 @@ mod tests {
             arrival: SimTime::from_secs_f64(1.0),
             input_len: 50_000,
             output_len: 64,
+            class: SloClass::Interactive,
         });
         trace.sort();
         let out = run_system(small_cfg(), SystemKind::Gyges, None, trace);
@@ -2061,6 +2167,7 @@ mod tests {
             arrival: SimTime::ZERO,
             input_len: 50_000,
             output_len: 32,
+            class: SloClass::Interactive,
         });
         // steady shorts afterwards so steps keep firing post-drain
         for i in 1..200u64 {
@@ -2069,6 +2176,7 @@ mod tests {
                 arrival: SimTime::from_secs_f64(20.0 + i as f64 * 0.5),
                 input_len: 1000,
                 output_len: 20,
+                class: SloClass::Interactive,
             });
         }
         trace.sort();
@@ -2092,10 +2200,11 @@ mod tests {
     #[test]
     fn policies_differ_on_hybrid_load() {
         let t = Trace::hybrid_paper(11, 240.0);
-        let gy = run_system(small_cfg(), SystemKind::Gyges, Some(Policy::Gyges), t.clone());
-        let rr = run_system(small_cfg(), SystemKind::Gyges, Some(Policy::RoundRobin), t.clone());
+        let gy = run_system(small_cfg(), SystemKind::Gyges, Some(Policy::Gyges.into()), t.clone());
+        let rr =
+            run_system(small_cfg(), SystemKind::Gyges, Some(Policy::RoundRobin.into()), t.clone());
         let llf =
-            run_system(small_cfg(), SystemKind::Gyges, Some(Policy::LeastLoadFirst), t);
+            run_system(small_cfg(), SystemKind::Gyges, Some(Policy::LeastLoadFirst.into()), t);
         // Gyges should not transform more often than the baselines.
         assert!(gy.counters.scale_ups <= rr.counters.scale_ups.max(llf.counters.scale_ups));
     }
@@ -2108,6 +2217,7 @@ mod tests {
             arrival: SimTime::from_secs_f64(2.0),
             input_len: 50_000,
             output_len: 32,
+            class: SloClass::Interactive,
         });
         trace.sort();
         let gy = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
@@ -2123,6 +2233,7 @@ mod tests {
             arrival: SimTime::ZERO,
             input_len: 50_000,
             output_len: 128,
+            class: SloClass::Interactive,
         });
         trace.sort();
         let gy = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
@@ -2177,6 +2288,7 @@ mod tests {
                             arrival: SimTime::from_secs_f64(1.0),
                             input_len: 1000,
                             output_len: 20,
+                            class: SloClass::Interactive,
                         }],
                     })),
                     1 => Some(Err("disk on fire".into())),
@@ -2195,6 +2307,122 @@ mod tests {
             }
             ref other => panic!("expected TraceSource error, got {other:?}"),
         }
+    }
+
+    /// Full-run lockstep: every plain pipeline composition must produce
+    /// the same report bytes and counters as its legacy reference impl.
+    /// The legacy policy is installed via `with_boxed_policy` — not the
+    /// process-global `legacy_routing` flag, which would race with other
+    /// tests on parallel threads.
+    #[test]
+    fn pipeline_matches_legacy_reference_end_to_end() {
+        use super::super::scheduler::{GygesPolicy, LeastLoadPolicy, RoundRobinPolicy};
+        let t = Trace::hybrid_paper(7, 180.0);
+        let pairs: Vec<(PolicyId, Box<dyn RoutePolicy>)> = vec![
+            (Policy::Gyges.into(), Box::new(GygesPolicy::default())),
+            (Policy::RoundRobin.into(), Box::new(RoundRobinPolicy::default())),
+            (Policy::LeastLoadFirst.into(), Box::new(LeastLoadPolicy)),
+        ];
+        for (id, legacy) in pairs {
+            let pipe =
+                ClusterSim::new(small_cfg(), SystemKind::Gyges, t.clone()).with_policy(id).run();
+            let refr = ClusterSim::new(small_cfg(), SystemKind::Gyges, t.clone())
+                .with_boxed_policy(legacy)
+                .run();
+            assert_eq!(
+                pipe.report.to_json().to_string(),
+                refr.report.to_json().to_string(),
+                "pipeline {} diverged from the legacy reference",
+                id.name()
+            );
+            assert_eq!(pipe.counters, refr.counters, "{} counters diverged", id.name());
+        }
+    }
+
+    /// Saturate every instance with batch-class work, then send
+    /// interactive arrivals: the `-slo` composition must preempt queued
+    /// batch prefills (and lose nothing), the plain one must not.
+    #[test]
+    fn slo_lanes_preempt_queued_batch_work() {
+        let cfg = small_cfg();
+        let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
+        // Batch requests sized to the TP1 sequence limit pack each
+        // instance's KV with no leftover an interactive request could
+        // slip into; twice the fleet-wide fit keeps backlogs deep.
+        let bfl = engine.max_seq(1);
+        let per_inst = (engine.kv_capacity_tokens(1) / bfl).max(1) as usize;
+        let n_batch = 2 * cfg.hosts * cfg.gpus_per_host * per_inst;
+        let mut trace = Trace::default();
+        for i in 0..n_batch {
+            trace.requests.push(crate::workload::TraceRequest {
+                id: i as u64,
+                arrival: SimTime::ZERO,
+                input_len: bfl - 200,
+                output_len: 200,
+                class: SloClass::Batch,
+            });
+        }
+        // Interactive arrivals land before any batch prefill completes,
+        // so each instance still holds evictable queued prefills.
+        for k in 0..8u64 {
+            trace.requests.push(crate::workload::TraceRequest {
+                id: n_batch as u64 + k,
+                arrival: SimTime::from_secs_f64(0.01),
+                input_len: bfl - 50,
+                output_len: 50,
+                class: SloClass::Interactive,
+            });
+        }
+        trace.sort();
+        let plain = run_system(
+            small_cfg(),
+            SystemKind::Gyges,
+            Some(Policy::Gyges.into()),
+            trace.clone(),
+        );
+        let slo = run_system(
+            small_cfg(),
+            SystemKind::Gyges,
+            Some(PolicyId::parse("gyges-slo").unwrap()),
+            trace,
+        );
+        assert_eq!(plain.counters.preemptions, 0, "plain gyges must never preempt");
+        assert!(slo.counters.preemptions >= 1, "interactive work must preempt batch prefills");
+        assert_eq!(
+            plain.report.completed, slo.report.completed,
+            "preemption-by-requeue must not lose requests"
+        );
+        assert!(plain.error.is_none() && slo.error.is_none());
+    }
+
+    /// Under sustained overload with a binding deadline, the `-admit`
+    /// composition sheds aged requests at the decision stage.
+    #[test]
+    fn admit_policy_sheds_past_deadline_work() {
+        let mut cfg = small_cfg();
+        cfg.slo_interactive_deadline_s = 2.0;
+        cfg.slo_batch_deadline_s = 4.0;
+        let mut trace = Trace::default();
+        for i in 0..400u64 {
+            trace.requests.push(crate::workload::TraceRequest {
+                id: i,
+                arrival: SimTime::from_secs_f64(i as f64 * 0.001),
+                input_len: 3000,
+                output_len: 200,
+                class: SloClass::Interactive,
+            });
+        }
+        trace.sort();
+        let out = run_system(
+            cfg,
+            SystemKind::Gyges,
+            Some(PolicyId::parse("gyges-admit").unwrap()),
+            trace,
+        );
+        assert!(out.error.is_none());
+        assert!(out.counters.admission_dropped > 0, "deadline must bind under overload");
+        assert!(out.counters.dropped >= out.counters.admission_dropped);
+        assert!(out.report.completed > 0, "admission control sheds the tail, not everything");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use super::request::{ActiveRequest, Phase};
 use crate::config::calib::baselines;
+use crate::workload::SloClass;
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::sim::EngineModel;
 use crate::transform::TransformExec;
@@ -221,6 +222,75 @@ impl Instance {
         req.generated = 1; // prefill emits the first token
         self.kv_tokens += req.input_len + 1;
         Some(req)
+    }
+
+    /// Could `req` fit here if every queued batch-class prefill were
+    /// requeued? The `-slo` preemption *viability* check the pipeline's
+    /// victim search uses — optimistic, because it cannot see which
+    /// queued prefill already has its completion event in flight; the
+    /// simulator re-validates with [`Instance::preempt_plan`] and
+    /// degrades to `Defer` when the exact plan fails. O(queue).
+    pub fn preempt_could_fit(&self, engine: &EngineModel, req: &ActiveRequest) -> bool {
+        if req.final_len() > self.max_seq(engine) {
+            return false;
+        }
+        let evictable: u64 = self
+            .prefill_queue
+            .iter()
+            .filter(|r| r.class == SloClass::Batch)
+            .map(|r| r.final_len())
+            .sum();
+        evictable > 0
+            && self.committed_tokens - evictable + req.final_len() <= self.kv_capacity(engine)
+    }
+
+    /// Plan the minimal batch-prefill eviction that makes `req` fit:
+    /// newest-queued first (they have waited least), skipping `inflight`
+    /// (a prefill whose completion event is already scheduled cannot be
+    /// unpicked). Queued prefills hold no KV — eviction only releases
+    /// *committed* headroom. `Some(vec![])` when `req` already fits;
+    /// `None` when even the full evictable set falls short.
+    pub fn preempt_plan(
+        &self,
+        engine: &EngineModel,
+        inflight: Option<u64>,
+        req: &ActiveRequest,
+    ) -> Option<Vec<u64>> {
+        if req.final_len() > self.max_seq(engine) {
+            return None;
+        }
+        let cap = self.kv_capacity(engine);
+        let mut committed = self.committed_tokens;
+        if committed + req.final_len() <= cap {
+            return Some(Vec::new());
+        }
+        let mut plan = Vec::new();
+        for r in self.prefill_queue.iter().rev() {
+            if r.class != SloClass::Batch || Some(r.id) == inflight {
+                continue;
+            }
+            committed -= r.final_len();
+            plan.push(r.id);
+            if committed + req.final_len() <= cap {
+                return Some(plan);
+            }
+        }
+        None
+    }
+
+    /// Remove the planned prefills and return them for requeueing (KV is
+    /// untouched — queued prefills hold none; only the committed-token
+    /// aggregate shrinks).
+    pub fn evict_prefills(&mut self, ids: &[u64]) -> Vec<ActiveRequest> {
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if let Some(pos) = self.prefill_queue.iter().position(|r| r.id == id) {
+                let req = self.prefill_queue.remove(pos).expect("position just found");
+                self.committed_tokens -= req.final_len();
+                out.push(req);
+            }
+        }
+        out
     }
 
     /// Enqueue a decoding request whose KV is already accounted for

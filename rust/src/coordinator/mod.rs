@@ -4,6 +4,7 @@
 
 pub mod cluster;
 pub mod instance;
+pub mod pipeline;
 pub mod request;
 pub mod scheduler;
 
@@ -11,10 +12,14 @@ pub use cluster::{
     run_system, ClusterSim, SimCounters, SimError, SimOutcome, SimProfile, SystemKind,
 };
 pub use instance::{Instance, ParallelKind, StepKind, TransformState};
+pub use pipeline::{FilterPlugin, PipelinePolicy, RouteCtx, ScorePlugin};
 pub use request::{ActiveRequest, Phase};
 pub use cluster::RunStatus;
+#[cfg(any(test, feature = "legacy-policies"))]
+pub use scheduler::{GygesPolicy, LeastLoadPolicy, RoundRobinPolicy};
 pub use scheduler::{
     default_scale_down, make_policy, needed_tp, pick_merge_group, pick_merge_group_into,
-    ClusterView, GygesPolicy, HIGH_TP_SHORT_PENALTY, HostIndex, LeastLoadPolicy, LoadIndex,
-    PolicyState, Route, RoundRobinPolicy, RoutePolicy,
+    ClusterView, HIGH_TP_SHORT_PENALTY, HostIndex, LoadIndex, PolicyState, Route, RoutePolicy,
 };
+#[cfg(any(test, feature = "legacy-policies"))]
+pub use scheduler::{legacy_routing, set_legacy_routing};

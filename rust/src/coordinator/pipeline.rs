@@ -1,0 +1,703 @@
+//! Pluggable filter/score routing pipeline.
+//!
+//! Routing is decomposed into four stages (the scheduler/plugin/queue
+//! split of cluster schedulers like kubernetriks, adapted to Gyges'
+//! transformation-aware world):
+//!
+//! 1. **Candidates** — [`ClusterView::candidates`], the live-instance
+//!    source (LoadIndex-backed inside the simulator; blocked-host
+//!    masking applies to the merge-candidate accessors, see the
+//!    `ClusterView` docs for why assignment candidates are unmasked).
+//! 2. **Filters** — [`FilterPlugin`] chain; a candidate survives only if
+//!    every filter keeps it.
+//! 3. **Score** — one [`ScorePlugin`]; the surviving candidate with the
+//!    minimal `(score, id)` wins (first-win ascending-id tie-break,
+//!    byte-identical to the legacy first-win scans).
+//! 4. **Decision** — maps the winner (or its absence) to a [`Route`]:
+//!    `Assign`, `ScaleUp` (merge-group selection), `Defer`, `Drop`
+//!    (admission control), or `Preempt` (SLO lanes).
+//!
+//! The three base policies (`gyges`/`rr`/`llf`) are expressed as stage
+//! compositions in [`PipelinePolicy`], proven byte-identical to the
+//! legacy implementations (lockstep property tests in-tree; JSONL `cmp`
+//! in the `policy-pipeline-verify` CI job). Determinism contract for
+//! every plugin: PERF.md §"Scheduler pipeline contract".
+//!
+//! Indexed acceleration: when the view carries a
+//! [`LoadIndex`](super::scheduler::LoadIndex) (`view.load`), the gyges
+//! short/long compositions delegate to its `pick_short`/`pick_long` —
+//! the scan composition below is the *specification*, and the existing
+//! index-vs-scan equivalence property tests prove decision identity.
+
+use super::instance::Instance;
+use super::request::ActiveRequest;
+use super::scheduler::{
+    default_scale_down, needed_tp, pick_merge_group, pick_merge_group_into, scale_up_fallback,
+    ClusterView, PolicyState, Route, RoutePolicy, HIGH_TP_SHORT_PENALTY,
+};
+use crate::config::{Policy, PolicyId};
+use crate::sim::clock::SimTime;
+use crate::workload::SloClass;
+
+/// Stage context threading policy state (the Gyges reserve) through the
+/// filter chain without widening every plugin signature.
+pub struct RouteCtx<'a> {
+    /// Instances reserved as scale-up headroom (ascending ids).
+    pub reserved: &'a [usize],
+    /// Load cap applied to reserved instances for short traffic.
+    pub reserve_cap: f64,
+}
+
+/// Context for compositions with no reserve (everything is kept).
+pub const EMPTY_CTX: RouteCtx<'static> = RouteCtx { reserved: &[], reserve_cap: f64::INFINITY };
+
+/// A per-candidate admission filter. MUST be deterministic and
+/// side-effect-free: `keep` may read only `(req, inst, view, ctx)`.
+pub trait FilterPlugin {
+    fn name(&self) -> &'static str;
+    fn keep(
+        &self,
+        req: &ActiveRequest,
+        inst: &Instance,
+        view: &ClusterView<'_>,
+        ctx: &RouteCtx<'_>,
+    ) -> bool;
+}
+
+/// A per-candidate scorer (lower is better). MUST be deterministic and
+/// side-effect-free; ties resolve to the lowest instance id.
+pub trait ScorePlugin {
+    fn name(&self) -> &'static str;
+    fn score(&self, req: &ActiveRequest, inst: &Instance, view: &ClusterView<'_>) -> f64;
+}
+
+/// Drop TP1 instances that are mid-transformation (their KV is in
+/// flight); TP>1 instances keep serving while re-sharding.
+pub struct SkipTransformingTp1;
+
+impl FilterPlugin for SkipTransformingTp1 {
+    fn name(&self) -> &'static str {
+        "skip-transforming-tp1"
+    }
+
+    fn keep(
+        &self,
+        _: &ActiveRequest,
+        inst: &Instance,
+        _: &ClusterView<'_>,
+        _: &RouteCtx<'_>,
+    ) -> bool {
+        !(inst.transforming.is_some() && inst.degree == 1)
+    }
+}
+
+/// Drop any instance that is mid-transformation.
+pub struct SkipTransforming;
+
+impl FilterPlugin for SkipTransforming {
+    fn name(&self) -> &'static str {
+        "skip-transforming"
+    }
+
+    fn keep(
+        &self,
+        _: &ActiveRequest,
+        inst: &Instance,
+        _: &ClusterView<'_>,
+        _: &RouteCtx<'_>,
+    ) -> bool {
+        inst.transforming.is_none()
+    }
+}
+
+/// Keep only instances the request fits (sequence limit + projected KV).
+pub struct Fits;
+
+impl FilterPlugin for Fits {
+    fn name(&self) -> &'static str {
+        "fits"
+    }
+
+    fn keep(
+        &self,
+        req: &ActiveRequest,
+        inst: &Instance,
+        view: &ClusterView<'_>,
+        _: &RouteCtx<'_>,
+    ) -> bool {
+        inst.fits(view.engine, req)
+    }
+}
+
+/// Keep scale-up headroom: drop reserved instances already loaded past
+/// the reserve cap (`check_reserve` in Algorithm 1).
+pub struct ReserveHeadroom;
+
+impl FilterPlugin for ReserveHeadroom {
+    fn name(&self) -> &'static str {
+        "reserve-headroom"
+    }
+
+    fn keep(
+        &self,
+        _: &ActiveRequest,
+        inst: &Instance,
+        view: &ClusterView<'_>,
+        ctx: &RouteCtx<'_>,
+    ) -> bool {
+        !(inst.load(view.engine) > ctx.reserve_cap && ctx.reserved.contains(&inst.id))
+    }
+}
+
+/// Keep only TP>1 instances (the long-request lane).
+pub struct HighTpOnly;
+
+impl FilterPlugin for HighTpOnly {
+    fn name(&self) -> &'static str {
+        "high-tp-only"
+    }
+
+    fn keep(
+        &self,
+        _: &ActiveRequest,
+        inst: &Instance,
+        _: &ClusterView<'_>,
+        _: &RouteCtx<'_>,
+    ) -> bool {
+        inst.degree > 1
+    }
+}
+
+/// Gyges short-request score: load plus the high-TP drain penalty
+/// (Algorithm 2 "reduces the request rate to these instances").
+pub struct GygesShortScore;
+
+impl ScorePlugin for GygesShortScore {
+    fn name(&self) -> &'static str {
+        "gyges-short"
+    }
+
+    fn score(&self, _: &ActiveRequest, inst: &Instance, view: &ClusterView<'_>) -> f64 {
+        inst.load(view.engine) + if inst.degree > 1 { HIGH_TP_SHORT_PENALTY } else { 0.0 }
+    }
+}
+
+/// Plain fractional KV load.
+pub struct PlainLoad;
+
+impl ScorePlugin for PlainLoad {
+    fn name(&self) -> &'static str {
+        "load"
+    }
+
+    fn score(&self, _: &ActiveRequest, inst: &Instance, view: &ClusterView<'_>) -> f64 {
+        inst.load(view.engine)
+    }
+}
+
+/// Absolute committed tokens (LLF's capacity-fraction-oblivious metric).
+/// Exact in f64 for any committed count below 2^53.
+pub struct CommittedTokens;
+
+impl ScorePlugin for CommittedTokens {
+    fn name(&self) -> &'static str {
+        "committed-tokens"
+    }
+
+    fn score(&self, _: &ActiveRequest, inst: &Instance, _: &ClusterView<'_>) -> f64 {
+        inst.committed_tokens() as f64
+    }
+}
+
+/// Run the candidates → filters → score stages: the `(score, id)`-minimal
+/// surviving candidate. First-win ascending-id iteration makes the
+/// tie-break identical to the legacy strict-`<` scans.
+pub fn select_best(
+    req: &ActiveRequest,
+    view: &ClusterView<'_>,
+    ctx: &RouteCtx<'_>,
+    filters: &[&dyn FilterPlugin],
+    scorer: &dyn ScorePlugin,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for inst in view.candidates() {
+        if !filters.iter().all(|f| f.keep(req, inst, view, ctx)) {
+            continue;
+        }
+        let score = scorer.score(req, inst, view);
+        let better = match best {
+            None => true,
+            Some((bs, bid)) => score < bs || (score == bs && inst.id < bid),
+        };
+        if better {
+            best = Some((score, inst.id));
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
+/// Gyges base-policy state (Algorithms 1 & 2) carried by the pipeline:
+/// the scale-up reserve and the anti-oscillation hysteresis.
+struct GygesCore {
+    reserved: Vec<usize>,
+    reserve_cap: f64,
+    last_long_seen: Option<SimTime>,
+    long_hold_s: f64,
+    /// Reused candidate buffer for reserve computation.
+    scratch: Vec<usize>,
+}
+
+impl GygesCore {
+    fn new(long_hold_s: f64) -> GygesCore {
+        GygesCore {
+            reserved: Vec::new(),
+            reserve_cap: 0.55,
+            last_long_seen: None,
+            long_hold_s,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// `update_reserve` in Algorithm 2: if no TP>1 instance exists,
+    /// reserve the least-loaded mergeable TP1 group.
+    fn update_reserve(&mut self, view: &ClusterView<'_>) {
+        self.reserved.clear();
+        if view.has_high_tp() {
+            return;
+        }
+        let n = (view.cfg.max_tp() as usize).min(view.cfg.gpus_per_host);
+        if pick_merge_group_into(view, n, &mut self.scratch) {
+            self.reserved.extend_from_slice(&self.scratch);
+            self.reserved.sort_unstable();
+        }
+    }
+
+    /// Short lane: SkipTransformingTp1 → Fits → ReserveHeadroom filters,
+    /// GygesShortScore (indexed fast path: `LoadIndex::pick_short`).
+    fn route_short(&self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        let picked = match view.load {
+            Some(idx) => {
+                idx.pick_short(view.instances, view.engine, req, &self.reserved, self.reserve_cap)
+            }
+            None => {
+                let ctx = RouteCtx { reserved: &self.reserved, reserve_cap: self.reserve_cap };
+                select_best(
+                    req,
+                    view,
+                    &ctx,
+                    &[&SkipTransformingTp1, &Fits, &ReserveHeadroom],
+                    &GygesShortScore,
+                )
+            }
+        };
+        match picked {
+            Some(id) => Route::Assign(id),
+            None => Route::Defer,
+        }
+    }
+
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        self.update_reserve(view);
+        let tp1_max = view.engine.max_seq(1);
+        let long = req.is_long(tp1_max);
+        if long {
+            self.last_long_seen = Some(view.now);
+        }
+
+        if long {
+            // Long lane: HighTpOnly → SkipTransforming → Fits filters,
+            // PlainLoad score (indexed fast path: `LoadIndex::pick_long`)
+            // — prefer instances already at higher TP (Figure 13).
+            let picked = match view.load {
+                Some(idx) => idx.pick_long(view.instances, view.engine, req),
+                None => select_best(
+                    req,
+                    view,
+                    &EMPTY_CTX,
+                    &[&HighTpOnly, &SkipTransforming, &Fits],
+                    &PlainLoad,
+                ),
+            };
+            if let Some(id) = picked {
+                return Route::Assign(id);
+            }
+            // Decision stage: scale up at the degree the request needs.
+            let Some(to_tp) = needed_tp(req, view) else {
+                return Route::Defer;
+            };
+            if to_tp == 1 {
+                // Long by classification but fits TP1 (edge case).
+                return self.route_short(req, view);
+            }
+            // Prefer the reserved group (it was kept under-loaded).
+            let reserved: Vec<usize> = self
+                .reserved
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    let i = &view.instances[id];
+                    !i.retired && i.degree == 1 && i.transforming.is_none()
+                })
+                .collect();
+            if reserved.len() >= to_tp as usize {
+                let mut members = reserved;
+                members.truncate(to_tp as usize);
+                return Route::ScaleUp { members, to_tp };
+            }
+            if let Some(members) = pick_merge_group(view, to_tp as usize) {
+                return Route::ScaleUp { members, to_tp };
+            }
+            return Route::Defer;
+        }
+
+        self.route_short(req, view)
+    }
+
+    fn should_scale_down(&self, inst: &Instance, view: &ClusterView<'_>) -> bool {
+        // Hysteresis: while long traffic is (recently) active, keep the
+        // high-TP instance so follow-up longs reuse it.
+        if let Some(t) = self.last_long_seen {
+            if view.now.since(t).as_secs_f64() < self.long_hold_s {
+                return false;
+            }
+        }
+        default_scale_down(inst, view)
+    }
+}
+
+/// A routing policy assembled from pipeline stages, identified by a
+/// [`PolicyId`]: one of three base compositions (`gyges`/`rr`/`llf`),
+/// optionally wrapped by the SLO-lane stage (`-slo`: interactive
+/// backlog priority + preemption-by-requeue of queued batch prefills)
+/// and the admission-control stage (`-admit`: deadline-aware `Drop`).
+pub struct PipelinePolicy {
+    id: PolicyId,
+    /// Present iff `id.base == Policy::Gyges`.
+    gyges: Option<GygesCore>,
+    /// Round-Robin rotation cursor.
+    cursor: usize,
+    /// Reused live-id buffer (RR scan fallback).
+    scratch: Vec<usize>,
+}
+
+impl PipelinePolicy {
+    pub fn new(id: PolicyId) -> PipelinePolicy {
+        Self::with_long_hold(id, 45.0)
+    }
+
+    /// Composition with a custom Gyges anti-oscillation hold (ablation
+    /// A3, sweep jobs with a `gyges_hold` override).
+    pub fn with_long_hold(id: PolicyId, hold_s: f64) -> PipelinePolicy {
+        let gyges = (id.base == Policy::Gyges).then(|| GygesCore::new(hold_s));
+        PipelinePolicy { id, gyges, cursor: 0, scratch: Vec::new() }
+    }
+
+    /// Rebuild a composition from its snapshot state (any
+    /// [`PolicyState`] — the plain legacy-kind variants restore to the
+    /// equivalent plain composition).
+    pub fn from_state(state: &PolicyState) -> PipelinePolicy {
+        match state {
+            PolicyState::Pipeline { slo, admit, base } => {
+                let mut p = PipelinePolicy::from_state(base);
+                p.id.slo = *slo;
+                p.id.admit = *admit;
+                p
+            }
+            PolicyState::Gyges { reserved, reserve_cap, last_long_seen, long_hold_s } => {
+                PipelinePolicy {
+                    id: Policy::Gyges.into(),
+                    gyges: Some(GygesCore {
+                        reserved: reserved.clone(),
+                        reserve_cap: *reserve_cap,
+                        last_long_seen: *last_long_seen,
+                        long_hold_s: *long_hold_s,
+                        scratch: Vec::new(),
+                    }),
+                    cursor: 0,
+                    scratch: Vec::new(),
+                }
+            }
+            PolicyState::RoundRobin { cursor } => PipelinePolicy {
+                cursor: *cursor,
+                ..PipelinePolicy::new(Policy::RoundRobin.into())
+            },
+            PolicyState::LeastLoad => PipelinePolicy::new(Policy::LeastLoadFirst.into()),
+        }
+    }
+
+    /// RR decision stage: rotate over the live ring; a pick that can
+    /// never hold the sequence "collaborates with neighbouring
+    /// instances" to scale up (§6.2.4); capacity-only misses rotate on.
+    fn route_rr(&mut self, req: &ActiveRequest, view: &ClusterView<'_>, live: &[usize]) -> Route {
+        if live.is_empty() {
+            return Route::Defer;
+        }
+        for k in 0..live.len() {
+            let id = live[(self.cursor + k) % live.len()];
+            let inst = &view.instances[id];
+            if inst.transforming.is_some() {
+                continue;
+            }
+            if inst.fits(view.engine, req) {
+                self.cursor = (self.cursor + k + 1) % live.len();
+                return Route::Assign(id);
+            }
+            if req.final_len() > inst.max_seq(view.engine) {
+                self.cursor = (self.cursor + k + 1) % live.len();
+                return scale_up_fallback(req, view);
+            }
+        }
+        Route::Defer
+    }
+
+    /// Base composition dispatch (everything below the slo/admit stages).
+    fn route_base(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        match self.id.base {
+            Policy::Gyges => {
+                let core = self.gyges.as_mut().expect("gyges core present for gyges base");
+                core.route(req, view)
+            }
+            Policy::RoundRobin => {
+                if let Some(idx) = view.load {
+                    // The maintained live ring IS the candidate source.
+                    return self.route_rr(req, view, idx.live_ids());
+                }
+                let mut live = std::mem::take(&mut self.scratch);
+                live.clear();
+                live.extend(view.candidates().map(|i| i.id));
+                let route = self.route_rr(req, view, &live);
+                self.scratch = live;
+                route
+            }
+            Policy::LeastLoadFirst => {
+                // SkipTransforming filter, CommittedTokens score — no
+                // Fits filter: LLF is deliberately capacity-oblivious,
+                // which is what forces Figure 13's extra scale-up.
+                let picked =
+                    select_best(req, view, &EMPTY_CTX, &[&SkipTransforming], &CommittedTokens);
+                let Some(id) = picked else {
+                    return Route::Defer;
+                };
+                let inst = &view.instances[id];
+                if inst.fits(view.engine, req) {
+                    return Route::Assign(id);
+                }
+                if req.final_len() > inst.max_seq(view.engine) {
+                    return scale_up_fallback(req, view);
+                }
+                // Its pick is full: any fitting instance, else defer.
+                for i in view.candidates() {
+                    if i.transforming.is_none() && i.fits(view.engine, req) {
+                        return Route::Assign(i.id);
+                    }
+                }
+                Route::Defer
+            }
+        }
+    }
+
+    /// SLO-lane stage: a deferred *interactive* request may preempt
+    /// queued batch prefills. Victim choice is optimistic (lowest-id
+    /// live instance where evicting every evictable batch prefill would
+    /// make the request fit); the simulator resolves it against exact
+    /// pending state and degrades to `Defer` when the plan fails.
+    fn find_preempt_victim(&self, req: &ActiveRequest, view: &ClusterView<'_>) -> Option<usize> {
+        view.candidates()
+            .find(|i| i.transforming.is_none() && i.preempt_could_fit(view.engine, req))
+            .map(|i| i.id)
+    }
+}
+
+impl RoutePolicy for PipelinePolicy {
+    fn name(&self) -> &'static str {
+        self.id.name()
+    }
+
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        // Admission stage first: a request past its class deadline is
+        // shed before consuming a routing decision. Fresh arrivals are
+        // always inside the deadline (now == arrival); crash-requeued
+        // and backlogged requests keep their original arrival stamp, so
+        // sustained overload converges to counted drops.
+        if self.id.admit {
+            let deadline = match req.class {
+                SloClass::Interactive => view.cfg.slo_interactive_deadline_s,
+                SloClass::Batch => view.cfg.slo_batch_deadline_s,
+            };
+            if view.now.since(req.arrival).as_secs_f64() > deadline {
+                return Route::Drop;
+            }
+        }
+        let route = self.route_base(req, view);
+        if self.id.slo && req.class == SloClass::Interactive && route == Route::Defer {
+            if let Some(victim) = self.find_preempt_victim(req, view) {
+                return Route::Preempt { victim };
+            }
+        }
+        route
+    }
+
+    fn should_scale_down(&mut self, inst: &Instance, view: &ClusterView<'_>) -> bool {
+        match &self.gyges {
+            Some(core) => core.should_scale_down(inst, view),
+            None => default_scale_down(inst, view),
+        }
+    }
+
+    fn wants_slo_lanes(&self) -> bool {
+        self.id.slo
+    }
+
+    fn snapshot_state(&self) -> PolicyState {
+        let base = match (&self.id.base, &self.gyges) {
+            (Policy::Gyges, Some(core)) => PolicyState::Gyges {
+                reserved: core.reserved.clone(),
+                reserve_cap: core.reserve_cap,
+                last_long_seen: core.last_long_seen,
+                long_hold_s: core.long_hold_s,
+            },
+            (Policy::RoundRobin, _) => PolicyState::RoundRobin { cursor: self.cursor },
+            (Policy::LeastLoadFirst, _) => PolicyState::LeastLoad,
+            (Policy::Gyges, None) => unreachable!("gyges base always carries its core"),
+        };
+        if self.id.plain() {
+            // Plain compositions snapshot as the legacy kinds, so
+            // pre-pipeline snapshot bytes are unchanged and still load.
+            base
+        } else {
+            PolicyState::Pipeline { slo: self.id.slo, admit: self.id.admit, base: Box::new(base) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+    use crate::sim::EngineModel;
+
+    fn setup() -> (ClusterConfig, EngineModel, Vec<Instance>) {
+        let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+        let engine = EngineModel::new(cfg.model.clone(), cfg.gpu.clone());
+        let instances: Vec<Instance> =
+            (0..8).map(|i| Instance::new(i, 0, vec![i], 1)).collect();
+        (cfg, engine, instances)
+    }
+
+    fn view<'a>(
+        cfg: &'a ClusterConfig,
+        engine: &'a EngineModel,
+        instances: &'a [Instance],
+    ) -> ClusterView<'a> {
+        ClusterView {
+            instances,
+            engine,
+            cfg,
+            now: SimTime::from_secs_f64(100.0),
+            tp1: None,
+            load: None,
+            blocked_hosts: None,
+        }
+    }
+
+    /// Every plain composition must agree with its legacy reference impl
+    /// decision-by-decision on a mixed hand-built state.
+    #[test]
+    fn plain_compositions_match_legacy_decisions() {
+        use super::super::scheduler::{GygesPolicy, LeastLoadPolicy, RoundRobinPolicy};
+        let (cfg, engine, mut instances) = setup();
+        for k in 0..4 {
+            instances[0].admit(ActiveRequest::new(200 + k, SimTime::ZERO, 2500, 150));
+        }
+        instances[1].admit(ActiveRequest::new(300, SimTime::ZERO, 1200, 80));
+        instances[7].retired = true;
+        let v = view(&cfg, &engine, &instances);
+        let reqs: Vec<ActiveRequest> = vec![
+            ActiveRequest::new(1, SimTime::ZERO, 1000, 100),
+            ActiveRequest::new(2, SimTime::ZERO, 50_000, 256),
+            ActiveRequest::new(3, SimTime::ZERO, 20_000, 64),
+            ActiveRequest::new(4, SimTime::ZERO, 900, 50),
+        ];
+        let mut pg = PipelinePolicy::new(Policy::Gyges.into());
+        let mut lg = GygesPolicy::default();
+        let mut pr = PipelinePolicy::new(Policy::RoundRobin.into());
+        let mut lr = RoundRobinPolicy::default();
+        let mut pl = PipelinePolicy::new(Policy::LeastLoadFirst.into());
+        let mut ll = LeastLoadPolicy;
+        for req in &reqs {
+            assert_eq!(pg.route(req, &v), lg.route(req, &v), "gyges diverged on {}", req.id);
+            assert_eq!(pr.route(req, &v), lr.route(req, &v), "rr diverged on {}", req.id);
+            assert_eq!(pl.route(req, &v), ll.route(req, &v), "llf diverged on {}", req.id);
+        }
+        assert_eq!(pg.snapshot_state(), lg.snapshot_state(), "gyges state kinds must match");
+        assert_eq!(pr.snapshot_state(), lr.snapshot_state(), "rr state kinds must match");
+        assert_eq!(pl.snapshot_state(), ll.snapshot_state(), "llf state kinds must match");
+    }
+
+    #[test]
+    fn admit_stage_drops_past_deadline() {
+        let (cfg, engine, instances) = setup();
+        let mut p = PipelinePolicy::new(PolicyId::parse("gyges-admit").unwrap());
+        // Stale interactive request: arrival 100 s ago, deadline 30 s.
+        let stale = ActiveRequest::new(1, SimTime::ZERO, 1000, 100);
+        assert_eq!(p.route(&stale, &view(&cfg, &engine, &instances)), Route::Drop);
+        // Fresh arrival (now == arrival) routes normally.
+        let fresh = ActiveRequest::new(2, SimTime::from_secs_f64(100.0), 1000, 100);
+        assert!(matches!(p.route(&fresh, &view(&cfg, &engine, &instances)), Route::Assign(_)));
+        // Batch class gets the looser deadline.
+        let batch = stale.clone().with_class(SloClass::Batch);
+        assert!(matches!(
+            p.route(&batch, &view(&cfg, &engine, &instances)),
+            Route::Assign(_)
+        ));
+    }
+
+    #[test]
+    fn slo_stage_preempts_queued_batch_work() {
+        let (cfg, engine, mut instances) = setup();
+        // Fill every instance with queued batch prefills so nothing fits.
+        for (k, inst) in instances.iter_mut().enumerate() {
+            let mut id = 100 + 1000 * k as u64;
+            while inst.fits(&engine, &ActiveRequest::new(id, SimTime::ZERO, 3000, 200)) {
+                inst.admit(
+                    ActiveRequest::new(id, SimTime::ZERO, 3000, 200).with_class(SloClass::Batch),
+                );
+                id += 1;
+            }
+        }
+        let req = ActiveRequest::new(1, SimTime::from_secs_f64(100.0), 1000, 100);
+        // Plain gyges defers; the slo stage preempts the first victim.
+        let mut plain = PipelinePolicy::new(Policy::Gyges.into());
+        assert_eq!(plain.route(&req, &view(&cfg, &engine, &instances)), Route::Defer);
+        let mut slo = PipelinePolicy::new(PolicyId::parse("gyges-slo").unwrap());
+        assert_eq!(
+            slo.route(&req, &view(&cfg, &engine, &instances)),
+            Route::Preempt { victim: 0 }
+        );
+        // Batch requests never preempt.
+        let batch = req.clone().with_class(SloClass::Batch);
+        assert_eq!(slo.route(&batch, &view(&cfg, &engine, &instances)), Route::Defer);
+        assert!(slo.wants_slo_lanes() && !plain.wants_slo_lanes());
+    }
+
+    #[test]
+    fn composed_state_roundtrips() {
+        let (cfg, engine, instances) = setup();
+        let mut p = PipelinePolicy::new(PolicyId::parse("gyges-slo-admit").unwrap());
+        let req = ActiveRequest::new(1, SimTime::from_secs_f64(100.0), 50_000, 256);
+        let _ = p.route(&req, &view(&cfg, &engine, &instances));
+        let state = p.snapshot_state();
+        match &state {
+            PolicyState::Pipeline { slo: true, admit: true, base } => {
+                assert!(matches!(**base, PolicyState::Gyges { .. }));
+            }
+            other => panic!("expected pipeline state, got {other:?}"),
+        }
+        let restored = PipelinePolicy::from_state(&state);
+        assert_eq!(restored.snapshot_state(), state);
+        assert_eq!(restored.name(), "gyges-slo-admit");
+        // Plain compositions keep the legacy state kinds.
+        let plain = PipelinePolicy::new(Policy::RoundRobin.into());
+        assert!(matches!(plain.snapshot_state(), PolicyState::RoundRobin { cursor: 0 }));
+    }
+}

@@ -1,6 +1,7 @@
 //! Request lifecycle state inside the serving cluster.
 
 use crate::sim::clock::SimTime;
+use crate::workload::SloClass;
 
 /// Serving phase of a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,11 +47,26 @@ pub struct ActiveRequest {
     pub output_len: u64,
     pub generated: u64,
     pub phase: Phase,
+    pub class: SloClass,
 }
 
 impl ActiveRequest {
     pub fn new(id: u64, arrival: SimTime, input_len: u64, output_len: u64) -> ActiveRequest {
-        ActiveRequest { id, arrival, input_len, output_len, generated: 0, phase: Phase::Queued }
+        ActiveRequest {
+            id,
+            arrival,
+            input_len,
+            output_len,
+            generated: 0,
+            phase: Phase::Queued,
+            class: SloClass::Interactive,
+        }
+    }
+
+    /// Builder: tag the request with an SLO class.
+    pub fn with_class(mut self, class: SloClass) -> ActiveRequest {
+        self.class = class;
+        self
     }
 
     /// Current context length (input + generated tokens).

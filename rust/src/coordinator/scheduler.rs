@@ -104,27 +104,6 @@ impl HostIndex {
         self.high_live > 0
     }
 
-    /// Host with the most mergeable TP1 instances, requiring at least `n`
-    /// (ties resolve to the lowest host id, matching a full rescan).
-    /// Hosts flagged in `blocked` (crashed / link down) are excluded —
-    /// the scanning fallback consults the same mask, so decision
-    /// equivalence holds under faults too.
-    pub fn best_merge_host(&self, n: usize, blocked: Option<&[bool]>) -> Option<usize> {
-        let mut best: Option<(usize, usize)> = None; // (count, host)
-        for (host, list) in self.per_host.iter().enumerate() {
-            if blocked.is_some_and(|b| b.get(host).copied().unwrap_or(false)) {
-                continue;
-            }
-            if best.map(|(c, _)| list.len() > c).unwrap_or(true) {
-                best = Some((list.len(), host));
-            }
-        }
-        match best {
-            Some((count, host)) if count >= n => Some(host),
-            _ => None,
-        }
-    }
-
     /// Recompute from scratch and compare (debug builds; test hook).
     pub fn debug_verify(&self, instances: &[Instance]) {
         #[cfg(debug_assertions)]
@@ -485,9 +464,21 @@ pub struct ClusterView<'a> {
 }
 
 impl<'a> ClusterView<'a> {
-    /// Live (non-retired) instances.
+    /// Live (non-retired) instances — the assignment-candidate source
+    /// every pipeline stage iterates. Assignment candidates deliberately
+    /// include instances on degraded hosts: a crashed host has no live
+    /// instances to list, while a host whose KV-migration link is down
+    /// still *serves* (only transformations are barred) — that mask
+    /// applies to the merge-candidate accessors below.
     pub fn live(&self) -> impl Iterator<Item = &Instance> {
         self.instances.iter().filter(|i| !i.retired)
+    }
+
+    /// Alias of [`Self::live`] under the pipeline's vocabulary: the
+    /// candidate source a [`crate::coordinator::pipeline`] composition
+    /// filters and scores.
+    pub fn candidates(&self) -> impl Iterator<Item = &Instance> {
+        self.live()
     }
 
     fn is_mergeable(i: &Instance) -> bool {
@@ -497,6 +488,33 @@ impl<'a> ClusterView<'a> {
     /// Is `host` degraded (crashed or its KV-migration link down)?
     pub fn host_blocked(&self, host: usize) -> bool {
         self.blocked_hosts.is_some_and(|b| b.get(host).copied().unwrap_or(false))
+    }
+
+    /// Number of host slots merge-candidate iteration covers (the index
+    /// may have grown past `cfg.hosts` as instances appeared).
+    fn num_hosts(&self) -> usize {
+        match self.tp1 {
+            Some(idx) => idx.hosts(),
+            None => {
+                let seen = self.instances.iter().map(|i| i.host + 1).max().unwrap_or(0);
+                self.cfg.hosts.max(seen)
+            }
+        }
+    }
+
+    /// Count of mergeable TP1 instances on `host`, `0` when the host is
+    /// degraded. This is the ONE blocked-host-aware merge-candidate
+    /// accessor — both the indexed and scanning paths of every merge
+    /// query below go through it, so no plugin or policy can consult a
+    /// candidate count that bypasses the failure mask.
+    pub fn merge_count(&self, host: usize) -> usize {
+        if self.host_blocked(host) {
+            return 0;
+        }
+        match self.tp1 {
+            Some(idx) => idx.count(host),
+            None => self.live().filter(|i| i.host == host && Self::is_mergeable(i)).count(),
+        }
     }
 
     /// Any live TP>1 instance?
@@ -530,11 +548,19 @@ impl<'a> ClusterView<'a> {
     }
 
     /// Host with the most mergeable TP1 instances, requiring at least `n`
-    /// (degraded hosts excluded).
+    /// (ties resolve to the lowest host id; degraded hosts excluded via
+    /// [`Self::merge_count`]). Allocation-free on the indexed path.
     pub fn best_merge_host(&self, n: usize) -> Option<usize> {
-        match self.tp1 {
-            Some(idx) => idx.best_merge_host(n, self.blocked_hosts),
-            None => self.hosts_by_tp1().into_iter().find(|&(_, c)| c >= n).map(|(h, _)| h),
+        let mut best: Option<(usize, usize)> = None; // (count, host)
+        for host in 0..self.num_hosts() {
+            let count = self.merge_count(host);
+            if best.map(|(c, _)| count > c).unwrap_or(true) {
+                best = Some((count, host));
+            }
+        }
+        match best {
+            Some((count, host)) if count >= n => Some(host),
+            _ => None,
         }
     }
 
@@ -542,21 +568,10 @@ impl<'a> ClusterView<'a> {
     /// ascend by host id), degraded hosts excluded. Allocates — prefer
     /// [`Self::best_merge_host`].
     pub fn hosts_by_tp1(&self) -> Vec<(usize, usize)> {
-        let mut v: Vec<(usize, usize)> = match self.tp1 {
-            Some(idx) => (0..idx.hosts())
-                .filter(|&h| idx.count(h) > 0 && !self.host_blocked(h))
-                .map(|h| (h, idx.count(h)))
-                .collect(),
-            None => {
-                let mut counts = std::collections::BTreeMap::new();
-                for i in self.live() {
-                    if Self::is_mergeable(i) && !self.host_blocked(i.host) {
-                        *counts.entry(i.host).or_insert(0usize) += 1;
-                    }
-                }
-                counts.into_iter().collect()
-            }
-        };
+        let mut v: Vec<(usize, usize)> = (0..self.num_hosts())
+            .map(|h| (h, self.merge_count(h)))
+            .filter(|&(_, c)| c > 0)
+            .collect();
         v.sort_by(|a, b| b.1.cmp(&a.1));
         v
     }
@@ -572,6 +587,15 @@ pub enum Route {
     ScaleUp { members: Vec<usize>, to_tp: u64 },
     /// No capacity right now; retry later.
     Defer,
+    /// Shed the request at the decision stage (deadline-aware admission
+    /// control, `-admit` policies): counted as dropped, never retried.
+    Drop,
+    /// Requeue queued batch-class prefills from `victim` until the
+    /// request fits there, then assign it (`-slo` policies' interactive
+    /// lane). The simulator resolves this against exact pending state
+    /// into `Assign(victim)` — or `Defer` when even a full eviction of
+    /// the evictable batch work would not make room.
+    Preempt { victim: usize },
 }
 
 /// A routing policy.
@@ -582,6 +606,11 @@ pub trait RoutePolicy: Send {
     /// safety conditions so comparisons isolate the *routing* behaviour.)
     fn should_scale_down(&mut self, inst: &Instance, view: &ClusterView<'_>) -> bool {
         default_scale_down(inst, view)
+    }
+    /// Does this policy want class-separated backlog lanes (interactive
+    /// entries retried before batch entries in every drain pass)?
+    fn wants_slo_lanes(&self) -> bool {
+        false
     }
     /// The policy's persistent decision state, for snapshots. Scratch
     /// buffers are excluded — only what a future `route` /
@@ -604,26 +633,22 @@ pub enum PolicyState {
     },
     RoundRobin { cursor: usize },
     LeastLoad,
+    /// A composed pipeline policy (schema v4): the stage flags plus the
+    /// base policy's own state. `base` is always one of the plain
+    /// variants above — plain pipeline policies snapshot *as* those
+    /// variants directly, so pre-pipeline snapshots stay byte-identical
+    /// and restore transparently.
+    Pipeline { slo: bool, admit: bool, base: Box<PolicyState> },
 }
 
 impl PolicyState {
-    /// Rebuild the boxed policy this state describes.
+    /// Rebuild the boxed policy this state describes. Every state —
+    /// including the legacy-kind plain variants — restores to a
+    /// [`PipelinePolicy`](super::pipeline::PipelinePolicy) composition,
+    /// which is decision-identical to the legacy implementations
+    /// (property-tested in lockstep).
     pub fn restore(&self) -> Box<dyn RoutePolicy> {
-        match self {
-            PolicyState::Gyges { reserved, reserve_cap, last_long_seen, long_hold_s } => {
-                Box::new(GygesPolicy {
-                    reserved: reserved.clone(),
-                    reserve_cap: *reserve_cap,
-                    last_long_seen: *last_long_seen,
-                    long_hold_s: *long_hold_s,
-                    scratch: Vec::new(),
-                })
-            }
-            PolicyState::RoundRobin { cursor } => {
-                Box::new(RoundRobinPolicy { cursor: *cursor, scratch: Vec::new() })
-            }
-            PolicyState::LeastLoad => Box::new(LeastLoadPolicy),
-        }
+        Box::new(super::pipeline::PipelinePolicy::from_state(self))
     }
 }
 
@@ -689,10 +714,18 @@ pub fn pick_merge_group(view: &ClusterView<'_>, n: usize) -> Option<Vec<usize>> 
 }
 
 // ---------------------------------------------------------------------
-// Gyges (Algorithms 1 & 2)
+// Legacy policy implementations
+//
+// These are the original hand-rolled `RoutePolicy` impls the pipeline
+// compositions in `super::pipeline` re-express. Production builds route
+// exclusively through the pipeline; the legacy structs are kept behind
+// `cfg(any(test, feature = "legacy-policies"))` purely as the lockstep
+// reference the equivalence property tests and the CI
+// `policy-pipeline-verify` byte-comparison drive.
 // ---------------------------------------------------------------------
 
-/// The transformation-aware scheduler.
+/// The transformation-aware scheduler (legacy reference impl).
+#[cfg(any(test, feature = "legacy-policies"))]
 pub struct GygesPolicy {
     /// Instances currently reserved as scale-up headroom: the scheduler
     /// keeps their load low so a transformation cannot OOM
@@ -714,6 +747,7 @@ pub struct GygesPolicy {
     scratch: Vec<usize>,
 }
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl Default for GygesPolicy {
     fn default() -> Self {
         GygesPolicy {
@@ -726,6 +760,7 @@ impl Default for GygesPolicy {
     }
 }
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl GygesPolicy {
     /// Policy with a custom anti-oscillation hold (ablation A3, sweep
     /// jobs with a `gyges_hold` override).
@@ -751,6 +786,7 @@ impl GygesPolicy {
     }
 }
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl RoutePolicy for GygesPolicy {
     fn name(&self) -> &'static str {
         "gyges"
@@ -841,6 +877,7 @@ impl RoutePolicy for GygesPolicy {
     }
 }
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl GygesPolicy {
     /// Short-request routing: least expected load among fitting instances,
     /// skipping reserved instances above the reserve cap and de-preferring
@@ -892,6 +929,8 @@ impl GygesPolicy {
 
 /// Round-Robin: next instance in rotation; if it cannot hold the request,
 /// it "collaborates with neighbouring instances" to scale up (§6.2.4).
+/// Legacy reference impl — see the module note above.
+#[cfg(any(test, feature = "legacy-policies"))]
 #[derive(Default)]
 pub struct RoundRobinPolicy {
     cursor: usize,
@@ -899,6 +938,7 @@ pub struct RoundRobinPolicy {
     scratch: Vec<usize>,
 }
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl RoutePolicy for RoundRobinPolicy {
     fn name(&self) -> &'static str {
         "rr"
@@ -926,6 +966,7 @@ impl RoutePolicy for RoundRobinPolicy {
     }
 }
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl RoundRobinPolicy {
     fn route_over(&mut self, req: &ActiveRequest, view: &ClusterView<'_>, live: &[usize]) -> Route {
         if live.is_empty() {
@@ -963,8 +1004,11 @@ impl RoundRobinPolicy {
 /// Deliberately unindexed: LLF compares *absolute* committed tokens, which
 /// the load-quantized [`LoadIndex`] does not order across degree classes
 /// (capacity differs per degree). It is a baseline policy, not a hot path.
+/// Legacy reference impl — see the module note above.
+#[cfg(any(test, feature = "legacy-policies"))]
 pub struct LeastLoadPolicy;
 
+#[cfg(any(test, feature = "legacy-policies"))]
 impl RoutePolicy for LeastLoadPolicy {
     fn name(&self) -> &'static str {
         "llf"
@@ -1026,13 +1070,59 @@ pub fn scale_up_fallback(req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
     }
 }
 
-/// Construct a policy by config.
-pub fn make_policy(policy: crate::config::Policy) -> Box<dyn RoutePolicy> {
-    match policy {
-        crate::config::Policy::Gyges => Box::new(GygesPolicy::default()),
-        crate::config::Policy::RoundRobin => Box::new(RoundRobinPolicy::default()),
-        crate::config::Policy::LeastLoadFirst => Box::new(LeastLoadPolicy),
+/// Process-global switch routing plain policies through the LEGACY
+/// implementations instead of the pipeline compositions — the lockstep
+/// half of the CI `policy-pipeline-verify` byte comparison
+/// (`gyges --legacy-routing ...` under the `legacy-policies` feature).
+/// Set once at process start, before any simulation is built; parallel
+/// test threads must NOT toggle it (use
+/// [`crate::coordinator::ClusterSim::with_boxed_policy`] instead).
+#[cfg(any(test, feature = "legacy-policies"))]
+static LEGACY_ROUTING: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(any(test, feature = "legacy-policies"))]
+pub fn set_legacy_routing(on: bool) {
+    LEGACY_ROUTING.store(on, std::sync::atomic::Ordering::SeqCst);
+}
+
+#[cfg(any(test, feature = "legacy-policies"))]
+pub fn legacy_routing() -> bool {
+    LEGACY_ROUTING.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Construct a policy from its [`crate::config::PolicyId`] (accepts a
+/// bare base [`crate::config::Policy`] too). Every policy is a
+/// [`super::pipeline::PipelinePolicy`] composition; composed stage flags
+/// (`slo`/`admit`) only exist there. Under `--legacy-routing` (test /
+/// `legacy-policies` builds), *plain* ids build the legacy reference
+/// impls instead, for lockstep byte comparison.
+pub fn make_policy(policy: impl Into<crate::config::PolicyId>) -> Box<dyn RoutePolicy> {
+    let id = policy.into();
+    #[cfg(any(test, feature = "legacy-policies"))]
+    if legacy_routing() && id.plain() {
+        return match id.base {
+            crate::config::Policy::Gyges => Box::new(GygesPolicy::default()),
+            crate::config::Policy::RoundRobin => Box::new(RoundRobinPolicy::default()),
+            crate::config::Policy::LeastLoadFirst => Box::new(LeastLoadPolicy),
+        };
     }
+    Box::new(super::pipeline::PipelinePolicy::new(id))
+}
+
+/// [`make_policy`] with a Gyges anti-oscillation hold override (ablation
+/// A3 / sweep `gyges_hold` jobs). The caller guarantees `id.base` is
+/// Gyges; the same legacy-routing switch applies so held jobs stay
+/// lockstep-comparable.
+pub fn make_policy_with_hold(
+    id: crate::config::PolicyId,
+    hold_s: f64,
+) -> Box<dyn RoutePolicy> {
+    debug_assert_eq!(id.base, crate::config::Policy::Gyges);
+    #[cfg(any(test, feature = "legacy-policies"))]
+    if legacy_routing() && id.plain() {
+        return Box::new(GygesPolicy::with_long_hold(hold_s));
+    }
+    Box::new(super::pipeline::PipelinePolicy::with_long_hold(id, hold_s))
 }
 
 #[cfg(test)]

@@ -18,7 +18,7 @@
 
 use super::sweep::{outcome_to_result, sweep_threads, SweepResult};
 use super::{named_sweep_jobs, NAMED_SWEEPS};
-use crate::config::Policy;
+use crate::config::{Policy, PolicyId};
 use crate::coordinator::{ClusterSim, PolicyState};
 use crate::experiments::launch::streamed_named_jobs;
 use crate::snapshot::state::SimSnapshot;
@@ -36,10 +36,10 @@ pub const BRANCH_SCHEMA_VERSION: u64 = 1;
 pub enum BranchKind {
     /// The unmodified continuation — the reference timeline.
     Parent,
-    /// Swap in a fresh baseline routing policy (its internal state —
-    /// RR cursor, hysteresis stamp — starts cold; the cluster does
-    /// not).
-    Policy(Policy),
+    /// Swap in a fresh routing policy — any [`PolicyId`], composed or
+    /// plain (its internal state — RR cursor, hysteresis stamp — starts
+    /// cold; the cluster does not).
+    Policy(PolicyId),
     /// Keep the Gyges policy but override its anti-oscillation hold
     /// (the A3 grid, now from warm state).
     GygesHold(f64),
@@ -65,8 +65,8 @@ pub fn default_branches() -> Vec<BranchKind> {
     vec![
         BranchKind::GygesHold(0.0),
         BranchKind::GygesHold(120.0),
-        BranchKind::Policy(Policy::RoundRobin),
-        BranchKind::Policy(Policy::LeastLoadFirst),
+        BranchKind::Policy(Policy::RoundRobin.into()),
+        BranchKind::Policy(Policy::LeastLoadFirst.into()),
         BranchKind::Static,
     ]
 }
@@ -319,7 +319,7 @@ pub fn branch_cli(args: &Args) -> i32 {
             }
             if let Some(csv) = policies {
                 for part in csv.split(',').filter(|s| !s.trim().is_empty()) {
-                    match Policy::by_name(part.trim()) {
+                    match PolicyId::parse(part.trim()) {
                         Some(p) => branches.push(BranchKind::Policy(p)),
                         None => {
                             eprintln!("branch: unknown policy {part:?}");

@@ -56,7 +56,7 @@ pub fn chaos_shape(horizon_s: f64) -> SweepShape {
             key: format!("faults/{}", policy.name()),
             cfg: cfg.clone(),
             system: SystemKind::Gyges,
-            policy: Some(policy),
+            policy: Some(policy.into()),
             gyges_hold: None,
             faults: Some(plan.clone()),
             static_deploy: false,
@@ -67,7 +67,7 @@ pub fn chaos_shape(horizon_s: f64) -> SweepShape {
         key: "faults/static".into(),
         cfg: cfg.clone(),
         system: SystemKind::Gyges,
-        policy: Some(Policy::Gyges),
+        policy: Some(Policy::Gyges.into()),
         gyges_hold: None,
         faults: Some(plan),
         static_deploy: true,

@@ -342,7 +342,8 @@ pub fn trace_gen_cli(args: &Args) -> i32 {
     let Some(what) = args.positional.get(1).map(|s| s.as_str()) else {
         eprintln!(
             "usage: gyges trace-gen <{}|production> [--horizon S] [--segment-s S] \
-             [--out-dir DIR] [--resume-from K] [--qps Q --seed N --bursty]",
+             [--out-dir DIR] [--resume-from K] [--qps Q --seed N --bursty \
+             --interactive-frac F]",
             NAMED_SWEEPS.join("|")
         );
         return 2;
@@ -376,7 +377,24 @@ pub fn trace_gen_cli(args: &Args) -> i32 {
         // boundaries derived from the seed, so resume-from-any-index
         // still holds — see `workload::LongBursts`).
         let longs = args.flag("bursty").then(crate::workload::LongBursts::paper);
-        let spec = ProductionStream { seed, qps, segment_s, horizon_s: horizon, longs };
+        // --interactive-frac F marks each request interactive with
+        // probability F (hash-Bernoulli in (seed, id), resume-safe);
+        // absent, the stream is classless exactly as before.
+        let slo = match args.parsed_strict("interactive-frac", f64::NAN) {
+            Ok(f) if f.is_nan() => None,
+            Ok(f) if (0.0..=1.0).contains(&f) => {
+                Some(crate::workload::SloMix { interactive_frac: f })
+            }
+            Ok(_) => {
+                eprintln!("trace-gen: --interactive-frac must be in [0, 1]");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("trace-gen: {e}");
+                return 2;
+            }
+        };
+        let spec = ProductionStream { seed, qps, segment_s, horizon_s: horizon, longs, slo };
         if !spec.qps.is_finite() || spec.qps <= 0.0 {
             // A zero rate would trip Prng::exp's assert deep in
             // generation; an infinite one would spin forever.

@@ -18,11 +18,12 @@ pub mod branch;
 pub mod chaos;
 pub mod launch;
 pub mod shard;
+pub mod slo;
 pub mod sweep;
 
 use crate::baselines::{fig14_systems, run_static_hybrid, StaticHybridConfig};
 use crate::config::calib;
-use crate::config::{ClusterConfig, GpuSpec, ModelConfig, Policy};
+use crate::config::{ClusterConfig, GpuSpec, ModelConfig, Policy, PolicyId};
 use crate::coordinator::{run_system, SystemKind};
 use crate::kvcache::fig9_series;
 use crate::sim::{EngineModel, SimTime};
@@ -333,6 +334,7 @@ pub fn fig12_trace(cfg: &ClusterConfig, seed: u64, horizon_s: f64) -> Trace {
             arrival: t,
             input_len: 1000,
             output_len: out_tokens - 50 + rng.gen_range(0, 100),
+            class: crate::workload::SloClass::Interactive,
         });
     }
     // Scripted long bursts (identical for every policy): 3 longs, 12 s
@@ -345,6 +347,7 @@ pub fn fig12_trace(cfg: &ClusterConfig, seed: u64, horizon_s: f64) -> Trace {
                 arrival: SimTime::from_secs_f64(t_burst + 12.0 * k as f64),
                 input_len: long_len,
                 output_len: 256,
+                class: crate::workload::SloClass::Interactive,
             });
         }
         t_burst += 150.0;
@@ -368,7 +371,7 @@ pub struct ShapeEntry {
     pub key: String,
     pub cfg: ClusterConfig,
     pub system: SystemKind,
-    pub policy: Option<Policy>,
+    pub policy: Option<PolicyId>,
     pub gyges_hold: Option<f64>,
     /// Fault storm armed on this job (`fig-faults`); `None` elsewhere.
     pub faults: Option<crate::faults::FaultPlan>,
@@ -388,6 +391,9 @@ pub enum TraceSpec {
     Fig13,
     /// §6.3 production trace at `qps`.
     Production { seed: u64, qps: f64 },
+    /// SLO-classed production stream (`fig-slo`): the seeded segment
+    /// generator with a hash-Bernoulli interactive/batch mix.
+    SloClassed { seed: u64, qps: f64, interactive_frac: f64 },
 }
 
 impl TraceSpec {
@@ -396,6 +402,17 @@ impl TraceSpec {
             TraceSpec::Fig12 { cfg, seed } => fig12_trace(cfg, *seed, horizon_s),
             TraceSpec::Fig13 => fig13_trace(),
             TraceSpec::Production { seed, qps } => Trace::production(*seed, *qps, horizon_s),
+            TraceSpec::SloClassed { seed, qps, interactive_frac } => {
+                crate::workload::ProductionStream {
+                    seed: *seed,
+                    qps: *qps,
+                    segment_s: 30.0,
+                    horizon_s,
+                    longs: None,
+                    slo: Some(crate::workload::SloMix { interactive_frac: *interactive_frac }),
+                }
+                .materialize()
+            }
         }
     }
 }
@@ -463,7 +480,7 @@ pub fn fig12_shape(horizon_s: f64, models: &[ModelConfig]) -> SweepShape {
                 key: format!("{}/{}", m.name, policy.name()),
                 cfg: cfg.clone(),
                 system: SystemKind::Gyges,
-                policy: Some(policy),
+                policy: Some(policy.into()),
                 gyges_hold: None,
                 faults: None,
                 static_deploy: false,
@@ -536,6 +553,7 @@ pub fn fig13_trace() -> Trace {
             arrival: SimTime::from_secs_f64(i as f64 * 0.1),
             input_len: 1000,
             output_len: 100,
+            class: crate::workload::SloClass::Interactive,
         });
         id += 1;
     }
@@ -545,6 +563,7 @@ pub fn fig13_trace() -> Trace {
             arrival: SimTime::from_secs_f64(t_long),
             input_len: 50_000,
             output_len: 256,
+            class: crate::workload::SloClass::Interactive,
         });
         id += 1;
     }
@@ -563,7 +582,7 @@ pub fn fig13_shape() -> SweepShape {
             key: format!("fig13/{}", policy.name()),
             cfg: cfg.clone(),
             system: SystemKind::Gyges,
-            policy: Some(policy),
+            policy: Some(policy.into()),
             gyges_hold: None,
             faults: None,
             static_deploy: false,
@@ -717,7 +736,7 @@ pub fn ablation_hold_shape(horizon_s: f64) -> SweepShape {
             key: format!("hold{hold}"),
             cfg: cfg.clone(),
             system: SystemKind::Gyges,
-            policy: Some(Policy::Gyges),
+            policy: Some(Policy::Gyges.into()),
             gyges_hold: Some(hold),
             faults: None,
             static_deploy: false,
@@ -759,6 +778,7 @@ pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
         "fig14" => fig14_shape(horizon_s, &[2.0, 6.0, 10.0]),
         "ablation-hold" => ablation_hold_shape(horizon_s),
         "fig-faults" => chaos::chaos_shape(horizon_s),
+        "fig-slo" => slo::slo_shape(horizon_s),
         _ => return None,
     };
     // Registry aliases (fig12-qwen) keep their registry name so segment
@@ -768,8 +788,8 @@ pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
 }
 
 /// Names [`named_sweep_jobs`] understands (usage strings, error text).
-pub const NAMED_SWEEPS: [&str; 6] =
-    ["fig12", "fig12-qwen", "fig13", "fig14", "ablation-hold", "fig-faults"];
+pub const NAMED_SWEEPS: [&str; 7] =
+    ["fig12", "fig12-qwen", "fig13", "fig14", "ablation-hold", "fig-faults", "fig-slo"];
 
 /// Default horizon (seconds) of a named sweep when the caller passes
 /// none — the same default its canonical figure bench uses, so a

@@ -1,0 +1,171 @@
+//! The `fig-slo` experiment (`gyges slo`): what the composed pipeline
+//! policies buy on an overloaded, SLO-classed production stream.
+//!
+//! Not a paper figure — the paper's clusters serve one traffic class —
+//! but the natural companion to Figure 14 once the scheduler is a
+//! filter/score pipeline: the same seeded production stream, now with a
+//! hash-Bernoulli interactive/batch mix, swept over each base policy
+//! (Gyges / RR / LLF) plain, with SLO lanes (`-slo`: interactive
+//! backlog priority + preemption of queued batch prefills), and with
+//! deadline admission control on top (`-slo-admit`: hopeless work is
+//! shed at the decision stage instead of retried forever). Every job
+//! replays the *identical* classed trace, so the only variable is the
+//! policy composition. The whole sweep is a named sweep (`fig-slo`), so
+//! sharding, trace-gen segment files, and CI's policy-pipeline-verify
+//! smoke run all reuse the standard machinery.
+
+use crate::config::{ClusterConfig, ModelConfig, Policy, PolicyId};
+use crate::coordinator::SystemKind;
+use crate::util::json::{write_repro_rows, Json};
+use crate::util::table::Table;
+
+use super::sweep::{self, run_sweep};
+use super::{row_json, ShapeEntry, SweepShape, TraceSpec};
+
+/// Seed of the classed workload trace group — fixed so the experiment
+/// (and CI's smoke run) is one deterministic artifact.
+pub const SLO_SEED: u64 = 0x510_C1A5;
+
+/// Arrival rate (requests/s). Deliberately past what the paper-default
+/// Qwen2.5-32B cluster sustains, so lanes and admission have work to do.
+pub const SLO_QPS: f64 = 10.0;
+
+/// Fraction of requests in the interactive class; the rest are batch.
+pub const SLO_INTERACTIVE_FRAC: f64 = 0.9;
+
+/// The fig-slo cluster config: paper defaults plus a bounded, backoff-ed
+/// retry policy (under overload the backlog must shed load, not
+/// livelock) and deadlines tight enough to bind within the sweep
+/// horizon.
+pub fn slo_cfg() -> ClusterConfig {
+    let mut cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
+    cfg.retry_max_attempts = 6;
+    cfg.retry_backoff_base_s = 0.2;
+    cfg.slo_interactive_deadline_s = 15.0;
+    cfg.slo_batch_deadline_s = 90.0;
+    cfg
+}
+
+/// The policy grid: each base policy plain, with SLO lanes, and with
+/// lanes + admission control (9 jobs).
+pub fn slo_policy_grid() -> Vec<PolicyId> {
+    let mut grid = Vec::new();
+    for base in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
+        grid.push(PolicyId { base, slo: false, admit: false });
+        grid.push(PolicyId { base, slo: true, admit: false });
+        grid.push(PolicyId { base, slo: true, admit: true });
+    }
+    grid
+}
+
+/// The `fig-slo` sweep shape: one classed stream, the full policy grid.
+pub fn slo_shape(horizon_s: f64) -> SweepShape {
+    let cfg = slo_cfg();
+    let entries = slo_policy_grid()
+        .into_iter()
+        .map(|id| ShapeEntry {
+            key: format!("slo/{}", id.name()),
+            cfg: cfg.clone(),
+            system: SystemKind::Gyges,
+            policy: Some(id),
+            gyges_hold: None,
+            faults: None,
+            static_deploy: false,
+            trace_group: 0,
+        })
+        .collect();
+    SweepShape {
+        name: "fig-slo".into(),
+        horizon_s,
+        entries,
+        traces: vec![TraceSpec::SloClassed {
+            seed: SLO_SEED,
+            qps: SLO_QPS,
+            interactive_frac: SLO_INTERACTIVE_FRAC,
+        }],
+    }
+}
+
+/// Build the `fig-slo` job list for the sweep driver.
+pub fn fig_slo_jobs(horizon_s: f64) -> Vec<super::sweep::SweepJob> {
+    slo_shape(horizon_s).materialized_jobs()
+}
+
+/// Run the SLO-composition comparison and print/emit the table
+/// (deterministic JSONL rows under `target/repro/fig-slo`).
+pub fn fig_slo(horizon_s: f64) -> Vec<Json> {
+    let jobs = fig_slo_jobs(horizon_s);
+    let results = run_sweep(&jobs);
+    sweep::warn_on_errors(&results);
+    let mut t = Table::new([
+        "policy", "tput (tps)", "ttft p50", "ttft p99", "completed", "preempts", "admit-drops",
+        "dropped",
+    ]);
+    let mut rows = Vec::new();
+    for out in &results {
+        let c = &out.counters;
+        t.row([
+            out.key.clone(),
+            format!("{:.1}", out.report.throughput_tps),
+            format!("{:.2}s", out.report.ttft_p50_s),
+            format!("{:.2}s", out.report.ttft_p99_s),
+            format!("{}/{}", out.report.completed, out.report.total),
+            format!("{}", c.preemptions),
+            format!("{}", c.admission_dropped),
+            format!("{}", c.dropped),
+        ]);
+        let mut row = row_json(&[
+            ("key", Json::from(out.key.as_str())),
+            ("tput", Json::from(out.report.throughput_tps)),
+            ("ttft_p50", Json::from(out.report.ttft_p50_s)),
+            ("ttft_p99", Json::from(out.report.ttft_p99_s)),
+            ("slo_attainment", Json::from(out.report.slo_attainment)),
+            ("completed", Json::from(out.report.completed)),
+            ("total", Json::from(out.report.total)),
+            ("preemptions", Json::from(c.preemptions)),
+            ("admission_dropped", Json::from(c.admission_dropped)),
+            ("dropped", Json::from(c.dropped)),
+        ]);
+        if let Some(e) = &out.error {
+            row.set("error", e.as_str());
+        }
+        rows.push(row);
+    }
+    println!(
+        "fig-slo — SLO lanes + admission control on an overloaded classed stream \
+         ({SLO_QPS} qps, {:.0}% interactive, seed {SLO_SEED:#x})",
+        SLO_INTERACTIVE_FRAC * 100.0
+    );
+    t.print();
+    let _ = write_repro_rows("fig-slo", &rows);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sweep::{results_to_jsonl, run_sweep_serial};
+
+    #[test]
+    fn slo_shape_builds_the_full_grid_over_one_trace() {
+        let shape = slo_shape(120.0);
+        assert_eq!(shape.name, "fig-slo");
+        assert_eq!(shape.entries.len(), 9);
+        assert_eq!(shape.traces.len(), 1);
+        let names: Vec<&str> =
+            shape.entries.iter().map(|e| e.policy.unwrap().name()).collect();
+        assert!(names.contains(&"gyges") && names.contains(&"gyges-slo"));
+        assert!(names.contains(&"gyges-slo-admit") && names.contains(&"rr-slo"));
+        // Every entry replays trace group 0 — the composition is the
+        // only variable.
+        assert!(shape.entries.iter().all(|e| e.trace_group == 0));
+    }
+
+    #[test]
+    fn slo_jobs_are_deterministic() {
+        let jobs = fig_slo_jobs(45.0);
+        let a = results_to_jsonl(&run_sweep_serial(&jobs));
+        let b = results_to_jsonl(&run_sweep_serial(&jobs));
+        assert_eq!(a, b, "same classed stream must reproduce byte-identically");
+    }
+}

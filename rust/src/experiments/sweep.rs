@@ -13,7 +13,7 @@
 //! Thread count: `GYGES_SWEEP_THREADS` env var, else the machine's
 //! available parallelism. Set it to 1 to force the serial path.
 
-use crate::config::{ClusterConfig, Policy};
+use crate::config::{ClusterConfig, PolicyId};
 use crate::coordinator::{ClusterSim, SimCounters, SystemKind};
 use crate::faults::FaultPlan;
 use crate::metrics::RunReport;
@@ -92,6 +92,12 @@ impl JobTrace {
                         bytes.extend_from_slice(&v.to_le_bytes());
                     }
                 }
+                // Same discipline for the SLO-class mix: classless
+                // streams hash exactly as before it existed.
+                if let Some(m) = &s.slo {
+                    bytes.push(0x04);
+                    bytes.extend_from_slice(&m.interactive_frac.to_bits().to_le_bytes());
+                }
             }
         }
     }
@@ -106,7 +112,10 @@ pub struct SweepJob {
     pub key: String,
     pub cfg: ClusterConfig,
     pub system: SystemKind,
-    pub policy: Option<Policy>,
+    /// Routing policy override — a full [`PolicyId`], so composed
+    /// policies (`gyges-slo`, `rr-admit`, …) sweep like base ones;
+    /// `None` keeps the config's policy.
+    pub policy: Option<PolicyId>,
     pub trace: JobTrace,
     /// Override for the Gyges policy's anti-oscillation hold (ablation
     /// A3); `None` keeps the policy default.
@@ -125,7 +134,7 @@ impl SweepJob {
         key: impl Into<String>,
         cfg: ClusterConfig,
         system: SystemKind,
-        policy: Option<Policy>,
+        policy: Option<PolicyId>,
         trace: Arc<Trace>,
     ) -> SweepJob {
         Self::with_job_trace(key, cfg, system, policy, JobTrace::Full(trace))
@@ -136,7 +145,7 @@ impl SweepJob {
         key: impl Into<String>,
         cfg: ClusterConfig,
         system: SystemKind,
-        policy: Option<Policy>,
+        policy: Option<PolicyId>,
         trace: JobTrace,
     ) -> SweepJob {
         SweepJob {
@@ -227,7 +236,9 @@ impl SweepResult {
             .set("dropped", self.counters.dropped)
             .set("transform_rollbacks", self.counters.transform_rollbacks)
             .set("stalled_instances", self.counters.stalled_instances)
-            .set("scale_up_blocked", self.counters.scale_up_blocked);
+            .set("scale_up_blocked", self.counters.scale_up_blocked)
+            .set("preemptions", self.counters.preemptions)
+            .set("admission_dropped", self.counters.admission_dropped);
         let series: Vec<Json> = self
             .tps_series
             .iter()
@@ -381,7 +392,7 @@ pub fn results_to_jsonl(results: &[SweepResult]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelConfig;
+    use crate::config::{ModelConfig, Policy};
 
     fn small_jobs() -> Vec<SweepJob> {
         let cfg = ClusterConfig::paper_default(ModelConfig::qwen2_5_32b());
@@ -393,7 +404,7 @@ mod tests {
                     format!("hybrid/{}", p.name()),
                     cfg.clone(),
                     SystemKind::Gyges,
-                    Some(p),
+                    Some(p.into()),
                     Arc::clone(&trace),
                 )
             })
@@ -451,7 +462,7 @@ mod tests {
             "capped",
             cfg,
             SystemKind::Gyges,
-            Some(Policy::Gyges),
+            Some(Policy::Gyges.into()),
             trace,
         )];
         let out = run_sweep(&jobs);

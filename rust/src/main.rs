@@ -3,16 +3,20 @@
 //!
 //! Usage:
 //!   gyges info
-//!   gyges serve       [--model M] [--policy gyges|rr|llf] [--system S]
+//!   gyges serve       [--model M] [--policy gyges|rr|llf (+ -slo/-admit
+//!                     suffixes, e.g. gyges-slo-admit)] [--system S]
 //!                     [--qps Q | --hybrid | --trace-dir DIR]
 //!                     [--horizon SECS] [--seed N] [--config FILE]
 //!   gyges serve-real  [--artifacts DIR] [--shorts N] [--longs N]
 //!   gyges repro       <table1|table2|table3|fig2|fig9|fig10|fig11|fig12|
-//!                      fig13|fig14|fig-faults|static|all> [--horizon SECS]
+//!                      fig13|fig14|fig-faults|fig-slo|static|all>
+//!                     [--horizon SECS]
 //!   gyges chaos       [--horizon SECS]   (fig-faults: goodput/SLO/drops
 //!                     for gyges|rr|llf|static under a seeded fault storm)
+//!   gyges slo         [--horizon SECS]   (fig-slo: SLO lanes + admission
+//!                     control vs plain policies on a classed stream)
 //!   gyges sweep-shard <fig12|fig12-qwen|fig13|fig14|ablation-hold|
-//!                      fig-faults> [--shard K/N] [--horizon SECS]
+//!                      fig-faults|fig-slo> [--shard K/N] [--horizon SECS]
 //!                     [--out-dir DIR] [--stream-dir DIR]
 //!   gyges sweep-merge <sweep> [--dir DIR] [--out FILE]
 //!                     [--expect-horizon SECS]
@@ -33,8 +37,12 @@
 //! Global options (every subcommand):
 //!   --queue <calendar|heap>   event-queue backend (default calendar;
 //!                             outputs are byte-identical across both)
+//!   --legacy-routing          route plain policies through the legacy
+//!                             (pre-pipeline) reference implementations
+//!                             (needs a `--features legacy-policies`
+//!                             build; the CI byte-comparison uses it)
 
-use gyges::config::{ClusterConfig, ModelConfig, Policy};
+use gyges::config::{ClusterConfig, ModelConfig, PolicyId};
 use gyges::coordinator::{run_system, SystemKind};
 use gyges::util::Args;
 use gyges::workload::Trace;
@@ -56,12 +64,25 @@ fn main() {
             }
         }
     }
+    if args.flag("legacy-routing") {
+        #[cfg(feature = "legacy-policies")]
+        gyges::coordinator::set_legacy_routing(true);
+        #[cfg(not(feature = "legacy-policies"))]
+        {
+            eprintln!(
+                "--legacy-routing needs the legacy reference policies: rebuild with \
+                 `--features legacy-policies`"
+            );
+            std::process::exit(2);
+        }
+    }
     let code = match args.command() {
         Some("info") => cmd_info(),
         Some("serve") => cmd_serve(&args),
         Some("serve-real") => cmd_serve_real(&args),
         Some("repro") => cmd_repro(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("slo") => cmd_slo(&args),
         Some("sweep-shard") => cmd_sweep_shard(&args),
         Some("sweep-merge") => cmd_sweep_merge(&args),
         Some("trace-gen") => gyges::experiments::launch::trace_gen_cli(&args),
@@ -72,7 +93,7 @@ fn main() {
         Some("bench-gate") => cmd_bench_gate(&args),
         _ => {
             eprintln!(
-                "usage: gyges <info|serve|serve-real|repro|chaos|sweep-shard|sweep-merge|\
+                "usage: gyges <info|serve|serve-real|repro|chaos|slo|sweep-shard|sweep-merge|\
                  trace-gen|sweep-launch|snapshot|resume|branch|bench-gate> [options]  \
                  (see rust/src/main.rs)"
             );
@@ -109,7 +130,7 @@ fn build_cluster(args: &Args) -> Result<ClusterConfig, String> {
         .ok_or_else(|| format!("unknown model {model_name:?}"))?;
     let mut cfg = ClusterConfig::paper_default(model);
     if let Some(p) = args.get("policy") {
-        cfg.policy = Policy::by_name(p).ok_or_else(|| format!("unknown policy {p:?}"))?;
+        cfg.policy = PolicyId::parse(p).ok_or_else(|| format!("unknown policy {p:?}"))?;
     }
     cfg.hosts = args.parsed_or("hosts", cfg.hosts);
     cfg.seed = args.parsed_or("seed", cfg.seed);
@@ -386,6 +407,7 @@ fn cmd_repro(args: &Args) -> i32 {
         "fig13" => drop(exp::fig13()),
         "fig14" => drop(exp::fig14(horizon, &[2.0, 6.0, 10.0])),
         "fig-faults" => drop(exp::chaos::fig_faults(horizon)),
+        "fig-slo" => drop(exp::slo::fig_slo(horizon)),
         "static" => drop(exp::static_hybrid_compare(horizon)),
         other => eprintln!("unknown experiment {other:?}"),
     };
@@ -410,6 +432,16 @@ fn cmd_chaos(args: &Args) -> i32 {
     let horizon =
         args.parsed_or("horizon", gyges::experiments::named_sweep_default_horizon("fig-faults"));
     gyges::experiments::chaos::fig_faults(horizon);
+    println!("\nJSON rows written under target/repro/");
+    0
+}
+
+/// The SLO-composition experiment: lanes + admission control vs plain
+/// policies on an overloaded classed stream (`fig-slo` in the registry).
+fn cmd_slo(args: &Args) -> i32 {
+    let horizon =
+        args.parsed_or("horizon", gyges::experiments::named_sweep_default_horizon("fig-slo"));
+    gyges::experiments::slo::fig_slo(horizon);
     println!("\nJSON rows written under target/repro/");
     0
 }

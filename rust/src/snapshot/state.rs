@@ -1,4 +1,4 @@
-//! Snapshot schema v3: a versioned, self-describing serialization of
+//! Snapshot schema v4: a versioned, self-describing serialization of
 //! complete [`ClusterSim`](crate::coordinator::ClusterSim) state.
 //!
 //! Everything the event loop's next decision can observe is captured:
@@ -27,6 +27,14 @@
 //! rejected for the same reason v1 ones were: a v2 snapshot cannot
 //! say which seconds a live request credited, so resume-then-crash
 //! would diverge from the uninterrupted run.
+//!
+//! Schema v4 accompanies the filter/score scheduler pipeline: each
+//! serialized request carries its SLO class (`class`, omitted for the
+//! interactive default), composed policies snapshot as a recursive
+//! `pipeline` policy kind wrapping their base state, and the counters
+//! gain `preemptions` / `admission_dropped`. v3 documents are rejected:
+//! a v3 snapshot cannot say which queued prefills are batch-class, so a
+//! resumed `-slo` policy could preempt the wrong victims and diverge.
 //!
 //! What is deliberately NOT serialized, and why that is sound:
 //!
@@ -58,10 +66,10 @@ use crate::metrics::RequestRecord;
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::util::hash::{fnv1a, hex64};
 use crate::util::json::Json;
-use crate::workload::FeedState;
+use crate::workload::{FeedState, SloClass};
 
 /// Snapshot schema version this module reads and writes.
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 3;
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 4;
 
 /// One queued runtime event (arrivals are never queue events — they
 /// live in the feed cursor).
@@ -104,6 +112,8 @@ pub struct ReqSnap {
     pub generated: u64,
     /// [`crate::coordinator::Phase`] name.
     pub phase: String,
+    /// SLO class — what `-slo` preemption and `-admit` deadlines key on.
+    pub class: SloClass,
 }
 
 /// A backlogged request with its first-deferral stamp and retry
@@ -237,6 +247,8 @@ pub fn config_fingerprint(cfg: &ClusterConfig) -> String {
         cfg.hosts as u64,
         cfg.gpus_per_host as u64,
         cfg.scale_down_threshold.to_bits(),
+        cfg.slo_interactive_deadline_s.to_bits(),
+        cfg.slo_batch_deadline_s.to_bits(),
         cfg.min_dwell_s.to_bits(),
         cfg.backlog_retry_cooldown_s.to_bits(),
         cfg.retry_max_attempts as u64,
@@ -270,11 +282,23 @@ fn req_to_json(r: &ReqSnap) -> Json {
         .set("output", r.output_len)
         .set("generated", r.generated)
         .set("phase", r.phase.as_str());
+    // Interactive (the default) encodes as absence — classless runs
+    // serialize exactly as they would have without the field.
+    if r.class == SloClass::Batch {
+        o.set("class", r.class.name());
+    }
     o
 }
 
 fn req_from_json(j: &Json) -> Result<ReqSnap, String> {
     let num = |k: &str| j.req_u64(k, "request");
+    let class = match j.get("class") {
+        None | Some(Json::Null) => SloClass::Interactive,
+        Some(v) => {
+            let s = v.as_str().ok_or("request: bad class")?;
+            SloClass::by_name(s).ok_or_else(|| format!("request: unknown class {s:?}"))?
+        }
+    };
     Ok(ReqSnap {
         id: num("id")?,
         arrival: SimTime(num("arrival_ns")?),
@@ -282,6 +306,7 @@ fn req_from_json(j: &Json) -> Result<ReqSnap, String> {
         output_len: num("output")?,
         generated: num("generated")?,
         phase: j.req_str("phase", "request")?.to_string(),
+        class,
     })
 }
 
@@ -311,7 +336,9 @@ fn counters_to_json(c: &SimCounters) -> Json {
         .set("dropped", c.dropped)
         .set("transform_rollbacks", c.transform_rollbacks)
         .set("stalled_instances", c.stalled_instances)
-        .set("scale_up_blocked", c.scale_up_blocked);
+        .set("scale_up_blocked", c.scale_up_blocked)
+        .set("preemptions", c.preemptions)
+        .set("admission_dropped", c.admission_dropped);
     o
 }
 
@@ -342,6 +369,8 @@ fn counters_from_json(j: &Json) -> Result<SimCounters, String> {
         transform_rollbacks: num("transform_rollbacks")?,
         stalled_instances: num("stalled_instances")?,
         scale_up_blocked: num("scale_up_blocked")?,
+        preemptions: num("preemptions")?,
+        admission_dropped: num("admission_dropped")?,
     })
 }
 
@@ -360,6 +389,12 @@ fn policy_to_json(p: &PolicyState) -> Json {
         }
         PolicyState::LeastLoad => {
             o.set("kind", "llf");
+        }
+        PolicyState::Pipeline { slo, admit, base } => {
+            o.set("kind", "pipeline")
+                .set("slo", *slo)
+                .set("admit", *admit)
+                .set("base", policy_to_json(base));
         }
     }
     o
@@ -395,6 +430,11 @@ fn policy_from_json(j: &Json) -> Result<PolicyState, String> {
                 .ok_or("policy: bad cursor")? as usize,
         }),
         Some("llf") => Ok(PolicyState::LeastLoad),
+        Some("pipeline") => Ok(PolicyState::Pipeline {
+            slo: j.req_bool("slo", "policy")?,
+            admit: j.req_bool("admit", "policy")?,
+            base: Box::new(policy_from_json(j.get("base").ok_or("policy: missing base")?)?),
+        }),
         other => Err(format!("policy: unknown kind {other:?}")),
     }
 }
@@ -870,9 +910,33 @@ mod tests {
         let mut c = cfg.clone();
         c.seed ^= 1;
         assert_ne!(a, config_fingerprint(&c), "seed change must show");
-        let mut d = cfg;
+        let mut d = cfg.clone();
         d.model = ModelConfig::llama3_8b();
         assert_ne!(a, config_fingerprint(&d), "model change must show");
+        let mut e = cfg;
+        e.slo_interactive_deadline_s += 1.0;
+        assert_ne!(a, config_fingerprint(&e), "SLO deadline change must show");
+    }
+
+    #[test]
+    fn pipeline_policy_state_roundtrips_through_json() {
+        let composed = PolicyState::Pipeline {
+            slo: true,
+            admit: true,
+            base: Box::new(PolicyState::Gyges {
+                reserved: vec![2, 5],
+                reserve_cap: 0.55,
+                last_long_seen: Some(SimTime(123_456)),
+                long_hold_s: 45.0,
+            }),
+        };
+        let back = policy_from_json(&policy_to_json(&composed)).unwrap();
+        assert_eq!(back, composed);
+        // Plain compositions still serialize as the legacy kinds.
+        let rr = PolicyState::RoundRobin { cursor: 3 };
+        let j = policy_to_json(&rr);
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("rr"));
+        assert_eq!(policy_from_json(&j).unwrap(), rr);
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub use arrivals::{BurstyProcess, Poisson};
 pub use dist::LengthModel;
 pub use source::{
     ArrivalFeed, ChunkedTrace, FeedState, LongBursts, MaterializedSource, ProductionStream,
-    SegmentDir, SegmentFileSource, SourceCursor, StreamSource, TraceSegment, TraceSource,
+    SegmentDir, SegmentFileSource, SloMix, SourceCursor, StreamSource, TraceSegment, TraceSource,
 };
-pub use trace::{Trace, TraceRequest};
+pub use trace::{SloClass, Trace, TraceRequest};

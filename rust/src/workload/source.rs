@@ -27,7 +27,7 @@
 //! globally unique, stable, contiguous request ids.
 
 use super::dist::LengthModel;
-use super::trace::{Trace, TraceRequest};
+use super::trace::{SloClass, Trace, TraceRequest};
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::util::hash::{fnv1a, hex64};
 use crate::util::json::Json;
@@ -192,6 +192,11 @@ impl SourceCursor {
                         .set("input_len", l.input_len);
                     s.set("longs", lj);
                 }
+                if let Some(m) = &spec.slo {
+                    let mut mj = Json::obj();
+                    mj.set("interactive_frac", m.interactive_frac);
+                    s.set("slo", mj);
+                }
                 o.set("kind", "stream").set("spec", s).set("next", *next).set("next_id", *next_id);
             }
         }
@@ -236,6 +241,10 @@ impl SourceCursor {
                         input_len: num(l, "input_len")?,
                     }),
                 };
+                let slo = match s.get("slo") {
+                    None | Some(Json::Null) => None,
+                    Some(m) => Some(SloMix { interactive_frac: float(m, "interactive_frac")? }),
+                };
                 SourceCursor::Stream {
                     spec: ProductionStream {
                         seed: num(s, "seed")?,
@@ -243,6 +252,7 @@ impl SourceCursor {
                         segment_s: float(s, "segment_s")?,
                         horizon_s: float(s, "horizon_s")?,
                         longs,
+                        slo,
                     },
                     next: num(j, "next")? as usize,
                     next_id: num(j, "next_id")?,
@@ -418,6 +428,32 @@ impl LongBursts {
 /// draws never alias the per-segment arrival streams.
 const LONG_PHASE_SALT: u64 = 0xB1A5_7B00_57ED_2B2B;
 
+/// SLO-class mix of a production stream: each request is independently
+/// interactive with probability `interactive_frac`, drawn by
+/// [`class_for`]'s hash-Bernoulli over `(seed, id)` — pure, so any
+/// segment (and any resumed cursor) re-derives the same classes with no
+/// generator state crossing segment boundaries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloMix {
+    /// Probability a request is [`SloClass::Interactive`]; the rest are
+    /// batch-class.
+    pub interactive_frac: f64,
+}
+
+/// Deterministic SLO-class draw for request `id` of stream `seed`.
+pub fn class_for(seed: u64, id: u64, interactive_frac: f64) -> SloClass {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&seed.to_le_bytes());
+    bytes[8..].copy_from_slice(&id.to_le_bytes());
+    // Top 53 hash bits as a uniform draw in [0, 1) — exact in f64.
+    let u = (fnv1a(&bytes) >> 11) as f64 / (1u64 << 53) as f64;
+    if u < interactive_frac {
+        SloClass::Interactive
+    } else {
+        SloClass::Batch
+    }
+}
+
 /// A seeded, segmented §6.3-style production workload: Poisson arrivals
 /// at `qps` with [`LengthModel::production`] lengths, generated one
 /// segment at a time from an RNG derived from `(seed, segment index)` —
@@ -443,6 +479,10 @@ pub struct ProductionStream {
     /// short-tailed production stream PR 4 shipped (fingerprints and
     /// existing segment directories are unchanged).
     pub longs: Option<LongBursts>,
+    /// SLO-class mix; `None` leaves every request interactive-class (the
+    /// pre-SLO stream — serialized forms and segment-file bytes are
+    /// unchanged, since the interactive class encodes as absence).
+    pub slo: Option<SloMix>,
 }
 
 impl ProductionStream {
@@ -519,6 +559,7 @@ impl ProductionStream {
                 arrival: at.max(start),
                 input_len: input,
                 output_len: output,
+                class: SloClass::Interactive,
             });
         }
         if let Some(longs) = &self.longs {
@@ -548,6 +589,7 @@ impl ProductionStream {
                         arrival: at,
                         input_len: longs.input_len,
                         output_len: output,
+                        class: SloClass::Interactive,
                     });
                 }
             }
@@ -559,6 +601,13 @@ impl ProductionStream {
         }
         for (i, r) in requests.iter_mut().enumerate() {
             r.id = first_id + i as u64;
+        }
+        // Classes hash off the final id so they survive resume (any
+        // regeneration with the right id base re-derives them exactly).
+        if let Some(m) = &self.slo {
+            for r in requests.iter_mut() {
+                r.class = class_for(self.seed, r.id, m.interactive_frac);
+            }
         }
         TraceSegment { index: k, start, end, requests }
     }
@@ -804,16 +853,29 @@ fn request_to_json(r: &TraceRequest) -> Json {
         .set("id", r.id)
         .set("input", r.input_len)
         .set("output", r.output_len);
+    // Interactive encodes as absence, so classless streams keep their
+    // pre-SLO segment-file bytes (and payload hashes) unchanged.
+    if r.class == SloClass::Batch {
+        o.set("class", r.class.name());
+    }
     o
 }
 
 fn request_from_json(j: &Json) -> Result<TraceRequest, String> {
     let num = |k: &str| j.req_u64(k, "request");
+    let class = match j.get("class") {
+        None | Some(Json::Null) => SloClass::Interactive,
+        Some(v) => {
+            let s = v.as_str().ok_or("request: bad class")?;
+            SloClass::by_name(s).ok_or_else(|| format!("request: unknown class {s:?}"))?
+        }
+    };
     Ok(TraceRequest {
         id: num("id")?,
         arrival: SimTime(num("arrival_ns")?),
         input_len: num("input")?,
         output_len: num("output")?,
+        class,
     })
 }
 
@@ -1285,6 +1347,7 @@ mod tests {
             arrival: SimTime::from_secs_f64(1.0),
             input_len: 10,
             output_len: 1,
+            class: SloClass::Interactive,
         });
         let mut chunked = ChunkedTrace::with_horizon(t, 2.0, 10.0);
         let segs = collect(&mut chunked);
@@ -1302,6 +1365,7 @@ mod tests {
                 arrival: SimTime::from_secs_f64(at),
                 input_len: 10,
                 output_len: 1,
+                class: SloClass::Interactive,
             });
         }
         let mut chunked = ChunkedTrace::with_horizon(t, 5.0, 10.0);
@@ -1359,7 +1423,14 @@ mod tests {
     #[test]
     fn stream_segments_regenerate_independently() {
         let spec =
-            ProductionStream { seed: 11, qps: 2.0, segment_s: 15.0, horizon_s: 90.0, longs: None };
+            ProductionStream {
+                seed: 11,
+                qps: 2.0,
+                segment_s: 15.0,
+                horizon_s: 90.0,
+                longs: None,
+                slo: None,
+            };
         assert_eq!(spec.num_segments(), 6);
         let full = spec.materialize();
         assert!(!full.is_empty());
@@ -1388,6 +1459,7 @@ mod tests {
             segment_s: 60.0,
             horizon_s: 1800.0,
             longs: Some(LongBursts::paper()),
+            slo: None,
         };
         let full = spec.materialize();
         let long_len = LongBursts::paper().input_len;
@@ -1412,6 +1484,43 @@ mod tests {
     }
 
     #[test]
+    fn slo_mix_is_deterministic_and_class_free_of_arrival_draws() {
+        let spec = ProductionStream {
+            seed: 11,
+            qps: 2.0,
+            segment_s: 15.0,
+            horizon_s: 90.0,
+            longs: None,
+            slo: Some(SloMix { interactive_frac: 0.7 }),
+        };
+        let full = spec.materialize();
+        let batch = full.requests.iter().filter(|r| r.class == SloClass::Batch).count();
+        assert!(batch > 0, "a 0.7 mix over {} requests draws batch work", full.requests.len());
+        assert!(batch < full.requests.len(), "and keeps interactive work too");
+        // Classes hash off (seed, id): segments re-derive them exactly.
+        for k in [0usize, 3, 5] {
+            let first = spec.first_id(k);
+            assert_eq!(spec.gen_segment(k, first), spec.gen_segment(k, first));
+        }
+        // The mix is an overlay on ids only — arrivals and lengths match
+        // the classless stream row for row.
+        let plain = ProductionStream { slo: None, ..spec.clone() }.materialize();
+        assert_eq!(plain.requests.len(), full.requests.len());
+        for (a, b) in plain.requests.iter().zip(full.requests.iter()) {
+            assert_eq!((a.id, a.arrival, a.input_len, a.output_len),
+                (b.id, b.arrival, b.input_len, b.output_len));
+            assert_eq!(b.class, class_for(spec.seed, b.id, 0.7));
+        }
+        // Batch rows round-trip through segment JSONL; classless rows
+        // keep their pre-SLO encoding (no "class" key).
+        for r in &full.requests {
+            assert_eq!(request_from_json(&request_to_json(r)).unwrap(), *r);
+        }
+        let plain_row = request_to_json(&plain.requests[0]).to_string();
+        assert!(!plain_row.contains("class"), "interactive encodes as absence: {plain_row}");
+    }
+
+    #[test]
     fn feed_state_roundtrips_through_json() {
         let spec = ProductionStream {
             seed: 5,
@@ -1419,6 +1528,7 @@ mod tests {
             segment_s: 10.0,
             horizon_s: 60.0,
             longs: Some(LongBursts::paper()),
+            slo: Some(SloMix { interactive_frac: 0.8 }),
         };
         let mut feed = ArrivalFeed::new(Box::new(StreamSource::new(spec)));
         // Consume into the middle of a segment.
@@ -1487,7 +1597,14 @@ mod tests {
             let _ = std::fs::remove_dir_all(d);
         }
         let spec =
-            ProductionStream { seed: 3, qps: 2.0, segment_s: 10.0, horizon_s: 50.0, longs: None };
+            ProductionStream {
+                seed: 3,
+                qps: 2.0,
+                segment_s: 10.0,
+                horizon_s: 50.0,
+                longs: None,
+                slo: None,
+            };
         let full =
             write_segments(&dir_a, "p", 0, 10.0, &mut StreamSource::new(spec.clone()), 0).unwrap();
         // Simulate an interrupted run: dir_b holds only files 0..3.

@@ -7,6 +7,37 @@ use crate::config::calib::workload as calib;
 use crate::sim::clock::SimTime;
 use crate::util::prng::Prng;
 
+/// Latency class of a request. Interactive traffic carries a tight
+/// deadline and may preempt batch work under SLO-aware policies; batch
+/// traffic tolerates queueing. Plain generators emit all-interactive
+/// traces — only a classed [`ProductionStream`](super::ProductionStream)
+/// mixes in batch work — so the class axis is invisible (byte-identical)
+/// to every pre-existing workload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SloClass {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl SloClass {
+    /// Stable identifier used by snapshots and segment files.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// One request in a trace.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceRequest {
@@ -14,6 +45,7 @@ pub struct TraceRequest {
     pub arrival: SimTime,
     pub input_len: u64,
     pub output_len: u64,
+    pub class: SloClass,
 }
 
 impl TraceRequest {
@@ -74,6 +106,7 @@ impl Trace {
                 arrival: t,
                 input_len: calib::SHORT_INPUT_LEN,
                 output_len: out,
+                class: SloClass::Interactive,
             });
         }
         let longs = BurstyProcess::paper_long_requests().arrivals(&mut rng, horizon);
@@ -84,6 +117,7 @@ impl Trace {
                 arrival: t,
                 input_len: calib::LONG_INPUT_LEN,
                 output_len: out,
+                class: SloClass::Interactive,
             });
         }
         let mut tr = Trace { requests };
@@ -108,6 +142,7 @@ impl Trace {
                 arrival: t,
                 input_len: calib::SHORT_INPUT_LEN,
                 output_len: out,
+                class: SloClass::Interactive,
             });
         }
         let longs = BurstyProcess::paper_long_requests().arrivals(&mut rng, horizon);
@@ -118,6 +153,7 @@ impl Trace {
                 arrival: t,
                 input_len: calib::LONG_INPUT_LEN,
                 output_len: out,
+                class: SloClass::Interactive,
             });
         }
         let mut tr = Trace { requests };
@@ -136,7 +172,13 @@ impl Trace {
         for t in arrivals {
             let input = model.sample_input(&mut rng);
             let output = model.sample_output(&mut rng, input);
-            requests.push(TraceRequest { id: 0, arrival: t, input_len: input, output_len: output });
+            requests.push(TraceRequest {
+                id: 0,
+                arrival: t,
+                input_len: input,
+                output_len: output,
+                class: SloClass::Interactive,
+            });
         }
         let mut tr = Trace { requests };
         tr.sort_and_renumber();
@@ -153,7 +195,10 @@ impl Trace {
         self.requests.iter().filter(|r| r.input_len > threshold).count()
     }
 
-    /// Serialize to a simple CSV (id,arrival_s,input,output).
+    /// Serialize to a simple CSV (id,arrival_s,input,output). The SLO
+    /// class is NOT persisted here — the CSV format predates classing
+    /// and stays 4 columns; classed workloads live in segment JSONL
+    /// (see `workload::source`), where the class round-trips.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("id,arrival_s,input_len,output_len\n");
         for r in &self.requests {
@@ -186,6 +231,7 @@ impl Trace {
                 ),
                 input_len: cols[2].parse().map_err(|e| format!("line {}: {e}", i + 1))?,
                 output_len: cols[3].trim().parse().map_err(|e| format!("line {}: {e}", i + 1))?,
+                class: SloClass::Interactive,
             });
         }
         Ok(Trace { requests })
@@ -253,6 +299,7 @@ mod tests {
                 arrival: SimTime::from_secs_f64(at),
                 input_len: 10,
                 output_len: 1,
+                class: SloClass::Interactive,
             });
         }
         t.sort();
@@ -275,6 +322,15 @@ mod tests {
         glued.requests.extend(a);
         glued.sort();
         assert_eq!(glued.requests, full.requests, "ids must survive re-sorting");
+    }
+
+    #[test]
+    fn slo_class_names_roundtrip() {
+        for c in [SloClass::Interactive, SloClass::Batch] {
+            assert_eq!(SloClass::by_name(c.name()), Some(c));
+        }
+        assert_eq!(SloClass::by_name("bogus"), None);
+        assert_eq!(SloClass::default(), SloClass::Interactive);
     }
 
     #[test]

@@ -113,8 +113,8 @@ fn fig13_output_identical_with_and_without_routing_index() {
 fn mixed_system_sweep_is_deterministic() {
     let trace = Arc::new(Trace::hybrid_paper(0xD2, 90.0));
     let jobs: Vec<SweepJob> = [
-        (SystemKind::Gyges, Some(Policy::Gyges)),
-        (SystemKind::Gyges, Some(Policy::RoundRobin)),
+        (SystemKind::Gyges, Some(Policy::Gyges.into())),
+        (SystemKind::Gyges, Some(Policy::RoundRobin.into())),
         (SystemKind::KunServe, None),
         (SystemKind::LoongServe, None),
         (SystemKind::Seesaw, None),

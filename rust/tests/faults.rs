@@ -27,7 +27,7 @@ use gyges::sim::{SimDuration, SimTime};
 use gyges::snapshot::state::SimSnapshot;
 use gyges::util::proptest;
 use gyges::util::Prng;
-use gyges::workload::{Trace, TraceRequest};
+use gyges::workload::{SloClass, Trace, TraceRequest};
 use std::sync::Arc;
 
 fn cfg() -> ClusterConfig {
@@ -118,7 +118,7 @@ fn prop_fault_storms_are_deterministic_across_sweep_threads() {
                             format!("storm/{}", p.name()),
                             cfg.clone(),
                             SystemKind::Gyges,
-                            Some(p),
+                            Some(p.into()),
                             trace.clone(),
                         )
                         .with_faults(plan.clone())
@@ -281,6 +281,7 @@ fn total_capacity_loss_with_bounded_retry_terminates_with_drops() {
             arrival: SimTime::from_secs_f64(i as f64 * 0.25),
             input_len: 2000,
             output_len: 2000, // long decode: plenty in flight at the crash
+            class: SloClass::Interactive,
         });
     }
     trace.sort_and_renumber();

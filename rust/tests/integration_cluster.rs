@@ -5,7 +5,7 @@
 use gyges::config::{ClusterConfig, ModelConfig, Policy};
 use gyges::coordinator::{run_system, ClusterSim, SystemKind};
 use gyges::sim::{SimDuration, SimTime};
-use gyges::workload::{Trace, TraceRequest};
+use gyges::workload::{SloClass, Trace, TraceRequest};
 
 fn cfg() -> ClusterConfig {
     ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
@@ -19,6 +19,7 @@ fn mk_trace(reqs: &[(f64, u64, u64)]) -> Trace {
             arrival: SimTime::from_secs_f64(at),
             input_len: input,
             output_len: output,
+            class: SloClass::Interactive,
         });
     }
     t.sort();
@@ -161,7 +162,7 @@ fn policies_share_transformation_machinery_but_differ_in_routing() {
     let trace = Trace::hybrid_paper(9, 180.0);
     let mut tputs = Vec::new();
     for p in [Policy::Gyges, Policy::RoundRobin, Policy::LeastLoadFirst] {
-        let out = run_system(cfg(), SystemKind::Gyges, Some(p), trace.clone());
+        let out = run_system(cfg(), SystemKind::Gyges, Some(p.into()), trace.clone());
         assert_eq!(out.report.completed, out.report.total, "{p:?}");
         tputs.push(out.report.throughput_tps);
     }

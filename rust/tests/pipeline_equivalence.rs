@@ -1,0 +1,43 @@
+//! Pipeline vs legacy routing lockstep (PR 8).
+//!
+//! The plain policies (`gyges` / `rr` / `llf`) are compositions of
+//! filter/score pipeline stages since the scheduler redesign; the
+//! pre-pipeline implementations survive behind the test-only
+//! `legacy-policies` feature purely as the reference for this proof.
+//! Here the figure sweeps whose rows the paper reproduction publishes
+//! (fig12 / fig13 / fig14) are run twice at smoke horizons — once
+//! through the pipeline compositions, once with the process-global
+//! legacy switch thrown — and the serialized JSONL rows must match
+//! byte for byte. CI's `policy-pipeline-verify` job repeats the fig12
+//! leg end-to-end through the real binary (`--legacy-routing`).
+//!
+//! Only compiled with `--features legacy-policies` (`required-features`
+//! in Cargo.toml): `set_legacy_routing` does not exist on the lib
+//! integration tests link against otherwise.
+//!
+//! ONE #[test] on purpose: the legacy switch is process-global state,
+//! and parallel test threads toggling it would race. Everything that
+//! needs the switch lives in this single serial function.
+
+use gyges::coordinator::set_legacy_routing;
+use gyges::experiments::named_sweep_jobs;
+use gyges::experiments::sweep::{results_to_jsonl, run_sweep_serial};
+
+#[test]
+fn figure_sweeps_are_byte_identical_pipeline_vs_legacy() {
+    // fig13's trace is fully scripted (the horizon argument is ignored);
+    // fig12/fig14 use CI's 45 s smoke horizon.
+    for name in ["fig12", "fig13", "fig14"] {
+        let jobs = named_sweep_jobs(name, 45.0)
+            .unwrap_or_else(|| panic!("{name} is not a registered sweep"));
+        set_legacy_routing(false);
+        let pipeline = results_to_jsonl(&run_sweep_serial(&jobs));
+        set_legacy_routing(true);
+        let legacy = results_to_jsonl(&run_sweep_serial(&jobs));
+        set_legacy_routing(false);
+        assert_eq!(
+            pipeline, legacy,
+            "{name}: pipeline-composed plain policies drifted from the legacy reference"
+        );
+    }
+}

@@ -156,6 +156,12 @@ fn prop_routing_decisions_are_sound() {
                         Ok(())
                     }
                     Route::Defer => Ok(()),
+                    // Drop / Preempt are decision-stage outcomes of the
+                    // composed (-admit / -slo) policies; a plain policy
+                    // must never emit them.
+                    other => {
+                        Err(format!("plain policy emitted a composed-stage decision: {other:?}"))
+                    }
                 }
             },
         );

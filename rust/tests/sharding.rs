@@ -30,7 +30,7 @@ fn mixed_jobs() -> Vec<SweepJob> {
                 format!("hybrid/{}", p.name()),
                 cfg.clone(),
                 SystemKind::Gyges,
-                Some(p),
+                Some(p.into()),
                 Arc::clone(&trace),
             )
         })
@@ -41,7 +41,7 @@ fn mixed_jobs() -> Vec<SweepJob> {
         "capped",
         capped,
         SystemKind::Gyges,
-        Some(Policy::Gyges),
+        Some(Policy::Gyges.into()),
         Arc::clone(&trace),
     ));
     jobs
@@ -63,7 +63,7 @@ fn tiny_jobs_at(key_prefix: &str, horizon_s: f64) -> Vec<SweepJob> {
                 format!("{key_prefix}{i}"),
                 cfg.clone(),
                 SystemKind::Gyges,
-                Some(Policy::Gyges),
+                Some(Policy::Gyges.into()),
                 Arc::clone(&trace),
             )
         })

@@ -13,7 +13,7 @@
 //!    divergence report is deterministic across repeated runs, and
 //!    whose parent branch equals the uninterrupted timeline.
 
-use gyges::config::{ClusterConfig, ModelConfig};
+use gyges::config::{ClusterConfig, ModelConfig, Policy, PolicyId};
 use gyges::coordinator::{ClusterSim, RunStatus, SimOutcome, SystemKind};
 use gyges::experiments::branch::{default_branches, explore};
 use gyges::experiments::sweep::{build_job_sim, outcome_to_result, results_to_jsonl};
@@ -25,7 +25,7 @@ use gyges::snapshot::state::{RunContext, SimSnapshot};
 use gyges::util::proptest;
 use gyges::util::Prng;
 use gyges::workload::{ChunkedTrace, LongBursts, ProductionStream, StreamSource, Trace};
-use gyges::workload::{TraceRequest, TraceSegment, TraceSource};
+use gyges::workload::{SloClass, SloMix, TraceRequest, TraceSegment, TraceSource};
 use std::path::PathBuf;
 
 fn cfg() -> ClusterConfig {
@@ -121,6 +121,7 @@ fn transforming_trace() -> Trace {
             arrival: SimTime::from_secs_f64(i as f64 * 0.5),
             input_len: 1000,
             output_len: 60,
+            class: SloClass::Interactive,
         });
     }
     trace.requests.push(TraceRequest {
@@ -128,6 +129,7 @@ fn transforming_trace() -> Trace {
         arrival: SimTime::from_secs_f64(1.0),
         input_len: 50_000,
         output_len: 64,
+        class: SloClass::Interactive,
     });
     trace.sort_and_renumber();
     trace
@@ -170,6 +172,7 @@ fn overload_trace() -> Trace {
             arrival: SimTime::from_secs_f64(i as f64 * 0.5),
             input_len: 1000,
             output_len: 60,
+            class: SloClass::Interactive,
         });
     }
     trace.requests.push(TraceRequest {
@@ -177,6 +180,7 @@ fn overload_trace() -> Trace {
         arrival: SimTime::from_secs_f64(0.2),
         input_len: 200_000, // beyond max_seq(4): unserveable, defers forever
         output_len: 64,
+        class: SloClass::Interactive,
     });
     trace.sort_and_renumber();
     trace
@@ -221,6 +225,7 @@ fn resume_between_segment_boundary_and_first_arrival() {
             arrival: SimTime::from_secs_f64(at),
             input_len: 2000,
             output_len: 150,
+            class: SloClass::Interactive,
         });
     }
     let build = || {
@@ -267,6 +272,7 @@ fn resume_of_bursty_production_stream_is_byte_identical() {
         segment_s: 15.0,
         horizon_s: 90.0,
         longs: Some(LongBursts::paper()),
+        slo: None,
     };
     let build = || {
         let source = StreamSource::new(spec.clone());
@@ -281,6 +287,55 @@ fn resume_of_bursty_production_stream_is_byte_identical() {
     let mut sim = restored;
     let _ = sim.run_until(None);
     assert_eq!(sig(&sim.finish()), reference, "bursty-stream resume diverged");
+}
+
+#[test]
+fn resume_of_composed_slo_policy_is_byte_identical_and_serializes_pipeline_state() {
+    // PR 8: a composed (-slo-admit) pipeline policy on an overloaded,
+    // SLO-classed stream. The snapshot must carry the recursive
+    // `pipeline` PolicyState kind (schema v4) and the class tags of
+    // queued batch work — the state preemption-by-requeue shuffles —
+    // and kill/resume at arbitrary instants must reproduce the
+    // uninterrupted run's bytes, admission drops and preemptions
+    // included.
+    let cfg = gyges::experiments::slo::slo_cfg();
+    let id = PolicyId { base: Policy::Gyges, slo: true, admit: true };
+    let spec = ProductionStream {
+        seed: 0x510_C1A5,
+        qps: 10.0,
+        segment_s: 15.0,
+        horizon_s: 30.0,
+        longs: None,
+        slo: Some(SloMix { interactive_frac: 0.9 }),
+    };
+    let build = || {
+        let source = StreamSource::new(spec.clone());
+        ClusterSim::with_source(cfg.clone(), SystemKind::Gyges, Box::new(source)).with_policy(id)
+    };
+    let reference = sig(&build().run());
+    let mut sim = build();
+    let (mut saw_pipeline, mut saw_batch) = (false, false);
+    let mut t = 1.0;
+    while t < 300.0 {
+        match sim.run_until(Some(SimTime::from_secs_f64(t))) {
+            RunStatus::Done => break,
+            RunStatus::Paused => {
+                let snap = sim.snapshot().expect("paused run must snapshot");
+                let text = snap.to_string_pretty();
+                saw_pipeline |= text.contains("\"pipeline\"");
+                saw_batch |= text.contains("\"batch\"");
+                let parsed = SimSnapshot::parse(&text).expect("snapshot must parse");
+                assert_eq!(parsed, snap, "JSON roundtrip must be lossless");
+                sim = ClusterSim::from_snapshot(cfg.clone(), &parsed).expect("restore");
+            }
+        }
+        t += 1.0;
+    }
+    let _ = sim.run_until(None);
+    let resumed = sig(&sim.finish());
+    assert!(saw_pipeline, "composed policy must serialize as the pipeline PolicyState kind");
+    assert!(saw_batch, "walk must checkpoint with batch-class work captured in some snapshot");
+    assert_eq!(resumed, reference, "composed-policy resume diverged from the uninterrupted run");
 }
 
 #[test]
@@ -303,6 +358,7 @@ fn snapshot_refuses_unsnapshottable_sources_and_config_drift() {
                     arrival: SimTime::from_secs_f64(1.0),
                     input_len: 1000,
                     output_len: 500,
+                    class: SloClass::Interactive,
                 }],
             }))
         }

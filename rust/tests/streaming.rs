@@ -19,7 +19,7 @@ use gyges::sim::SimTime;
 use gyges::util::proptest;
 use gyges::workload::source::write_segments;
 use gyges::workload::{
-    ChunkedTrace, ProductionStream, SegmentFileSource, StreamSource, Trace, TraceRequest,
+    ChunkedTrace, ProductionStream, SegmentFileSource, SloClass, StreamSource, Trace, TraceRequest,
 };
 use gyges::prop_assert;
 use std::path::PathBuf;
@@ -52,7 +52,7 @@ fn two_policy_jobs(trace: Arc<Trace>) -> Vec<SweepJob> {
                 format!("stream/{}", p.name()),
                 cfg(),
                 SystemKind::Gyges,
-                Some(p),
+                Some(p.into()),
                 Arc::clone(&trace),
             )
         })
@@ -101,6 +101,7 @@ fn boundary_on_arrival_timestamp_and_empty_trailing_segments_identical() {
             arrival: SimTime::from_secs_f64(at),
             input_len: if i == 3 { 50_000 } else { 1000 },
             output_len: 60,
+            class: SloClass::Interactive,
         });
     }
     trace.sort();
@@ -163,12 +164,18 @@ fn segment_file_replay_identical_with_peak_memory_bounded_by_one_segment() {
 #[test]
 fn stream_jobs_match_materialized_jobs_and_fingerprint_their_spec() {
     use gyges::experiments::sweep::JobTrace;
-    let spec =
-        ProductionStream { seed: 17, qps: 2.0, segment_s: 15.0, horizon_s: 90.0, longs: None };
+    let spec = ProductionStream {
+        seed: 17,
+        qps: 2.0,
+        segment_s: 15.0,
+        horizon_s: 90.0,
+        longs: None,
+        slo: None,
+    };
     let full = Arc::new(spec.materialize());
     let mk = |trace: JobTrace, p: Policy| {
         let key = format!("ps/{}", p.name());
-        SweepJob::with_job_trace(key, cfg(), SystemKind::Gyges, Some(p), trace)
+        SweepJob::with_job_trace(key, cfg(), SystemKind::Gyges, Some(p.into()), trace)
     };
     let materialized: Vec<SweepJob> = [Policy::Gyges, Policy::RoundRobin]
         .into_iter()
@@ -197,8 +204,14 @@ fn stream_jobs_match_materialized_jobs_and_fingerprint_their_spec() {
 
 #[test]
 fn production_stream_replay_matches_materialized_and_file_replay() {
-    let spec =
-        ProductionStream { seed: 9, qps: 2.0, segment_s: 20.0, horizon_s: 120.0, longs: None };
+    let spec = ProductionStream {
+        seed: 9,
+        qps: 2.0,
+        segment_s: 20.0,
+        horizon_s: 120.0,
+        longs: None,
+        slo: None,
+    };
     let whole = ClusterSim::new(cfg(), SystemKind::Gyges, spec.materialize()).run();
     let streamed =
         ClusterSim::with_source(cfg(), SystemKind::Gyges, Box::new(StreamSource::new(spec.clone())))
