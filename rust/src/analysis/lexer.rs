@@ -1,0 +1,472 @@
+//! A lightweight, comment- and string-aware Rust tokenizer.
+//!
+//! This is NOT a full Rust lexer — it is exactly enough for the
+//! determinism linter's rules ([`super::rules`]): identifiers,
+//! lifetimes, string/char/numeric literals, and single-character
+//! punctuation, each tagged with its 1-based source line. Comments are
+//! lexed (including nesting for `/* */`) but kept in a *separate*
+//! stream so rules never match inside them, while the suppression
+//! scanner (`// gyges-lint: allow(...)`) can still read them.
+//!
+//! Handled literal forms: cooked strings with escapes, raw strings
+//! (`r"…"`, `r#"…"#`, any hash depth), byte/C-string prefixes (`b`,
+//! `br`, `c`, `cr`), byte chars (`b'x'`), char literals vs lifetimes
+//! (`'x'` vs `'static`), and integer/float numerics with radix
+//! prefixes, `_` separators, exponents, and type suffixes. Raw
+//! identifiers (`r#match`) lex as plain identifiers.
+
+/// One lexed token (comments excluded — see [`Comment`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    /// `'a`, `'static` — distinguished from char literals so `&'static
+    /// str` never looks like a `static` item to rule D05.
+    Lifetime(String),
+    /// Cooked value with common escapes resolved (raw strings verbatim).
+    Str(String),
+    Char,
+    Num {
+        text: String,
+        float: bool,
+    },
+    Punct(char),
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A comment, kept out of the token stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// Comment text without delimiters (`//`, `/* */`), untrimmed.
+    pub text: String,
+    /// True when no code token precedes the comment on its start line —
+    /// a standalone suppression covers the line below instead.
+    pub standalone: bool,
+}
+
+/// Tokenize `src`, returning code tokens and comments separately.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, last_code_line: 0 }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    /// Line of the most recent code token (for `Comment::standalone`).
+    last_code_line: u32,
+}
+
+impl Lexer<'_> {
+    fn run(mut self) -> (Vec<Token>, Vec<Comment>) {
+        let mut toks = Vec::new();
+        let mut comments = Vec::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => {
+                    let start = self.line;
+                    let standalone = self.last_code_line != self.line;
+                    self.i += 2;
+                    let text = self.take_until_newline();
+                    comments.push(Comment { line: start, text, standalone });
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    let start = self.line;
+                    let standalone = self.last_code_line != self.line;
+                    let text = self.block_comment();
+                    comments.push(Comment { line: start, text, standalone });
+                }
+                b'"' => {
+                    let line = self.line;
+                    let s = self.cooked_string();
+                    self.emit(&mut toks, Tok::Str(s), line);
+                }
+                b'\'' => {
+                    let line = self.line;
+                    let t = self.char_or_lifetime();
+                    self.emit(&mut toks, t, line);
+                }
+                b'0'..=b'9' => {
+                    let line = self.line;
+                    let t = self.number();
+                    self.emit(&mut toks, t, line);
+                }
+                c if c == b'_' || c.is_ascii_alphabetic() => {
+                    let line = self.line;
+                    let t = self.ident_or_prefixed_literal();
+                    self.emit(&mut toks, t, line);
+                }
+                c => {
+                    let line = self.line;
+                    self.i += 1;
+                    self.emit(&mut toks, Tok::Punct(c as char), line);
+                }
+            }
+        }
+        (toks, comments)
+    }
+
+    fn emit(&mut self, toks: &mut Vec<Token>, tok: Tok, line: u32) {
+        self.last_code_line = self.line;
+        toks.push(Token { tok, line });
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn take_until_newline(&mut self) -> String {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        String::from_utf8_lossy(&self.b[start..self.i]).into_owned()
+    }
+
+    /// `/* … */` with nesting, cursor on the opening `/`.
+    fn block_comment(&mut self) -> String {
+        self.i += 2;
+        let start = self.i;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if self.b[self.i] == b'/' && self.peek(1) == Some(b'*') {
+                depth += 1;
+                self.i += 2;
+            } else if self.b[self.i] == b'*' && self.peek(1) == Some(b'/') {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.i += 1;
+            }
+        }
+        let end = if depth == 0 { self.i - 2 } else { self.i };
+        String::from_utf8_lossy(&self.b[start..end]).into_owned()
+    }
+
+    /// Cooked string, cursor on the opening quote. Resolves the escapes
+    /// the linter's key-parity rule can meet in practice; unknown
+    /// escapes keep the escaped character verbatim.
+    fn cooked_string(&mut self) -> String {
+        self.i += 1;
+        let mut out = String::new();
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    out.push('\n');
+                    self.i += 1;
+                }
+                b'\\' => {
+                    self.i += 1;
+                    match self.b.get(self.i).copied() {
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'0') => out.push('\0'),
+                        Some(b'\n') => self.line += 1, // line-continuation
+                        Some(c) => out.push(c as char),
+                        None => {}
+                    }
+                    self.i += 1;
+                }
+                c => {
+                    out.push(c as char);
+                    self.i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Raw string body, cursor just past `r` and any prefix letters;
+    /// `hashes` is the number of `#` before the opening quote.
+    fn raw_string(&mut self, hashes: usize) -> String {
+        self.i += hashes + 1; // the #s and the opening quote
+        let start = self.i;
+        while self.i < self.b.len() {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+            } else if self.b[self.i] == b'"' {
+                let tail = &self.b[self.i + 1..];
+                if tail.len() >= hashes && tail[..hashes].iter().all(|&h| h == b'#') {
+                    let end = self.i;
+                    self.i += 1 + hashes;
+                    return String::from_utf8_lossy(&self.b[start..end]).into_owned();
+                }
+            }
+            self.i += 1;
+        }
+        String::from_utf8_lossy(&self.b[start..]).into_owned()
+    }
+
+    /// `'x'` / `'\n'` vs `'static`, cursor on the quote.
+    fn char_or_lifetime(&mut self) -> Tok {
+        self.i += 1;
+        match self.b.get(self.i).copied() {
+            Some(b'\\') => {
+                // Escaped char literal: skip the escape, find the close.
+                self.i += 2;
+                while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                    self.i += 1;
+                }
+                self.i += 1;
+                Tok::Char
+            }
+            Some(c) if c == b'_' || c.is_ascii_alphanumeric() => {
+                let start = self.i;
+                while self
+                    .peek(0)
+                    .map(|c| c == b'_' || c.is_ascii_alphanumeric())
+                    .unwrap_or(false)
+                {
+                    self.i += 1;
+                }
+                if self.peek(0) == Some(b'\'') {
+                    self.i += 1;
+                    Tok::Char
+                } else {
+                    let name = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+                    Tok::Lifetime(name)
+                }
+            }
+            Some(_) => {
+                // Punctuation char literal like '{'.
+                self.i += 1;
+                if self.peek(0) == Some(b'\'') {
+                    self.i += 1;
+                }
+                Tok::Char
+            }
+            None => Tok::Char,
+        }
+    }
+
+    fn number(&mut self) -> Tok {
+        let start = self.i;
+        let mut float = false;
+        let radix_prefixed = self.b[self.i] == b'0'
+            && matches!(self.peek(1), Some(b'x' | b'X' | b'o' | b'O' | b'b' | b'B'));
+        if radix_prefixed {
+            self.i += 2;
+            while self
+                .peek(0)
+                .map(|c| c == b'_' || c.is_ascii_alphanumeric())
+                .unwrap_or(false)
+            {
+                self.i += 1;
+            }
+        } else {
+            self.digits();
+            if self.peek(0) == Some(b'.')
+                && self.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false)
+            {
+                float = true;
+                self.i += 1;
+                self.digits();
+            }
+            if matches!(self.peek(0), Some(b'e' | b'E')) {
+                let sign = matches!(self.peek(1), Some(b'+' | b'-'));
+                let digit_at = if sign { 2 } else { 1 };
+                if self.peek(digit_at).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                    float = true;
+                    self.i += 1 + usize::from(sign);
+                    self.digits();
+                }
+            }
+            // Type suffix (u64, f64, usize, …).
+            let suffix_start = self.i;
+            while self
+                .peek(0)
+                .map(|c| c == b'_' || c.is_ascii_alphanumeric())
+                .unwrap_or(false)
+            {
+                self.i += 1;
+            }
+            let suffix = &self.b[suffix_start..self.i];
+            if suffix.starts_with(b"f32") || suffix.starts_with(b"f64") {
+                float = true;
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        Tok::Num { text, float }
+    }
+
+    fn digits(&mut self) {
+        while self.peek(0).map(|c| c == b'_' || c.is_ascii_digit()).unwrap_or(false) {
+            self.i += 1;
+        }
+    }
+
+    fn ident_or_prefixed_literal(&mut self) -> Tok {
+        let start = self.i;
+        while self
+            .peek(0)
+            .map(|c| c == b'_' || c.is_ascii_alphanumeric())
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let name = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        let raw_capable = matches!(name.as_str(), "r" | "br" | "cr");
+        let cooked_capable = matches!(name.as_str(), "b" | "c");
+        match self.peek(0) {
+            Some(b'"') if raw_capable => Tok::Str(self.raw_string(0)),
+            Some(b'"') if cooked_capable => Tok::Str(self.cooked_string()),
+            Some(b'\'') if name == "b" => self.char_or_lifetime(),
+            Some(b'#') if raw_capable || name == "r" => {
+                let mut hashes = 0;
+                while self.peek(hashes) == Some(b'#') {
+                    hashes += 1;
+                }
+                if self.peek(hashes) == Some(b'"') {
+                    Tok::Str(self.raw_string(hashes))
+                } else if name == "r" && hashes == 1 {
+                    // Raw identifier r#ident: re-lex the ident part.
+                    self.i += 1;
+                    let istart = self.i;
+                    while self
+                        .peek(0)
+                        .map(|c| c == b'_' || c.is_ascii_alphanumeric())
+                        .unwrap_or(false)
+                    {
+                        self.i += 1;
+                    }
+                    Tok::Ident(String::from_utf8_lossy(&self.b[istart..self.i]).into_owned())
+                } else {
+                    Tok::Ident(name)
+                }
+            }
+            _ => Tok::Ident(name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_code() {
+        let src = r##"
+            // HashMap in a comment
+            /* Instant::now in /* a nested */ block */
+            let s = "HashMap::new()";
+            let r = r#"SystemTime "quoted""#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|i| i == "HashMap" || i == "Instant" || i == "SystemTime"));
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].text.contains("HashMap"));
+        assert!(comments[1].text.contains("nested"));
+        let strs: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["HashMap::new()".to_string(), "SystemTime \"quoted\"".into()]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_statics_or_chars() {
+        let (toks, _) = lex("fn f() -> &'static str { 'x' } 'a: loop {}");
+        let lifetimes: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Lifetime(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lifetimes, vec!["static", "a"]);
+        assert_eq!(toks.iter().filter(|t| t.tok == Tok::Char).count(), 1);
+        assert!(!toks.iter().any(|t| t.tok == Tok::Ident("static".into())));
+    }
+
+    #[test]
+    fn numbers_classify_floats() {
+        let (toks, _) = lex("0xFE 1_000 1.5 2e3 2.0e-3 7f64 3u64 v.0.to_bits() 0..10");
+        let nums: Vec<(String, bool)> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num { text, float } => Some((text.clone(), *float)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            nums,
+            vec![
+                ("0xFE".to_string(), false),
+                ("1_000".into(), false),
+                ("1.5".into(), true),
+                ("2e3".into(), true),
+                ("2.0e-3".into(), true),
+                ("7f64".into(), true),
+                ("3u64".into(), false),
+                ("0".into(), false),
+                ("0".into(), false),
+                ("10".into(), false),
+            ]
+        );
+    }
+
+    #[test]
+    fn string_escapes_resolve_for_key_parity() {
+        let (toks, _) = lex(r#"set("a\"b\\c")"#);
+        assert!(toks.iter().any(|t| t.tok == Tok::Str("a\"b\\c".into())));
+    }
+
+    #[test]
+    fn lines_and_standalone_flags() {
+        let src = "let a = 1; // trailing\n// standalone\nlet b = 2;\n";
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        assert!(!comments[0].standalone);
+        assert_eq!(comments[0].line, 1);
+        assert!(comments[1].standalone);
+        assert_eq!(comments[1].line, 2);
+        let b = toks.iter().find(|t| t.tok == Tok::Ident("b".into())).unwrap();
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn byte_and_raw_forms() {
+        let (toks, _) = lex(r##"b"bytes" b'x' r#"raw # body"# r#match"##);
+        assert!(toks.iter().any(|t| t.tok == Tok::Str("bytes".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Str("raw # body".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Ident("match".into())));
+        assert_eq!(toks.iter().filter(|t| t.tok == Tok::Char).count(), 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! `gyges lint` — a dependency-free static analyser enforcing the
+//! determinism contract the repo's byte-identity proofs rest on.
+//!
+//! The crate's equivalence guarantees (serial==parallel sweeps,
+//! shard-merge, streamed replay, kill/resume snapshots, faulted-run
+//! determinism, pipeline-vs-legacy lockstep) are only as strong as a
+//! set of source-level invariants no general-purpose tool checks:
+//! ordered collections in output paths, no wall-clock reads outside the
+//! profiling allowlist, bit-exact f64 fingerprinting, registered
+//! process globals, `SimError`-surfaced failures, snapshot key parity,
+//! and a `[[test]]` table that actually lists every test file. This
+//! module machine-checks all of them — see [`rules`] for the rule
+//! catalogue (D01–D07) and PERF.md's "Determinism contract" section for
+//! the historical bug each rule encodes.
+//!
+//! Usage: `gyges lint [--strict] [--json] [--root DIR]`. Exit codes:
+//! 0 clean, 1 findings, 2 usage/IO error. `--strict` escalates
+//! suppression-hygiene warnings (missing reason, unused suppression,
+//! malformed marker) to errors; CI runs strict so the tree stays at
+//! zero findings, not zero-errors-some-warnings.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::cli::Args;
+
+pub use rules::{Finding, Severity};
+
+/// Lint the repo rooted at `root` (the directory holding `Cargo.toml`
+/// and `rust/`). Returns the canonical sorted finding list. Rules that
+/// need a piece of the tree the root lacks degrade gracefully: D03 is
+/// skipped without a `Cargo.toml`, D07 without `snapshot/state.rs` —
+/// which is what lets the fixture corpora under
+/// `rust/tests/lint_fixtures/` exercise one rule at a time.
+pub fn run_lint(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    let mut files = Vec::new();
+    let src_root = root.join("rust").join("src");
+    if src_root.is_dir() {
+        walk_rs(&src_root, &mut files)?;
+    }
+    files.sort();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        findings.extend(rules::SourceFile::new(&rel, &src).check());
+    }
+    let cargo = root.join("Cargo.toml");
+    if cargo.is_file() {
+        let src =
+            fs::read_to_string(&cargo).map_err(|e| format!("read {}: {e}", cargo.display()))?;
+        let manifest = rules::parse_manifest("Cargo.toml", &src);
+        let test_files = list_test_files(root)?;
+        let path_exists = |p: &str| root.join(p).is_file();
+        let file_allows_d03 = |p: &str| match fs::read_to_string(root.join(p)) {
+            Ok(text) => rules::SourceFile::new(p, &text).allows_anywhere("D03"),
+            Err(_) => false,
+        };
+        findings.extend(rules::d03_check(manifest, &test_files, &path_exists, &file_allows_d03));
+    }
+    report::sort_findings(&mut findings);
+    Ok(findings)
+}
+
+/// The `gyges lint` subcommand.
+pub fn lint_cli(args: &Args) -> i32 {
+    let root = PathBuf::from(args.get_or("root", "."));
+    let strict = args.flag("strict");
+    let json = args.flag("json");
+    match run_lint(&root) {
+        Err(e) => {
+            eprintln!("gyges lint: {e}");
+            2
+        }
+        Ok(findings) => {
+            if json {
+                println!("{}", report::render_json(&findings, strict));
+            } else {
+                print!("{}", report::render_text(&findings, strict));
+            }
+            report::exit_code(&findings, strict)
+        }
+    }
+}
+
+/// Recursively collect `.rs` files (sorted later; `read_dir` order is
+/// platform-dependent and the report must be byte-stable).
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().map(|x| x == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The repo-relative `rust/tests/*.rs` list, NON-recursive by design:
+/// only files directly in `rust/tests/` are candidate test targets, so
+/// the lint fixture corpora nested under `rust/tests/lint_fixtures/`
+/// never demand `[[test]]` entries of their own.
+fn list_test_files(root: &Path) -> Result<Vec<String>, String> {
+    let dir = root.join("rust").join("tests");
+    let mut out = Vec::new();
+    if !dir.is_dir() {
+        return Ok(out);
+    }
+    let entries = fs::read_dir(&dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if !path.is_file() || !path.extension().map(|x| x == "rs").unwrap_or(false) {
+            continue;
+        }
+        if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+            out.push(format!("rust/tests/{name}"));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Forward-slashed path of `path` relative to `root` (the rule
+/// registries match on `rust/src/...` literals, also on Windows).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}

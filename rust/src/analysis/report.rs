@@ -1,0 +1,136 @@
+//! Deterministic rendering of lint findings (text and JSON) plus the
+//! exit-code policy.
+//!
+//! Findings are always emitted sorted by `(path, line, rule)` so two
+//! runs over the same tree produce byte-identical reports — the linter
+//! holds itself to the contract it enforces.
+
+use crate::util::Json;
+
+use super::rules::{Finding, Severity};
+
+/// Sort findings into the canonical report order.
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+}
+
+/// Count `(errors, warnings)` under the given strictness. `--strict`
+/// escalates every warning (suppression hygiene) to an error.
+pub fn tally(findings: &[Finding], strict: bool) -> (usize, usize) {
+    let mut errors = 0;
+    let mut warnings = 0;
+    for f in findings {
+        match f.severity {
+            Severity::Error => errors += 1,
+            Severity::Warning if strict => errors += 1,
+            Severity::Warning => warnings += 1,
+        }
+    }
+    (errors, warnings)
+}
+
+/// Process exit code: 0 clean, 1 findings. (IO/usage errors are 2,
+/// decided by the CLI wrapper.)
+pub fn exit_code(findings: &[Finding], strict: bool) -> i32 {
+    let (errors, _) = tally(findings, strict);
+    if errors > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+/// Human-readable report, one `path:line: severity[rule] msg` per line,
+/// ending with a summary line.
+pub fn render_text(findings: &[Finding], strict: bool) -> String {
+    let mut out = String::new();
+    for f in findings {
+        let sev = effective_severity(f, strict);
+        out.push_str(&format!("{}:{}: {sev}[{}] {}\n", f.path, f.line, f.rule, f.msg));
+    }
+    let (errors, warnings) = tally(findings, strict);
+    out.push_str(&format!(
+        "gyges lint: {errors} error(s), {warnings} warning(s){}\n",
+        if strict { " [strict]" } else { "" }
+    ));
+    out
+}
+
+/// Machine-readable report (the CI artifact).
+pub fn render_json(findings: &[Finding], strict: bool) -> Json {
+    let (errors, warnings) = tally(findings, strict);
+    let rows: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("rule", f.rule)
+                .set("severity", effective_severity(f, strict).to_string())
+                .set("path", f.path.as_str())
+                .set("line", f.line)
+                .set("msg", f.msg.as_str());
+            o
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("schema", "gyges-lint-v1")
+        .set("strict", strict)
+        .set("errors", errors as u64)
+        .set("warnings", warnings as u64)
+        .set("ok", errors == 0)
+        .set("findings", Json::Arr(rows));
+    doc
+}
+
+fn effective_severity(f: &Finding, strict: bool) -> Severity {
+    if strict && f.severity == Severity::Warning {
+        Severity::Error
+    } else {
+        f.severity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, sev: Severity, path: &str, line: u32) -> Finding {
+        Finding { rule, severity: sev, path: path.to_string(), line, msg: "m".to_string() }
+    }
+
+    #[test]
+    fn strict_escalates_warnings() {
+        let fs = vec![finding("S02", Severity::Warning, "a.rs", 3)];
+        assert_eq!(exit_code(&fs, false), 0);
+        assert_eq!(exit_code(&fs, true), 1);
+        assert_eq!(tally(&fs, true), (1, 0));
+        assert!(render_text(&fs, true).contains("error[S02]"));
+        assert!(render_text(&fs, false).contains("warning[S02]"));
+    }
+
+    #[test]
+    fn sorted_and_summarised() {
+        let mut fs = vec![
+            finding("D06", Severity::Error, "b.rs", 9),
+            finding("D01", Severity::Error, "a.rs", 2),
+        ];
+        sort_findings(&mut fs);
+        let text = render_text(&fs, false);
+        let a = text.find("a.rs:2").unwrap();
+        let b = text.find("b.rs:9").unwrap();
+        assert!(a < b);
+        assert!(text.ends_with("gyges lint: 2 error(s), 0 warning(s)\n"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let fs = vec![finding("D01", Severity::Error, "a.rs", 2)];
+        let doc = render_json(&fs, false);
+        assert_eq!(doc.get("schema").and_then(|j| j.as_str()), Some("gyges-lint-v1"));
+        assert_eq!(doc.get("errors").and_then(|j| j.as_u64()), Some(1));
+        let rows = doc.get("findings").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("rule").and_then(|j| j.as_str()), Some("D01"));
+    }
+}

@@ -1,0 +1,839 @@
+//! The determinism-contract rules (D01–D07) and the suppression engine.
+//!
+//! Every rule encodes an invariant the repo's byte-identity proofs
+//! (serial==parallel sweeps, shard-merge, streamed replay, kill/resume,
+//! faulted-run determinism, pipeline-vs-legacy lockstep) silently rely
+//! on, each grounded in a real past bug or a PERF.md contract:
+//!
+//! - **D01** no `HashMap`/`HashSet` in determinism-critical dirs —
+//!   iteration order leaks into output bytes; use `BTreeMap`/`BTreeSet`.
+//! - **D02** `Instant`/`SystemTime` only in the profiling/stats/serve
+//!   allowlist — a wall-clock read anywhere else breaks replayability.
+//! - **D03** the Cargo.toml `[[test]]` table and `rust/tests/*.rs` agree
+//!   in BOTH directions (tests live outside `./tests`, so Cargo
+//!   autodiscovers nothing: an unlisted file silently never compiles —
+//!   exactly how `faults.rs`/`queue_equivalence.rs` went dark for two
+//!   PRs). Dangling `[[bench]]`/`[[example]]` paths are checked too.
+//! - **D04** f64 values reaching the fingerprint functions
+//!   (`config_fingerprint`, `fingerprint_into`, `job_list_hash`) hash
+//!   their exact bit patterns via `.to_bits()` — formatting or implicit
+//!   widening would alias distinct configs.
+//! - **D05** process-global mutable statics only at registered sites —
+//!   an unregistered global silently bypasses snapshot/resume.
+//! - **D06** `.unwrap()`/`.expect()` banned in `sim/` + `coordinator/`
+//!   non-test code — error paths must surface through `SimError`.
+//! - **D07** snapshot write/read key parity in `snapshot/state.rs` —
+//!   a key written by `.set(...)` but never read back (or required on
+//!   restore but never written) is one-sided schema drift.
+//!
+//! Findings are suppressed inline with
+//! `// gyges-lint: allow(D0x[, D0y]) <reason>` — trailing on the
+//! offending line or standalone on the line directly above it. The
+//! reason is mandatory (S01) and unused suppressions are flagged (S02);
+//! both are warnings that `--strict` escalates to errors.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use super::lexer::{lex, Tok, Token};
+
+/// Directories where rule D01 (no hash collections) applies.
+pub const D01_DIRS: [&str; 5] = [
+    "rust/src/sim/",
+    "rust/src/coordinator/",
+    "rust/src/snapshot/",
+    "rust/src/experiments/",
+    "rust/src/workload/",
+];
+
+/// Collection types D01 rejects.
+pub const D01_TYPES: [&str; 2] = ["HashMap", "HashSet"];
+
+/// Files allowed to read wall clocks (D02): the opt-in profiling arm,
+/// the stats helpers that feed it, and the real-model serving path
+/// (which measures actual hardware, not simulated time).
+pub const D02_ALLOW: [&str; 3] = [
+    "rust/src/coordinator/cluster.rs",
+    "rust/src/util/stats.rs",
+    "rust/src/serve/mod.rs",
+];
+
+/// Function names whose bodies rule D04 audits.
+pub const D04_FNS: [&str; 3] = ["config_fingerprint", "fingerprint_into", "job_list_hash"];
+
+/// f64 config/workload knobs that may appear inside a fingerprint
+/// function only as `<knob>.to_bits()`.
+pub const D04_KNOBS: [&str; 16] = [
+    "scale_down_threshold",
+    "slo_interactive_deadline_s",
+    "slo_batch_deadline_s",
+    "min_dwell_s",
+    "backlog_retry_cooldown_s",
+    "retry_backoff_base_s",
+    "qps",
+    "segment_s",
+    "horizon_s",
+    "quiet_rate",
+    "burst_rate",
+    "quiet_mean_s",
+    "burst_mean_s",
+    "interactive_frac",
+    "reserve_cap",
+    "long_hold_s",
+];
+
+/// The registered process-global mutable statics (D05). Each entry is
+/// `(file, item name)`; the rationale for every registration lives in
+/// PERF.md's "Determinism contract" section.
+pub const D05_REGISTRY: [(&str, &str); 4] = [
+    ("rust/src/sim/event.rs", "DEFAULT_BACKEND"),
+    ("rust/src/sim/engine.rs", "COEFFS"),
+    ("rust/src/coordinator/scheduler.rs", "LEGACY_ROUTING"),
+    ("rust/src/util/logging.rs", "MAX_LEVEL"),
+];
+
+/// Directories where rule D06 (no unwrap/expect) applies.
+pub const D06_DIRS: [&str; 2] = ["rust/src/sim/", "rust/src/coordinator/"];
+
+/// The one file rule D07 (snapshot key parity) audits.
+pub const D07_FILE: &str = "rust/src/snapshot/state.rs";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One lint finding, attached to a repo-relative path and 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// A parsed `gyges-lint: allow(...)` comment.
+struct Suppression {
+    codes: Vec<String>,
+    /// Line whose findings this suppression covers.
+    covers: u32,
+    /// Line of the comment itself (for S02 reporting).
+    line: u32,
+    used: bool,
+}
+
+/// Parse the body of a suppression marker (text after the comment
+/// delimiter). Returns `(codes, has_reason)`, or None if malformed.
+fn parse_marker(text: &str) -> Option<(Vec<String>, bool)> {
+    let rest = text.trim().strip_prefix("gyges-lint:")?.trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let codes: Vec<String> = rest[..close]
+        .split(',')
+        .map(|c| c.trim().to_string())
+        .filter(|c| !c.is_empty())
+        .collect();
+    if codes.is_empty() {
+        return None;
+    }
+    let has_reason = !rest[close + 1..].trim().is_empty();
+    Some((codes, has_reason))
+}
+
+/// Shared suppression book-keeping for one file (Rust source or TOML).
+struct SuppressionSet {
+    rel: String,
+    sups: Vec<Suppression>,
+    hygiene: Vec<Finding>,
+}
+
+impl SuppressionSet {
+    fn new(rel: &str) -> Self {
+        SuppressionSet { rel: rel.to_string(), sups: Vec::new(), hygiene: Vec::new() }
+    }
+
+    /// Record one comment. `standalone` comments cover the next line;
+    /// trailing comments cover their own line.
+    fn add_comment(&mut self, line: u32, standalone: bool, text: &str) {
+        if !text.trim_start().starts_with("gyges-lint") {
+            return;
+        }
+        match parse_marker(text) {
+            Some((codes, has_reason)) => {
+                if !has_reason {
+                    self.hygiene.push(Finding {
+                        rule: "S01",
+                        severity: Severity::Warning,
+                        path: self.rel.clone(),
+                        line,
+                        msg: "suppression without a reason \
+                              (write `gyges-lint: allow(<rule>) <why>`)"
+                            .to_string(),
+                    });
+                }
+                let covers = if standalone { line + 1 } else { line };
+                self.sups.push(Suppression { codes, covers, line, used: false });
+            }
+            None => self.hygiene.push(Finding {
+                rule: "S03",
+                severity: Severity::Warning,
+                path: self.rel.clone(),
+                line,
+                msg: "malformed gyges-lint comment \
+                      (expected `gyges-lint: allow(D0x[, ...]) <reason>`)"
+                    .to_string(),
+            }),
+        }
+    }
+
+    /// True if a finding for `rule` on `line` is suppressed; marks the
+    /// matching suppression(s) used.
+    fn suppress(&mut self, line: u32, rule: &str) -> bool {
+        let mut hit = false;
+        for s in &mut self.sups {
+            if s.covers == line && s.codes.iter().any(|c| c == rule) {
+                s.used = true;
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    /// Filter raw findings through the suppressions, then append the
+    /// hygiene findings (S01/S03 from parsing, S02 for unused).
+    fn finish(mut self, raw: Vec<Finding>) -> Vec<Finding> {
+        let mut out = Vec::new();
+        for f in raw {
+            if !self.suppress(f.line, f.rule) {
+                out.push(f);
+            }
+        }
+        for s in &self.sups {
+            if !s.used {
+                out.push(Finding {
+                    rule: "S02",
+                    severity: Severity::Warning,
+                    path: self.rel.clone(),
+                    line: s.line,
+                    msg: format!("unused suppression for {}", s.codes.join(", ")),
+                });
+            }
+        }
+        out.extend(self.hygiene);
+        out
+    }
+}
+
+/// One analysed Rust source file: lexed tokens, `#[cfg(test)]` spans,
+/// and its suppression comments.
+pub struct SourceFile {
+    rel: String,
+    toks: Vec<Token>,
+    test_spans: Vec<(u32, u32)>,
+    sups: SuppressionSet,
+}
+
+impl SourceFile {
+    pub fn new(rel: &str, src: &str) -> Self {
+        let (toks, comments) = lex(src);
+        let mut sups = SuppressionSet::new(rel);
+        for c in &comments {
+            sups.add_comment(c.line, c.standalone, &c.text);
+        }
+        let test_spans = test_spans(&toks);
+        SourceFile { rel: rel.to_string(), toks, test_spans, sups }
+    }
+
+    /// True when the file carries any `allow(rule)` marker at all —
+    /// used for file-scoped D03 suppression on orphan test files.
+    pub fn allows_anywhere(&self, rule: &str) -> bool {
+        self.sups.sups.iter().any(|s| s.codes.iter().any(|c| c == rule))
+    }
+
+    /// Run every per-file rule and resolve suppressions.
+    pub fn check(self) -> Vec<Finding> {
+        let mut raw = Vec::new();
+        self.d01(&mut raw);
+        self.d02(&mut raw);
+        self.d04(&mut raw);
+        self.d05(&mut raw);
+        self.d06(&mut raw);
+        if self.rel == D07_FILE {
+            self.d07(&mut raw);
+        }
+        self.sups.finish(raw)
+    }
+
+    fn finding(&self, rule: &'static str, line: u32, msg: String) -> Finding {
+        Finding { rule, severity: Severity::Error, path: self.rel.clone(), line, msg }
+    }
+
+    fn in_tests(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    fn d01(&self, out: &mut Vec<Finding>) {
+        if !D01_DIRS.iter().any(|d| self.rel.starts_with(d)) {
+            return;
+        }
+        for t in &self.toks {
+            if let Tok::Ident(name) = &t.tok {
+                if D01_TYPES.contains(&name.as_str()) {
+                    out.push(self.finding(
+                        "D01",
+                        t.line,
+                        format!(
+                            "{name} in a determinism-critical dir (iteration order leaks \
+                             into output bytes); use BTreeMap/BTreeSet"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    fn d02(&self, out: &mut Vec<Finding>) {
+        if D02_ALLOW.contains(&self.rel.as_str()) {
+            return;
+        }
+        for t in &self.toks {
+            if let Tok::Ident(name) = &t.tok {
+                if name == "Instant" || name == "SystemTime" {
+                    out.push(self.finding(
+                        "D02",
+                        t.line,
+                        format!(
+                            "{name} outside the wall-clock allowlist; simulated runs must \
+                             be replayable (allowlist: {})",
+                            D02_ALLOW.join(", ")
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    fn d04(&self, out: &mut Vec<Finding>) {
+        let toks = &self.toks;
+        let mut i = 0;
+        while i + 1 < toks.len() {
+            let is_fn = matches!(&toks[i].tok, Tok::Ident(s) if s == "fn");
+            let audited =
+                matches!(&toks[i + 1].tok, Tok::Ident(s) if D04_FNS.contains(&s.as_str()));
+            if !(is_fn && audited) {
+                i += 1;
+                continue;
+            }
+            // Body = first `{` after the signature, brace-balanced.
+            let mut j = i + 2;
+            while j < toks.len() && !matches!(toks[j].tok, Tok::Punct('{')) {
+                j += 1;
+            }
+            let start = j;
+            let mut depth = 0usize;
+            while j < toks.len() {
+                match toks[j].tok {
+                    Tok::Punct('{') => depth += 1,
+                    Tok::Punct('}') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let end = j.min(toks.len());
+            self.d04_body(&toks[start..end], out);
+            i = end + 1;
+        }
+    }
+
+    fn d04_body(&self, body: &[Token], out: &mut Vec<Finding>) {
+        let to_bits_at = |from: usize| {
+            matches!(body.get(from), Some(t) if t.tok == Tok::Punct('.'))
+                && matches!(body.get(from + 1), Some(t)
+                    if matches!(&t.tok, Tok::Ident(s) if s == "to_bits"))
+        };
+        for (k, t) in body.iter().enumerate() {
+            match &t.tok {
+                Tok::Ident(s) if s == "as_secs_f64" => {
+                    let ok = matches!(body.get(k + 1), Some(t) if t.tok == Tok::Punct('('))
+                        && matches!(body.get(k + 2), Some(t) if t.tok == Tok::Punct(')'))
+                        && to_bits_at(k + 3);
+                    if !ok {
+                        out.push(self.finding(
+                            "D04",
+                            t.line,
+                            "as_secs_f64() reaches a fingerprint without .to_bits(); \
+                             hash exact bit patterns"
+                                .to_string(),
+                        ));
+                    }
+                }
+                Tok::Ident(s) if D04_KNOBS.contains(&s.as_str()) => {
+                    if !to_bits_at(k + 1) {
+                        out.push(self.finding(
+                            "D04",
+                            t.line,
+                            format!("f64 knob `{s}` reaches a fingerprint without .to_bits()"),
+                        ));
+                    }
+                }
+                Tok::Num { text, float: true } => {
+                    if !to_bits_at(k + 1) {
+                        out.push(self.finding(
+                            "D04",
+                            t.line,
+                            format!(
+                                "float literal {text} in a fingerprint fn; hash exact bit \
+                                 patterns via .to_bits()"
+                            ),
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn d05(&self, out: &mut Vec<Finding>) {
+        let toks = &self.toks;
+        for (i, t) in toks.iter().enumerate() {
+            if !matches!(&t.tok, Tok::Ident(s) if s == "static") {
+                continue;
+            }
+            // Item name: next ident, skipping `mut`. (`&'static` lexes
+            // as a Lifetime token, so it never reaches this point.)
+            let mut name = None;
+            let mut j = i + 1;
+            while let Some(n) = toks.get(j) {
+                match &n.tok {
+                    Tok::Ident(s) if s == "mut" => j += 1,
+                    Tok::Ident(s) => {
+                        name = Some(s.clone());
+                        break;
+                    }
+                    _ => break,
+                }
+            }
+            let Some(name) = name else { continue };
+            let registered =
+                D05_REGISTRY.iter().any(|&(p, n)| p == self.rel && n == name);
+            if !registered {
+                out.push(self.finding(
+                    "D05",
+                    t.line,
+                    format!(
+                        "unregistered process-global `static {name}` (globals bypass \
+                         snapshot/resume; register it in analysis::rules::D05_REGISTRY \
+                         and document it in PERF.md)"
+                    ),
+                ));
+            }
+        }
+    }
+
+    fn d06(&self, out: &mut Vec<Finding>) {
+        if !D06_DIRS.iter().any(|d| self.rel.starts_with(d)) {
+            return;
+        }
+        for i in 1..self.toks.len() {
+            let t = &self.toks[i];
+            let name = match &t.tok {
+                Tok::Ident(s) if s == "unwrap" || s == "expect" => s,
+                _ => continue,
+            };
+            if self.toks[i - 1].tok != Tok::Punct('.') || self.in_tests(t.line) {
+                continue;
+            }
+            out.push(self.finding(
+                "D06",
+                t.line,
+                format!(
+                    ".{name}() in non-test sim/coordinator code; surface the error \
+                     through SimError"
+                ),
+            ));
+        }
+    }
+
+    fn d07(&self, out: &mut Vec<Finding>) {
+        // Writes: first string literal after a `set(` call. Reads: first
+        // string-literal argument of any other call (`get`, `req_*`, and
+        // the restore helper closures like `num(...)`/`times(...)`).
+        let mut writes: BTreeMap<String, u32> = BTreeMap::new();
+        let mut reads: BTreeSet<String> = BTreeSet::new();
+        let mut required: Vec<(String, u32)> = Vec::new();
+        let toks = &self.toks;
+        for i in 0..toks.len() {
+            let name = match &toks[i].tok {
+                Tok::Ident(s) => s,
+                _ => continue,
+            };
+            if self.in_tests(toks[i].line) {
+                continue;
+            }
+            if !matches!(toks.get(i + 1), Some(t) if t.tok == Tok::Punct('(')) {
+                continue;
+            }
+            let key = match toks.get(i + 2) {
+                Some(t) => match &t.tok {
+                    Tok::Str(s) => s.clone(),
+                    _ => continue,
+                },
+                None => continue,
+            };
+            if name == "set" {
+                writes.entry(key).or_insert(toks[i].line);
+            } else {
+                if name.starts_with("req_") {
+                    required.push((key.clone(), toks[i].line));
+                }
+                reads.insert(key);
+            }
+        }
+        for (key, line) in &writes {
+            if !reads.contains(key) {
+                out.push(self.finding(
+                    "D07",
+                    *line,
+                    format!(
+                        "snapshot key {key:?} is written but never read on restore \
+                         (one-sided schema drift)"
+                    ),
+                ));
+            }
+        }
+        for (key, line) in required {
+            if !writes.contains_key(&key) {
+                out.push(self.finding(
+                    "D07",
+                    line,
+                    format!("restore requires snapshot key {key:?} that is never written"),
+                ));
+            }
+        }
+    }
+}
+
+/// `#[cfg(test)]` item spans as inclusive `(start, end)` line ranges.
+/// The span runs from the attribute to the matching close brace of the
+/// next braced item (or to a `;` for brace-less items).
+fn test_spans(toks: &[Token]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let is_attr = toks[i].tok == Tok::Punct('#')
+            && toks[i + 1].tok == Tok::Punct('[')
+            && matches!(&toks[i + 2].tok, Tok::Ident(s) if s == "cfg")
+            && toks[i + 3].tok == Tok::Punct('(')
+            && matches!(&toks[i + 4].tok, Tok::Ident(s) if s == "test")
+            && toks[i + 5].tok == Tok::Punct(')')
+            && toks[i + 6].tok == Tok::Punct(']');
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let start = toks[i].line;
+        let mut end = toks[i + 6].line;
+        let mut depth = 0usize;
+        let mut j = i + 7;
+        while j < toks.len() {
+            match toks[j].tok {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') if depth > 0 => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = toks[j].line;
+                        break;
+                    }
+                }
+                Tok::Punct(';') if depth == 0 => {
+                    end = toks[j].line;
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            end = toks.last().map(|t| t.line).unwrap_or(start);
+        }
+        spans.push((start, end));
+        i = j + 1;
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------
+// D03: Cargo.toml [[test]] table vs rust/tests/*.rs, both directions
+// ---------------------------------------------------------------------
+
+/// One `[[test]]`/`[[bench]]`/`[[example]]` entry from Cargo.toml.
+pub struct TargetEntry {
+    pub kind: String,
+    pub name: String,
+    pub path: String,
+    /// Line of the `[[kind]]` header (fallback finding anchor).
+    pub line: u32,
+    /// Line of the `path = ...` assignment (preferred finding anchor).
+    pub path_line: u32,
+}
+
+/// Parsed Cargo.toml: target entries plus its suppression comments.
+pub struct Manifest {
+    pub entries: Vec<TargetEntry>,
+    sups: SuppressionSet,
+}
+
+/// Minimal TOML scan: array-of-table headers and `name`/`path` string
+/// assignments, plus `# gyges-lint: allow(...)` comments (a `#` inside
+/// a quoted string does not start a comment).
+pub fn parse_manifest(rel: &str, src: &str) -> Manifest {
+    let mut entries: Vec<TargetEntry> = Vec::new();
+    let mut sups = SuppressionSet::new(rel);
+    let mut in_target = false;
+    for (idx, raw) in src.lines().enumerate() {
+        let line = idx as u32 + 1;
+        let (code, comment) = split_toml_comment(raw);
+        if let Some(text) = comment {
+            sups.add_comment(line, code.trim().is_empty(), text);
+        }
+        let code = code.trim();
+        if code.starts_with('[') {
+            in_target = false;
+            if let Some(h) = code.strip_prefix("[[").and_then(|h| h.strip_suffix("]]")) {
+                let kind = h.trim();
+                if matches!(kind, "test" | "bench" | "example") {
+                    in_target = true;
+                    entries.push(TargetEntry {
+                        kind: kind.to_string(),
+                        name: String::new(),
+                        path: String::new(),
+                        line,
+                        path_line: line,
+                    });
+                }
+            }
+            continue;
+        }
+        if !in_target {
+            continue;
+        }
+        if let Some((k, v)) = code.split_once('=') {
+            let v = v.trim().trim_matches('"').to_string();
+            if let Some(e) = entries.last_mut() {
+                match k.trim() {
+                    "name" => e.name = v,
+                    "path" => {
+                        e.path = v;
+                        e.path_line = line;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    Manifest { entries, sups }
+}
+
+/// Split one TOML line into (code, comment text after `#`).
+fn split_toml_comment(line: &str) -> (&str, Option<&str>) {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return (&line[..i], Some(&line[i + 1..])),
+            _ => {}
+        }
+    }
+    (line, None)
+}
+
+/// Rule D03 over a parsed manifest. `test_files` are the repo-relative
+/// `rust/tests/*.rs` paths actually on disk (sorted); `path_exists`
+/// answers for any manifest path; `file_allows_d03` reports whether an
+/// orphan test file carries its own `allow(D03)` marker.
+pub fn d03_check(
+    manifest: Manifest,
+    test_files: &[String],
+    path_exists: &dyn Fn(&str) -> bool,
+    file_allows_d03: &dyn Fn(&str) -> bool,
+) -> Vec<Finding> {
+    let mut raw = Vec::new();
+    let rel = manifest.sups.rel.clone();
+    let listed: BTreeSet<&str> =
+        manifest.entries.iter().filter(|e| e.kind == "test").map(|e| e.path.as_str()).collect();
+    let mut orphan_findings = Vec::new();
+    for f in test_files {
+        if !listed.contains(f.as_str()) && !file_allows_d03(f) {
+            orphan_findings.push(Finding {
+                rule: "D03",
+                severity: Severity::Error,
+                path: f.clone(),
+                line: 1,
+                msg: format!(
+                    "test file not registered in Cargo.toml's [[test]] table — it will \
+                     silently never compile (add `[[test]] name = ... path = {f:?}`)"
+                ),
+            });
+        }
+    }
+    for e in &manifest.entries {
+        if e.path.is_empty() {
+            raw.push(Finding {
+                rule: "D03",
+                severity: Severity::Error,
+                path: rel.clone(),
+                line: e.line,
+                msg: format!(
+                    "[[{}]] `{}` has no explicit path (targets live outside the Cargo \
+                     default layout, so the path is mandatory)",
+                    e.kind, e.name
+                ),
+            });
+        } else if !path_exists(&e.path) {
+            raw.push(Finding {
+                rule: "D03",
+                severity: Severity::Error,
+                path: rel.clone(),
+                line: e.path_line,
+                msg: format!("[[{}]] `{}` points at missing path {:?}", e.kind, e.name, e.path),
+            });
+        }
+    }
+    let mut out = manifest.sups.finish(raw);
+    out.extend(orphan_findings);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(rel: &str, src: &str) -> Vec<Finding> {
+        SourceFile::new(rel, src).check()
+    }
+
+    fn rules(fs: &[Finding]) -> Vec<&str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn d01_fires_only_in_critical_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules(&check("rust/src/sim/engine.rs", src)), vec!["D01"]);
+        assert!(check("rust/src/util/stats.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d02_allowlist_and_comments() {
+        let src = "let t = std::time::Instant::now();\n";
+        assert_eq!(rules(&check("rust/src/metrics/mod.rs", src)), vec!["D02"]);
+        assert!(check("rust/src/util/stats.rs", src).is_empty());
+        assert!(check("rust/src/metrics/mod.rs", "// Instant::now in prose\n").is_empty());
+    }
+
+    #[test]
+    fn d04_flags_bare_knobs_and_floats() {
+        let src = "fn fingerprint_into(b: &mut Vec<u8>) {\n\
+                   let x = self.qps as u64;\n\
+                   let y = 0.5;\n\
+                   let ok = self.horizon_s.to_bits();\n\
+                   }\n";
+        let f = check("rust/src/experiments/x.rs", src);
+        assert_eq!(rules(&f), vec!["D04", "D04"]);
+        let src_ok = "fn job_list_hash(j: &J) -> u64 {\n\
+                      j.arrival.as_secs_f64().to_bits() ^ j.qps.to_bits() ^ 0xFFu64\n\
+                      }\n";
+        assert!(check("rust/src/experiments/x.rs", src_ok).is_empty());
+    }
+
+    #[test]
+    fn d05_registry_and_lifetimes() {
+        let src = "static NEW_GLOBAL: AtomicU8 = AtomicU8::new(0);\n";
+        assert_eq!(rules(&check("rust/src/sim/engine.rs", src)), vec!["D05"]);
+        let reg = "static COEFFS: OnceLock<(f64, f64)> = OnceLock::new();\n";
+        assert!(check("rust/src/sim/engine.rs", reg).is_empty());
+        assert!(check("rust/src/sim/engine.rs", "fn f() -> &'static str { \"x\" }\n").is_empty());
+    }
+
+    #[test]
+    fn d06_skips_tests_and_unwrap_or() {
+        let src = "fn f() { x.unwrap(); y.unwrap_or(0); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn g() { z.expect(\"fine in tests\"); }\n\
+                   }\n";
+        let f = check("rust/src/coordinator/x.rs", src);
+        assert_eq!(rules(&f), vec!["D06"]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn suppressions_trailing_standalone_unused() {
+        let trailing = "fn f() { x.unwrap(); } // gyges-lint: allow(D06) invariant: nonempty\n";
+        assert!(check("rust/src/sim/x.rs", trailing).is_empty());
+        let standalone = "// gyges-lint: allow(D06) invariant: nonempty\nfn f() { x.unwrap(); }\n";
+        assert!(check("rust/src/sim/x.rs", standalone).is_empty());
+        let unused = "// gyges-lint: allow(D06) nothing here\nfn f() {}\n";
+        assert_eq!(rules(&check("rust/src/sim/x.rs", unused)), vec!["S02"]);
+        let no_reason = "fn f() { x.unwrap(); } // gyges-lint: allow(D06)\n";
+        assert_eq!(rules(&check("rust/src/sim/x.rs", no_reason)), vec!["S01"]);
+    }
+
+    #[test]
+    fn d07_key_parity_both_directions() {
+        let src = "fn enc(o: &mut Json) { o.set(\"seen\", 1); o.set(\"lost\", 2); }\n\
+                   fn dec(o: &Json) -> R { o.req_u64(\"seen\", \"ctx\")?; \
+                   o.req_u64(\"ghost\", \"ctx\") }\n";
+        let f = check(D07_FILE, src);
+        assert_eq!(rules(&f), vec!["D07", "D07"]);
+        assert!(f[0].msg.contains("lost") || f[1].msg.contains("lost"));
+        assert!(f[0].msg.contains("ghost") || f[1].msg.contains("ghost"));
+    }
+
+    #[test]
+    fn d03_both_directions_and_toml_suppression() {
+        let toml = "[package]\nname = \"x\"\n\n\
+                    [[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n\n\
+                    [[test]]\nname = \"gone\"\npath = \"rust/tests/gone.rs\"\n";
+        let m = parse_manifest("Cargo.toml", toml);
+        let files = vec!["rust/tests/a.rs".to_string(), "rust/tests/orphan.rs".to_string()];
+        let exists = |p: &str| p == "rust/tests/a.rs";
+        let allows = |_: &str| false;
+        let f = d03_check(m, &files, &exists, &allows);
+        assert_eq!(rules(&f), vec!["D03", "D03"]);
+        assert!(f.iter().any(|x| x.path == "Cargo.toml" && x.msg.contains("gone")));
+        assert!(f.iter().any(|x| x.path == "rust/tests/orphan.rs"));
+        // A TOML-side suppression covers the dangling entry.
+        let toml2 = "[[test]]\nname = \"gone\"\n\
+                     # gyges-lint: allow(D03) staged for next PR\n\
+                     path = \"rust/tests/gone.rs\"\n";
+        let m2 = parse_manifest("Cargo.toml", toml2);
+        let f2 = d03_check(m2, &[], &|_| false, &|_| false);
+        assert!(f2.is_empty(), "{f2:?}");
+    }
+
+    #[test]
+    fn cfg_test_span_covers_nested_braces() {
+        let src = "#[cfg(test)]\nmod tests {\n fn a() { if x { y.unwrap(); } }\n}\n\
+                   fn out() { z.unwrap(); }\n";
+        let f = check("rust/src/sim/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 5);
+    }
+}

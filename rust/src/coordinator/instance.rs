@@ -285,6 +285,7 @@ impl Instance {
         let mut out = Vec::with_capacity(ids.len());
         for &id in ids {
             if let Some(pos) = self.prefill_queue.iter().position(|r| r.id == id) {
+                // gyges-lint: allow(D06) position() just located this index in the same queue
                 let req = self.prefill_queue.remove(pos).expect("position just found");
                 self.committed_tokens -= req.final_len();
                 out.push(req);

@@ -18,6 +18,16 @@
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
+// The crate is pure safe Rust and must stay that way: every
+// equivalence proof (serial==parallel, shard-merge, kill/resume, ...)
+// assumes no hidden aliasing or uninitialised bytes. The deny set is
+// curated, not `warnings`: CI's clippy job already gates on warnings,
+// while these are the contract-level lints that must hold even in
+// local feature-gated builds.
+#![forbid(unsafe_code)]
+#![deny(non_ascii_idents, unused_extern_crates, unused_must_use)]
+
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

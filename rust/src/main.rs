@@ -33,6 +33,9 @@
 //!   gyges branch      --snapshot FILE [--holds CSV] [--policies CSV]
 //!                     [--no-static] [--out FILE] [--threads N]
 //!   gyges bench-gate  [--baseline FILE] [--fresh FILE] [--max-regress F]
+//!   gyges lint        [--strict] [--json] [--root DIR]   (determinism-
+//!                     contract linter, rules D01-D07; exit 1 on findings;
+//!                     --strict escalates suppression-hygiene warnings)
 //!
 //! Global options (every subcommand):
 //!   --queue <calendar|heap>   event-queue backend (default calendar;
@@ -41,6 +44,8 @@
 //!                             (pre-pipeline) reference implementations
 //!                             (needs a `--features legacy-policies`
 //!                             build; the CI byte-comparison uses it)
+
+#![forbid(unsafe_code)]
 
 use gyges::config::{ClusterConfig, ModelConfig, PolicyId};
 use gyges::coordinator::{run_system, SystemKind};
@@ -91,10 +96,11 @@ fn main() {
         Some("resume") => gyges::snapshot::runner::resume_cli(&args),
         Some("branch") => gyges::experiments::branch::branch_cli(&args),
         Some("bench-gate") => cmd_bench_gate(&args),
+        Some("lint") => gyges::analysis::lint_cli(&args),
         _ => {
             eprintln!(
                 "usage: gyges <info|serve|serve-real|repro|chaos|slo|sweep-shard|sweep-merge|\
-                 trace-gen|sweep-launch|snapshot|resume|branch|bench-gate> [options]  \
+                 trace-gen|sweep-launch|snapshot|resume|branch|bench-gate|lint> [options]  \
                  (see rust/src/main.rs)"
             );
             2

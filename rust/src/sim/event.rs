@@ -234,6 +234,7 @@ impl<E> Calendar<E> {
                 }
             }
         }
+        // gyges-lint: allow(D06) find_min is only reached with len > 0, so some bucket is nonempty
         let hit = best.expect("len > 0 but no bucket has entries");
         self.floor_day.set(self.day(hit.0));
         self.min_hint.set(Some(hit));
@@ -242,6 +243,7 @@ impl<E> Calendar<E> {
 
     fn pop_min(&mut self) -> Option<Entry<E>> {
         let (time, seq, b) = self.find_min()?;
+        // gyges-lint: allow(D06) find_min just verified this bucket holds the global minimum
         let e = self.buckets[b as usize].pop().expect("hinted bucket is empty");
         debug_assert!(e.time == time && e.seq == seq, "min hint diverged from bucket top");
         self.len -= 1;

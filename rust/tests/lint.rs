@@ -1,0 +1,152 @@
+//! `gyges lint` acceptance tests: the per-rule fixture corpus under
+//! `rust/tests/lint_fixtures/` (violating / suppressed-with-reason /
+//! clean triplets), the D03 both-directions proof, the suppression
+//! hygiene escalation, and the self-check that the repo's own tree
+//! lints clean under `--strict`.
+//!
+//! Fixture layout: every case directory is a miniature repo root
+//! (`rust/src/...`, plus `Cargo.toml` + `rust/tests/` for D03). The
+//! fixture `.rs` files are deliberately NOT cargo targets — with the
+//! explicit `[[test]]` table nothing under `lint_fixtures/` ever
+//! compiles, so violating fixtures can contain arbitrary bad code.
+
+use std::path::PathBuf;
+
+use gyges::analysis::report::exit_code;
+use gyges::analysis::{run_lint, Finding, Severity};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn lint_fixture(name: &str) -> Vec<Finding> {
+    let root = repo_root().join("rust").join("tests").join("lint_fixtures").join(name);
+    assert!(root.is_dir(), "missing fixture root {}", root.display());
+    run_lint(&root).expect("fixture tree lints")
+}
+
+fn rule_list(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+/// Violating fixture: at least one finding, every finding carries the
+/// expected rule at Error severity, and the exit code is nonzero even
+/// without --strict.
+fn assert_violating(name: &str, rule: &str) -> Vec<Finding> {
+    let findings = lint_fixture(name);
+    assert!(!findings.is_empty(), "{name}: expected findings");
+    for f in &findings {
+        assert_eq!(f.rule, rule, "{name}: unexpected finding {f:?}");
+        assert_eq!(f.severity, Severity::Error, "{name}: {f:?}");
+    }
+    assert_eq!(exit_code(&findings, false), 1, "{name}");
+    assert_eq!(exit_code(&findings, true), 1, "{name}");
+    findings
+}
+
+/// Suppressed/clean fixture: zero findings of any kind (a reasoned,
+/// used suppression leaves no residue, so strict mode stays green).
+fn assert_silent(name: &str) {
+    let findings = lint_fixture(name);
+    assert!(findings.is_empty(), "{name}: expected no findings, got {findings:?}");
+    assert_eq!(exit_code(&findings, true), 0, "{name}");
+}
+
+#[test]
+fn d01_hash_collections() {
+    let f = assert_violating("d01_violating", "D01");
+    assert!(f.iter().any(|x| x.path == "rust/src/sim/collections.rs"));
+    assert_silent("d01_suppressed");
+    assert_silent("d01_clean");
+}
+
+#[test]
+fn d02_wall_clock() {
+    let f = assert_violating("d02_violating", "D02");
+    assert!(f.iter().all(|x| x.path == "rust/src/metrics/timing.rs"));
+    assert_silent("d02_suppressed");
+    assert_silent("d02_clean"); // same Instant::now, allowlisted file
+}
+
+#[test]
+fn d03_test_table_both_directions() {
+    let f = assert_violating("d03_violating", "D03");
+    // Direction 1: unlisted test file => error anchored at the file.
+    assert!(
+        f.iter().any(|x| x.path == "rust/tests/orphan.rs"),
+        "missing orphan-file direction: {f:?}"
+    );
+    // Direction 2: dangling [[test]] path => error anchored in Cargo.toml.
+    assert!(
+        f.iter().any(|x| x.path == "Cargo.toml" && x.msg.contains("gone")),
+        "missing dangling-path direction: {f:?}"
+    );
+    assert_silent("d03_suppressed");
+    assert_silent("d03_clean");
+}
+
+#[test]
+fn d04_fingerprint_to_bits() {
+    let f = assert_violating("d04_violating", "D04");
+    assert_eq!(f.len(), 2, "qps cast + float literal: {f:?}");
+    assert_silent("d04_suppressed");
+    assert_silent("d04_clean");
+}
+
+#[test]
+fn d05_global_registry() {
+    let f = assert_violating("d05_violating", "D05");
+    assert!(f[0].msg.contains("SNEAKY_MODE"));
+    assert_silent("d05_suppressed");
+    assert_silent("d05_clean"); // registered site + &'static lifetimes
+}
+
+#[test]
+fn d06_unwrap_expect() {
+    let f = assert_violating("d06_violating", "D06");
+    assert_eq!(f.len(), 2, "unwrap + expect, test module excluded: {f:?}");
+    assert_silent("d06_suppressed");
+    assert_silent("d06_clean");
+}
+
+#[test]
+fn d07_snapshot_key_parity() {
+    let f = assert_violating("d07_violating", "D07");
+    assert!(f.iter().any(|x| x.msg.contains("lost")), "write-without-read: {f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("ghost")), "read-without-write: {f:?}");
+    assert_silent("d07_suppressed");
+    assert_silent("d07_clean");
+}
+
+#[test]
+fn hygiene_warnings_escalate_under_strict() {
+    let noreason = lint_fixture("hygiene_noreason");
+    assert_eq!(rule_list(&noreason), vec!["S01"]);
+    assert_eq!(noreason[0].severity, Severity::Warning);
+    assert_eq!(exit_code(&noreason, false), 0);
+    assert_eq!(exit_code(&noreason, true), 1);
+
+    let unused = lint_fixture("hygiene_unused");
+    assert_eq!(rule_list(&unused), vec!["S02"]);
+    assert_eq!(exit_code(&unused, false), 0);
+    assert_eq!(exit_code(&unused, true), 1);
+}
+
+/// The repo's own tree must lint completely clean — zero errors AND
+/// zero warnings — so the blocking CI job can run `--strict` from day
+/// one. Every pre-existing violation is either fixed or carries a
+/// reasoned inline suppression (inventory: PERF.md "Determinism
+/// contract").
+#[test]
+fn self_check_repo_tree_is_clean_under_strict() {
+    let root = repo_root();
+    assert!(root.join("Cargo.toml").is_file(), "test must run from the crate root");
+    assert!(root.join("rust").join("src").is_dir());
+    let findings = run_lint(&root).expect("repo tree lints");
+    assert!(
+        findings.is_empty(),
+        "repo tree has lint findings:\n{}",
+        gyges::analysis::report::render_text(&findings, true)
+    );
+    assert_eq!(exit_code(&findings, true), 0);
+}

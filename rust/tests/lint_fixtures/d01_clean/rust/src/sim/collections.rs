@@ -1,0 +1,11 @@
+//! D01 fixture: ordered collections are always fine.
+
+use std::collections::BTreeMap;
+
+pub fn tally(ids: &[u64]) -> BTreeMap<u64, u64> {
+    let mut m = BTreeMap::new();
+    for &id in ids {
+        *m.entry(id).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,15 @@
+//! D01 fixture: the same hash collection, suppressed with a reason.
+
+// gyges-lint: allow(D01) scratch map is drained into a sorted Vec before any output
+use std::collections::HashMap;
+
+pub fn tally(ids: &[u64]) -> Vec<(u64, u64)> {
+    // gyges-lint: allow(D01) scratch map is drained into a sorted Vec before any output
+    let mut m: HashMap<u64, u64> = HashMap::new();
+    for &id in ids {
+        *m.entry(id).or_insert(0) += 1;
+    }
+    let mut out: Vec<(u64, u64)> = m.into_iter().collect();
+    out.sort_unstable();
+    out
+}

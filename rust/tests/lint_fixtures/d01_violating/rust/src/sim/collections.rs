@@ -1,0 +1,11 @@
+//! D01 fixture: a hash collection in a determinism-critical dir.
+
+use std::collections::HashMap;
+
+pub fn tally(ids: &[u64]) -> HashMap<u64, u64> {
+    let mut m = HashMap::new();
+    for &id in ids {
+        *m.entry(id).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,10 @@
+//! D02 fixture: `util/stats.rs` is on the wall-clock allowlist, so the
+//! same read is clean here.
+
+use std::time::Instant;
+
+pub fn measure<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,10 @@
+//! D02 fixture: the same wall-clock read, suppressed with a reason.
+
+// gyges-lint: allow(D02) opt-in profiling arm; never feeds simulated time or output bytes
+use std::time::Instant;
+
+pub fn measure<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now(); // gyges-lint: allow(D02) profiling only, results never serialized
+    f();
+    t0.elapsed().as_secs_f64()
+}

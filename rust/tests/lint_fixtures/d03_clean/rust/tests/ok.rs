@@ -1,0 +1,6 @@
+//! Registered test file: the table and the directory agree.
+
+#[test]
+fn registered() {
+    assert_eq!(1 + 1, 2);
+}

@@ -1,0 +1,7 @@
+//! An unlisted test file can opt out with a file-scoped marker.
+// gyges-lint: allow(D03) exercised via include! from a registered harness, not a cargo target
+
+#[test]
+fn runs_through_the_including_harness() {
+    assert_eq!(1 + 1, 2);
+}

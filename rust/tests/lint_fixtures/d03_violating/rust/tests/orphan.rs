@@ -1,0 +1,7 @@
+//! Direction 1: a test file with no [[test]] entry — under the
+//! explicit-table layout Cargo would silently never compile this.
+
+#[test]
+fn never_runs() {
+    assert_eq!(1 + 1, 2);
+}

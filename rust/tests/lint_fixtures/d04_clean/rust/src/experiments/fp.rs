@@ -1,0 +1,17 @@
+//! D04 fixture: every f64 hashes its exact bit pattern.
+
+use std::time::Duration;
+
+pub struct Spec {
+    pub qps: f64,
+    pub seed: u64,
+    pub arrival: Duration,
+}
+
+impl Spec {
+    pub fn fingerprint_into(&self, bytes: &mut Vec<u8>) {
+        for v in [self.seed, self.qps.to_bits(), self.arrival.as_secs_f64().to_bits()] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}

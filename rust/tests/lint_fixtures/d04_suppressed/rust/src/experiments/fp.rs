@@ -1,0 +1,17 @@
+//! D04 fixture: the same sites, suppressed with reasons.
+
+pub struct Spec {
+    pub qps: f64,
+    pub seed: u64,
+}
+
+impl Spec {
+    pub fn fingerprint_into(&self, bytes: &mut Vec<u8>) {
+        bytes.extend_from_slice(&self.seed.to_le_bytes());
+        // gyges-lint: allow(D04) legacy v1 hash truncated qps; kept for manifest compat
+        bytes.extend_from_slice(&(self.qps as u64).to_le_bytes());
+        // gyges-lint: allow(D04) constant pad byte, not a config knob
+        let pad = 0.25;
+        bytes.extend_from_slice(&(pad as u64).to_le_bytes());
+    }
+}

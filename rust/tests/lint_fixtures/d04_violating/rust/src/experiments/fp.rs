@@ -1,0 +1,17 @@
+//! D04 fixture: f64s reaching a fingerprint without `.to_bits()`.
+
+pub struct Spec {
+    pub qps: f64,
+    pub seed: u64,
+}
+
+impl Spec {
+    pub fn fingerprint_into(&self, bytes: &mut Vec<u8>) {
+        bytes.extend_from_slice(&self.seed.to_le_bytes());
+        // Truncating cast: 1.5 and 1.9 qps alias to the same bytes.
+        bytes.extend_from_slice(&(self.qps as u64).to_le_bytes());
+        // Float literal mixed straight into the stream.
+        let pad = 0.25;
+        bytes.extend_from_slice(&(pad as u64).to_le_bytes());
+    }
+}

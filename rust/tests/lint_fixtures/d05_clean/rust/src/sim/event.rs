@@ -1,0 +1,10 @@
+//! D05 fixture: `(rust/src/sim/event.rs, DEFAULT_BACKEND)` is a
+//! registered site, and `&'static` lifetimes are never statics.
+
+use std::sync::atomic::AtomicU8;
+
+static DEFAULT_BACKEND: AtomicU8 = AtomicU8::new(0);
+
+pub fn backend_name() -> &'static str {
+    "calendar"
+}

@@ -1,0 +1,6 @@
+//! D05 fixture: the same global, suppressed with a reason.
+
+use std::sync::atomic::AtomicU8;
+
+// gyges-lint: allow(D05) debug-only knob, set once before any sim starts; never snapshotted
+pub static SNEAKY_MODE: AtomicU8 = AtomicU8::new(0);

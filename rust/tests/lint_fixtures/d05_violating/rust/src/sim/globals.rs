@@ -1,0 +1,5 @@
+//! D05 fixture: an unregistered process-global mutable static.
+
+use std::sync::atomic::AtomicU8;
+
+pub static SNEAKY_MODE: AtomicU8 = AtomicU8::new(0);

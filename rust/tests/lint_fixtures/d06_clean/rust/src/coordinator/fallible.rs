@@ -1,0 +1,9 @@
+//! D06 fixture: errors surface through a Result instead of panicking.
+
+pub fn first_live(ids: &[usize]) -> Result<usize, String> {
+    ids.first().copied().ok_or_else(|| "no live instances".to_string())
+}
+
+pub fn or_default(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}

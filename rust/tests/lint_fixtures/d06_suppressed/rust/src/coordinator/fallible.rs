@@ -1,0 +1,8 @@
+//! D06 fixture: the same calls, suppressed with reasons.
+
+pub fn first_live(ids: &[usize]) -> usize {
+    let head = ids.first().unwrap(); // gyges-lint: allow(D06) caller guarantees non-empty
+    let checked: Option<usize> = Some(*head);
+    // gyges-lint: allow(D06) constructed Some on the previous line
+    checked.expect("just wrapped")
+}

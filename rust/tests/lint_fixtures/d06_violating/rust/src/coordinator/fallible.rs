@@ -1,0 +1,16 @@
+//! D06 fixture: unwrap/expect in non-test coordinator code.
+
+pub fn first_live(ids: &[usize]) -> usize {
+    let head = ids.first().unwrap();
+    let checked: Option<usize> = Some(*head);
+    checked.expect("just wrapped")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

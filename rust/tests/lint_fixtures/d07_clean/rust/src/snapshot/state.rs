@@ -1,0 +1,16 @@
+//! D07 fixture: write/read key parity holds.
+
+use crate::util::Json;
+
+pub fn encode(seq: u64, done: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("seq", seq);
+    o.set("done", done);
+    o
+}
+
+pub fn decode(o: &Json) -> Result<(u64, bool), String> {
+    let seq = o.req_u64("seq", "fixture")?;
+    let done = o.get("done").and_then(|j| j.as_bool()).unwrap_or(false);
+    Ok((seq, done))
+}

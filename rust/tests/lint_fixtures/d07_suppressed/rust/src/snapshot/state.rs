@@ -1,0 +1,17 @@
+//! D07 fixture: the same drift, suppressed with reasons.
+
+use crate::util::Json;
+
+pub fn encode(seq: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("seq", seq);
+    // gyges-lint: allow(D07) forward-compat hint consumed by external tooling only
+    o.set("lost", 1u64);
+    o
+}
+
+pub fn decode(o: &Json) -> Result<u64, String> {
+    // gyges-lint: allow(D07) written by the v1 encoder this decoder still accepts
+    o.req_u64("ghost", "fixture")?;
+    o.req_u64("seq", "fixture")
+}

@@ -1,0 +1,17 @@
+//! D07 fixture: one-sided snapshot schema drift in both directions.
+
+use crate::util::Json;
+
+pub fn encode(seq: u64) -> Json {
+    let mut o = Json::obj();
+    o.set("seq", seq);
+    // Written but never read back: silently dropped on restore.
+    o.set("lost", 1u64);
+    o
+}
+
+pub fn decode(o: &Json) -> Result<u64, String> {
+    // Required but never written: every restore of a fresh snapshot fails.
+    o.req_u64("ghost", "fixture")?;
+    o.req_u64("seq", "fixture")
+}

@@ -1,0 +1,6 @@
+//! Hygiene fixture: a suppression without a reason still suppresses,
+//! but earns S01 (an error under --strict).
+
+pub fn head(v: &[u64]) -> u64 {
+    *v.first().unwrap() // gyges-lint: allow(D06)
+}

@@ -1,0 +1,7 @@
+//! Hygiene fixture: a suppression that matches nothing earns S02
+//! (an error under --strict) — stale allows must not linger.
+
+// gyges-lint: allow(D06) this line no longer unwraps anything
+pub fn head(v: &[u64]) -> Option<u64> {
+    v.first().copied()
+}
