@@ -68,6 +68,7 @@ fn routing_trace(requests: usize) -> Trace {
             input_len: 1000,
             output_len: 4,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     t.sort();

@@ -48,6 +48,7 @@ fn main() {
         tp1: Some(&index),
         load: Some(&load),
         blocked_hosts: None,
+        cache: None,
     };
     let r = Bench::new("gyges.route(short, 64 instances)")
         .iters(2000)

@@ -38,12 +38,13 @@ use std::fmt;
 use super::lexer::{lex, Tok, Token};
 
 /// Directories where rule D01 (no hash collections) applies.
-pub const D01_DIRS: [&str; 5] = [
+pub const D01_DIRS: [&str; 6] = [
     "rust/src/sim/",
     "rust/src/coordinator/",
     "rust/src/snapshot/",
     "rust/src/experiments/",
     "rust/src/workload/",
+    "rust/src/cache/",
 ];
 
 /// Collection types D01 rejects.

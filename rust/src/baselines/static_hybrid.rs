@@ -94,6 +94,7 @@ mod tests {
                 input_len: 200,
                 output_len: 300,
                 class: crate::workload::SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         trace.sort();

@@ -1,0 +1,670 @@
+//! Deterministic per-instance prefix-cache model (approximate radix tree
+//! + LRU), the simulator-side analogue of SGLang's cache-aware router
+//! state (SNIPPETS.md Snippet 1) and of Infinite-LLM's view of KV
+//! capacity as the contended resource a prefix cache is evicted against.
+//!
+//! The model is intentionally approximate: requests carry an ordered
+//! path of seeded *prefix-block ids* (each block standing for
+//! `block_tokens` prompt tokens, see `workload::PrefixMix`), and each
+//! instance owns a radix tree over those block ids. On assignment the
+//! request's path is matched against the tree (matched blocks = cache
+//! hit, shortening the modeled prefill) and the unmatched tail is
+//! inserted; the tree is leaf-LRU-evicted against the instance's KV
+//! capacity expressed in blocks. Transformations, host crashes, and
+//! transform aborts invalidate the affected instances' trees — the
+//! locality cost of a Gyges transformation that no throughput counter
+//! captures on its own.
+//!
+//! Determinism contract: every structure is ordered (slab `Vec` +
+//! `BTreeMap` edges + `BTreeSet` LRU), eviction order is the total order
+//! `(last_access_ns, touch_seq, slot)`, and all state round-trips
+//! through snapshots byte-exactly (slot indices and the free-list order
+//! are preserved because they participate in eviction tie-breaks).
+//! When the cache is disarmed (`ClusterSim` holds no `ClusterCache`)
+//! nothing here executes, so every pre-existing figure stays
+//! byte-identical.
+
+use crate::sim::clock::SimTime;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Prompt tokens represented by one prefix block. 128 tokens mirrors
+/// common paged-KV block sizing and keeps fig-cache trees small enough
+/// to walk per-request without showing up in profiles.
+pub const DEFAULT_BLOCK_TOKENS: u64 = 128;
+
+/// Sentinel parent for depth-0 nodes (the implicit root is not stored).
+const ROOT: u32 = u32::MAX;
+
+/// One radix-tree node: a single prefix block cached on the instance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Node {
+    parent: u32,
+    block: u64,
+    /// Live child count; 0 ⇒ the node is a leaf and sits in the LRU set.
+    children: u32,
+    last_access: u64,
+    /// Monotone per-tree touch counter breaking same-timestamp LRU ties.
+    seq: u64,
+    live: bool,
+}
+
+/// What one `match_and_insert` call did, in blocks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheOutcome {
+    pub matched: u64,
+    pub inserted: u64,
+    pub evicted: u64,
+}
+
+/// Approximate radix tree over prefix-block ids for one instance.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefixTree {
+    /// Node slab; slot indices are stable across eviction (free list)
+    /// and across snapshot/resume (they break LRU ties).
+    nodes: Vec<Node>,
+    /// Free slots, popped LIFO on insert.
+    free: Vec<u32>,
+    /// `(parent_slot, block_id) -> child_slot` for live nodes.
+    edges: BTreeMap<(u32, u64), u32>,
+    /// Live leaves ordered `(last_access, seq, slot)` — the LRU order.
+    lru: BTreeSet<(u64, u64, u32)>,
+    /// Live node count (= cached blocks).
+    size: u64,
+    seq: u64,
+}
+
+impl PrefixTree {
+    pub fn new() -> PrefixTree {
+        PrefixTree::default()
+    }
+
+    /// Cached blocks currently live.
+    pub fn len(&self) -> u64 {
+        self.size
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    /// Longest cached prefix of `path`, in blocks. Read-only: no LRU
+    /// touch — routing probes every candidate instance and must not
+    /// perturb eviction order for instances it does not pick.
+    pub fn match_len(&self, path: &[u64]) -> u64 {
+        let mut parent = ROOT;
+        let mut matched = 0u64;
+        for &block in path {
+            match self.edges.get(&(parent, block)) {
+                Some(&child) => {
+                    parent = child;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        matched
+    }
+
+    /// Match `path` against the tree (touching matched nodes), insert
+    /// the unmatched tail, then LRU-evict leaves until at most
+    /// `cap_blocks` blocks remain.
+    pub fn match_and_insert(&mut self, path: &[u64], now: SimTime, cap_blocks: u64) -> CacheOutcome {
+        let mut out = CacheOutcome::default();
+        let mut parent = ROOT;
+        let mut i = 0usize;
+        while i < path.len() {
+            match self.edges.get(&(parent, path[i])).copied() {
+                Some(child) => {
+                    self.touch(child, now.0);
+                    parent = child;
+                    out.matched += 1;
+                    i += 1;
+                }
+                None => break,
+            }
+        }
+        while i < path.len() {
+            parent = self.alloc(parent, path[i], now.0);
+            out.inserted += 1;
+            i += 1;
+        }
+        out.evicted = self.evict_to(cap_blocks);
+        out
+    }
+
+    /// Drop every cached block (transformation / crash / abort).
+    /// Returns the number of blocks invalidated.
+    pub fn clear(&mut self) -> u64 {
+        let dropped = self.size;
+        self.nodes.clear();
+        self.free.clear();
+        self.edges.clear();
+        self.lru.clear();
+        self.size = 0;
+        // `seq` deliberately survives: slot indices restart but the
+        // touch order stays globally monotone within the tree.
+        dropped
+    }
+
+    /// Refresh a node's LRU stamp, maintaining the leaf set.
+    fn touch(&mut self, idx: u32, now_ns: u64) {
+        self.seq += 1;
+        let seq = self.seq;
+        let n = &mut self.nodes[idx as usize];
+        if n.children == 0 {
+            self.lru.remove(&(n.last_access, n.seq, idx));
+            self.lru.insert((now_ns, seq, idx));
+        }
+        n.last_access = now_ns;
+        n.seq = seq;
+    }
+
+    /// Insert a fresh leaf under `parent`, returning its slot.
+    fn alloc(&mut self, parent: u32, block: u64, now_ns: u64) -> u32 {
+        self.seq += 1;
+        let node = Node {
+            parent,
+            block,
+            children: 0,
+            last_access: now_ns,
+            seq: self.seq,
+            live: true,
+        };
+        let idx = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = node;
+                slot
+            }
+            None => {
+                self.nodes.push(node);
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        self.edges.insert((parent, block), idx);
+        self.lru.insert((now_ns, self.seq, idx));
+        if parent != ROOT {
+            let p = &mut self.nodes[parent as usize];
+            p.children += 1;
+            if p.children == 1 {
+                // Parent just stopped being a leaf.
+                self.lru.remove(&(p.last_access, p.seq, parent));
+            }
+        }
+        self.size += 1;
+        idx
+    }
+
+    /// Evict least-recently-used leaves until `size <= cap_blocks`.
+    fn evict_to(&mut self, cap_blocks: u64) -> u64 {
+        let mut evicted = 0u64;
+        while self.size > cap_blocks {
+            let Some(&key) = self.lru.iter().next() else { break };
+            self.lru.remove(&key);
+            let idx = key.2;
+            let (parent, block) = {
+                let n = &mut self.nodes[idx as usize];
+                n.live = false;
+                (n.parent, n.block)
+            };
+            self.edges.remove(&(parent, block));
+            self.free.push(idx);
+            self.size -= 1;
+            evicted += 1;
+            if parent != ROOT {
+                let p = &mut self.nodes[parent as usize];
+                p.children -= 1;
+                if p.children == 0 {
+                    self.lru.insert((p.last_access, p.seq, parent));
+                }
+            }
+        }
+        evicted
+    }
+
+    /// Order- and state-sensitive fingerprint (slots, stamps, free-list
+    /// order): two trees fingerprint equal iff their future behaviour
+    /// is identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(16 + self.edges.len() * 40);
+        bytes.extend_from_slice(&self.seq.to_le_bytes());
+        bytes.extend_from_slice(&self.size.to_le_bytes());
+        for (&(parent, block), &idx) in &self.edges {
+            let n = &self.nodes[idx as usize];
+            for w in [parent as u64, block, idx as u64, n.last_access, n.seq] {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        for &slot in &self.free {
+            bytes.extend_from_slice(&(slot as u64).to_le_bytes());
+        }
+        crate::util::hash::fnv1a(&bytes)
+    }
+
+    /// Snapshot codec: the full slab (dead slots as `null`) plus the
+    /// free-list order — both participate in eviction tie-breaks, so a
+    /// resumed tree must reproduce them exactly.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seq", self.seq);
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                if !n.live {
+                    return Json::Null;
+                }
+                let mut e = Json::obj();
+                e.set("parent", n.parent as u64)
+                    .set("block", n.block)
+                    .set("last", n.last_access)
+                    .set("seq", n.seq);
+                e
+            })
+            .collect();
+        o.set("nodes", Json::Arr(nodes));
+        o.set("free", Json::Arr(self.free.iter().map(|&s| Json::from(s as u64)).collect()));
+        o
+    }
+
+    /// Rebuild from [`PrefixTree::to_json`]; edges, leaf set, child
+    /// counts, and size are recomputed from the live slab (they are
+    /// defined by it).
+    pub fn from_json(v: &Json) -> Result<PrefixTree, String> {
+        let ctx = "prefix tree";
+        let mut t = PrefixTree {
+            seq: v.req_u64("seq", ctx)?,
+            ..PrefixTree::default()
+        };
+        for slot in v.req_arr("nodes", ctx)? {
+            if matches!(slot, Json::Null) {
+                t.nodes.push(Node {
+                    parent: ROOT,
+                    block: 0,
+                    children: 0,
+                    last_access: 0,
+                    seq: 0,
+                    live: false,
+                });
+                continue;
+            }
+            let parent = slot.req_u64("parent", ctx)?;
+            if parent > ROOT as u64 {
+                return Err(format!("{ctx}: parent {parent} out of range"));
+            }
+            t.nodes.push(Node {
+                parent: parent as u32,
+                block: slot.req_u64("block", ctx)?,
+                children: 0,
+                last_access: slot.req_u64("last", ctx)?,
+                seq: slot.req_u64("seq", ctx)?,
+                live: true,
+            });
+        }
+        for f in v.req_arr("free", ctx)? {
+            let slot = f.as_u64().ok_or_else(|| format!("{ctx}: bad free slot"))?;
+            if slot as usize >= t.nodes.len() {
+                return Err(format!("{ctx}: free slot {slot} out of range"));
+            }
+            t.free.push(slot as u32);
+        }
+        // Recompute the derived structures from the live slab.
+        for (i, n) in t.nodes.iter().enumerate() {
+            if !n.live {
+                continue;
+            }
+            t.edges.insert((n.parent, n.block), i as u32);
+            t.size += 1;
+        }
+        let mut children: Vec<u32> = vec![0; t.nodes.len()];
+        for n in t.nodes.iter().filter(|n| n.live && n.parent != ROOT) {
+            if n.parent as usize >= t.nodes.len() || !t.nodes[n.parent as usize].live {
+                return Err(format!("{ctx}: dangling parent {}", n.parent));
+            }
+            children[n.parent as usize] += 1;
+        }
+        for (i, n) in t.nodes.iter_mut().enumerate() {
+            n.children = children[i];
+            if n.live && n.children == 0 {
+                t.lru.insert((n.last_access, n.seq, i as u32));
+            }
+        }
+        if t.edges.len() as u64 != t.size {
+            return Err(format!("{ctx}: duplicate (parent, block) edges"));
+        }
+        Ok(t)
+    }
+}
+
+/// Cluster-wide cache activity counters. These live OUTSIDE
+/// `SimCounters` on purpose: sweep rows serialize every `SimCounters`
+/// field unconditionally, so cache counters must be armed-only
+/// (encoding-as-absence) to keep pre-cache sweep artifacts
+/// byte-identical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Routed requests that carried a non-empty prefix path.
+    pub lookups: u64,
+    pub hit_blocks: u64,
+    pub miss_blocks: u64,
+    pub inserted_blocks: u64,
+    pub evicted_blocks: u64,
+    /// Tree clears caused by transformation / crash / abort (counted
+    /// only when the tree held at least one block).
+    pub invalidations: u64,
+}
+
+impl CacheCounters {
+    /// Block-level hit rate over prefixed lookups.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hit_blocks + self.miss_blocks;
+        if total == 0 {
+            0.0
+        } else {
+            self.hit_blocks as f64 / total as f64
+        }
+    }
+}
+
+/// Per-instance prefix trees plus cluster-wide counters — the armed
+/// (opt-in) cache state a `ClusterSim` carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterCache {
+    pub block_tokens: u64,
+    /// Indexed by instance id; `None` = retired or never-assigned.
+    trees: Vec<Option<PrefixTree>>,
+    pub counters: CacheCounters,
+}
+
+impl ClusterCache {
+    pub fn new(block_tokens: u64) -> ClusterCache {
+        ClusterCache {
+            block_tokens: block_tokens.max(1),
+            trees: Vec::new(),
+            counters: CacheCounters::default(),
+        }
+    }
+
+    /// KV capacity in blocks for a capacity in tokens.
+    pub fn cap_blocks(&self, cap_tokens: u64) -> u64 {
+        cap_tokens / self.block_tokens
+    }
+
+    /// Record an assignment of a prefixed request to instance `iid`:
+    /// match + insert + evict on its tree, update the cluster counters,
+    /// and return the matched (cache-hit) token count. Prefix-free
+    /// requests are a no-op so plain workloads never dilute hit-rate.
+    pub fn observe(&mut self, iid: usize, path: &[u64], now: SimTime, cap_tokens: u64) -> u64 {
+        if path.is_empty() {
+            return 0;
+        }
+        if self.trees.len() <= iid {
+            self.trees.resize_with(iid + 1, || None);
+        }
+        let cap = self.cap_blocks(cap_tokens);
+        let tree = self.trees[iid].get_or_insert_with(PrefixTree::new);
+        let out = tree.match_and_insert(path, now, cap);
+        self.counters.lookups += 1;
+        self.counters.hit_blocks += out.matched;
+        self.counters.miss_blocks += out.inserted;
+        self.counters.inserted_blocks += out.inserted;
+        self.counters.evicted_blocks += out.evicted;
+        out.matched * self.block_tokens
+    }
+
+    /// Read-only matched fraction of `path` on `iid` (the routing
+    /// affinity signal): 0.0 when the path is empty or no tree exists.
+    pub fn match_fraction(&self, iid: usize, path: &[u64]) -> f64 {
+        if path.is_empty() {
+            return 0.0;
+        }
+        match self.trees.get(iid).and_then(|t| t.as_ref()) {
+            Some(tree) => tree.match_len(path) as f64 / path.len() as f64,
+            None => 0.0,
+        }
+    }
+
+    /// Drop instance `iid`'s cached blocks (transformation split/merge,
+    /// host crash, transform abort). Keeps the slot so a later
+    /// assignment restarts cold.
+    pub fn invalidate(&mut self, iid: usize) {
+        if let Some(Some(tree)) = self.trees.get_mut(iid) {
+            if tree.clear() > 0 {
+                self.counters.invalidations += 1;
+            }
+        }
+    }
+
+    /// Invalidate and drop the slot (instance retired for good).
+    pub fn retire(&mut self, iid: usize) {
+        self.invalidate(iid);
+        if let Some(slot) = self.trees.get_mut(iid) {
+            *slot = None;
+        }
+    }
+
+    /// Blocks currently cached on `iid`.
+    pub fn cached_blocks(&self, iid: usize) -> u64 {
+        self.trees.get(iid).and_then(|t| t.as_ref()).map_or(0, |t| t.len())
+    }
+
+    /// Deterministic whole-cache fingerprint (tests / divergence checks).
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(64 + self.trees.len() * 8);
+        for c in [
+            self.block_tokens,
+            self.counters.lookups,
+            self.counters.hit_blocks,
+            self.counters.miss_blocks,
+            self.counters.inserted_blocks,
+            self.counters.evicted_blocks,
+            self.counters.invalidations,
+        ] {
+            bytes.extend_from_slice(&c.to_le_bytes());
+        }
+        for t in &self.trees {
+            let f = t.as_ref().map_or(0, |t| t.fingerprint());
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        crate::util::hash::fnv1a(&bytes)
+    }
+
+    /// Snapshot codec (schema v5 `cache` payload).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("block_tokens", self.block_tokens);
+        let mut c = Json::obj();
+        c.set("lookups", self.counters.lookups)
+            .set("hit_blocks", self.counters.hit_blocks)
+            .set("miss_blocks", self.counters.miss_blocks)
+            .set("inserted_blocks", self.counters.inserted_blocks)
+            .set("evicted_blocks", self.counters.evicted_blocks)
+            .set("invalidations", self.counters.invalidations);
+        o.set("counters", c);
+        o.set(
+            "trees",
+            Json::Arr(
+                self.trees
+                    .iter()
+                    .map(|t| t.as_ref().map_or(Json::Null, |t| t.to_json()))
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClusterCache, String> {
+        let ctx = "cache";
+        let c = v.get("counters").ok_or_else(|| format!("{ctx}: missing counters"))?;
+        let mut cache = ClusterCache::new(v.req_u64("block_tokens", ctx)?);
+        cache.counters = CacheCounters {
+            lookups: c.req_u64("lookups", ctx)?,
+            hit_blocks: c.req_u64("hit_blocks", ctx)?,
+            miss_blocks: c.req_u64("miss_blocks", ctx)?,
+            inserted_blocks: c.req_u64("inserted_blocks", ctx)?,
+            evicted_blocks: c.req_u64("evicted_blocks", ctx)?,
+            invalidations: c.req_u64("invalidations", ctx)?,
+        };
+        for t in v.req_arr("trees", ctx)? {
+            cache.trees.push(match t {
+                Json::Null => None,
+                other => Some(PrefixTree::from_json(other)?),
+            });
+        }
+        Ok(cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn match_grows_with_shared_prefix() {
+        let mut t = PrefixTree::new();
+        let out = t.match_and_insert(&[1, 2, 3], at(1.0), 100);
+        assert_eq!(out, CacheOutcome { matched: 0, inserted: 3, evicted: 0 });
+        let out = t.match_and_insert(&[1, 2, 9], at(2.0), 100);
+        assert_eq!(out, CacheOutcome { matched: 2, inserted: 1, evicted: 0 });
+        assert_eq!(t.match_len(&[1, 2, 3]), 3);
+        assert_eq!(t.match_len(&[1, 2, 9, 7]), 3);
+        assert_eq!(t.match_len(&[5]), 0);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_leaf_first() {
+        let mut t = PrefixTree::new();
+        t.match_and_insert(&[1, 2], at(1.0), 100);
+        t.match_and_insert(&[3, 4], at(2.0), 100);
+        // Cap 3: the oldest leaf (node 2's slot, stamped at 1.0) goes.
+        let out = t.match_and_insert(&[5], at(3.0), 3);
+        assert_eq!(out.evicted, 2, "leaf then its newly-leafed parent");
+        assert_eq!(t.match_len(&[1, 2]), 0, "old chain evicted");
+        assert_eq!(t.match_len(&[3, 4]), 2, "newer chain survives");
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn touch_protects_recently_matched_chain() {
+        let mut t = PrefixTree::new();
+        t.match_and_insert(&[1, 2], at(1.0), 100);
+        t.match_and_insert(&[3, 4], at(2.0), 100);
+        // Re-touch the old chain, then force one eviction: the
+        // untouched chain (3,4) is now the LRU victim.
+        t.match_and_insert(&[1, 2], at(3.0), 100);
+        t.match_and_insert(&[5], at(4.0), 3);
+        assert_eq!(t.match_len(&[1, 2]), 2);
+        assert_eq!(t.match_len(&[3, 4]), 0);
+    }
+
+    #[test]
+    fn inner_nodes_are_not_evictable() {
+        let mut t = PrefixTree::new();
+        t.match_and_insert(&[1], at(1.0), 100);
+        t.match_and_insert(&[1, 2], at(2.0), 100);
+        // Node 1 is old but has a child; only the leaf 2 is evictable.
+        t.match_and_insert(&[9], at(3.0), 2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.match_len(&[1]), 1, "inner node survives");
+        assert_eq!(t.match_len(&[9]), 1);
+    }
+
+    #[test]
+    fn clear_resets_but_seq_survives() {
+        let mut t = PrefixTree::new();
+        t.match_and_insert(&[1, 2, 3], at(1.0), 100);
+        assert_eq!(t.clear(), 3);
+        assert!(t.is_empty());
+        assert_eq!(t.match_len(&[1]), 0);
+        let out = t.match_and_insert(&[1], at(2.0), 100);
+        assert_eq!(out.inserted, 1);
+    }
+
+    #[test]
+    fn slot_reuse_is_lifo_and_fingerprinted() {
+        let mut t = PrefixTree::new();
+        t.match_and_insert(&[1], at(1.0), 100);
+        t.match_and_insert(&[2], at(2.0), 100);
+        let f1 = t.fingerprint();
+        t.match_and_insert(&[3], at(3.0), 2); // evicts slot of block 1
+        assert_ne!(t.fingerprint(), f1, "fingerprint tracks state");
+        let json = t.to_json();
+        let back = PrefixTree::from_json(&json).unwrap();
+        assert_eq!(back.fingerprint(), t.fingerprint(), "snapshot exact");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_preserves_future_evictions() {
+        let mut a = PrefixTree::new();
+        for (i, path) in [[1u64, 2].as_slice(), &[1, 3], &[4, 5], &[6]].iter().enumerate() {
+            a.match_and_insert(path, at(i as f64), 100);
+        }
+        a.match_and_insert(&[7], at(10.0), 4); // force evictions + free slots
+        let mut b = PrefixTree::from_json(&a.to_json()).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Same op on both sides must stay identical (free-list order,
+        // LRU ties, slot ids all preserved).
+        let oa = a.match_and_insert(&[8, 9], at(11.0), 4);
+        let ob = b.match_and_insert(&[8, 9], at(11.0), 4);
+        assert_eq!(oa, ob);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_trees() {
+        assert!(PrefixTree::from_json(&Json::parse(r#"{"seq": 1}"#).unwrap()).is_err());
+        // dangling parent
+        let bad = r#"{"seq":2,"nodes":[{"parent":7,"block":1,"last":0,"seq":1}],"free":[]}"#;
+        assert!(PrefixTree::from_json(&Json::parse(bad).unwrap()).is_err());
+        // free slot out of range
+        let bad = r#"{"seq":1,"nodes":[],"free":[3]}"#;
+        assert!(PrefixTree::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cluster_cache_counters_and_affinity() {
+        let mut c = ClusterCache::new(100);
+        assert_eq!(c.observe(0, &[], at(1.0), 10_000), 0, "prefix-free is a no-op");
+        assert_eq!(c.counters.lookups, 0);
+        assert_eq!(c.observe(0, &[1, 2], at(1.0), 10_000), 0, "cold miss");
+        assert_eq!(c.observe(0, &[1, 2], at(2.0), 10_000), 200, "warm hit");
+        assert_eq!(c.counters.lookups, 2);
+        assert_eq!(c.counters.hit_blocks, 2);
+        assert_eq!(c.counters.miss_blocks, 2);
+        assert!((c.counters.hit_rate() - 0.5).abs() < 1e-12);
+        assert!((c.match_fraction(0, &[1, 2, 3]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.match_fraction(1, &[1, 2]), 0.0, "unknown instance is cold");
+        c.invalidate(0);
+        assert_eq!(c.counters.invalidations, 1);
+        c.invalidate(0);
+        assert_eq!(c.counters.invalidations, 1, "empty clear not counted");
+        assert_eq!(c.match_fraction(0, &[1, 2]), 0.0);
+    }
+
+    #[test]
+    fn cluster_cache_snapshot_roundtrip() {
+        let mut c = ClusterCache::new(DEFAULT_BLOCK_TOKENS);
+        c.observe(0, &[1, 2, 3], at(1.0), 1 << 20);
+        c.observe(2, &[1, 9], at(2.0), 1 << 20);
+        c.retire(1);
+        c.invalidate(0);
+        let back = ClusterCache::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.fingerprint(), c.fingerprint());
+        assert_eq!(back.counters, c.counters);
+        assert_eq!(back.cached_blocks(2), 2);
+    }
+
+    #[test]
+    fn capacity_in_blocks_floors() {
+        let c = ClusterCache::new(128);
+        assert_eq!(c.cap_blocks(1000), 7);
+        assert_eq!(c.cap_blocks(127), 0);
+        let z = ClusterCache::new(0);
+        assert_eq!(z.block_tokens, 1, "block size clamps to 1");
+    }
+}

@@ -40,10 +40,15 @@ impl Policy {
 /// CLI flags (`--policy`, `branch --policies`, `chaos`), sweep job
 /// builders, snapshot fingerprints, and the scheduler pipeline all
 /// parse and print through it, so a name round-trips everywhere:
-/// `<base>[-slo][-admit]` (e.g. `gyges`, `rr-slo`, `llf-slo-admit`).
+/// `<base>[-cache][-slo][-admit]` (e.g. `gyges`, `rr-slo`,
+/// `gyges-cache-slo`, `llf-slo-admit`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PolicyId {
     pub base: Policy,
+    /// Prefix-cache-aware scoring: candidate scores are discounted by the
+    /// fraction of the request's prefix path already resident in each
+    /// instance's cache (and the simulator arms the cache model).
+    pub cache: bool,
     /// SLO-class lanes: interactive requests drain the backlog first and
     /// may preempt queued batch prefills (preemption-by-requeue).
     pub slo: bool,
@@ -53,14 +58,16 @@ pub struct PolicyId {
 }
 
 impl PolicyId {
-    /// Parse a canonical `<base>[-slo][-admit]` policy name. Base
-    /// aliases (`round-robin`, `least-load`, ...) are accepted; stage
-    /// suffixes only in canonical order (`-slo` before `-admit`).
+    /// Parse a canonical `<base>[-cache][-slo][-admit]` policy name.
+    /// Base aliases (`round-robin`, `least-load`, ...) are accepted;
+    /// stage suffixes only in canonical order (`-cache` before `-slo`
+    /// before `-admit`).
     pub fn parse(s: &str) -> Option<PolicyId> {
         let lower = s.to_ascii_lowercase();
         let mut rest = lower.as_str();
         let mut admit = false;
         let mut slo = false;
+        let mut cache = false;
         if let Some(r) = rest.strip_suffix("-admit") {
             admit = true;
             rest = r;
@@ -69,37 +76,53 @@ impl PolicyId {
             slo = true;
             rest = r;
         }
-        Policy::by_name(rest).map(|base| PolicyId { base, slo, admit })
+        if let Some(r) = rest.strip_suffix("-cache") {
+            cache = true;
+            rest = r;
+        }
+        Policy::by_name(rest).map(|base| PolicyId { base, cache, slo, admit })
     }
 
     /// Canonical name. Static so `RoutePolicy::name` (and through it the
     /// snapshot config fingerprint and sweep labels) can return it.
     pub fn name(&self) -> &'static str {
-        match (self.base, self.slo, self.admit) {
-            (Policy::Gyges, false, false) => "gyges",
-            (Policy::Gyges, true, false) => "gyges-slo",
-            (Policy::Gyges, false, true) => "gyges-admit",
-            (Policy::Gyges, true, true) => "gyges-slo-admit",
-            (Policy::RoundRobin, false, false) => "rr",
-            (Policy::RoundRobin, true, false) => "rr-slo",
-            (Policy::RoundRobin, false, true) => "rr-admit",
-            (Policy::RoundRobin, true, true) => "rr-slo-admit",
-            (Policy::LeastLoadFirst, false, false) => "llf",
-            (Policy::LeastLoadFirst, true, false) => "llf-slo",
-            (Policy::LeastLoadFirst, false, true) => "llf-admit",
-            (Policy::LeastLoadFirst, true, true) => "llf-slo-admit",
+        match (self.base, self.cache, self.slo, self.admit) {
+            (Policy::Gyges, false, false, false) => "gyges",
+            (Policy::Gyges, false, true, false) => "gyges-slo",
+            (Policy::Gyges, false, false, true) => "gyges-admit",
+            (Policy::Gyges, false, true, true) => "gyges-slo-admit",
+            (Policy::Gyges, true, false, false) => "gyges-cache",
+            (Policy::Gyges, true, true, false) => "gyges-cache-slo",
+            (Policy::Gyges, true, false, true) => "gyges-cache-admit",
+            (Policy::Gyges, true, true, true) => "gyges-cache-slo-admit",
+            (Policy::RoundRobin, false, false, false) => "rr",
+            (Policy::RoundRobin, false, true, false) => "rr-slo",
+            (Policy::RoundRobin, false, false, true) => "rr-admit",
+            (Policy::RoundRobin, false, true, true) => "rr-slo-admit",
+            (Policy::RoundRobin, true, false, false) => "rr-cache",
+            (Policy::RoundRobin, true, true, false) => "rr-cache-slo",
+            (Policy::RoundRobin, true, false, true) => "rr-cache-admit",
+            (Policy::RoundRobin, true, true, true) => "rr-cache-slo-admit",
+            (Policy::LeastLoadFirst, false, false, false) => "llf",
+            (Policy::LeastLoadFirst, false, true, false) => "llf-slo",
+            (Policy::LeastLoadFirst, false, false, true) => "llf-admit",
+            (Policy::LeastLoadFirst, false, true, true) => "llf-slo-admit",
+            (Policy::LeastLoadFirst, true, false, false) => "llf-cache",
+            (Policy::LeastLoadFirst, true, true, false) => "llf-cache-slo",
+            (Policy::LeastLoadFirst, true, false, true) => "llf-cache-admit",
+            (Policy::LeastLoadFirst, true, true, true) => "llf-cache-slo-admit",
         }
     }
 
     /// A plain base policy with no composed stages.
     pub fn plain(&self) -> bool {
-        !self.slo && !self.admit
+        !self.cache && !self.slo && !self.admit
     }
 }
 
 impl From<Policy> for PolicyId {
     fn from(base: Policy) -> PolicyId {
-        PolicyId { base, slo: false, admit: false }
+        PolicyId { base, cache: false, slo: false, admit: false }
     }
 }
 
@@ -413,11 +436,13 @@ mod tests {
     #[test]
     fn policy_id_names_roundtrip() {
         for base in [Policy::Gyges, Policy::RoundRobin, Policy::LeastLoadFirst] {
-            for slo in [false, true] {
-                for admit in [false, true] {
-                    let id = PolicyId { base, slo, admit };
-                    assert_eq!(PolicyId::parse(id.name()), Some(id), "{}", id.name());
-                    assert_eq!(format!("{id}"), id.name());
+            for cache in [false, true] {
+                for slo in [false, true] {
+                    for admit in [false, true] {
+                        let id = PolicyId { base, cache, slo, admit };
+                        assert_eq!(PolicyId::parse(id.name()), Some(id), "{}", id.name());
+                        assert_eq!(format!("{id}"), id.name());
+                    }
                 }
             }
         }
@@ -425,10 +450,15 @@ mod tests {
         assert_eq!(PolicyId::parse("round-robin"), Some(Policy::RoundRobin.into()));
         assert_eq!(
             PolicyId::parse("least-load-slo-admit"),
-            Some(PolicyId { base: Policy::LeastLoadFirst, slo: true, admit: true })
+            Some(PolicyId { base: Policy::LeastLoadFirst, cache: false, slo: true, admit: true })
+        );
+        assert_eq!(
+            PolicyId::parse("gyges-cache-slo"),
+            Some(PolicyId { base: Policy::Gyges, cache: true, slo: true, admit: false })
         );
         // Only the canonical suffix order is a name.
         assert_eq!(PolicyId::parse("gyges-admit-slo"), None);
+        assert_eq!(PolicyId::parse("gyges-slo-cache"), None);
         assert_eq!(PolicyId::parse("bogus"), None);
     }
 

@@ -35,6 +35,7 @@ use super::request::ActiveRequest;
 use super::scheduler::{
     make_policy, make_policy_with_hold, ClusterView, HostIndex, LoadIndex, Route, RoutePolicy,
 };
+use crate::cache::{CacheCounters, ClusterCache};
 use crate::config::{ClusterConfig, Policy, PolicyId};
 use crate::faults::{Fault, FaultKind, FaultPlan, RetryPolicy};
 use crate::metrics::{Recorder, RunReport};
@@ -282,6 +283,11 @@ pub struct SimOutcome {
     /// any serialized row, so streamed and whole-trace outputs stay
     /// byte-identical).
     pub trace_peak_buffered: usize,
+    /// Prefix-cache counters, `Some` only when the cache model was
+    /// armed. Kept out of [`SimCounters`] (which serializes every field
+    /// unconditionally) so cache-off sweep rows stay byte-identical to
+    /// pre-cache builds.
+    pub cache: Option<CacheCounters>,
 }
 
 /// A deferred request parked in the backlog, stamped with its *first*
@@ -369,6 +375,11 @@ pub struct ClusterSim {
     /// field rather than a `run`-local so a paused run ([`ClusterSim::
     /// run_until`]) carries it to [`ClusterSim::finish`].
     error: Option<SimError>,
+    /// Armed prefix-cache model (`None` = cache off, the byte-identical
+    /// pre-cache path). Armed automatically for `-cache` policies, or
+    /// explicitly via [`ClusterSim::arm_cache`] for track-only
+    /// measurement under load-only policies (the fig-cache baselines).
+    cache: Option<ClusterCache>,
 }
 
 /// How [`ClusterSim::run_until`] returned.
@@ -426,6 +437,7 @@ impl ClusterSim {
             backoff_base_s: cfg.retry_backoff_base_s,
         };
         let hosts = cfg.hosts;
+        let cache = cfg.policy.cache.then(|| ClusterCache::new(crate::cache::DEFAULT_BLOCK_TOKENS));
         ClusterSim {
             cfg,
             engine,
@@ -460,6 +472,7 @@ impl ClusterSim {
             pool_running: Vec::new(),
             pool_prefill: Vec::new(),
             error: None,
+            cache,
         }
     }
 
@@ -580,10 +593,31 @@ impl ClusterSim {
 
     /// Override the routing policy (Figure 12 compares policies on the
     /// same Gyges transformation machinery). Accepts a plain [`Policy`]
-    /// or a composed [`PolicyId`].
+    /// or a composed [`PolicyId`]. A `-cache` id arms the cache model if
+    /// it wasn't already; a cache-free id leaves an armed cache in place
+    /// (track-only measurement — fig-cache's load-only baselines).
     pub fn with_policy(mut self, policy: impl Into<PolicyId>) -> ClusterSim {
-        self.policy = make_policy(policy);
+        let id = policy.into();
+        if id.cache {
+            self.arm_cache();
+        }
+        self.policy = make_policy(id);
         self
+    }
+
+    /// Arm the prefix-cache model (idempotent). Call before running:
+    /// cached-token prefill shortening and hit/evict counters switch on
+    /// for every policy, cache-aware or not. Never armed ⇒ the run is
+    /// byte-identical to a pre-cache build.
+    pub fn arm_cache(&mut self) {
+        if self.cache.is_none() {
+            self.cache = Some(ClusterCache::new(crate::cache::DEFAULT_BLOCK_TOKENS));
+        }
+    }
+
+    /// Prefix-cache counters so far; `None` while the cache is unarmed.
+    pub fn cache_counters(&self) -> Option<CacheCounters> {
+        self.cache.as_ref().map(|c| c.counters)
     }
 
     /// Install an already-built policy object (lockstep tests drive the
@@ -744,6 +778,7 @@ impl ClusterSim {
             profile: if self.profiling { Some(self.profile) } else { None },
             error,
             trace_peak_buffered: self.feed.peak_buffered(),
+            cache: self.cache.as_ref().map(|c| c.counters),
         }
     }
 
@@ -816,6 +851,8 @@ impl ClusterSim {
             generated: r.generated,
             phase: r.phase.name().to_string(),
             class: r.class,
+            prefix: r.prefix.clone(),
+            cached_tokens: r.cached_tokens,
         };
         let events = self
             .queue
@@ -916,6 +953,7 @@ impl ClusterSim {
                 stall_until: self.stall_until.clone(),
                 recorder,
                 feed: self.feed.snapshot()?,
+                cache: self.cache.clone(),
             },
         })
     }
@@ -981,6 +1019,8 @@ impl ClusterSim {
                 phase: super::request::Phase::by_name(&r.phase)
                     .ok_or_else(|| format!("unknown request phase {:?}", r.phase))?,
                 class: r.class,
+                prefix: r.prefix.clone(),
+                cached_tokens: r.cached_tokens,
             })
         };
         let mut instances = Vec::with_capacity(n);
@@ -1163,6 +1203,7 @@ impl ClusterSim {
             pool_running: Vec::new(),
             pool_prefill: Vec::new(),
             error: None,
+            cache: s.cache.clone(),
         };
         // Derived state: the blocked mask is a pure function of the
         // serialized crash/link windows at the snapshot instant.
@@ -1176,8 +1217,10 @@ impl ClusterSim {
 
     fn on_arrival(&mut self, tr: TraceRequest) {
         let now = tr.arrival;
-        self.recorder.on_arrival(tr.id, now, tr.input_len, tr.output_len);
-        let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len).with_class(tr.class);
+        self.recorder.on_arrival_classed(tr.id, now, tr.input_len, tr.output_len, tr.class);
+        let req = ActiveRequest::new(tr.id, now, tr.input_len, tr.output_len)
+            .with_class(tr.class)
+            .with_prefix(tr.prefix);
         self.route_one(now, req, None);
     }
 
@@ -1205,6 +1248,7 @@ impl ClusterSim {
             tp1,
             load,
             blocked_hosts: self.blocked_hosts_view(),
+            cache: self.cache.as_ref(),
         };
         self.counters.routes += 1;
         if deferred.is_some() {
@@ -1240,9 +1284,20 @@ impl ClusterSim {
             }
             r => r,
         };
-        let placed = |sim: &mut ClusterSim, iid: usize, req: ActiveRequest| {
+        let placed = |sim: &mut ClusterSim, iid: usize, mut req: ActiveRequest| {
             if let Some((since, _)) = deferred {
                 sim.counters.backlog_wait += now.since(since);
+            }
+            // Armed cache: record the placement on the instance's prefix
+            // tree and credit the matched tokens against the prefill
+            // duration. Matched tokens never exceed the prompt: the
+            // prefix path covers prompt tokens by construction, but a
+            // snapshot-restored tree plus a mid-stream re-route could
+            // otherwise over-credit a shorter retry.
+            if let Some(cache) = sim.cache.as_mut() {
+                let cap = sim.instances[iid].kv_capacity(&sim.engine);
+                let matched = cache.observe(iid, &req.prefix, now, cap);
+                req.cached_tokens = matched.min(req.input_len);
             }
             sim.instances[iid].admit(req);
             sim.reindex(iid);
@@ -1318,8 +1373,12 @@ impl ClusterSim {
         let evicted = self.instances[victim].evict_prefills(&plan);
         self.counters.preemptions += evicted.len() as u64;
         for r in evicted {
+            // The rebuilt request keeps its prefix path (a later
+            // placement can still cache-hit) but drops `cached_tokens` —
+            // the credit belongs to the instance it was evicted from.
             let back = ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len)
-                .with_class(r.class);
+                .with_class(r.class)
+                .with_prefix(r.prefix);
             self.backlog.push_back(Deferred {
                 req: back,
                 since: now,
@@ -1643,6 +1702,11 @@ impl ClusterSim {
             }
             self.epochs[m] += 1; // invalidate in-flight events
             self.reindex(m);
+            // The member's KV re-shards into the merged layout — its
+            // prefix cache does not survive the transformation.
+            if let Some(c) = self.cache.as_mut() {
+                c.retire(m);
+            }
         }
         self.pool_running = running;
         self.pool_prefill = prefill;
@@ -1682,6 +1746,11 @@ impl ClusterSim {
             workers
         };
         self.reindex(iid);
+        // Split: the parent's prefix cache dies with its sharded KV; the
+        // TP1 children start cold.
+        if let Some(c) = self.cache.as_mut() {
+            c.retire(iid);
+        }
         let parent_stall = self.stall_until[iid];
         let n = from_tp as usize;
         let mut new_ids = Vec::with_capacity(n);
@@ -1782,6 +1851,7 @@ impl ClusterSim {
             tp1,
             load,
             blocked_hosts: self.blocked_hosts_view(),
+            cache: self.cache.as_ref(),
         };
         let inst = &self.instances[iid];
         if self.policy.should_scale_down(inst, &view) {
@@ -1859,6 +1929,10 @@ impl ClusterSim {
             let _lost_kv = inst.drain_work_into(&mut running, &mut prefill);
         }
         self.reindex(iid);
+        // Crash: every cached prefix block on the instance is gone.
+        if let Some(c) = self.cache.as_mut() {
+            c.retire(iid);
+        }
         for r in running.drain(..).chain(prefill.drain(..)) {
             self.requeue_lost(now, r);
         }
@@ -1873,9 +1947,10 @@ impl ClusterSim {
     /// attempt (`attempts: 0` — a crash is not a placement failure).
     fn requeue_lost(&mut self, now: SimTime, r: ActiveRequest) {
         self.counters.crash_requeued += 1;
-        self.recorder.on_arrival(r.id, r.arrival, r.input_len, r.output_len);
-        let req =
-            ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len).with_class(r.class);
+        self.recorder.on_arrival_classed(r.id, r.arrival, r.input_len, r.output_len, r.class);
+        let req = ActiveRequest::new(r.id, r.arrival, r.input_len, r.output_len)
+            .with_class(r.class)
+            .with_prefix(r.prefix);
         self.backlog.push_back(Deferred { req, since: now, attempts: 0, next_retry: now });
     }
 
@@ -1979,6 +2054,11 @@ impl ClusterSim {
                     ts.exec = TransformExec::from_parts(plan, mech, pov, 0);
                 }
                 self.reindex(iid);
+                // Aborting mid-re-shard scrambles the block layout; the
+                // instance keeps serving but its prefix cache is cold.
+                if let Some(c) = self.cache.as_mut() {
+                    c.invalidate(iid);
+                }
             }
             Direction::ScaleUp => {
                 let host = self.instances[iid].host;
@@ -2000,6 +2080,11 @@ impl ClusterSim {
                     workers
                 };
                 self.reindex(iid);
+                // The aborted parent is retired; its replacement TP1
+                // children start with cold prefix caches.
+                if let Some(c) = self.cache.as_mut() {
+                    c.retire(iid);
+                }
                 let n = workers.len();
                 let mut new_ids = Vec::with_capacity(n);
                 for k in 0..n {
@@ -2133,6 +2218,7 @@ mod tests {
                 input_len: 1000,
                 output_len: 50,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         t
@@ -2157,6 +2243,7 @@ mod tests {
             input_len: 50_000,
             output_len: 64,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
         trace.sort();
         let out = run_system(small_cfg(), SystemKind::Gyges, None, trace);
@@ -2173,6 +2260,7 @@ mod tests {
             input_len: 50_000,
             output_len: 32,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
         // steady shorts afterwards so steps keep firing post-drain
         for i in 1..200u64 {
@@ -2182,6 +2270,7 @@ mod tests {
                 input_len: 1000,
                 output_len: 20,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         trace.sort();
@@ -2223,6 +2312,7 @@ mod tests {
             input_len: 50_000,
             output_len: 32,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
         trace.sort();
         let gy = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
@@ -2239,6 +2329,7 @@ mod tests {
             input_len: 50_000,
             output_len: 128,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
         trace.sort();
         let gy = run_system(small_cfg(), SystemKind::Gyges, None, trace.clone());
@@ -2294,6 +2385,7 @@ mod tests {
                             input_len: 1000,
                             output_len: 20,
                             class: SloClass::Interactive,
+                            prefix: Vec::new(),
                         }],
                     })),
                     1 => Some(Err("disk on fire".into())),
@@ -2365,6 +2457,7 @@ mod tests {
                 input_len: bfl - 200,
                 output_len: 200,
                 class: SloClass::Batch,
+                prefix: Vec::new(),
             });
         }
         // Interactive arrivals land before any batch prefill completes,
@@ -2376,6 +2469,7 @@ mod tests {
                 input_len: bfl - 50,
                 output_len: 50,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         trace.sort();
@@ -2415,6 +2509,7 @@ mod tests {
                 input_len: 3000,
                 output_len: 200,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         trace.sort();

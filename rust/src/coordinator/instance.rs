@@ -429,7 +429,18 @@ impl Instance {
             return None;
         }
         if let Some(req) = self.prefill_queue.front() {
-            let t = self.step_scale(engine.prefill(self.degree, req.input_len));
+            // Prefix-cache hits shorten the compute, never the KV bill:
+            // the duration covers only the uncached suffix (at least one
+            // token, so every prefill still takes a step), while capacity
+            // accounting elsewhere keeps charging the full prompt. With no
+            // hit the expression is exactly `input_len` — the cache-off
+            // path stays bit-identical to the pre-cache model.
+            let compute_len = if req.cached_tokens == 0 {
+                req.input_len
+            } else {
+                req.input_len.saturating_sub(req.cached_tokens).max(1)
+            };
+            let t = self.step_scale(engine.prefill(self.degree, compute_len));
             return Some(StepKind::Prefill { req_id: req.id, duration: t });
         }
         if !self.running.is_empty() {

@@ -209,6 +209,37 @@ impl ScorePlugin for CommittedTokens {
     }
 }
 
+/// Discount a base score by prefix-cache affinity: the fraction of the
+/// request's prefix path already resident on the instance, weighted by
+/// [`CACHE_AFFINITY_WEIGHT`]. With no armed cache (or a prefix-free
+/// request) every match fraction is 0 and the wrapper scores exactly as
+/// its base — so cache-aware compositions degrade to their load-only
+/// twins when the workload has no shared prefixes.
+pub struct CacheAffinity<S>(pub S);
+
+/// Weight of a full-path cache hit against fractional KV load, balancing
+/// locality against load the way cache-aware routers (e.g. SGLang's) mix
+/// the two signals. `0.5` means a 100 % prefix hit outweighs half a
+/// capacity-unit of load — strong enough to steer repeat prompts to
+/// their cache, weak enough that a saturated instance still sheds to an
+/// idle one. `0.5 * match_fraction` is exact in f64 (halving is a pure
+/// exponent shift), keeping the score arithmetic deterministic.
+pub const CACHE_AFFINITY_WEIGHT: f64 = 0.5;
+
+impl<S: ScorePlugin> ScorePlugin for CacheAffinity<S> {
+    fn name(&self) -> &'static str {
+        "cache-affinity"
+    }
+
+    fn score(&self, req: &ActiveRequest, inst: &Instance, view: &ClusterView<'_>) -> f64 {
+        let frac = match view.cache {
+            Some(c) => c.match_fraction(inst.id, &req.prefix),
+            None => 0.0,
+        };
+        self.0.score(req, inst, view) - CACHE_AFFINITY_WEIGHT * frac
+    }
+}
+
 /// Run the candidates → filters → score stages: the `(score, id)`-minimal
 /// surviving candidate. First-win ascending-id iteration makes the
 /// tie-break identical to the legacy strict-`<` scans.
@@ -274,20 +305,28 @@ impl GygesCore {
 
     /// Short lane: SkipTransformingTp1 → Fits → ReserveHeadroom filters,
     /// GygesShortScore (indexed fast path: `LoadIndex::pick_short`).
-    fn route_short(&self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
-        let picked = match view.load {
-            Some(idx) => {
-                idx.pick_short(view.instances, view.engine, req, &self.reserved, self.reserve_cap)
-            }
-            None => {
-                let ctx = RouteCtx { reserved: &self.reserved, reserve_cap: self.reserve_cap };
-                select_best(
+    ///
+    /// `cache_aware` (the `-cache` stage) swaps the scorer for
+    /// [`CacheAffinity`]`(GygesShortScore)` and takes the scan path —
+    /// the LoadIndex buckets know nothing about per-request prefix
+    /// affinity. With no armed cache or no prefix the discount is 0 and
+    /// the scan is the proven-equivalent specification of `pick_short`,
+    /// so `gyges-cache` routes exactly like `gyges` on prefix-free work.
+    fn route_short(&self, req: &ActiveRequest, view: &ClusterView<'_>, cache_aware: bool) -> Route {
+        let ctx = RouteCtx { reserved: &self.reserved, reserve_cap: self.reserve_cap };
+        let filters: [&dyn FilterPlugin; 3] = [&SkipTransformingTp1, &Fits, &ReserveHeadroom];
+        let picked = if cache_aware {
+            select_best(req, view, &ctx, &filters, &CacheAffinity(GygesShortScore))
+        } else {
+            match view.load {
+                Some(idx) => idx.pick_short(
+                    view.instances,
+                    view.engine,
                     req,
-                    view,
-                    &ctx,
-                    &[&SkipTransformingTp1, &Fits, &ReserveHeadroom],
-                    &GygesShortScore,
-                )
+                    &self.reserved,
+                    self.reserve_cap,
+                ),
+                None => select_best(req, view, &ctx, &filters, &GygesShortScore),
             }
         };
         match picked {
@@ -296,7 +335,7 @@ impl GygesCore {
         }
     }
 
-    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+    fn route(&mut self, req: &ActiveRequest, view: &ClusterView<'_>, cache_aware: bool) -> Route {
         self.update_reserve(view);
         let tp1_max = view.engine.max_seq(1);
         let long = req.is_long(tp1_max);
@@ -327,7 +366,7 @@ impl GygesCore {
             };
             if to_tp == 1 {
                 // Long by classification but fits TP1 (edge case).
-                return self.route_short(req, view);
+                return self.route_short(req, view, cache_aware);
             }
             // Prefer the reserved group (it was kept under-loaded).
             let reserved: Vec<usize> = self
@@ -350,7 +389,7 @@ impl GygesCore {
             return Route::Defer;
         }
 
-        self.route_short(req, view)
+        self.route_short(req, view, cache_aware)
     }
 
     fn should_scale_down(&self, inst: &Instance, view: &ClusterView<'_>) -> bool {
@@ -397,8 +436,9 @@ impl PipelinePolicy {
     /// equivalent plain composition).
     pub fn from_state(state: &PolicyState) -> PipelinePolicy {
         match state {
-            PolicyState::Pipeline { slo, admit, base } => {
+            PolicyState::Pipeline { cache, slo, admit, base } => {
                 let mut p = PipelinePolicy::from_state(base);
+                p.id.cache = *cache;
                 p.id.slo = *slo;
                 p.id.admit = *admit;
                 p
@@ -450,15 +490,42 @@ impl PipelinePolicy {
         Route::Defer
     }
 
+    /// `-cache` stage for the score-free bases (rr/llf): pick the
+    /// fitting, non-transforming candidate with the best
+    /// load-minus-affinity score, but only commit to it when it actually
+    /// holds part of the request's prefix — a zero-hit winner falls
+    /// through to the base composition, so `rr-cache`/`llf-cache` behave
+    /// exactly like their bases until the cache warms up.
+    fn cache_pick(&self, req: &ActiveRequest, view: &ClusterView<'_>) -> Option<usize> {
+        let cache = view.cache?;
+        if req.prefix.is_empty() {
+            return None;
+        }
+        let id = select_best(
+            req,
+            view,
+            &EMPTY_CTX,
+            &[&SkipTransforming, &Fits],
+            &CacheAffinity(PlainLoad),
+        )?;
+        (cache.match_fraction(id, &req.prefix) > 0.0).then_some(id)
+    }
+
     /// Base composition dispatch (everything below the slo/admit stages).
     fn route_base(&mut self, req: &ActiveRequest, view: &ClusterView<'_>) -> Route {
+        let cache_aware = self.id.cache && view.cache.is_some();
         match self.id.base {
             Policy::Gyges => {
                 // gyges-lint: allow(D06) the constructor builds a gyges core for every gyges base
                 let core = self.gyges.as_mut().expect("gyges core present for gyges base");
-                core.route(req, view)
+                core.route(req, view, cache_aware)
             }
             Policy::RoundRobin => {
+                if cache_aware && !req.is_long(view.engine.max_seq(1)) {
+                    if let Some(id) = self.cache_pick(req, view) {
+                        return Route::Assign(id);
+                    }
+                }
                 if let Some(idx) = view.load {
                     // The maintained live ring IS the candidate source.
                     return self.route_rr(req, view, idx.live_ids());
@@ -471,6 +538,11 @@ impl PipelinePolicy {
                 route
             }
             Policy::LeastLoadFirst => {
+                if cache_aware && !req.is_long(view.engine.max_seq(1)) {
+                    if let Some(id) = self.cache_pick(req, view) {
+                        return Route::Assign(id);
+                    }
+                }
                 // SkipTransforming filter, CommittedTokens score — no
                 // Fits filter: LLF is deliberately capacity-oblivious,
                 // which is what forces Figure 13's extra scale-up.
@@ -566,7 +638,12 @@ impl RoutePolicy for PipelinePolicy {
             // pre-pipeline snapshot bytes are unchanged and still load.
             base
         } else {
-            PolicyState::Pipeline { slo: self.id.slo, admit: self.id.admit, base: Box::new(base) }
+            PolicyState::Pipeline {
+                cache: self.id.cache,
+                slo: self.id.slo,
+                admit: self.id.admit,
+                base: Box::new(base),
+            }
         }
     }
 }
@@ -598,6 +675,7 @@ mod tests {
             tp1: None,
             load: None,
             blocked_hosts: None,
+            cache: None,
         }
     }
 
@@ -689,7 +767,7 @@ mod tests {
         let _ = p.route(&req, &view(&cfg, &engine, &instances));
         let state = p.snapshot_state();
         match &state {
-            PolicyState::Pipeline { slo: true, admit: true, base } => {
+            PolicyState::Pipeline { cache: false, slo: true, admit: true, base } => {
                 assert!(matches!(**base, PolicyState::Gyges { .. }));
             }
             other => panic!("expected pipeline state, got {other:?}"),

@@ -48,6 +48,14 @@ pub struct ActiveRequest {
     pub generated: u64,
     pub phase: Phase,
     pub class: SloClass,
+    /// Shared-prefix block path carried over from the trace (empty for
+    /// prefix-free workloads).
+    pub prefix: Vec<u64>,
+    /// Prompt tokens whose KV was found in the placed instance's prefix
+    /// cache at assignment time. Shortens the modelled prefill *duration*
+    /// only — KV capacity accounting still charges the full prompt, so a
+    /// cache hit never admits a request the instance could not hold.
+    pub cached_tokens: u64,
 }
 
 impl ActiveRequest {
@@ -60,12 +68,20 @@ impl ActiveRequest {
             generated: 0,
             phase: Phase::Queued,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
+            cached_tokens: 0,
         }
     }
 
     /// Builder: tag the request with an SLO class.
     pub fn with_class(mut self, class: SloClass) -> ActiveRequest {
         self.class = class;
+        self
+    }
+
+    /// Builder: attach the trace's shared-prefix block path.
+    pub fn with_prefix(mut self, prefix: Vec<u64>) -> ActiveRequest {
+        self.prefix = prefix;
         self
     }
 

@@ -461,6 +461,11 @@ pub struct ClusterView<'a> {
     /// so no transformation ever targets a degraded host and decision
     /// equivalence carries over under faults.
     pub blocked_hosts: Option<&'a [bool]>,
+    /// Per-instance prefix-cache model. `None` when the cache is not
+    /// armed (every pre-cache composition) — cache-aware score plugins
+    /// treat absence as a universal miss, so a `None` view routes
+    /// exactly like the pre-cache scheduler.
+    pub cache: Option<&'a crate::cache::ClusterCache>,
 }
 
 impl<'a> ClusterView<'a> {
@@ -633,12 +638,12 @@ pub enum PolicyState {
     },
     RoundRobin { cursor: usize },
     LeastLoad,
-    /// A composed pipeline policy (schema v4): the stage flags plus the
-    /// base policy's own state. `base` is always one of the plain
-    /// variants above — plain pipeline policies snapshot *as* those
-    /// variants directly, so pre-pipeline snapshots stay byte-identical
-    /// and restore transparently.
-    Pipeline { slo: bool, admit: bool, base: Box<PolicyState> },
+    /// A composed pipeline policy (schema v4; `cache` added in v5): the
+    /// stage flags plus the base policy's own state. `base` is always
+    /// one of the plain variants above — plain pipeline policies
+    /// snapshot *as* those variants directly, so pre-pipeline snapshots
+    /// stay byte-identical and restore transparently.
+    Pipeline { cache: bool, slo: bool, admit: bool, base: Box<PolicyState> },
 }
 
 impl PolicyState {
@@ -1154,6 +1159,7 @@ mod tests {
             tp1: None,
             load: None,
             blocked_hosts: None,
+            cache: None,
         }
     }
 
@@ -1265,6 +1271,7 @@ mod tests {
             tp1: None,
             load: None,
             blocked_hosts: None,
+            cache: None,
         };
         assert!(default_scale_down(&inst, &v), "idle TP4 should scale down");
         // long request blocks it
@@ -1315,6 +1322,7 @@ mod tests {
             tp1: Some(&idx),
             load: None,
             blocked_hosts: None,
+            cache: None,
         };
         let scanned = view(&cfg, &engine, &instances);
         assert_eq!(with_idx.tp1_on_host(0), scanned.tp1_on_host(0));
@@ -1338,6 +1346,7 @@ mod tests {
             tp1: Some(&idx),
             load: None,
             blocked_hosts: None,
+            cache: None,
         };
         let mut buf = Vec::new();
         assert!(pick_merge_group_into(&v, 4, &mut buf));
@@ -1397,6 +1406,7 @@ mod tests {
             tp1: Some(&hidx),
             load: Some(&lidx),
             blocked_hosts: None,
+            cache: None,
         };
         let scanning = view(&cfg, &engine, &instances);
         for req in [short_req(1), long_req(), ActiveRequest::new(3, SimTime::ZERO, 20_000, 64)] {

@@ -1,0 +1,188 @@
+//! The `fig-cache` experiment (`gyges cache`): what prefix-cache-aware
+//! routing buys on a shared-prefix production stream.
+//!
+//! Not a paper figure — the paper's workloads are prefix-free — but the
+//! natural probe of the cache subsystem: a seeded production stream
+//! with a system-prompt + multi-turn-session prefix overlay
+//! ([`crate::workload::PrefixMix::paper`]), swept over each base policy
+//! (Gyges / RR / LLF) plain and with cache-affinity scoring (`-cache`).
+//! Every job arms the SAME prefix-cache model — baselines measure their
+//! hit-rates track-only — and replays the *identical* prefixed trace,
+//! so the only variable is whether routing can see the cache. The whole
+//! sweep is a named sweep (`fig-cache`), so sharding, trace-gen segment
+//! files, and CI's cache-verify smoke run all reuse the standard
+//! machinery.
+
+use crate::config::{ClusterConfig, ModelConfig, Policy, PolicyId};
+use crate::coordinator::SystemKind;
+use crate::util::json::{write_repro_rows, Json};
+use crate::util::table::Table;
+use crate::workload::PrefixMix;
+
+use super::sweep::{self, run_sweep};
+use super::{row_json, ShapeEntry, SweepShape, TraceSpec};
+
+/// Seed of the prefixed workload trace group — fixed so the experiment
+/// (and CI's smoke run) is one deterministic artifact.
+pub const CACHE_SEED: u64 = 0xCAC_4E;
+
+/// Arrival rate (requests/s). Busy but not saturating: routing still
+/// has real choices, so affinity and load trade off visibly.
+pub const CACHE_QPS: f64 = 6.0;
+
+/// The fig-cache cluster config: unmodified paper defaults — the cache
+/// experiment varies routing awareness, nothing else.
+pub fn cache_cfg() -> ClusterConfig {
+    ClusterConfig::paper_default(ModelConfig::qwen2_5_32b())
+}
+
+/// The policy grid: each base policy plain and cache-aware (6 jobs).
+pub fn cache_policy_grid() -> Vec<PolicyId> {
+    let mut grid = Vec::new();
+    for base in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
+        grid.push(PolicyId { base, cache: false, slo: false, admit: false });
+        grid.push(PolicyId { base, cache: true, slo: false, admit: false });
+    }
+    grid
+}
+
+/// The `fig-cache` sweep shape: one prefixed stream, the plain/-cache
+/// grid, the cache model armed on every job.
+pub fn cache_shape(horizon_s: f64) -> SweepShape {
+    let cfg = cache_cfg();
+    let entries = cache_policy_grid()
+        .into_iter()
+        .map(|id| ShapeEntry {
+            key: format!("cache/{}", id.name()),
+            cfg: cfg.clone(),
+            system: SystemKind::Gyges,
+            policy: Some(id),
+            gyges_hold: None,
+            faults: None,
+            static_deploy: false,
+            arm_cache: true,
+            trace_group: 0,
+        })
+        .collect();
+    SweepShape {
+        name: "fig-cache".into(),
+        horizon_s,
+        entries,
+        traces: vec![TraceSpec::Prefixed {
+            seed: CACHE_SEED,
+            qps: CACHE_QPS,
+            mix: PrefixMix::paper(),
+        }],
+    }
+}
+
+/// Build the `fig-cache` job list for the sweep driver.
+pub fn fig_cache_jobs(horizon_s: f64) -> Vec<super::sweep::SweepJob> {
+    cache_shape(horizon_s).materialized_jobs()
+}
+
+/// Run the cache-awareness comparison and print/emit the table
+/// (deterministic JSONL rows under `target/repro/fig-cache`).
+pub fn fig_cache(horizon_s: f64) -> Vec<Json> {
+    let jobs = fig_cache_jobs(horizon_s);
+    let results = run_sweep(&jobs);
+    sweep::warn_on_errors(&results);
+    let mut t = Table::new([
+        "policy", "hit-rate", "hit/miss blocks", "evicted", "invalid", "tput (tps)", "ttft p50",
+        "ttft p99", "completed",
+    ]);
+    let mut rows = Vec::new();
+    for out in &results {
+        // Every fig-cache job arms the cache; a missing tally means the
+        // job list was built outside this module — surface zeros rather
+        // than panic.
+        let c = out.cache.unwrap_or_default();
+        t.row([
+            out.key.clone(),
+            format!("{:.1}%", c.hit_rate() * 100.0),
+            format!("{}/{}", c.hit_blocks, c.miss_blocks),
+            format!("{}", c.evicted_blocks),
+            format!("{}", c.invalidations),
+            format!("{:.1}", out.report.throughput_tps),
+            format!("{:.2}s", out.report.ttft_p50_s),
+            format!("{:.2}s", out.report.ttft_p99_s),
+            format!("{}/{}", out.report.completed, out.report.total),
+        ]);
+        let mut row = row_json(&[
+            ("key", Json::from(out.key.as_str())),
+            ("hit_rate", Json::from(c.hit_rate())),
+            ("hit_blocks", Json::from(c.hit_blocks)),
+            ("miss_blocks", Json::from(c.miss_blocks)),
+            ("evicted_blocks", Json::from(c.evicted_blocks)),
+            ("invalidations", Json::from(c.invalidations)),
+            ("tput", Json::from(out.report.throughput_tps)),
+            ("ttft_p50", Json::from(out.report.ttft_p50_s)),
+            ("ttft_p99", Json::from(out.report.ttft_p99_s)),
+            ("completed", Json::from(out.report.completed)),
+            ("total", Json::from(out.report.total)),
+        ]);
+        if let Some(e) = &out.error {
+            row.set("error", e.as_str());
+        }
+        rows.push(row);
+    }
+    println!(
+        "fig-cache — prefix-cache-aware routing on a shared-prefix stream \
+         ({CACHE_QPS} qps, seed {CACHE_SEED:#x})"
+    );
+    t.print();
+    let _ = write_repro_rows("fig-cache", &rows);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sweep::{results_to_jsonl, run_sweep_serial};
+
+    #[test]
+    fn cache_shape_builds_the_full_grid_over_one_trace() {
+        let shape = cache_shape(120.0);
+        assert_eq!(shape.name, "fig-cache");
+        assert_eq!(shape.entries.len(), 6);
+        assert_eq!(shape.traces.len(), 1);
+        let names: Vec<&str> =
+            shape.entries.iter().map(|e| e.policy.unwrap().name()).collect();
+        assert!(names.contains(&"gyges") && names.contains(&"gyges-cache"));
+        assert!(names.contains(&"rr-cache") && names.contains(&"llf-cache"));
+        // Every entry arms the cache over trace group 0 — routing
+        // awareness is the only variable.
+        assert!(shape.entries.iter().all(|e| e.arm_cache && e.trace_group == 0));
+    }
+
+    #[test]
+    fn cache_jobs_are_deterministic() {
+        let jobs = fig_cache_jobs(45.0);
+        let a = results_to_jsonl(&run_sweep_serial(&jobs));
+        let b = results_to_jsonl(&run_sweep_serial(&jobs));
+        assert_eq!(a, b, "same prefixed stream must reproduce byte-identically");
+    }
+
+    #[test]
+    fn cache_aware_routing_hits_more_than_load_only() {
+        let results = run_sweep_serial(&fig_cache_jobs(60.0));
+        let hit_blocks = |suffix: &str| -> u64 {
+            results
+                .iter()
+                .filter(|r| r.key.ends_with(suffix))
+                .map(|r| r.cache.expect("fig-cache arms every job").hit_blocks)
+                .sum()
+        };
+        let aware = hit_blocks("-cache");
+        let blind: u64 =
+            results.iter().map(|r| r.cache.unwrap().hit_blocks).sum::<u64>() - aware;
+        for r in &results {
+            let c = r.cache.unwrap();
+            assert!(c.lookups > 0, "{}: prefixed stream must drive lookups", r.key);
+        }
+        assert!(
+            aware > blind,
+            "affinity scoring must concentrate sessions: {aware} aware vs {blind} blind hits"
+        );
+    }
+}

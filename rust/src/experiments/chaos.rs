@@ -60,6 +60,7 @@ pub fn chaos_shape(horizon_s: f64) -> SweepShape {
             gyges_hold: None,
             faults: Some(plan.clone()),
             static_deploy: false,
+            arm_cache: false,
             trace_group: 0,
         })
         .collect();
@@ -71,6 +72,7 @@ pub fn chaos_shape(horizon_s: f64) -> SweepShape {
         gyges_hold: None,
         faults: Some(plan),
         static_deploy: true,
+        arm_cache: false,
         trace_group: 0,
     });
     SweepShape {

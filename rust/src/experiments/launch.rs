@@ -394,7 +394,12 @@ pub fn trace_gen_cli(args: &Args) -> i32 {
                 return 2;
             }
         };
-        let spec = ProductionStream { seed, qps, segment_s, horizon_s: horizon, longs, slo };
+        // --prefixed overlays the shared-prefix session structure
+        // (pure in (seed, id), so resume-from-any-index still holds —
+        // see `workload::PrefixMix`).
+        let prefix = args.flag("prefixed").then(crate::workload::PrefixMix::paper);
+        let spec =
+            ProductionStream { seed, qps, segment_s, horizon_s: horizon, longs, slo, prefix };
         if !spec.qps.is_finite() || spec.qps <= 0.0 {
             // A zero rate would trip Prng::exp's assert deep in
             // generation; an infinite one would spin forever.

@@ -15,6 +15,7 @@
 //! memory per worker) before merging with the same machinery.
 
 pub mod branch;
+pub mod cache;
 pub mod chaos;
 pub mod launch;
 pub mod shard;
@@ -335,6 +336,7 @@ pub fn fig12_trace(cfg: &ClusterConfig, seed: u64, horizon_s: f64) -> Trace {
             input_len: 1000,
             output_len: out_tokens - 50 + rng.gen_range(0, 100),
             class: crate::workload::SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     // Scripted long bursts (identical for every policy): 3 longs, 12 s
@@ -348,6 +350,7 @@ pub fn fig12_trace(cfg: &ClusterConfig, seed: u64, horizon_s: f64) -> Trace {
                 input_len: long_len,
                 output_len: 256,
                 class: crate::workload::SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         t_burst += 150.0;
@@ -378,6 +381,9 @@ pub struct ShapeEntry {
     /// Pin the deployment static (no transformation) — the chaos
     /// experiment's "static" comparator.
     pub static_deploy: bool,
+    /// Arm the prefix-cache model even under a cache-blind policy
+    /// (`fig-cache` baselines measure hit-rates track-only).
+    pub arm_cache: bool,
     pub trace_group: usize,
 }
 
@@ -394,6 +400,10 @@ pub enum TraceSpec {
     /// SLO-classed production stream (`fig-slo`): the seeded segment
     /// generator with a hash-Bernoulli interactive/batch mix.
     SloClassed { seed: u64, qps: f64, interactive_frac: f64 },
+    /// Shared-prefix production stream (`fig-cache`): the seeded
+    /// segment generator with a system-prompt + multi-turn-session
+    /// prefix overlay.
+    Prefixed { seed: u64, qps: f64, mix: crate::workload::PrefixMix },
 }
 
 impl TraceSpec {
@@ -410,9 +420,20 @@ impl TraceSpec {
                     horizon_s,
                     longs: None,
                     slo: Some(crate::workload::SloMix { interactive_frac: *interactive_frac }),
+                    prefix: None,
                 }
                 .materialize()
             }
+            TraceSpec::Prefixed { seed, qps, mix } => crate::workload::ProductionStream {
+                seed: *seed,
+                qps: *qps,
+                segment_s: 30.0,
+                horizon_s,
+                longs: None,
+                slo: None,
+                prefix: Some(*mix),
+            }
+            .materialize(),
         }
     }
 }
@@ -461,6 +482,9 @@ impl SweepShape {
                 if e.static_deploy {
                     job = job.with_transformation_disabled();
                 }
+                if e.arm_cache {
+                    job = job.with_cache();
+                }
                 job
             })
             .collect()
@@ -484,6 +508,7 @@ pub fn fig12_shape(horizon_s: f64, models: &[ModelConfig]) -> SweepShape {
                 gyges_hold: None,
                 faults: None,
                 static_deploy: false,
+                arm_cache: false,
                 trace_group: g,
             });
         }
@@ -554,6 +579,7 @@ pub fn fig13_trace() -> Trace {
             input_len: 1000,
             output_len: 100,
             class: crate::workload::SloClass::Interactive,
+            prefix: Vec::new(),
         });
         id += 1;
     }
@@ -564,6 +590,7 @@ pub fn fig13_trace() -> Trace {
             input_len: 50_000,
             output_len: 256,
             class: crate::workload::SloClass::Interactive,
+            prefix: Vec::new(),
         });
         id += 1;
     }
@@ -586,6 +613,7 @@ pub fn fig13_shape() -> SweepShape {
             gyges_hold: None,
             faults: None,
             static_deploy: false,
+            arm_cache: false,
             trace_group: 0,
         })
         .collect();
@@ -657,6 +685,7 @@ pub fn fig14_shape(horizon_s: f64, qps_list: &[f64]) -> SweepShape {
                 gyges_hold: None,
                 faults: None,
                 static_deploy: false,
+                arm_cache: false,
                 trace_group: g,
             });
         }
@@ -740,6 +769,7 @@ pub fn ablation_hold_shape(horizon_s: f64) -> SweepShape {
             gyges_hold: Some(hold),
             faults: None,
             static_deploy: false,
+            arm_cache: false,
             trace_group: 0,
         })
         .collect();
@@ -779,6 +809,7 @@ pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
         "ablation-hold" => ablation_hold_shape(horizon_s),
         "fig-faults" => chaos::chaos_shape(horizon_s),
         "fig-slo" => slo::slo_shape(horizon_s),
+        "fig-cache" => cache::cache_shape(horizon_s),
         _ => return None,
     };
     // Registry aliases (fig12-qwen) keep their registry name so segment
@@ -788,8 +819,16 @@ pub fn named_sweep_shape(name: &str, horizon_s: f64) -> Option<SweepShape> {
 }
 
 /// Names [`named_sweep_jobs`] understands (usage strings, error text).
-pub const NAMED_SWEEPS: [&str; 7] =
-    ["fig12", "fig12-qwen", "fig13", "fig14", "ablation-hold", "fig-faults", "fig-slo"];
+pub const NAMED_SWEEPS: [&str; 8] = [
+    "fig12",
+    "fig12-qwen",
+    "fig13",
+    "fig14",
+    "ablation-hold",
+    "fig-faults",
+    "fig-slo",
+    "fig-cache",
+];
 
 /// Default horizon (seconds) of a named sweep when the caller passes
 /// none — the same default its canonical figure bench uses, so a

@@ -51,9 +51,9 @@ pub fn slo_cfg() -> ClusterConfig {
 pub fn slo_policy_grid() -> Vec<PolicyId> {
     let mut grid = Vec::new();
     for base in [Policy::RoundRobin, Policy::LeastLoadFirst, Policy::Gyges] {
-        grid.push(PolicyId { base, slo: false, admit: false });
-        grid.push(PolicyId { base, slo: true, admit: false });
-        grid.push(PolicyId { base, slo: true, admit: true });
+        grid.push(PolicyId { base, cache: false, slo: false, admit: false });
+        grid.push(PolicyId { base, cache: false, slo: true, admit: false });
+        grid.push(PolicyId { base, cache: false, slo: true, admit: true });
     }
     grid
 }
@@ -71,6 +71,7 @@ pub fn slo_shape(horizon_s: f64) -> SweepShape {
             gyges_hold: None,
             faults: None,
             static_deploy: false,
+            arm_cache: false,
             trace_group: 0,
         })
         .collect();
@@ -98,17 +99,30 @@ pub fn fig_slo(horizon_s: f64) -> Vec<Json> {
     let results = run_sweep(&jobs);
     sweep::warn_on_errors(&results);
     let mut t = Table::new([
-        "policy", "tput (tps)", "ttft p50", "ttft p99", "completed", "preempts", "admit-drops",
-        "dropped",
+        "policy", "tput (tps)", "ttft p50", "ttft p99", "int p99", "batch p99", "int slo",
+        "completed", "preempts", "admit-drops", "dropped",
     ]);
     let mut rows = Vec::new();
     for out in &results {
         let c = &out.counters;
+        // The classed stream guarantees a per-class breakdown; degrade
+        // gracefully (dashes) rather than panic if a run saw no batch.
+        let (int_p99, bat_p99, int_slo) = match &out.report.classes {
+            Some(k) => (
+                format!("{:.2}s", k.interactive_ttft_p99_s),
+                format!("{:.2}s", k.batch_ttft_p99_s),
+                format!("{:.1}%", k.interactive_slo * 100.0),
+            ),
+            None => ("-".into(), "-".into(), "-".into()),
+        };
         t.row([
             out.key.clone(),
             format!("{:.1}", out.report.throughput_tps),
             format!("{:.2}s", out.report.ttft_p50_s),
             format!("{:.2}s", out.report.ttft_p99_s),
+            int_p99,
+            bat_p99,
+            int_slo,
             format!("{}/{}", out.report.completed, out.report.total),
             format!("{}", c.preemptions),
             format!("{}", c.admission_dropped),
@@ -126,6 +140,14 @@ pub fn fig_slo(horizon_s: f64) -> Vec<Json> {
             ("admission_dropped", Json::from(c.admission_dropped)),
             ("dropped", Json::from(c.dropped)),
         ]);
+        if let Some(k) = &out.report.classes {
+            row.set("interactive_ttft_p50", k.interactive_ttft_p50_s)
+                .set("interactive_ttft_p99", k.interactive_ttft_p99_s)
+                .set("interactive_slo", k.interactive_slo)
+                .set("batch_ttft_p50", k.batch_ttft_p50_s)
+                .set("batch_ttft_p99", k.batch_ttft_p99_s)
+                .set("batch_slo", k.batch_slo);
+        }
         if let Some(e) = &out.error {
             row.set("error", e.as_str());
         }

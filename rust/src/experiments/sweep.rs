@@ -98,6 +98,20 @@ impl JobTrace {
                     bytes.push(0x04);
                     bytes.extend_from_slice(&m.interactive_frac.to_bits().to_le_bytes());
                 }
+                // And for the shared-prefix overlay: prefix-free
+                // streams keep their historical hash.
+                if let Some(p) = &s.prefix {
+                    bytes.push(0x05);
+                    for v in [
+                        p.prompts,
+                        p.prompt_blocks,
+                        p.sessions,
+                        p.session_blocks,
+                        p.session_frac.to_bits(),
+                    ] {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
             }
         }
     }
@@ -127,6 +141,12 @@ pub struct SweepJob {
     /// Pin the deployment static (no scale-up/down) — the "static"
     /// comparator in the chaos experiment.
     pub disable_transformation: bool,
+    /// Arm the prefix-cache model even for cache-blind policies —
+    /// `fig-cache` measures every policy under the same cache physics
+    /// and only varies routing awareness. `-cache` policies arm it
+    /// implicitly; `false` on a plain policy is the historical
+    /// cache-free simulation, byte for byte.
+    pub arm_cache: bool,
 }
 
 impl SweepJob {
@@ -157,6 +177,7 @@ impl SweepJob {
             gyges_hold: None,
             faults: None,
             disable_transformation: false,
+            arm_cache: false,
         }
     }
 
@@ -177,6 +198,13 @@ impl SweepJob {
     /// never fires.
     pub fn with_transformation_disabled(mut self) -> SweepJob {
         self.disable_transformation = true;
+        self
+    }
+
+    /// Arm the prefix-cache model regardless of the policy's `-cache`
+    /// flag (track-only for cache-blind baselines).
+    pub fn with_cache(mut self) -> SweepJob {
+        self.arm_cache = true;
         self
     }
 
@@ -205,6 +233,8 @@ pub struct SweepResult {
     pub tps_series: Vec<(u64, u64)>,
     /// Stringified [`crate::coordinator::SimError`], if the run was cut.
     pub error: Option<String>,
+    /// Prefix-cache tallies, `None` when the job never armed the cache.
+    pub cache: Option<crate::cache::CacheCounters>,
 }
 
 impl SweepResult {
@@ -253,6 +283,19 @@ impl SweepResult {
                 "error",
                 self.error.as_deref().map(Json::from).unwrap_or(Json::Null),
             );
+        // Absence-encoded: rows from cache-free jobs (every pre-cache
+        // figure) serialize byte-identically to before the field.
+        if let Some(c) = &self.cache {
+            let mut cj = Json::obj();
+            cj.set("lookups", c.lookups)
+                .set("hit_blocks", c.hit_blocks)
+                .set("miss_blocks", c.miss_blocks)
+                .set("inserted_blocks", c.inserted_blocks)
+                .set("evicted_blocks", c.evicted_blocks)
+                .set("invalidations", c.invalidations)
+                .set("hit_rate", c.hit_rate());
+            o.set("cache", cj);
+        }
         o
     }
 }
@@ -282,6 +325,9 @@ pub fn build_job_sim(job: &SweepJob) -> ClusterSim {
     if let Some(p) = job.policy {
         sim = sim.with_policy(p);
     }
+    if job.arm_cache {
+        sim.arm_cache();
+    }
     if let Some(hold) = job.gyges_hold {
         sim.set_gyges_hold(hold);
     }
@@ -304,6 +350,7 @@ pub fn outcome_to_result(key: &str, out: crate::coordinator::SimOutcome) -> Swee
         report: out.report,
         counters: out.counters,
         error: out.error.map(|e| e.to_string()),
+        cache: out.cache,
     }
 }
 

@@ -29,6 +29,7 @@
 
 pub mod analysis;
 pub mod baselines;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -9,14 +9,16 @@
 //!                     [--horizon SECS] [--seed N] [--config FILE]
 //!   gyges serve-real  [--artifacts DIR] [--shorts N] [--longs N]
 //!   gyges repro       <table1|table2|table3|fig2|fig9|fig10|fig11|fig12|
-//!                      fig13|fig14|fig-faults|fig-slo|static|all>
+//!                      fig13|fig14|fig-faults|fig-slo|fig-cache|static|all>
 //!                     [--horizon SECS]
 //!   gyges chaos       [--horizon SECS]   (fig-faults: goodput/SLO/drops
 //!                     for gyges|rr|llf|static under a seeded fault storm)
 //!   gyges slo         [--horizon SECS]   (fig-slo: SLO lanes + admission
 //!                     control vs plain policies on a classed stream)
+//!   gyges cache       [--horizon SECS]   (fig-cache: prefix-cache-aware
+//!                     routing vs plain policies on a shared-prefix stream)
 //!   gyges sweep-shard <fig12|fig12-qwen|fig13|fig14|ablation-hold|
-//!                      fig-faults|fig-slo> [--shard K/N] [--horizon SECS]
+//!                      fig-faults|fig-slo|fig-cache> [--shard K/N] [--horizon SECS]
 //!                     [--out-dir DIR] [--stream-dir DIR]
 //!   gyges sweep-merge <sweep> [--dir DIR] [--out FILE]
 //!                     [--expect-horizon SECS]
@@ -88,6 +90,7 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("slo") => cmd_slo(&args),
+        Some("cache") => cmd_cache(&args),
         Some("sweep-shard") => cmd_sweep_shard(&args),
         Some("sweep-merge") => cmd_sweep_merge(&args),
         Some("trace-gen") => gyges::experiments::launch::trace_gen_cli(&args),
@@ -99,9 +102,9 @@ fn main() {
         Some("lint") => gyges::analysis::lint_cli(&args),
         _ => {
             eprintln!(
-                "usage: gyges <info|serve|serve-real|repro|chaos|slo|sweep-shard|sweep-merge|\
-                 trace-gen|sweep-launch|snapshot|resume|branch|bench-gate|lint> [options]  \
-                 (see rust/src/main.rs)"
+                "usage: gyges <info|serve|serve-real|repro|chaos|slo|cache|sweep-shard|\
+                 sweep-merge|trace-gen|sweep-launch|snapshot|resume|branch|bench-gate|lint> \
+                 [options]  (see rust/src/main.rs)"
             );
             2
         }
@@ -414,6 +417,7 @@ fn cmd_repro(args: &Args) -> i32 {
         "fig14" => drop(exp::fig14(horizon, &[2.0, 6.0, 10.0])),
         "fig-faults" => drop(exp::chaos::fig_faults(horizon)),
         "fig-slo" => drop(exp::slo::fig_slo(horizon)),
+        "fig-cache" => drop(exp::cache::fig_cache(horizon)),
         "static" => drop(exp::static_hybrid_compare(horizon)),
         other => eprintln!("unknown experiment {other:?}"),
     };
@@ -448,6 +452,17 @@ fn cmd_slo(args: &Args) -> i32 {
     let horizon =
         args.parsed_or("horizon", gyges::experiments::named_sweep_default_horizon("fig-slo"));
     gyges::experiments::slo::fig_slo(horizon);
+    println!("\nJSON rows written under target/repro/");
+    0
+}
+
+/// The cache-awareness experiment: prefix-cache-affinity scoring vs
+/// plain policies on a shared-prefix stream (`fig-cache` in the
+/// registry).
+fn cmd_cache(args: &Args) -> i32 {
+    let horizon =
+        args.parsed_or("horizon", gyges::experiments::named_sweep_default_horizon("fig-cache"));
+    gyges::experiments::cache::fig_cache(horizon);
     println!("\nJSON rows written under target/repro/");
     0
 }

@@ -7,4 +7,4 @@ pub mod report;
 
 pub use gate::{GateReport, GateVerdict};
 pub use recorder::{Recorder, RequestRecord};
-pub use report::RunReport;
+pub use report::{ClassReport, RunReport};

@@ -11,6 +11,7 @@
 
 use crate::sim::clock::{SimDuration, SimTime};
 use crate::util::stats::Summary;
+use crate::workload::SloClass;
 
 /// Lifecycle timestamps of one request.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -31,6 +32,9 @@ pub struct RequestRecord {
     /// exactly the per-second credits of the lost run — without it the
     /// cluster `tps_buckets` kept phantom counts (the PR 6 caveat).
     pub tok_buckets: Vec<(u32, u32)>,
+    /// SLO class, for the per-class report breakdown (defaults to
+    /// `Interactive` — the only class classless traces carry).
+    pub class: SloClass,
 }
 
 impl RequestRecord {
@@ -99,7 +103,21 @@ impl Recorder {
     }
 
     pub fn on_arrival(&mut self, id: u64, at: SimTime, input_len: u64, output_len: u64) {
-        let record = RequestRecord { arrival: at, input_len, output_len, ..Default::default() };
+        self.on_arrival_classed(id, at, input_len, output_len, SloClass::Interactive);
+    }
+
+    /// [`Recorder::on_arrival`] with an explicit SLO class (the cluster
+    /// path; the class-free form exists for classless callers/tests).
+    pub fn on_arrival_classed(
+        &mut self,
+        id: u64,
+        at: SimTime,
+        input_len: u64,
+        output_len: u64,
+        class: SloClass,
+    ) {
+        let record =
+            RequestRecord { arrival: at, input_len, output_len, class, ..Default::default() };
         let slot = self.slot_mut(id);
         match slot.replace(record) {
             // Re-registering an id unwinds the old record's contributions
@@ -207,6 +225,22 @@ impl Recorder {
         Summary::of(&xs)
     }
 
+    /// TTFT summary in seconds restricted to one SLO class.
+    pub fn ttft_summary_class(&self, class: SloClass) -> Summary {
+        let xs: Vec<f64> = self
+            .records()
+            .filter(|(_, r)| r.class == class)
+            .filter_map(|(_, r)| r.ttft())
+            .map(|d| d.as_secs_f64())
+            .collect();
+        Summary::of(&xs)
+    }
+
+    /// Occupied records carrying `class`.
+    pub fn class_total(&self, class: SloClass) -> usize {
+        self.records().filter(|(_, r)| r.class == class).count()
+    }
+
     /// TPOT summary in seconds.
     pub fn tpot_summary(&self) -> Summary {
         let xs: Vec<f64> = self
@@ -220,10 +254,24 @@ impl Recorder {
     /// Fraction of requests meeting the paper's SLOs (TTFT<10 s,
     /// TPOT<100 ms).
     pub fn slo_attainment(&self, ttft_s: f64, tpot_s: f64) -> f64 {
+        self.attainment_where(ttft_s, tpot_s, |_| true)
+    }
+
+    /// [`Recorder::slo_attainment`] restricted to one SLO class.
+    pub fn slo_attainment_class(&self, class: SloClass, ttft_s: f64, tpot_s: f64) -> f64 {
+        self.attainment_where(ttft_s, tpot_s, |r| r.class == class)
+    }
+
+    fn attainment_where(
+        &self,
+        ttft_s: f64,
+        tpot_s: f64,
+        keep: impl Fn(&RequestRecord) -> bool,
+    ) -> f64 {
         let mut done = 0usize;
         let mut ok = 0usize;
         for (_, r) in self.records() {
-            if r.finished.is_none() {
+            if r.finished.is_none() || !keep(r) {
                 continue;
             }
             done += 1;
@@ -357,6 +405,32 @@ mod tests {
         assert!(rec.get(1).unwrap().tpot().is_none());
         assert_eq!(rec.completed(), 0);
         assert_eq!(rec.total(), 1);
+    }
+
+    #[test]
+    fn class_breakdown_separates_summaries() {
+        let mut rec = Recorder::new();
+        // Fast interactive request, slow batch request.
+        rec.on_arrival_classed(1, t(0.0), 10, 2, SloClass::Interactive);
+        rec.on_first_token(1, t(1.0));
+        rec.on_token(1, t(1.05));
+        rec.on_finish(1, t(1.05));
+        rec.on_arrival_classed(2, t(0.0), 10, 2, SloClass::Batch);
+        rec.on_first_token(2, t(20.0));
+        rec.on_token(2, t(20.05));
+        rec.on_finish(2, t(20.05));
+        assert_eq!(rec.class_total(SloClass::Interactive), 1);
+        assert_eq!(rec.class_total(SloClass::Batch), 1);
+        let int = rec.ttft_summary_class(SloClass::Interactive);
+        let bat = rec.ttft_summary_class(SloClass::Batch);
+        assert!((int.p50 - 1.0).abs() < 1e-9 && (bat.p50 - 20.0).abs() < 1e-9);
+        // Global attainment blends the classes; the split isolates them.
+        assert!((rec.slo_attainment(10.0, 0.1) - 0.5).abs() < 1e-9);
+        assert!((rec.slo_attainment_class(SloClass::Interactive, 10.0, 0.1) - 1.0).abs() < 1e-9);
+        assert!(rec.slo_attainment_class(SloClass::Batch, 10.0, 0.1).abs() < 1e-9);
+        // The class-free entry point records Interactive.
+        rec.on_arrival(3, t(0.0), 10, 2);
+        assert_eq!(rec.class_total(SloClass::Interactive), 2);
     }
 
     #[test]

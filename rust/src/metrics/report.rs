@@ -3,6 +3,22 @@
 
 use super::recorder::Recorder;
 use crate::util::json::Json;
+use crate::workload::SloClass;
+
+/// Per-class TTFT/SLO breakdown. Present on a [`RunReport`] only when
+/// the run actually served batch work — classless runs (every paper
+/// figure) report exactly as they did before the field existed.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    pub interactive_total: usize,
+    pub interactive_ttft_p50_s: f64,
+    pub interactive_ttft_p99_s: f64,
+    pub interactive_slo: f64,
+    pub batch_total: usize,
+    pub batch_ttft_p50_s: f64,
+    pub batch_ttft_p99_s: f64,
+    pub batch_slo: f64,
+}
 
 /// Headline numbers of one run.
 #[derive(Clone, Debug)]
@@ -16,12 +32,32 @@ pub struct RunReport {
     pub completed: usize,
     pub total: usize,
     pub slo_attainment: f64,
+    /// `None` unless the run served both SLO classes.
+    pub classes: Option<ClassReport>,
 }
 
 impl RunReport {
     pub fn from_recorder(label: &str, rec: &Recorder) -> RunReport {
+        let ttft_s = crate::config::calib::workload::SLO_TTFT_S;
+        let tpot_s = crate::config::calib::workload::SLO_TPOT_S;
         let ttft = rec.ttft_summary();
         let tpot = rec.tpot_summary();
+        let classes = if rec.class_total(SloClass::Batch) > 0 {
+            let int = rec.ttft_summary_class(SloClass::Interactive);
+            let bat = rec.ttft_summary_class(SloClass::Batch);
+            Some(ClassReport {
+                interactive_total: rec.class_total(SloClass::Interactive),
+                interactive_ttft_p50_s: int.p50,
+                interactive_ttft_p99_s: int.p99,
+                interactive_slo: rec.slo_attainment_class(SloClass::Interactive, ttft_s, tpot_s),
+                batch_total: rec.class_total(SloClass::Batch),
+                batch_ttft_p50_s: bat.p50,
+                batch_ttft_p99_s: bat.p99,
+                batch_slo: rec.slo_attainment_class(SloClass::Batch, ttft_s, tpot_s),
+            })
+        } else {
+            None
+        };
         RunReport {
             label: label.to_string(),
             throughput_tps: rec.throughput_tps(),
@@ -31,10 +67,8 @@ impl RunReport {
             tpot_p99_s: tpot.p99,
             completed: rec.completed(),
             total: rec.total(),
-            slo_attainment: rec.slo_attainment(
-                crate::config::calib::workload::SLO_TTFT_S,
-                crate::config::calib::workload::SLO_TPOT_S,
-            ),
+            slo_attainment: rec.slo_attainment(ttft_s, tpot_s),
+            classes,
         }
     }
 
@@ -49,6 +83,19 @@ impl RunReport {
             .set("completed", self.completed)
             .set("total", self.total)
             .set("slo_attainment", self.slo_attainment);
+        // Absence-encoded: classless runs serialize exactly as before.
+        if let Some(c) = &self.classes {
+            let mut cj = Json::obj();
+            cj.set("interactive_total", c.interactive_total)
+                .set("interactive_ttft_p50_s", c.interactive_ttft_p50_s)
+                .set("interactive_ttft_p99_s", c.interactive_ttft_p99_s)
+                .set("interactive_slo", c.interactive_slo)
+                .set("batch_total", c.batch_total)
+                .set("batch_ttft_p50_s", c.batch_ttft_p50_s)
+                .set("batch_ttft_p99_s", c.batch_ttft_p99_s)
+                .set("batch_slo", c.batch_slo);
+            o.set("classes", cj);
+        }
         o
     }
 
@@ -85,5 +132,27 @@ mod tests {
         let j = rep.to_json();
         assert_eq!(j.get("label").unwrap().as_str(), Some("test"));
         assert!(rep.line().contains("test"));
+        // Classless run: no per-class breakdown, no JSON key.
+        assert!(rep.classes.is_none());
+        assert!(j.get("classes").is_none());
+    }
+
+    #[test]
+    fn classed_run_reports_per_class_percentiles() {
+        let mut rec = Recorder::new();
+        rec.on_arrival_classed(1, SimTime::ZERO, 10, 2, SloClass::Interactive);
+        rec.on_first_token(1, SimTime::from_secs_f64(1.0));
+        rec.on_finish(1, SimTime::from_secs_f64(1.0));
+        rec.on_arrival_classed(2, SimTime::ZERO, 10, 2, SloClass::Batch);
+        rec.on_first_token(2, SimTime::from_secs_f64(5.0));
+        rec.on_finish(2, SimTime::from_secs_f64(5.0));
+        let rep = RunReport::from_recorder("classed", &rec);
+        let c = rep.classes.as_ref().expect("batch work forces the breakdown");
+        assert_eq!((c.interactive_total, c.batch_total), (1, 1));
+        assert!((c.interactive_ttft_p50_s - 1.0).abs() < 1e-9);
+        assert!((c.batch_ttft_p50_s - 5.0).abs() < 1e-9);
+        let j = rep.to_json();
+        let cj = j.get("classes").expect("classes key present when classed");
+        assert_eq!(cj.get("batch_total").and_then(|v| v.as_u64()), Some(1));
     }
 }

@@ -205,9 +205,15 @@ impl<E> Calendar<E> {
         // (all earlier days are proven empty, and within a day the
         // bucket heap already orders by (time, seq)). A bucket that is
         // empty — or whose top belongs to a later day — proves the
-        // walked day empty, which lets the floor advance.
+        // walked day empty, which lets the floor advance. One revolution
+        // of consecutive days covers every bucket exactly once (the
+        // count is a power of two), so the walk doubles as a full scan
+        // of the bucket tops: if no top lands on its walked day, the
+        // best top seen IS the global minimum (entries sparser than one
+        // revolution), with no second pass.
         let nbuckets = self.buckets.len();
         let mut d = self.floor_day.get();
+        let mut best: Option<(SimTime, u64, u32)> = None;
         for _ in 0..nbuckets {
             let b = self.bucket_of_day(d);
             if let Some(top) = self.buckets[b].peek() {
@@ -218,27 +224,32 @@ impl<E> Calendar<E> {
                     self.min_hint.set(Some(hit));
                     return Some(hit);
                 }
-            }
-            d += 1;
-            self.floor_day.set(d);
-        }
-        // One full revolution without a hit: every remaining entry is at
-        // least a revolution past the floor. Scan the bucket tops (each
-        // is its bucket's minimum) for the exact (time, seq) global min.
-        let mut best: Option<(SimTime, u64, u32)> = None;
-        for (b, heap) in self.buckets.iter().enumerate() {
-            if let Some(top) = heap.peek() {
                 let cand = (top.time, top.seq, b as u32);
                 if best.map(|(t, s, _)| (cand.0, cand.1) < (t, s)).unwrap_or(true) {
                     best = Some(cand);
                 }
             }
+            d += 1;
+            self.floor_day.set(d);
         }
         // gyges-lint: allow(D06) find_min is only reached with len > 0, so some bucket is nonempty
         let hit = best.expect("len > 0 but no bucket has entries");
         self.floor_day.set(self.day(hit.0));
         self.min_hint.set(Some(hit));
         Some(hit)
+    }
+
+    /// Clock hook from [`EventQueue::advance_to`]: an idle-gap advance
+    /// over an EMPTY calendar jumps the walk floor to the advanced day,
+    /// so the next repopulation's min-walk skips every day the gap
+    /// proved empty instead of revving through them. Only legal when
+    /// nothing is queued — already-queued entries may legally precede
+    /// the advanced clock (`pop_can_move_clock_backwards_after_advance`)
+    /// and bound the floor from below.
+    fn advance_to(&self, t: SimTime) {
+        if self.len == 0 && self.day(t) > self.floor_day.get() {
+            self.floor_day.set(self.day(t));
+        }
     }
 
     fn pop_min(&mut self) -> Option<Entry<E>> {
@@ -382,10 +393,15 @@ impl<E> EventQueue<E> {
     /// Advance the clock to `t` without popping (never moves backwards).
     /// Used when the driver consumes work from a side stream (e.g. a
     /// streamed trace arrival) so that subsequent past-time pushes still
-    /// clamp against true simulated time.
+    /// clamp against true simulated time. On the calendar backend an
+    /// empty-queue advance also fast-forwards the min-walk floor, so a
+    /// long idle gap is skipped lazily instead of walked day by day.
     pub fn advance_to(&mut self, t: SimTime) {
         if t > self.now {
             self.now = t;
+            if let Backend::Calendar(c) = &self.backend {
+                c.advance_to(t);
+            }
         }
     }
 
@@ -550,6 +566,27 @@ mod tests {
             let (t, _) = q.pop().unwrap();
             assert_eq!(t, SimTime(10), "{}", b.name());
             assert_eq!(q.now(), SimTime(10), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn advance_over_idle_gap_then_repopulate() {
+        // An empty-queue advance over many calendar days must not
+        // change observable behavior (it only fast-forwards the
+        // calendar's walk floor): repopulating after the gap pops in
+        // order on both backends, and past pushes clamp to the gap end.
+        for b in BOTH {
+            let mut q = EventQueue::with_backend(b);
+            q.push(SimTime(1 << 20), 1);
+            assert_eq!(q.pop().map(|(_, v)| v), Some(1));
+            q.advance_to(SimTime(1 << 40)); // queue is empty across the gap
+            q.push(SimTime(7), 2); // past push: clamps to the advanced clock
+            q.push(SimTime((1 << 40) + 5), 3);
+            let (t, v) = q.pop().unwrap();
+            assert_eq!((t, v), (SimTime(1 << 40), 2), "{}", b.name());
+            let (t, v) = q.pop().unwrap();
+            assert_eq!((t, v), (SimTime((1 << 40) + 5), 3), "{}", b.name());
+            assert!(q.pop().is_none(), "{}", b.name());
         }
     }
 

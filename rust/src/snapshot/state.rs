@@ -58,6 +58,7 @@
 //! are rejected loudly at load — same integrity discipline as the PR 3
 //! shard manifests and PR 4 segment files.
 
+use crate::cache::ClusterCache;
 use crate::config::ClusterConfig;
 use crate::coordinator::PolicyState;
 use crate::coordinator::SimCounters;
@@ -68,8 +69,11 @@ use crate::util::hash::{fnv1a, hex64};
 use crate::util::json::Json;
 use crate::workload::{FeedState, SloClass};
 
-/// Snapshot schema version this module reads and writes.
-pub const SNAPSHOT_SCHEMA_VERSION: u64 = 4;
+/// Snapshot schema version this module reads and writes. v5 added the
+/// prefix-cache state (request prefix paths + cached-token credits, the
+/// per-instance radix trees, the policy `cache` flag); older documents
+/// are rejected rather than half-restored.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 5;
 
 /// One queued runtime event (arrivals are never queue events — they
 /// live in the feed cursor).
@@ -114,6 +118,10 @@ pub struct ReqSnap {
     pub phase: String,
     /// SLO class — what `-slo` preemption and `-admit` deadlines key on.
     pub class: SloClass,
+    /// Shared-prefix block path (empty for prefix-free traces).
+    pub prefix: Vec<u64>,
+    /// Prefill tokens credited by the prefix cache at placement.
+    pub cached_tokens: u64,
 }
 
 /// A backlogged request with its first-deferral stamp and retry
@@ -199,6 +207,8 @@ pub struct SimState {
     pub stall_until: Vec<SimTime>,
     pub recorder: RecorderSnap,
     pub feed: FeedState,
+    /// The prefix-cache model, `None` when the run never armed it.
+    pub cache: Option<ClusterCache>,
 }
 
 /// Where this snapshot came from, for the resume/branch CLIs: which
@@ -287,6 +297,14 @@ fn req_to_json(r: &ReqSnap) -> Json {
     if r.class == SloClass::Batch {
         o.set("class", r.class.name());
     }
+    // Prefix-free requests encode as absence, as does a zero cache
+    // credit — cache-off snapshots carry no trace of the feature.
+    if !r.prefix.is_empty() {
+        o.set("prefix", Json::Arr(r.prefix.iter().map(|&b| Json::from(b)).collect()));
+    }
+    if r.cached_tokens > 0 {
+        o.set("cached_tokens", r.cached_tokens);
+    }
     o
 }
 
@@ -299,6 +317,19 @@ fn req_from_json(j: &Json) -> Result<ReqSnap, String> {
             SloClass::by_name(s).ok_or_else(|| format!("request: unknown class {s:?}"))?
         }
     };
+    let prefix = match j.get("prefix") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or("request: bad prefix")?
+            .iter()
+            .map(|b| b.as_u64().ok_or("request: bad prefix block"))
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let cached_tokens = match j.get("cached_tokens") {
+        None | Some(Json::Null) => 0,
+        Some(v) => v.as_u64().ok_or("request: bad cached_tokens")?,
+    };
     Ok(ReqSnap {
         id: num("id")?,
         arrival: SimTime(num("arrival_ns")?),
@@ -307,6 +338,8 @@ fn req_from_json(j: &Json) -> Result<ReqSnap, String> {
         generated: num("generated")?,
         phase: j.req_str("phase", "request")?.to_string(),
         class,
+        prefix,
+        cached_tokens,
     })
 }
 
@@ -390,11 +423,16 @@ fn policy_to_json(p: &PolicyState) -> Json {
         PolicyState::LeastLoad => {
             o.set("kind", "llf");
         }
-        PolicyState::Pipeline { slo, admit, base } => {
+        PolicyState::Pipeline { cache, slo, admit, base } => {
             o.set("kind", "pipeline")
                 .set("slo", *slo)
                 .set("admit", *admit)
                 .set("base", policy_to_json(base));
+            // Absence-encoded: cache-free pipelines serialize exactly
+            // as they did before the flag existed.
+            if *cache {
+                o.set("cache", true);
+            }
         }
     }
     o
@@ -431,6 +469,7 @@ fn policy_from_json(j: &Json) -> Result<PolicyState, String> {
         }),
         Some("llf") => Ok(PolicyState::LeastLoad),
         Some("pipeline") => Ok(PolicyState::Pipeline {
+            cache: j.get("cache").and_then(|v| v.as_bool()).unwrap_or(false),
             slo: j.req_bool("slo", "policy")?,
             admit: j.req_bool("admit", "policy")?,
             base: Box::new(policy_from_json(j.get("base").ok_or("policy: missing base")?)?),
@@ -578,6 +617,10 @@ fn recorder_to_json(r: &RecorderSnap) -> Json {
                 .set("input", rec.input_len)
                 .set("output", rec.output_len)
                 .set("generated", rec.generated);
+            // Interactive encodes as absence, like ReqSnap's class.
+            if rec.class == SloClass::Batch {
+                o.set("class", rec.class.name());
+            }
             // Per-second TPS credits as [second, count] pairs (schema
             // v3); omitted when the request never generated a token.
             if !rec.tok_buckets.is_empty() {
@@ -621,6 +664,13 @@ fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
                 tok_buckets.push((sec as u32, c as u32));
             }
         }
+        let class = match row.get("class") {
+            None | Some(Json::Null) => SloClass::Interactive,
+            Some(v) => {
+                let s = v.as_str().ok_or("recorder row: bad class")?;
+                SloClass::by_name(s).ok_or_else(|| format!("recorder row: unknown class {s:?}"))?
+            }
+        };
         rows.push((
             num("id")?,
             RequestRecord {
@@ -631,6 +681,7 @@ fn recorder_from_json(j: &Json) -> Result<RecorderSnap, String> {
                 output_len: num("output")?,
                 generated: num("generated")?,
                 tok_buckets,
+                class,
             },
         ));
     }
@@ -713,6 +764,11 @@ fn state_to_json(s: &SimState) -> Json {
         .set("stall_until_ns", times(&s.stall_until))
         .set("recorder", recorder_to_json(&s.recorder))
         .set("feed", s.feed.to_json());
+    // Unarmed caches encode as absence — a cache-off snapshot is
+    // byte-for-byte what it would have been without the subsystem.
+    if let Some(c) = &s.cache {
+        o.set("cache", c.to_json());
+    }
     o
 }
 
@@ -768,6 +824,10 @@ fn state_from_json(j: &Json) -> Result<SimState, String> {
         stall_until: times("stall_until_ns")?,
         recorder: recorder_from_json(j.get("recorder").ok_or("state: missing recorder")?)?,
         feed: FeedState::from_json(j.get("feed").ok_or("state: missing feed")?)?,
+        cache: match j.get("cache") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(ClusterCache::from_json(v)?),
+        },
     })
 }
 
@@ -921,6 +981,7 @@ mod tests {
     #[test]
     fn pipeline_policy_state_roundtrips_through_json() {
         let composed = PolicyState::Pipeline {
+            cache: true,
             slo: true,
             admit: true,
             base: Box::new(PolicyState::Gyges {

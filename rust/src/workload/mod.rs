@@ -10,7 +10,8 @@ pub mod trace;
 pub use arrivals::{BurstyProcess, Poisson};
 pub use dist::LengthModel;
 pub use source::{
-    ArrivalFeed, ChunkedTrace, FeedState, LongBursts, MaterializedSource, ProductionStream,
-    SegmentDir, SegmentFileSource, SloMix, SourceCursor, StreamSource, TraceSegment, TraceSource,
+    prefix_for, ArrivalFeed, ChunkedTrace, FeedState, LongBursts, MaterializedSource, PrefixMix,
+    ProductionStream, SegmentDir, SegmentFileSource, SloMix, SourceCursor, StreamSource,
+    TraceSegment, TraceSource,
 };
 pub use trace::{SloClass, Trace, TraceRequest};

@@ -197,6 +197,15 @@ impl SourceCursor {
                     mj.set("interactive_frac", m.interactive_frac);
                     s.set("slo", mj);
                 }
+                if let Some(p) = &spec.prefix {
+                    let mut pj = Json::obj();
+                    pj.set("prompts", p.prompts)
+                        .set("prompt_blocks", p.prompt_blocks)
+                        .set("sessions", p.sessions)
+                        .set("session_blocks", p.session_blocks)
+                        .set("session_frac", p.session_frac);
+                    s.set("prefix", pj);
+                }
                 o.set("kind", "stream").set("spec", s).set("next", *next).set("next_id", *next_id);
             }
         }
@@ -245,6 +254,16 @@ impl SourceCursor {
                     None | Some(Json::Null) => None,
                     Some(m) => Some(SloMix { interactive_frac: float(m, "interactive_frac")? }),
                 };
+                let prefix = match s.get("prefix") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(PrefixMix {
+                        prompts: num(p, "prompts")?,
+                        prompt_blocks: num(p, "prompt_blocks")?,
+                        sessions: num(p, "sessions")?,
+                        session_blocks: num(p, "session_blocks")?,
+                        session_frac: float(p, "session_frac")?,
+                    }),
+                };
                 SourceCursor::Stream {
                     spec: ProductionStream {
                         seed: num(s, "seed")?,
@@ -253,6 +272,7 @@ impl SourceCursor {
                         horizon_s: float(s, "horizon_s")?,
                         longs,
                         slo,
+                        prefix,
                     },
                     next: num(j, "next")? as usize,
                     next_id: num(j, "next_id")?,
@@ -454,6 +474,107 @@ pub fn class_for(seed: u64, id: u64, interactive_frac: f64) -> SloClass {
     }
 }
 
+/// Salts decorrelating the prefix overlay's hash sub-streams from each
+/// other and from [`class_for`] / the arrival RNGs.
+const PREFIX_DRAW_SALT: u64 = 0x5E55_1014_D4A3_77E1;
+const PREFIX_SESSION_SALT: u64 = 0x5E55_1014_B10C_4AE5;
+const PREFIX_DEPTH_SALT: u64 = 0x5E55_1014_DE97_0003;
+const PREFIX_BLOCK_SALT: u64 = 0x5E55_1014_B70C_1D5A;
+
+/// Shared-prefix overlay of a production stream: the session /
+/// system-prompt structure dominating production traffic. Each request
+/// independently joins a session with probability `session_frac`
+/// (hash-Bernoulli over `(seed, id)`, like [`SloMix`]); a session
+/// member's prefix path is its session's system-prompt blocks followed
+/// by the first `depth` blocks of the session's conversation history
+/// (depth drawn uniformly in `1..=session_blocks`), so two requests of
+/// the same session share the prompt blocks plus their common history
+/// prefix. Everything is a pure function of `(seed, id)` — segments
+/// regenerate and cursors resume with no overlay state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefixMix {
+    /// Distinct system prompts (sessions map onto them round-robin).
+    pub prompts: u64,
+    /// Prefix blocks per system prompt.
+    pub prompt_blocks: u64,
+    /// Concurrent multi-turn sessions.
+    pub sessions: u64,
+    /// Maximum per-session conversation depth, in blocks.
+    pub session_blocks: u64,
+    /// Probability a request belongs to a session (the rest carry no
+    /// prefix path at all).
+    pub session_frac: f64,
+}
+
+impl PrefixMix {
+    /// The fig-cache default: a few heavyweight system prompts, enough
+    /// sessions that no single instance can hold them all, and an 80%
+    /// participation rate.
+    pub fn paper() -> PrefixMix {
+        PrefixMix {
+            prompts: 4,
+            prompt_blocks: 16,
+            sessions: 64,
+            session_blocks: 24,
+            session_frac: 0.8,
+        }
+    }
+}
+
+/// Uniform `[0, 1)` hash draw over `(seed, id)` (top 53 bits, exact in
+/// f64) — the same construction [`class_for`] uses, salted per stream.
+fn hash_uniform(seed: u64, id: u64) -> f64 {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&seed.to_le_bytes());
+    bytes[8..].copy_from_slice(&id.to_le_bytes());
+    (fnv1a(&bytes) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Seeded prefix-block id: 48 bits so every id round-trips exactly
+/// through the JSONL f64 integer encoding (`Json::as_u64` rejects
+/// ≥ 9e15) and through snapshot payloads.
+fn prefix_block(seed: u64, kind: u8, entity: u64, j: u64) -> u64 {
+    let mut bytes = [0u8; 25];
+    bytes[..8].copy_from_slice(&(seed ^ PREFIX_BLOCK_SALT).to_le_bytes());
+    bytes[8] = kind;
+    bytes[9..17].copy_from_slice(&entity.to_le_bytes());
+    bytes[17..25].copy_from_slice(&j.to_le_bytes());
+    fnv1a(&bytes) >> 16
+}
+
+/// Deterministic prefix path for request `id` of stream `seed` — empty
+/// for non-participants, otherwise prompt blocks ++ session-history
+/// blocks.
+pub fn prefix_for(seed: u64, id: u64, m: &PrefixMix) -> Vec<u64> {
+    if m.prompt_blocks == 0 && m.session_blocks == 0 {
+        return Vec::new();
+    }
+    if hash_uniform(seed ^ PREFIX_DRAW_SALT, id) >= m.session_frac {
+        return Vec::new();
+    }
+    let mut sid = [0u8; 16];
+    sid[..8].copy_from_slice(&(seed ^ PREFIX_SESSION_SALT).to_le_bytes());
+    sid[8..].copy_from_slice(&id.to_le_bytes());
+    let session = fnv1a(&sid) % m.sessions.max(1);
+    let prompt = session % m.prompts.max(1);
+    let depth = if m.session_blocks == 0 {
+        0
+    } else {
+        let mut did = [0u8; 16];
+        did[..8].copy_from_slice(&(seed ^ PREFIX_DEPTH_SALT).to_le_bytes());
+        did[8..].copy_from_slice(&id.to_le_bytes());
+        1 + fnv1a(&did) % m.session_blocks
+    };
+    let mut path = Vec::with_capacity((m.prompt_blocks + depth) as usize);
+    for j in 0..m.prompt_blocks {
+        path.push(prefix_block(seed, 1, prompt, j));
+    }
+    for j in 0..depth {
+        path.push(prefix_block(seed, 2, session, j));
+    }
+    path
+}
+
 /// A seeded, segmented §6.3-style production workload: Poisson arrivals
 /// at `qps` with [`LengthModel::production`] lengths, generated one
 /// segment at a time from an RNG derived from `(seed, segment index)` —
@@ -483,6 +604,10 @@ pub struct ProductionStream {
     /// pre-SLO stream — serialized forms and segment-file bytes are
     /// unchanged, since the interactive class encodes as absence).
     pub slo: Option<SloMix>,
+    /// Shared-prefix overlay; `None` leaves every request prefix-free
+    /// (the pre-cache stream — an empty prefix path encodes as absence,
+    /// so serialized forms and segment-file bytes are unchanged).
+    pub prefix: Option<PrefixMix>,
 }
 
 impl ProductionStream {
@@ -560,6 +685,7 @@ impl ProductionStream {
                 input_len: input,
                 output_len: output,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         if let Some(longs) = &self.longs {
@@ -590,6 +716,7 @@ impl ProductionStream {
                         input_len: longs.input_len,
                         output_len: output,
                         class: SloClass::Interactive,
+                        prefix: Vec::new(),
                     });
                 }
             }
@@ -607,6 +734,12 @@ impl ProductionStream {
         if let Some(m) = &self.slo {
             for r in requests.iter_mut() {
                 r.class = class_for(self.seed, r.id, m.interactive_frac);
+            }
+        }
+        // Prefix paths hash off the final id too, for the same reason.
+        if let Some(m) = &self.prefix {
+            for r in requests.iter_mut() {
+                r.prefix = prefix_for(self.seed, r.id, m);
             }
         }
         TraceSegment { index: k, start, end, requests }
@@ -858,6 +991,11 @@ fn request_to_json(r: &TraceRequest) -> Json {
     if r.class == SloClass::Batch {
         o.set("class", r.class.name());
     }
+    // An empty prefix path encodes as absence for the same reason:
+    // prefix-free streams keep their historical bytes and hashes.
+    if !r.prefix.is_empty() {
+        o.set("prefix", Json::Arr(r.prefix.iter().map(|&b| Json::from(b)).collect()));
+    }
     o
 }
 
@@ -870,12 +1008,22 @@ fn request_from_json(j: &Json) -> Result<TraceRequest, String> {
             SloClass::by_name(s).ok_or_else(|| format!("request: unknown class {s:?}"))?
         }
     };
+    let prefix = match j.get("prefix") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or("request: bad prefix")?
+            .iter()
+            .map(|b| b.as_u64().ok_or_else(|| "request: bad prefix block".to_string()))
+            .collect::<Result<Vec<u64>, String>>()?,
+    };
     Ok(TraceRequest {
         id: num("id")?,
         arrival: SimTime(num("arrival_ns")?),
         input_len: num("input")?,
         output_len: num("output")?,
         class,
+        prefix,
     })
 }
 
@@ -1348,6 +1496,7 @@ mod tests {
             input_len: 10,
             output_len: 1,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
         let mut chunked = ChunkedTrace::with_horizon(t, 2.0, 10.0);
         let segs = collect(&mut chunked);
@@ -1366,6 +1515,7 @@ mod tests {
                 input_len: 10,
                 output_len: 1,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         let mut chunked = ChunkedTrace::with_horizon(t, 5.0, 10.0);
@@ -1430,6 +1580,7 @@ mod tests {
                 horizon_s: 90.0,
                 longs: None,
                 slo: None,
+                prefix: None,
             };
         assert_eq!(spec.num_segments(), 6);
         let full = spec.materialize();
@@ -1460,6 +1611,7 @@ mod tests {
             horizon_s: 1800.0,
             longs: Some(LongBursts::paper()),
             slo: None,
+            prefix: None,
         };
         let full = spec.materialize();
         let long_len = LongBursts::paper().input_len;
@@ -1492,6 +1644,7 @@ mod tests {
             horizon_s: 90.0,
             longs: None,
             slo: Some(SloMix { interactive_frac: 0.7 }),
+            prefix: None,
         };
         let full = spec.materialize();
         let batch = full.requests.iter().filter(|r| r.class == SloClass::Batch).count();
@@ -1529,6 +1682,7 @@ mod tests {
             horizon_s: 60.0,
             longs: Some(LongBursts::paper()),
             slo: Some(SloMix { interactive_frac: 0.8 }),
+            prefix: Some(PrefixMix::paper()),
         };
         let mut feed = ArrivalFeed::new(Box::new(StreamSource::new(spec)));
         // Consume into the middle of a segment.
@@ -1604,6 +1758,7 @@ mod tests {
                 horizon_s: 50.0,
                 longs: None,
                 slo: None,
+                prefix: None,
             };
         let full =
             write_segments(&dir_a, "p", 0, 10.0, &mut StreamSource::new(spec.clone()), 0).unwrap();

@@ -39,6 +39,14 @@ impl SloClass {
 }
 
 /// One request in a trace.
+///
+/// `prefix` is the request's shared-prefix path: an ordered list of
+/// seeded prefix-block ids (each block standing for a fixed number of
+/// prompt tokens) that the request shares with other requests carrying
+/// the same leading blocks. Plain generators emit prefix-free traces —
+/// only a [`ProductionStream`](super::ProductionStream) with a prefix
+/// overlay populates it — so, like `class`, the axis is invisible
+/// (byte-identical) to every pre-existing workload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceRequest {
     pub id: u64,
@@ -46,6 +54,7 @@ pub struct TraceRequest {
     pub input_len: u64,
     pub output_len: u64,
     pub class: SloClass,
+    pub prefix: Vec<u64>,
 }
 
 impl TraceRequest {
@@ -107,6 +116,7 @@ impl Trace {
                 input_len: calib::SHORT_INPUT_LEN,
                 output_len: out,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         let longs = BurstyProcess::paper_long_requests().arrivals(&mut rng, horizon);
@@ -118,6 +128,7 @@ impl Trace {
                 input_len: calib::LONG_INPUT_LEN,
                 output_len: out,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         let mut tr = Trace { requests };
@@ -143,6 +154,7 @@ impl Trace {
                 input_len: calib::SHORT_INPUT_LEN,
                 output_len: out,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         let longs = BurstyProcess::paper_long_requests().arrivals(&mut rng, horizon);
@@ -154,6 +166,7 @@ impl Trace {
                 input_len: calib::LONG_INPUT_LEN,
                 output_len: out,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         let mut tr = Trace { requests };
@@ -178,6 +191,7 @@ impl Trace {
                 input_len: input,
                 output_len: output,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         let mut tr = Trace { requests };
@@ -196,9 +210,10 @@ impl Trace {
     }
 
     /// Serialize to a simple CSV (id,arrival_s,input,output). The SLO
-    /// class is NOT persisted here — the CSV format predates classing
-    /// and stays 4 columns; classed workloads live in segment JSONL
-    /// (see `workload::source`), where the class round-trips.
+    /// class and prefix path are NOT persisted here — the CSV format
+    /// predates both and stays 4 columns; classed/prefixed workloads
+    /// live in segment JSONL (see `workload::source`), where both
+    /// round-trip.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("id,arrival_s,input_len,output_len\n");
         for r in &self.requests {
@@ -232,6 +247,7 @@ impl Trace {
                 input_len: cols[2].parse().map_err(|e| format!("line {}: {e}", i + 1))?,
                 output_len: cols[3].trim().parse().map_err(|e| format!("line {}: {e}", i + 1))?,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         Ok(Trace { requests })
@@ -300,6 +316,7 @@ mod tests {
                 input_len: 10,
                 output_len: 1,
                 class: SloClass::Interactive,
+                prefix: Vec::new(),
             });
         }
         t.sort();

@@ -1,0 +1,184 @@
+//! Prefix-cache subsystem guarantees (PR 10):
+//!
+//! 1. The per-instance radix tree is a deterministic value object:
+//!    property-tested over random op sequences, a mid-sequence JSON
+//!    roundtrip never changes future matches, inserts, or evictions.
+//! 2. The `fig-cache` sweep is byte-identical across thread counts.
+//! 3. Cache-disabled runs carry no cache bytes anywhere (the figures'
+//!    JSONL artifacts are checked against pre-cache HEAD by CI's
+//!    `cache-verify` job; here we pin the encoding-as-absence contract).
+//! 4. An armed cache on a prefix-free workload is inert: identical
+//!    report, counters, and TPS series, zero lookups.
+//! 5. Armed-cache runs snapshot/kill/resume byte-identically, radix
+//!    trees, LRU stamps, and cache counters included (schema v5).
+
+use gyges::cache::{CacheCounters, PrefixTree};
+use gyges::config::{Policy, PolicyId};
+use gyges::coordinator::{ClusterSim, RunStatus, SimOutcome, SystemKind};
+use gyges::experiments::cache::{cache_cfg, fig_cache_jobs, CACHE_QPS, CACHE_SEED};
+use gyges::experiments::sweep::{results_to_jsonl, run_sweep_parallel, run_sweep_serial};
+use gyges::experiments::{fig12_jobs, fig14_jobs};
+use gyges::sim::SimTime;
+use gyges::snapshot::state::SimSnapshot;
+use gyges::util::{proptest, Prng};
+use gyges::workload::{PrefixMix, ProductionStream, StreamSource};
+
+/// Full observable state of one run, cache counters included.
+fn sig(out: &SimOutcome) -> String {
+    format!(
+        "{}|{:?}|{:?}|{:?}|{:?}",
+        out.report.to_json(),
+        out.counters,
+        out.recorder.tps_series(),
+        out.cache,
+        out.error
+    )
+}
+
+/// One random op against a tree: a path over a tiny block alphabet so
+/// shared prefixes (and LRU collisions under a small cap) are common.
+fn random_op(rng: &mut Prng) -> (Vec<u64>, f64, u64) {
+    let len = rng.gen_range(1, 6) as usize;
+    let path: Vec<u64> = (0..len).map(|d| rng.gen_range(0, 4) + (d as u64) * 10).collect();
+    let at = rng.f64() * 100.0;
+    let cap = rng.gen_range(3, 12);
+    (path, at, cap)
+}
+
+#[test]
+fn prop_radix_roundtrip_mid_sequence_preserves_future_behaviour() {
+    proptest::forall(
+        "radix JSON roundtrip is behaviour-preserving",
+        proptest::Config { cases: 32, seed: 0xCAC_4E7 },
+        |rng: &mut Prng| (rng.next(), rng.gen_range(4, 40), rng.gen_range(0, 4)),
+        |&(seed, ops, split)| {
+            let mut rng = Prng::new(seed);
+            let mut a = PrefixTree::new();
+            // Warm the tree, then roundtrip it through its snapshot
+            // codec at a random midpoint.
+            for _ in 0..(ops / (split + 1)).max(1) {
+                let (path, at, cap) = random_op(&mut rng);
+                a.match_and_insert(&path, SimTime::from_secs_f64(at), cap);
+                gyges::prop_assert!(a.len() <= cap, "cap violated: {} > {cap}", a.len());
+            }
+            let mut b = PrefixTree::from_json(&a.to_json())
+                .map_err(|e| format!("roundtrip failed: {e}"))?;
+            gyges::prop_assert!(
+                a.fingerprint() == b.fingerprint(),
+                "roundtrip changed the fingerprint (seed {seed:#x})"
+            );
+            // Identical ops on both sides must stay identical forever —
+            // matches, evictions, and tie-breaking free-slot reuse.
+            for _ in 0..ops {
+                let (path, at, cap) = random_op(&mut rng);
+                let t = SimTime::from_secs_f64(at);
+                let oa = a.match_and_insert(&path, t, cap);
+                let ob = b.match_and_insert(&path, t, cap);
+                gyges::prop_assert!(
+                    oa == ob && a.fingerprint() == b.fingerprint(),
+                    "post-roundtrip divergence (seed {seed:#x}): {oa:?} vs {ob:?}"
+                );
+                gyges::prop_assert!(
+                    a.match_len(&path) as usize <= path.len(),
+                    "match_len exceeds path length"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fig_cache_sweep_is_deterministic_across_thread_counts() {
+    let jobs = fig_cache_jobs(45.0);
+    let serial = results_to_jsonl(&run_sweep_serial(&jobs));
+    for workers in [2, 7] {
+        let parallel = results_to_jsonl(&run_sweep_parallel(&jobs, workers));
+        assert_eq!(serial, parallel, "fig-cache diverged at {workers} workers");
+    }
+    // Every armed row must serialize its cache block; the shared-prefix
+    // stream guarantees lookups.
+    assert!(serial.lines().all(|l| l.contains("\"cache\"")), "armed rows must carry cache");
+}
+
+#[test]
+fn cache_disabled_figures_carry_no_cache_bytes() {
+    // The paper figures never arm the cache: their sweep rows must not
+    // contain a cache key anywhere (CI's cache-verify job additionally
+    // cmp-checks the full artifacts against pre-cache HEAD bytes).
+    use gyges::config::ModelConfig;
+    let mut jobs = fig12_jobs(30.0, &[ModelConfig::qwen2_5_32b()]);
+    jobs.extend(fig14_jobs(30.0, &[4.0]));
+    let results = run_sweep_serial(&jobs);
+    assert!(results.iter().all(|r| r.cache.is_none()), "figures must not arm the cache");
+    let jsonl = results_to_jsonl(&results);
+    assert!(!jsonl.contains("\"cache\""), "cache bytes leaked into a disabled run");
+    assert!(!jsonl.contains("\"prefix\""), "prefix bytes leaked into a plain trace");
+}
+
+#[test]
+fn armed_cache_is_inert_on_prefix_free_workloads() {
+    // Arming the cache on a workload with no prefix paths must not move
+    // a single byte of the report: observe() skips empty paths, so the
+    // prefill model never sees a cached-token credit.
+    let jobs = fig12_jobs(30.0, &[gyges::config::ModelConfig::qwen2_5_32b()]);
+    let job = &jobs[2];
+    assert_eq!(job.key, "qwen2.5-32b/gyges");
+    let plain = gyges::experiments::sweep::build_job_sim(job).run();
+    let mut armed_sim = gyges::experiments::sweep::build_job_sim(job);
+    armed_sim.arm_cache();
+    let armed = armed_sim.run();
+    assert_eq!(armed.cache, Some(CacheCounters::default()), "no lookups on prefix-free work");
+    // Compare everything except the armed-only counter block.
+    let strip = |o: &SimOutcome| {
+        format!("{}|{:?}|{:?}|{:?}", o.report.to_json(), o.counters, o.recorder.tps_series(), o.error)
+    };
+    assert_eq!(strip(&plain), strip(&armed), "armed-but-unused cache changed the run");
+}
+
+#[test]
+fn armed_cache_snapshot_kill_resume_is_byte_identical() {
+    // A cache-aware policy on the shared-prefix stream, checkpointed
+    // every 5 s with a full JSON roundtrip at each pause: the resumed
+    // run must reproduce the uninterrupted bytes, hit/miss counters and
+    // per-instance radix trees included.
+    let cfg = cache_cfg();
+    let id = PolicyId { base: Policy::Gyges, cache: true, slo: false, admit: false };
+    let spec = ProductionStream {
+        seed: CACHE_SEED,
+        qps: CACHE_QPS,
+        segment_s: 15.0,
+        horizon_s: 60.0,
+        longs: None,
+        slo: None,
+        prefix: Some(PrefixMix::paper()),
+    };
+    let build = || {
+        let source = StreamSource::new(spec.clone());
+        ClusterSim::with_source(cfg.clone(), SystemKind::Gyges, Box::new(source)).with_policy(id)
+    };
+    let reference_out = build().run();
+    let hits = reference_out.cache.expect("cache-aware policy arms the cache");
+    assert!(hits.lookups > 0 && hits.hit_blocks > 0, "stream must exercise the cache: {hits:?}");
+    let reference = sig(&reference_out);
+    let mut sim = build();
+    let mut saw_cache = false;
+    let mut t = 5.0;
+    while t < 600.0 {
+        match sim.run_until(Some(SimTime::from_secs_f64(t))) {
+            RunStatus::Done => break,
+            RunStatus::Paused => {
+                let snap = sim.snapshot().expect("paused run must snapshot");
+                let text = snap.to_string_pretty();
+                saw_cache |= text.contains("\"cache\"");
+                let parsed = SimSnapshot::parse(&text).expect("snapshot must parse");
+                assert_eq!(parsed, snap, "JSON roundtrip must be lossless");
+                sim = ClusterSim::from_snapshot(cfg.clone(), &parsed).expect("restore");
+            }
+        }
+        t += 5.0;
+    }
+    let _ = sim.run_until(None);
+    assert!(saw_cache, "schema v5 must serialize the armed cache state");
+    assert_eq!(sig(&sim.finish()), reference, "armed-cache resume diverged");
+}

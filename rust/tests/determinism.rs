@@ -99,6 +99,7 @@ fn fig13_output_identical_with_and_without_routing_index() {
                 report: out.report,
                 counters: out.counters,
                 error: out.error.map(|e| e.to_string()),
+                cache: out.cache,
             }
         })
         .collect();

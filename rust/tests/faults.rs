@@ -282,6 +282,7 @@ fn total_capacity_loss_with_bounded_retry_terminates_with_drops() {
             input_len: 2000,
             output_len: 2000, // long decode: plenty in flight at the crash
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     trace.sort_and_renumber();

@@ -20,6 +20,7 @@ fn mk_trace(reqs: &[(f64, u64, u64)]) -> Trace {
             input_len: input,
             output_len: output,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     t.sort();

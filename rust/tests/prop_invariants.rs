@@ -98,6 +98,7 @@ fn prop_routing_decisions_are_sound() {
                     tp1: Some(&index),
                     load: Some(&load),
                     blocked_hosts: None,
+                    cache: None,
                 };
                 let scan_view = ClusterView {
                     instances,
@@ -107,6 +108,7 @@ fn prop_routing_decisions_are_sound() {
                     tp1: None,
                     load: None,
                     blocked_hosts: None,
+                    cache: None,
                 };
                 let mut scan_policy = make_policy(policy_kind);
                 let indexed_route = policy.route(&req, &view);
@@ -266,6 +268,7 @@ fn prop_load_index_survives_mutation_sequences() {
                     tp1: Some(&hidx),
                     load: Some(&idx),
                     blocked_hosts: None,
+                    cache: None,
                 };
                 let scanning = ClusterView {
                     instances: &instances,
@@ -275,6 +278,7 @@ fn prop_load_index_survives_mutation_sequences() {
                     tp1: None,
                     load: None,
                     blocked_hosts: None,
+                    cache: None,
                 };
                 for pk in [gyges::config::Policy::Gyges, gyges::config::Policy::RoundRobin] {
                     let mut pi = make_policy(pk);

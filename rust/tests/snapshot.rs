@@ -122,6 +122,7 @@ fn transforming_trace() -> Trace {
             input_len: 1000,
             output_len: 60,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     trace.requests.push(TraceRequest {
@@ -130,6 +131,7 @@ fn transforming_trace() -> Trace {
         input_len: 50_000,
         output_len: 64,
         class: SloClass::Interactive,
+        prefix: Vec::new(),
     });
     trace.sort_and_renumber();
     trace
@@ -173,6 +175,7 @@ fn overload_trace() -> Trace {
             input_len: 1000,
             output_len: 60,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     trace.requests.push(TraceRequest {
@@ -181,6 +184,7 @@ fn overload_trace() -> Trace {
         input_len: 200_000, // beyond max_seq(4): unserveable, defers forever
         output_len: 64,
         class: SloClass::Interactive,
+        prefix: Vec::new(),
     });
     trace.sort_and_renumber();
     trace
@@ -226,6 +230,7 @@ fn resume_between_segment_boundary_and_first_arrival() {
             input_len: 2000,
             output_len: 150,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     let build = || {
@@ -273,6 +278,7 @@ fn resume_of_bursty_production_stream_is_byte_identical() {
         horizon_s: 90.0,
         longs: Some(LongBursts::paper()),
         slo: None,
+        prefix: None,
     };
     let build = || {
         let source = StreamSource::new(spec.clone());
@@ -299,7 +305,7 @@ fn resume_of_composed_slo_policy_is_byte_identical_and_serializes_pipeline_state
     // uninterrupted run's bytes, admission drops and preemptions
     // included.
     let cfg = gyges::experiments::slo::slo_cfg();
-    let id = PolicyId { base: Policy::Gyges, slo: true, admit: true };
+    let id = PolicyId { base: Policy::Gyges, cache: false, slo: true, admit: true };
     let spec = ProductionStream {
         seed: 0x510_C1A5,
         qps: 10.0,
@@ -307,6 +313,7 @@ fn resume_of_composed_slo_policy_is_byte_identical_and_serializes_pipeline_state
         horizon_s: 30.0,
         longs: None,
         slo: Some(SloMix { interactive_frac: 0.9 }),
+        prefix: None,
     };
     let build = || {
         let source = StreamSource::new(spec.clone());
@@ -359,6 +366,7 @@ fn snapshot_refuses_unsnapshottable_sources_and_config_drift() {
                     input_len: 1000,
                     output_len: 500,
                     class: SloClass::Interactive,
+                    prefix: Vec::new(),
                 }],
             }))
         }

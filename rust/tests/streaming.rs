@@ -102,6 +102,7 @@ fn boundary_on_arrival_timestamp_and_empty_trailing_segments_identical() {
             input_len: if i == 3 { 50_000 } else { 1000 },
             output_len: 60,
             class: SloClass::Interactive,
+            prefix: Vec::new(),
         });
     }
     trace.sort();
@@ -171,6 +172,7 @@ fn stream_jobs_match_materialized_jobs_and_fingerprint_their_spec() {
         horizon_s: 90.0,
         longs: None,
         slo: None,
+        prefix: None,
     };
     let full = Arc::new(spec.materialize());
     let mk = |trace: JobTrace, p: Policy| {
@@ -211,6 +213,7 @@ fn production_stream_replay_matches_materialized_and_file_replay() {
         horizon_s: 120.0,
         longs: None,
         slo: None,
+        prefix: None,
     };
     let whole = ClusterSim::new(cfg(), SystemKind::Gyges, spec.materialize()).run();
     let streamed =
